@@ -1,0 +1,74 @@
+//! The paper's §IV-C case study: "the gesture recognition SNN model with
+//! 2048-20-4 structure and 3.16% weight density … needs 9 PEs on the serial
+//! paradigm, 5 PEs on the parallel paradigm, and only 4 PEs by deploying the
+//! switching system."
+//!
+//! We rebuild the same topology/density synthetically and compare the three
+//! systems under whole-machine accounting (layer PEs + source hosting —
+//! see `switching::network_pe_count`). Absolute counts differ from the
+//! paper's 9/5/4 (its compiler internals are unpublished); the *ordering*
+//! — serial > parallel > switching — is the reproduced claim.
+//!
+//! ```bash
+//! cargo run --release --example gesture_recognition
+//! ```
+
+use s2switch::dataset::{generate_grid, SweepConfig};
+use s2switch::hardware::PeSpec;
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder};
+use s2switch::paradigm::parallel::WdmConfig;
+use s2switch::switching::{network_pe_count, SwitchMode, SwitchingSystem};
+
+const DENSITY: f64 = 0.0316;
+const DELAY: u16 = 1; // DVS gesture SNNs use single-step delays
+
+fn gesture_net() -> Network {
+    let mut b = NetworkBuilder::new(2048);
+    let input = b.spike_source("dvs-input", 2048);
+    let hidden = b.lif_population("hidden", 20, LifParams { alpha: 0.9, ..Default::default() });
+    let output = b.lif_population("classes", 4, LifParams::default());
+    let draw = SynapseDraw { delay_range: DELAY, w_max: 100, ..Default::default() };
+    b.project(input, hidden, Connector::FixedProbability(DENSITY), draw, 0.01);
+    b.project(hidden, output, Connector::FixedProbability(0.5), draw, 0.05);
+    b.build()
+}
+
+fn main() -> anyhow::Result<()> {
+    let pe = PeSpec::default();
+    println!("gesture model: 2048-20-4, density {:.2}%, delay {DELAY}", DENSITY * 100.0);
+
+    // Train the prejudger (the deployed switching system).
+    let dataset = generate_grid(&SweepConfig::medium(), &pe, WdmConfig::default());
+    let mut results = Vec::new();
+    for (label, mut system) in [
+        ("serial   ", SwitchingSystem::new(SwitchMode::ForceSerial, pe)),
+        ("parallel ", SwitchingSystem::new(SwitchMode::ForceParallel, pe)),
+        ("switching", SwitchingSystem::train_adaboost(&dataset, 100, pe)),
+    ] {
+        let net = gesture_net();
+        let (layers, _) = system.compile_network(&net)?;
+        let total = network_pe_count(&net, &layers, &pe);
+        let detail: Vec<String> = layers
+            .iter()
+            .map(|l| format!("{}:{}", l.paradigm(), l.n_pes()))
+            .collect();
+        println!(
+            "  {label} → {total:>2} PEs   (layers: {}, source hosting: {})",
+            detail.join(", "),
+            s2switch::switching::source_hosting_pes(&net, &layers, &pe),
+        );
+        results.push((label.trim().to_string(), total));
+    }
+
+    let serial = results[0].1;
+    let parallel = results[1].1;
+    let switching = results[2].1;
+    println!("\npaper reports 9 / 5 / 4; this reproduction: {serial} / {parallel} / {switching}");
+    anyhow::ensure!(
+        serial > parallel && parallel >= switching,
+        "ordering serial > parallel ≥ switching must hold"
+    );
+    println!("ordering serial > parallel ≥ switching reproduced ✓");
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Micro-measurement of PJRT matvec dispatch cost per bucket (perf pass).
+use s2switch::runtime::{artifact_dir, PjrtMac, PjrtRuntime};
+use s2switch::sim::backend::MacBackend;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(RefCell::new(PjrtRuntime::new(artifact_dir())?));
+    let mut mac = PjrtMac::new(rt);
+    for &(r, c) in &[(256usize, 256usize), (2048, 256), (8192, 256)] {
+        let stacked = vec![1.0f32; r];
+        let weights = vec![1.0f32; r * c];
+        mac.matvec(&stacked, &weights, r, c); // warm (compile + weight upload)
+        let t0 = Instant::now();
+        let n = 50;
+        for _ in 0..n {
+            std::hint::black_box(mac.matvec(&stacked, &weights, r, c));
+        }
+        println!("bucket {r}x{c}: {:?}/call", t0.elapsed() / n);
+    }
+    Ok(())
+}

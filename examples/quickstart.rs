@@ -1,0 +1,84 @@
+//! Quickstart: build an SNN, train a prejudger, compile with fast
+//! switching, and simulate — the whole public API in one file.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use s2switch::dataset::{generate_grid, SweepConfig};
+use s2switch::hardware::PeSpec;
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, NetworkBuilder, PopulationId};
+use s2switch::paradigm::parallel::WdmConfig;
+use s2switch::rng::Rng;
+use s2switch::sim::NetworkSim;
+use s2switch::switching::SwitchingSystem;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Acquire a labeled corpus (medium grid: 640 layers, ~seconds) and
+    //    train the AdaBoost prejudger — the paper's fast-switching tool.
+    println!("① labeling 640-layer corpus (both paradigms per layer)…");
+    let dataset = generate_grid(&SweepConfig::medium(), &PeSpec::default(), WdmConfig::default());
+    let mut system = SwitchingSystem::train_adaboost(&dataset, 100, PeSpec::default());
+    println!("   trained AdaBoost prejudger on {} layers", dataset.len());
+
+    // 2. Describe an SNN.
+    let mut b = NetworkBuilder::new(7);
+    let input = b.spike_source("input", 300);
+    let hidden = b.lif_population("hidden", 200, LifParams { alpha: 0.9, ..Default::default() });
+    let output = b.lif_population("output", 10, LifParams::default());
+    b.project(
+        input,
+        hidden,
+        Connector::FixedProbability(0.8), // dense → parallel-friendly
+        SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+        0.01,
+    );
+    b.project(
+        hidden,
+        output,
+        Connector::FixedProbability(0.15), // sparse → serial-friendly
+        SynapseDraw { delay_range: 12, w_max: 100, ..Default::default() },
+        0.03,
+    );
+    let net = b.build();
+
+    // 3. Compile: the classifier prejudges each layer — one compile each,
+    //    no double compilation.
+    println!("② compiling with classifier switching…");
+    let (layers, pes) = system.compile_network(&net)?;
+    for (i, l) in layers.iter().enumerate() {
+        let ch = l.character();
+        println!(
+            "   layer {i}: {}×{} density {:.2} delay {:>2} → {:8} ({} PEs, {} B DTCM)",
+            ch.n_source,
+            ch.n_target,
+            ch.density,
+            ch.delay_range,
+            l.paradigm().to_string(),
+            l.n_pes(),
+            l.total_dtcm()
+        );
+    }
+    println!(
+        "   total: {pes} PEs, {} paradigm compilations (ideal switching would need {})",
+        system.stats.total_compiles(),
+        2 * layers.len()
+    );
+
+    // 4. Simulate 100 timesteps with Poisson-ish input.
+    println!("③ simulating 100 timesteps…");
+    let mut sim = NetworkSim::native(&net, layers)?;
+    let mut rng = Rng::new(123);
+    let mut provider = move |_pop: PopulationId, _t: u64| -> Vec<u32> {
+        (0..300u32).filter(|_| rng.chance(0.1)).collect()
+    };
+    sim.run(100, &mut provider);
+    println!(
+        "   spikes: hidden {} | output {}",
+        sim.recorder.spike_count(PopulationId(1)),
+        sim.recorder.spike_count(PopulationId(2))
+    );
+    println!("done.");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Full classifier-comparison pipeline (paper §IV-A/B, Fig. 4).
+//!
+//! Generates (or loads) the labeled layer corpus, trains all 12
+//! classifiers over multiple train/test splits, prints the accuracy
+//! ranking, and deploys the best model to `data/adaboost.json`.
+//!
+//! ```bash
+//! cargo run --release --example train_classifiers            # medium grid, 5 seeds
+//! S2SWITCH_FULL=1 cargo run --release --example train_classifiers  # 16k grid, 20 seeds
+//! ```
+
+use s2switch::coordinator::{dataset_cached, train_and_save_adaboost, train_roster};
+use s2switch::dataset::SweepConfig;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var_os("S2SWITCH_FULL").is_some();
+    let (cfg, seeds, cache) = if full {
+        (SweepConfig::default(), 20, "data/dataset.csv")
+    } else {
+        (SweepConfig::medium(), 5, "data/dataset_medium.csv")
+    };
+    println!(
+        "corpus: {} layers ({}); seeds: {seeds}",
+        cfg.n_layers(),
+        if full { "the paper's full 16k grid" } else { "medium grid — set S2SWITCH_FULL=1 for 16k" }
+    );
+
+    let dataset = dataset_cached(&PathBuf::from(cache), &cfg)?;
+    let n_parallel = dataset.samples.iter().filter(|s| s.parallel_pes < s.serial_pes).count();
+    println!(
+        "labels: {} favor parallel, {} favor serial\n",
+        n_parallel,
+        dataset.len() - n_parallel
+    );
+
+    println!("training 12 classifiers × {seeds} seeds…");
+    let t0 = std::time::Instant::now();
+    let scores = train_roster(&dataset, seeds);
+    println!("trained in {:.1?}\n", t0.elapsed());
+
+    let mut ranked: Vec<_> = scores.iter().collect();
+    ranked.sort_by(|a, b| b.mean().partial_cmp(&a.mean()).unwrap());
+    println!("{:<22} {:>8} {:>8} {:>8}   (paper Fig. 4: AdaBoost best at 91.69%)", "classifier", "mean", "min", "max");
+    println!("{}", "-".repeat(64));
+    for s in &ranked {
+        println!(
+            "{:<22} {:>7.2}% {:>7.2}% {:>7.2}%",
+            s.name,
+            100.0 * s.mean(),
+            100.0 * s.min(),
+            100.0 * s.max()
+        );
+    }
+
+    let model_path = PathBuf::from("data/adaboost.json");
+    let acc = train_and_save_adaboost(&dataset, 150, &model_path)?;
+    println!(
+        "\ndeployed AdaBoost → {} (held-out accuracy {:.2}%)",
+        model_path.display(),
+        100.0 * acc
+    );
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""AOT export: lower the L2 model (with its L1 Pallas kernels) to HLO text.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+emitted ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+executes them on the PJRT CPU client.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shape buckets mirrored in ``rust/src/runtime/pjrt.rs``):
+  mac_matvec_256x256 / 2048x256 / 8192x256   (stacked, wdm) -> (current,)
+  lif_step_256                               (v, i, alpha, v_th) -> (v', z)
+  model_step_2048x256                        fused matvec + LIF
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.lif_update import lif_step
+from .model import matvec_only, model_step
+
+# Must match rust/src/runtime/pjrt.rs.
+MATVEC_BUCKETS = [(256, 256), (2048, 256), (8192, 256)]
+LIF_BUCKET = 256
+MODEL_BUCKET = (2048, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def emit(out_dir: str, name: str, fn, *specs) -> None:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for rows, cols in MATVEC_BUCKETS:
+        emit(
+            args.out_dir,
+            f"mac_matvec_{rows}x{cols}",
+            functools.partial(matvec_only, n_rows=rows, n_cols=cols),
+            f32(rows),
+            f32(rows, cols),
+        )
+
+    n = LIF_BUCKET
+    emit(
+        args.out_dir,
+        f"lif_step_{n}",
+        functools.partial(lif_step, n=n),
+        f32(n),
+        f32(n),
+        f32(),
+        f32(),
+    )
+
+    rows, cols = MODEL_BUCKET
+    emit(
+        args.out_dir,
+        f"model_step_{rows}x{cols}",
+        functools.partial(model_step, n_rows=rows, n_cols=cols),
+        f32(rows),
+        f32(rows, cols),
+        f32(cols),
+        f32(),
+        f32(),
+    )
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

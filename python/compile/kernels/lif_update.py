@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: the LIF neural update (paper Eq. 1).
+
+    V^{t+1} = I + alpha * V^t - z * V_th
+
+with z = [I + alpha*V >= V_th] (subtractive reset). Elementwise over the
+population; one VMEM tile holds the whole 256-neuron bucket (256 x 4 B x 2
+operands = 2 kB, far under budget). The semantics mirror
+``rust/src/model/lif.rs::lif_step`` exactly (zero-refractory path — the
+compiled artifact targets inference-time populations with t_refrac = 0;
+refractory handling stays on the coordinator).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lif_kernel(v_ref, i_ref, alpha_ref, vth_ref, v_out_ref, spike_ref):
+    alpha = alpha_ref[0]
+    v_th = vth_ref[0]
+    v_new = i_ref[...] + alpha * v_ref[...]
+    spiked = (v_new >= v_th).astype(jnp.float32)
+    v_out_ref[...] = v_new - spiked * v_th
+    spike_ref[...] = spiked
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def lif_step(v, current, alpha, v_th, *, n):
+    """One LIF step over ``n`` neurons; returns ``(v_next, spiked)``.
+
+    ``alpha``/``v_th`` are traced scalars so one artifact serves any
+    parameterization.
+    """
+    alpha_v = jnp.reshape(alpha.astype(jnp.float32), (1,))
+    vth_v = jnp.reshape(v_th.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _lif_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(v, current, alpha_v, vth_v)

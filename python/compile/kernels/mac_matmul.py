@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: the SpiNNaker2 MAC-array matvec.
+
+The parallel paradigm's hot-spot (paper §III-B): a subordinate PE multiplies
+the stacked spike vector against its optimized weight-delay-map chunk on the
+4x16 MAC array.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the MAC array consumes
+operands aligned to its 4x16 geometry from a 128 kB SRAM; the Pallas
+analogue tiles the contraction dimension in ROW_BLOCK = 32 lanes (a multiple
+of the 16-lane input side) and keeps each weight tile in VMEM under the same
+96 kB DTCM budget the Table I cost model enforces:
+
+    ROW_BLOCK x C_max x 4 B = 32 x 512 x 4 = 64 kB  <  96 kB.
+
+The kernel MUST be lowered with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (real-TPU lowering); interpret mode lowers to
+plain HLO that the rust runtime's CPU client runs. Real-TPU efficiency is
+estimated analytically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Contraction tile: multiple of the MAC array's 16-lane input side, sized so
+# a weight tile fits the 96 kB DTCM-analogue VMEM budget (see module doc).
+ROW_BLOCK = 32
+
+
+def _matvec_kernel(s_ref, w_ref, o_ref):
+    """One grid step: accumulate s[block] . W[block, :] into the output."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(s_ref[...], w_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "n_cols"))
+def mac_matvec(stacked, weights, *, n_rows, n_cols):
+    """``out[c] = sum_r stacked[r] * weights[r, c]`` on the MAC-array tiling.
+
+    ``n_rows`` must be a multiple of ``ROW_BLOCK`` (the AOT shape buckets
+    are); ``n_cols`` is consumed whole per tile.
+    """
+    if n_rows % ROW_BLOCK != 0:
+        raise ValueError(f"n_rows={n_rows} not a multiple of ROW_BLOCK={ROW_BLOCK}")
+    grid = (n_rows // ROW_BLOCK,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((ROW_BLOCK, n_cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_cols,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_cols,), jnp.float32),
+        interpret=True,
+    )(stacked, weights)

@@ -1,0 +1,27 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+match these references exactly (the operands are integer-valued, so even
+float accumulation is exact), and the rust engines mirror the same
+semantics (``rust/src/model/lif.rs``, ``rust/src/sim/*``).
+"""
+
+import jax.numpy as jnp
+
+
+def mac_matvec_ref(stacked, weights):
+    """out[c] = sum_r stacked[r] * weights[r, c]."""
+    return jnp.dot(stacked, weights)
+
+
+def lif_step_ref(v, current, alpha, v_th):
+    """Paper Eq. 1 with subtractive reset; returns (v_next, spiked)."""
+    v_new = current + alpha * v
+    spiked = (v_new >= v_th).astype(jnp.float32)
+    return v_new - spiked * v_th, spiked
+
+
+def model_step_ref(stacked, weights, v, alpha, v_th):
+    """Fused timestep: MAC matvec then LIF update."""
+    current = mac_matvec_ref(stacked, weights)
+    return lif_step_ref(v, current, alpha, v_th)

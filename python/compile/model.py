@@ -1,0 +1,28 @@
+"""L2 JAX model: one parallel-paradigm timestep of an SNN layer.
+
+Composes the L1 Pallas kernels — MAC-array matvec over the stacked spike
+vector and weight-delay-map, then the LIF neural update — into the fused
+computation the rust coordinator executes per timestep through PJRT. This
+file is build-time only; it is lowered once by ``aot.py`` and never imported
+at runtime.
+"""
+
+from .kernels.lif_update import lif_step
+from .kernels.mac_matmul import mac_matvec
+
+
+def model_step(stacked, weights, v, alpha, v_th, *, n_rows, n_cols):
+    """One fused layer timestep; returns ``(v_next, spiked)``.
+
+    * ``stacked``  f32[n_rows]        — stacked spike lanes (source x delay)
+    * ``weights``  f32[n_rows, n_cols] — optimized weight-delay-map chunk
+    * ``v``        f32[n_cols]        — membrane potentials
+    * ``alpha``/``v_th``              — LIF scalars (traced)
+    """
+    current = mac_matvec(stacked, weights, n_rows=n_rows, n_cols=n_cols)
+    return lif_step(v, current, alpha, v_th, n=n_cols)
+
+
+def matvec_only(stacked, weights, *, n_rows, n_cols):
+    """The bare MAC matvec (the ``mac_matvec_RxC`` artifacts)."""
+    return (mac_matvec(stacked, weights, n_rows=n_rows, n_cols=n_cols),)

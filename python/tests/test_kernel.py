@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and integer-valued operands (the production regime:
+spike counts x quantized weights), asserting exact agreement with ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lif_update import lif_step
+from compile.kernels.mac_matmul import ROW_BLOCK, mac_matvec
+from compile.kernels import ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand_state(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- mac_matvec
+
+
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    cols=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matvec_matches_ref_integer_exact(blocks, cols, seed):
+    rng = rand_state(seed)
+    rows = blocks * ROW_BLOCK
+    # Integer-valued f32: spike counts 0..3, signed 8-bit weights.
+    s = rng.integers(0, 4, rows).astype(np.float32)
+    w = rng.integers(-127, 128, (rows, cols)).astype(np.float32)
+    got = mac_matvec(jnp.asarray(s), jnp.asarray(w), n_rows=rows, n_cols=cols)
+    want = ref.mac_matvec_ref(jnp.asarray(s), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    cols=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matvec_matches_ref_float_close(blocks, cols, seed):
+    rng = rand_state(seed)
+    rows = blocks * ROW_BLOCK
+    s = rng.standard_normal(rows).astype(np.float32)
+    w = rng.standard_normal((rows, cols)).astype(np.float32)
+    got = mac_matvec(jnp.asarray(s), jnp.asarray(w), n_rows=rows, n_cols=cols)
+    want = ref.mac_matvec_ref(jnp.asarray(s), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matvec_zero_input_gives_zeros():
+    rows, cols = 2 * ROW_BLOCK, 16
+    out = mac_matvec(jnp.zeros(rows), jnp.ones((rows, cols)), n_rows=rows, n_cols=cols)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(cols, np.float32))
+
+
+def test_matvec_rejects_unaligned_rows():
+    with pytest.raises(ValueError, match="ROW_BLOCK"):
+        mac_matvec(jnp.zeros(10), jnp.zeros((10, 4)), n_rows=10, n_cols=4)
+
+
+def test_matvec_bucket_shapes_compile():
+    # The exact AOT bucket shapes (keep the small ones; 8192 is slow under
+    # interpret mode and is covered by the rust integration test).
+    for rows, cols in [(256, 256), (2048, 256)]:
+        s = jnp.ones(rows)
+        w = jnp.ones((rows, cols))
+        out = mac_matvec(s, w, n_rows=rows, n_cols=cols)
+        np.testing.assert_array_equal(np.asarray(out), np.full(cols, rows, np.float32))
+
+
+# ------------------------------------------------------------------ lif_step
+
+
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    alpha=st.floats(min_value=0.0, max_value=1.0, width=32),
+    v_th=st.floats(min_value=0.125, max_value=5.0, width=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lif_matches_ref(n, alpha, v_th, seed):
+    rng = rand_state(seed)
+    v = rng.uniform(-1, 1, n).astype(np.float32)
+    cur = rng.uniform(-2, 2, n).astype(np.float32)
+    a = jnp.float32(alpha)
+    t = jnp.float32(v_th)
+    got_v, got_z = lif_step(jnp.asarray(v), jnp.asarray(cur), a, t, n=n)
+    want_v, want_z = ref.lif_step_ref(jnp.asarray(v), jnp.asarray(cur), a, t)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_z), np.asarray(want_z))
+
+
+def test_lif_subtractive_reset_matches_rust_semantics():
+    # Mirrors rust/src/model/lif.rs::threshold_crossing_spikes: v=0.5,
+    # input=0.8, alpha=0.9 -> v_new=1.25 >= 1.0 -> spike, reset to 0.25.
+    v_next, z = lif_step(
+        jnp.asarray([0.5]), jnp.asarray([0.8]), jnp.float32(0.9), jnp.float32(1.0), n=1
+    )
+    assert float(z[0]) == 1.0
+    np.testing.assert_allclose(float(v_next[0]), 0.25, rtol=1e-6)
+
+
+def test_lif_subthreshold_decays():
+    v_next, z = lif_step(
+        jnp.asarray([0.5]), jnp.asarray([0.0]), jnp.float32(0.9), jnp.float32(1.0), n=1
+    )
+    assert float(z[0]) == 0.0
+    np.testing.assert_allclose(float(v_next[0]), 0.45, rtol=1e-6)

@@ -1,0 +1,75 @@
+"""L2 model + AOT export tests: fused step vs oracle, HLO emission."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import aot
+from compile.kernels import ref
+from compile.kernels.mac_matmul import ROW_BLOCK
+from compile.model import model_step
+
+settings.register_profile("model", max_examples=10, deadline=None)
+settings.load_profile("model")
+
+
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    cols=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_model_step_matches_ref(blocks, cols, seed):
+    rng = np.random.default_rng(seed)
+    rows = blocks * ROW_BLOCK
+    s = rng.integers(0, 3, rows).astype(np.float32)
+    w = rng.integers(-50, 51, (rows, cols)).astype(np.float32) * 0.01
+    v = rng.uniform(-0.5, 0.5, cols).astype(np.float32)
+    a = jnp.float32(0.9)
+    t = jnp.float32(1.0)
+    got_v, got_z = model_step(
+        jnp.asarray(s), jnp.asarray(w), jnp.asarray(v), a, t, n_rows=rows, n_cols=cols
+    )
+    want_v, want_z = ref.model_step_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(v), a, t)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_z), np.asarray(want_z))
+
+
+def test_hlo_text_emission_roundtrips_through_parser():
+    # Lower the smallest matvec bucket and sanity-check the HLO text.
+    import functools
+    from compile.model import matvec_only
+
+    lowered = jax.jit(functools.partial(matvec_only, n_rows=256, n_cols=256)).lower(
+        aot.f32(256), aot.f32(256, 256)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[256,256]" in text
+    # return_tuple=True -> tuple root.
+    assert "tuple" in text
+
+
+def test_aot_main_writes_all_artifacts(monkeypatch):
+    with tempfile.TemporaryDirectory() as d:
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--out-dir", d]
+        )
+        # Shrink the expensive buckets for test speed; the full set is
+        # exercised by `make artifacts`.
+        monkeypatch.setattr(aot, "MATVEC_BUCKETS", [(64, 32)])
+        monkeypatch.setattr(aot, "MODEL_BUCKET", (64, 32))
+        monkeypatch.setattr(aot, "LIF_BUCKET", 32)
+        aot.main()
+        names = sorted(os.listdir(d))
+        assert names == [
+            "lif_step_32.hlo.txt",
+            "mac_matvec_64x32.hlo.txt",
+            "model_step_64x32.hlo.txt",
+        ]
+        for n in names:
+            with open(os.path.join(d, n)) as f:
+                assert "HloModule" in f.read()

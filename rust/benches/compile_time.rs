@@ -1,0 +1,84 @@
+//! Bench P1 — the paper's *motivating* quantity: compile-time and host-RAM
+//! saving of prejudged switching vs compile-both-then-pick.
+//!
+//! "the compiling time and the RAM occupation on the host PC are not
+//! negligible … The problem of compiling time gets even worse when
+//! compiling with two paradigms sequentially. Moreover, saving two
+//! compiling results may cause a RAM crisis on the host PC."
+//!
+//! We compile a batch of layers under each policy and report wall-clock,
+//! number of paradigm compilations, and bytes of discarded (wasted)
+//! compilation results.
+//!
+//! ```bash
+//! cargo bench --bench compile_time
+//! ```
+
+use s2switch::bench_harness::{human_ns, Report};
+use s2switch::dataset::{generate_grid, realize_layer, SweepConfig};
+use s2switch::hardware::PeSpec;
+use s2switch::model::LifParams;
+use s2switch::paradigm::parallel::WdmConfig;
+use s2switch::rng::Rng;
+use s2switch::switching::{SwitchMode, SwitchingSystem};
+use std::time::Instant;
+
+fn main() {
+    let pe = PeSpec::default();
+    // A batch of 64 probe layers across the sweep envelope.
+    let mut rng = Rng::new(2024);
+    let probes: Vec<_> = (0..64)
+        .map(|_| {
+            (
+                50 + rng.below(10) * 50,
+                50 + rng.below(10) * 50,
+                0.1 + rng.below(10) as f64 * 0.1,
+                1 + rng.below(16) as u16,
+            )
+        })
+        .collect();
+
+    println!("training prejudger…");
+    let ds = generate_grid(&SweepConfig::medium(), &pe, WdmConfig::default());
+
+    let mut rep = Report::new(
+        "Compile-effort comparison over 64 layers (the fast-switching motivation)",
+        &["policy", "wall-clock", "paradigm compiles", "discarded DTCM bytes"],
+    );
+    let mut times = std::collections::BTreeMap::new();
+    for (label, mode) in [
+        ("serial only", SwitchMode::ForceSerial),
+        ("parallel only", SwitchMode::ForceParallel),
+        ("ideal (compile both)", SwitchMode::Ideal),
+        ("classifier (prejudged)", SwitchMode::Classifier),
+    ] {
+        let mut sys = if mode == SwitchMode::Classifier {
+            SwitchingSystem::train_adaboost(&ds, 100, pe)
+        } else {
+            SwitchingSystem::new(mode, pe)
+        };
+        let t0 = Instant::now();
+        for (i, &(src, tgt, d, dl)) in probes.iter().enumerate() {
+            let mut lrng = Rng::new(5000 + i as u64);
+            let proj = realize_layer(src, tgt, d, dl, &mut lrng);
+            sys.compile_layer(&proj, src, tgt, LifParams::default()).unwrap();
+        }
+        let dt = t0.elapsed();
+        times.insert(label, dt);
+        rep.row(vec![
+            label.to_string(),
+            human_ns(dt.as_nanos() as f64),
+            sys.stats.total_compiles().to_string(),
+            sys.stats.discarded_dtcm.to_string(),
+        ]);
+    }
+    rep.finish();
+
+    let ideal = times["ideal (compile both)"].as_secs_f64();
+    let fast = times["classifier (prejudged)"].as_secs_f64();
+    println!(
+        "\nprejudged switching is {:.2}× faster than compile-both (and discards zero bytes) → {}",
+        ideal / fast,
+        if fast < ideal { "saving reproduced ✓" } else { "NOT reproduced ✗" }
+    );
+}

@@ -1,0 +1,80 @@
+//! Extension bench — temporal + energy criteria (the paper's §IV-C future
+//! work): how the switching decision shifts when latency and energy join
+//! memory in the objective.
+//!
+//! For a probe set of layers at several activity levels we report each
+//! paradigm's (PEs, step latency, step energy) and the decisions of the
+//! memory-only system (the published one) vs the balanced multi-criteria
+//! system.
+//!
+//! ```bash
+//! cargo bench --bench ext_criteria
+//! ```
+
+use s2switch::bench_harness::Report;
+use s2switch::criteria::{Activity, CriteriaWeights, MultiCriteriaSwitch};
+use s2switch::dataset::label_layer;
+use s2switch::hardware::PeSpec;
+use s2switch::model::LayerCharacter;
+use s2switch::paradigm::parallel::WdmConfig;
+use s2switch::rng::Rng;
+
+fn main() {
+    let pe = PeSpec::default();
+    let mem_only = MultiCriteriaSwitch::new(CriteriaWeights::memory_only());
+    let balanced = MultiCriteriaSwitch::new(CriteriaWeights::balanced());
+
+    let probes: Vec<(usize, usize, f64, u16)> = vec![
+        (255, 255, 1.0, 1),
+        (255, 255, 1.0, 8),
+        (255, 255, 0.3, 4),
+        (255, 255, 0.05, 8),
+        (500, 100, 0.5, 2),
+        (100, 500, 0.1, 16),
+    ];
+    let rates = [0.01, 0.1, 0.4];
+
+    let mut rep = Report::new(
+        "Extension — multi-criteria switching (paper future work)",
+        &[
+            "layer",
+            "rate",
+            "serial (PE; µs; nJ)",
+            "parallel (PE; µs; nJ)",
+            "memory-only picks",
+            "balanced picks",
+        ],
+    );
+    let mut diverged = 0usize;
+    let mut total = 0usize;
+    for (i, &(src, tgt, d, dl)) in probes.iter().enumerate() {
+        let mut rng = Rng::new(9000 + i as u64);
+        let sample = label_layer(src, tgt, d, dl, &pe, WdmConfig::default(), &mut rng);
+        let ch = LayerCharacter::new(src, tgt, d, dl);
+        for &rate in &rates {
+            let act = Activity::from_rate(&ch, rate);
+            let (s, p) =
+                balanced.evaluate(&ch, act, sample.serial_pes, sample.parallel_pes, &pe);
+            let d_mem =
+                mem_only.decide(&ch, act, sample.serial_pes, sample.parallel_pes, &pe);
+            let d_bal =
+                balanced.decide(&ch, act, sample.serial_pes, sample.parallel_pes, &pe);
+            total += 1;
+            diverged += usize::from(d_mem != d_bal);
+            rep.row(vec![
+                format!("{src}×{tgt} d={d} dl={dl}"),
+                format!("{rate}"),
+                format!("{}; {:.1}; {:.1}", s.pes, s.time.step_ns / 1e3, s.energy.step_pj / 1e3),
+                format!("{}; {:.1}; {:.1}", p.pes, p.time.step_ns / 1e3, p.energy.step_pj / 1e3),
+                d_mem.to_string(),
+                d_bal.to_string(),
+            ]);
+        }
+    }
+    rep.finish();
+    println!(
+        "\n{diverged}/{total} decisions change when time+energy join the objective — \
+         the extension is not a no-op, and activity level now matters (it cannot \
+         matter under the paper's memory-only criterion)."
+    );
+}

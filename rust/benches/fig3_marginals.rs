@@ -1,0 +1,87 @@
+//! Bench F3 — regenerates **Fig. 3**: the marginal distribution of the
+//! four layer-character factors, split by winning paradigm.
+//!
+//! For each value of each factor (delay range, source neurons, target
+//! neurons, weight density) we count how many corpus layers each paradigm
+//! wins — the histogram pairs behind Fig. 3's orange (parallel) and blue
+//! (serial) curves.
+//!
+//! ```bash
+//! cargo bench --bench fig3_marginals                  # medium grid
+//! S2SWITCH_FULL=1 cargo bench --bench fig3_marginals  # paper's 16k grid
+//! ```
+
+use s2switch::bench_harness::Report;
+use s2switch::coordinator::dataset_cached;
+use s2switch::dataset::{Sample, SweepConfig};
+use s2switch::paradigm::Paradigm;
+use std::path::PathBuf;
+
+fn marginal(
+    title: &str,
+    samples: &[Sample],
+    key: impl Fn(&Sample) -> String,
+) {
+    let mut buckets: std::collections::BTreeMap<String, (usize, usize)> = Default::default();
+    for s in samples {
+        let e = buckets.entry(key(s)).or_default();
+        match s.label() {
+            Paradigm::Serial => e.0 += 1,
+            Paradigm::Parallel => e.1 += 1,
+        }
+    }
+    let mut rep = Report::new(title, &["value", "serial wins", "parallel wins", "parallel %"]);
+    for (v, (s, p)) in buckets {
+        let pct = 100.0 * p as f64 / (s + p).max(1) as f64;
+        rep.row(vec![v, s.to_string(), p.to_string(), format!("{pct:.1}")]);
+    }
+    rep.finish();
+}
+
+fn main() {
+    let full = std::env::var_os("S2SWITCH_FULL").is_some();
+    let (cfg, cache) = if full {
+        (SweepConfig::default(), "data/dataset.csv")
+    } else {
+        (SweepConfig::medium(), "data/dataset_medium.csv")
+    };
+    let ds = dataset_cached(&PathBuf::from(cache), &cfg).expect("dataset");
+    println!("corpus: {} layers ({})", ds.len(), if full { "full 16k" } else { "medium" });
+
+    marginal("Fig 3a — marginal over delay range", &ds.samples, |s| {
+        format!("{:02}", s.character.delay_range)
+    });
+    marginal("Fig 3b — marginal over source neurons", &ds.samples, |s| {
+        format!("{:03}", s.character.n_source)
+    });
+    marginal("Fig 3c — marginal over target neurons", &ds.samples, |s| {
+        format!("{:03}", s.character.n_target)
+    });
+    marginal("Fig 3d — marginal over weight density", &ds.samples, |s| {
+        format!("{:.1}", s.character.density)
+    });
+
+    // The paper's stated trend: "the parallel paradigm improves with
+    // decreasing delay range and increasing weight density".
+    let rate = |f: &dyn Fn(&Sample) -> bool| {
+        let sel: Vec<_> = ds.samples.iter().filter(|s| f(s)).collect();
+        sel.iter().filter(|s| s.label() == Paradigm::Parallel).count() as f64
+            / sel.len().max(1) as f64
+    };
+    let low_delay = rate(&|s: &Sample| s.character.delay_range <= 4);
+    let high_delay = rate(&|s: &Sample| s.character.delay_range >= 13);
+    let dense = rate(&|s: &Sample| s.character.density >= 0.8);
+    let sparse = rate(&|s: &Sample| s.character.density <= 0.2);
+    println!(
+        "\ntrend checks: parallel-win rate delay≤4 {:.1}% vs delay≥13 {:.1}% → {}",
+        100.0 * low_delay,
+        100.0 * high_delay,
+        if low_delay > high_delay { "reproduced ✓" } else { "NOT reproduced ✗" }
+    );
+    println!(
+        "              parallel-win rate density≥0.8 {:.1}% vs density≤0.2 {:.1}% → {}",
+        100.0 * dense,
+        100.0 * sparse,
+        if dense > sparse { "reproduced ✓" } else { "NOT reproduced ✗" }
+    );
+}

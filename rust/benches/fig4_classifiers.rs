@@ -1,0 +1,58 @@
+//! Bench F4 — regenerates **Fig. 4**: accuracy comparison among the 12
+//! classifiers, trained with multiple random seeds (the paper uses 20; the
+//! red lines mark the min–max range).
+//!
+//! Headline: AdaBoost tops the ranking — the paper reports 91.69%.
+//!
+//! ```bash
+//! cargo bench --bench fig4_classifiers                  # medium grid, 5 seeds
+//! S2SWITCH_FULL=1 cargo bench --bench fig4_classifiers  # 16k grid, 20 seeds
+//! ```
+
+use s2switch::bench_harness::Report;
+use s2switch::coordinator::{dataset_cached, train_roster};
+use s2switch::dataset::SweepConfig;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var_os("S2SWITCH_FULL").is_some();
+    let (cfg, cache, seeds) = if full {
+        (SweepConfig::default(), "data/dataset.csv", 20)
+    } else {
+        (SweepConfig::medium(), "data/dataset_medium.csv", 5)
+    };
+    let ds = dataset_cached(&PathBuf::from(cache), &cfg).expect("dataset");
+    println!("corpus: {} layers; {seeds} seeds (paper: 16k layers, 20 seeds)", ds.len());
+
+    let t0 = Instant::now();
+    let scores = train_roster(&ds, seeds);
+    let train_time = t0.elapsed();
+
+    let mut ranked: Vec<_> = scores.iter().collect();
+    ranked.sort_by(|a, b| b.mean().partial_cmp(&a.mean()).unwrap());
+
+    let mut rep = Report::new(
+        "Fig 4 — classifier accuracy over seeds (paper: AdaBoost best, 91.69%)",
+        &["classifier", "mean %", "min %", "max %"],
+    );
+    for s in &ranked {
+        rep.row(vec![
+            s.name.to_string(),
+            format!("{:.2}", 100.0 * s.mean()),
+            format!("{:.2}", 100.0 * s.min()),
+            format!("{:.2}", 100.0 * s.max()),
+        ]);
+    }
+    rep.finish();
+    println!("(total training wall-clock: {train_time:.2?})");
+
+    let best = ranked[0];
+    let ada = scores.iter().find(|s| s.name == "AdaBoost").unwrap();
+    println!(
+        "\nAdaBoost mean {:.2}% (paper 91.69%); rank {} of 12 → {}",
+        100.0 * ada.mean(),
+        ranked.iter().position(|s| s.name == "AdaBoost").unwrap() + 1,
+        if ada.mean() >= best.mean() - 0.02 { "top-of-ranking reproduced ✓" } else { "NOT at top ✗" }
+    );
+}

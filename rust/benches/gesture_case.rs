@@ -1,0 +1,79 @@
+//! Bench G1 — regenerates the §IV-C gesture-recognition case study:
+//! 2048-20-4 SNN at 3.16% weight density; the paper reports 9 PEs serial,
+//! 5 parallel, 4 with the switching system. We reproduce the *ordering*
+//! (absolute counts depend on unpublished compiler internals) and time the
+//! three compilation paths.
+//!
+//! ```bash
+//! cargo bench --bench gesture_case
+//! ```
+
+use s2switch::bench_harness::{Bench, Report};
+use s2switch::dataset::{generate_grid, SweepConfig};
+use s2switch::hardware::PeSpec;
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder};
+use s2switch::paradigm::parallel::WdmConfig;
+use s2switch::switching::{network_pe_count, SwitchMode, SwitchingSystem};
+
+fn gesture_net() -> Network {
+    let mut b = NetworkBuilder::new(2048);
+    let input = b.spike_source("dvs-input", 2048);
+    let hidden = b.lif_population("hidden", 20, LifParams::default());
+    let output = b.lif_population("classes", 4, LifParams::default());
+    let draw = SynapseDraw { delay_range: 1, w_max: 100, ..Default::default() };
+    b.project(input, hidden, Connector::FixedProbability(0.0316), draw, 0.01);
+    b.project(hidden, output, Connector::FixedProbability(0.5), draw, 0.05);
+    b.build()
+}
+
+fn main() {
+    let pe = PeSpec::default();
+    let ds = generate_grid(&SweepConfig::medium(), &pe, WdmConfig::default());
+
+    let mut rep = Report::new(
+        "Gesture case (2048-20-4 @ 3.16%) — paper: 9 / 5 / 4 PEs",
+        &["system", "PEs", "layer PEs", "source hosting", "compiles run"],
+    );
+    let bench = Bench::new(1, 5);
+    let mut totals = Vec::new();
+    let systems: Vec<(&str, Box<dyn Fn() -> SwitchingSystem>)> = vec![
+        ("serial", Box::new(move || SwitchingSystem::new(SwitchMode::ForceSerial, pe))),
+        ("parallel", Box::new(move || SwitchingSystem::new(SwitchMode::ForceParallel, pe))),
+        ("ideal switch", Box::new(move || SwitchingSystem::new(SwitchMode::Ideal, pe))),
+        ("classifier switch", {
+            let ds = ds.clone();
+            Box::new(move || SwitchingSystem::train_adaboost(&ds, 100, pe))
+        }),
+    ];
+    for (label, make) in systems {
+        // Timed compile.
+        bench.run(&format!("compile: {label}"), || {
+            let net = gesture_net();
+            let mut sys = make();
+            sys.compile_network(&net).unwrap().0.len()
+        });
+        let net = gesture_net();
+        let mut sys = make();
+        let (layers, layer_pes) = sys.compile_network(&net).unwrap();
+        let hosting = s2switch::switching::source_hosting_pes(&net, &layers, &pe);
+        let total = network_pe_count(&net, &layers, &pe);
+        rep.row(vec![
+            label.to_string(),
+            total.to_string(),
+            layer_pes.to_string(),
+            hosting.to_string(),
+            sys.stats.total_compiles().to_string(),
+        ]);
+        totals.push((label, total));
+    }
+    rep.finish();
+
+    let get = |l: &str| totals.iter().find(|(n, _)| *n == l).unwrap().1;
+    let (s, p, c) = (get("serial"), get("parallel"), get("classifier switch"));
+    println!("\npaper 9 / 5 / 4 → reproduction {s} / {p} / {c}");
+    println!(
+        "ordering serial > parallel ≥ switching: {}",
+        if s > p && p >= c { "reproduced ✓" } else { "NOT reproduced ✗" }
+    );
+}

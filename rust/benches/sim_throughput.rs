@@ -1,0 +1,105 @@
+//! Simulator throughput bench — the §Perf L3 hot path.
+//!
+//! Measures steps/s and synaptic events/s for the serial engine and
+//! MACs/s for the parallel engine (native backend) across layer shapes,
+//! plus end-to-end network throughput. Drives the EXPERIMENTS.md §Perf
+//! iteration log.
+//!
+//! ```bash
+//! cargo bench --bench sim_throughput
+//! ```
+
+use s2switch::bench_harness::{Bench, Report};
+use s2switch::dataset::realize_layer;
+use s2switch::hardware::PeSpec;
+use s2switch::model::{LifParams, PopulationId};
+use s2switch::paradigm::parallel::{compile_parallel, WdmConfig};
+use s2switch::paradigm::serial::compile_serial;
+use s2switch::rng::Rng;
+use s2switch::sim::{NativeMac, ParallelLayerEngine, SerialLayerEngine};
+use std::time::Instant;
+
+const STEPS: usize = 200;
+
+fn main() {
+    let pe = PeSpec::default();
+    let shapes: Vec<(usize, usize, f64, u16)> =
+        vec![(255, 255, 0.1, 4), (255, 255, 0.5, 8), (500, 500, 0.3, 16), (2048, 20, 0.0316, 1)];
+    let bench = Bench::new(1, 5);
+
+    let mut rep = Report::new(
+        "Simulator throughput (native backend)",
+        &["layer", "serial Mevents/s", "serial steps/s", "parallel GMAC/s", "parallel steps/s"],
+    );
+    for (si, &(src, tgt, d, dl)) in shapes.iter().enumerate() {
+        let mut rng = Rng::new(7000 + si as u64);
+        let proj = realize_layer(src, tgt, d, dl, &mut rng);
+        // Pre-generate stimulus: 20% of sources fire per step.
+        let mut srng = Rng::new(8000 + si as u64);
+        let stim: Vec<Vec<u32>> = (0..STEPS)
+            .map(|_| (0..src as u32).filter(|_| srng.chance(0.2)).collect())
+            .collect();
+
+        let sc = compile_serial(&proj, src, tgt, LifParams::default(), &pe).unwrap();
+        let mut se = SerialLayerEngine::new(sc, tgt);
+        let t0 = Instant::now();
+        for s in &stim {
+            std::hint::black_box(se.step_currents(s));
+        }
+        let dt_s = t0.elapsed().as_secs_f64();
+
+        let pc =
+            compile_parallel(&proj, src, tgt, LifParams::default(), &pe, WdmConfig::default())
+                .unwrap();
+        let mut pe_eng = ParallelLayerEngine::new(pc, Box::new(NativeMac));
+        let t0 = Instant::now();
+        for s in &stim {
+            std::hint::black_box(pe_eng.step_currents(s));
+        }
+        let dt_p = t0.elapsed().as_secs_f64();
+
+        rep.row(vec![
+            format!("{src}×{tgt},{d},{dl}"),
+            format!("{:.2}", se.events as f64 / dt_s / 1e6),
+            format!("{:.0}", STEPS as f64 / dt_s),
+            format!("{:.2}", pe_eng.macs as f64 / dt_p / 1e9),
+            format!("{:.0}", STEPS as f64 / dt_p),
+        ]);
+    }
+    rep.finish();
+
+    // End-to-end demo network (the CLI's `simulate` network).
+    bench.run("e2e 3-layer network, 100 steps (ideal compile)", || {
+        use s2switch::model::connector::{Connector, SynapseDraw};
+        use s2switch::model::NetworkBuilder;
+        use s2switch::switching::{SwitchMode, SwitchingSystem};
+        let mut b = NetworkBuilder::new(11);
+        let inp = b.spike_source("input", 200);
+        let hid = b.lif_population("hidden", 120, LifParams::default());
+        let out = b.lif_population("output", 20, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.4),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.015,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.9),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        let net = b.build();
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = s2switch::sim::NetworkSim::native(&net, layers).unwrap();
+        let mut rng = Rng::new(99);
+        let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
+            (0..200u32).filter(|_| rng.chance(0.15)).collect()
+        };
+        sim.run(100, &mut provider);
+        sim.recorder.total_spikes()
+    });
+}

@@ -1,0 +1,103 @@
+//! Bench T1 — regenerates **Table I**: the itemized DTCM cost model for
+//! both paradigms at the paper's reference configuration (255×255 neurons,
+//! 8-bit weights, delay range 16), plus timing for evaluating the models.
+//!
+//! ```bash
+//! cargo bench --bench table1_costmodel
+//! ```
+
+use s2switch::bench_harness::{Bench, Report};
+use s2switch::costmodel::parallel::{dominant_cost, subordinate_fixed_cost};
+use s2switch::costmodel::serial::{serial_layout, serial_pe_cost};
+use s2switch::dataset::realize_layer;
+use s2switch::hardware::PeSpec;
+use s2switch::model::LayerCharacter;
+use s2switch::paradigm::parallel::wdm::{build_wdm, WdmConfig};
+use s2switch::rng::Rng;
+
+fn main() {
+    let pe = PeSpec::default();
+    let (n, delay) = (255usize, 16usize);
+
+    // ---- Serial block -------------------------------------------------
+    let mut rep = Report::new(
+        "Table I — serial paradigm DTCM cost (255x255, delay 16, density as shown)",
+        &["item", "density 0.10", "density 0.25", "density 1.00"],
+    );
+    let costs: Vec<_> =
+        [0.10, 0.25, 1.00].iter().map(|&d| serial_pe_cost(n, n, d, delay, 1)).collect();
+    for i in 0..costs[0].items().len() {
+        rep.row(vec![
+            costs[0].items()[i].0.to_string(),
+            costs[0].items()[i].1.to_string(),
+            costs[1].items()[i].1.to_string(),
+            costs[2].items()[i].1.to_string(),
+        ]);
+    }
+    rep.row(vec![
+        "TOTAL (budget 98304)".into(),
+        costs[0].total().to_string(),
+        costs[1].total().to_string(),
+        costs[2].total().to_string(),
+    ]);
+    rep.finish();
+    println!(
+        "paper: \"DTCM of one PE is incapable … when the weight density is over 25%\" → {}",
+        if costs[1].total() > pe.dtcm_bytes && costs[0].total() <= pe.dtcm_bytes {
+            "reproduced ✓"
+        } else {
+            "NOT reproduced ✗"
+        }
+    );
+
+    // ---- Parallel dominant block ---------------------------------------
+    let mut rep = Report::new(
+        "Table I — parallel dominant PE DTCM cost (255 sources, 255 targets)",
+        &["item", "delay 1", "delay 8", "delay 16"],
+    );
+    let doms: Vec<_> = [1usize, 8, 16].iter().map(|&d| dominant_cost(n, n, d, 1)).collect();
+    for i in 0..doms[0].items().len() {
+        rep.row(vec![
+            doms[0].items()[i].0.to_string(),
+            doms[0].items()[i].1.to_string(),
+            doms[1].items()[i].1.to_string(),
+            doms[2].items()[i].1.to_string(),
+        ]);
+    }
+    rep.row(vec![
+        "TOTAL".into(),
+        doms[0].total().to_string(),
+        doms[1].total().to_string(),
+        doms[2].total().to_string(),
+    ]);
+    rep.finish();
+
+    // ---- Parallel subordinate: realized WDM sizes ----------------------
+    let mut rep = Report::new(
+        "Table I — subordinate: optimized weight-delay-map (realized, not closed-form)",
+        &["density", "delay", "wdm rows", "wdm cols", "weight block B", "fixed B"],
+    );
+    for &(d, dl) in &[(0.1, 1u16), (0.1, 16), (1.0, 1), (1.0, 16)] {
+        let mut rng = Rng::new(1);
+        let proj = realize_layer(n, n, d, dl, &mut rng);
+        let wdm = build_wdm(&proj, n, n, WdmConfig::default());
+        let rpd = wdm.rows_per_delay();
+        rep.row(vec![
+            format!("{d:.1}"),
+            dl.to_string(),
+            wdm.n_rows().to_string(),
+            wdm.n_cols().to_string(),
+            wdm.weight_block_bytes(wdm.n_rows(), wdm.n_cols(), &rpd).to_string(),
+            subordinate_fixed_cost(wdm.n_cols(), dl as usize, 1).total().to_string(),
+        ]);
+    }
+    rep.finish();
+
+    // ---- Timing: cost-model evaluation is microseconds -----------------
+    let bench = Bench::new(3, 20);
+    bench.run("serial_pe_cost (closed form)", || serial_pe_cost(n, n, 0.5, delay, 1).total());
+    bench.run("serial_layout (search)", || {
+        serial_layout(&LayerCharacter::new(500, 500, 1.0, 16), &pe).unwrap().n_pes()
+    });
+    bench.run("dominant_cost (closed form)", || dominant_cost(n, n, delay, 1).total());
+}

@@ -1,0 +1,88 @@
+//! Ablation bench — the four WDM optimization strategies (paper §III-B:
+//! "a series of optimization strategies to alleviate the memory weakness
+//! derived from operands' zero padding and potential sparse synaptic
+//! connection").
+//!
+//! Each strategy is disabled in turn; we report the resulting weight-block
+//! bytes and subordinate-PE counts over a probe set, quantifying what each
+//! buys (the paper's claim that "the optimization effect is not always
+//! apparent in various situations" shows up as near-zero deltas in some
+//! corners).
+//!
+//! ```bash
+//! cargo bench --bench wdm_ablation
+//! ```
+
+use s2switch::bench_harness::Report;
+use s2switch::dataset::realize_layer;
+use s2switch::hardware::PeSpec;
+use s2switch::paradigm::parallel::splitting::two_stage_split;
+use s2switch::paradigm::parallel::wdm::{build_wdm_shape, WdmConfig};
+use s2switch::rng::Rng;
+
+fn variant(name: &str, f: impl Fn(&mut WdmConfig)) -> (String, WdmConfig) {
+    let mut c = WdmConfig::default();
+    f(&mut c);
+    (name.to_string(), c)
+}
+
+fn main() {
+    let pe = PeSpec::default();
+    let probes: Vec<(usize, usize, f64, u16)> = vec![
+        (255, 255, 1.0, 1),
+        (255, 255, 1.0, 16),
+        (255, 255, 0.1, 16),
+        (500, 100, 0.3, 8),
+        (100, 500, 0.3, 8),
+        (500, 500, 0.05, 4),
+    ];
+    let variants = vec![
+        variant("all strategies (deployed)", |_| {}),
+        variant("no S1 zero-row elim", |c| c.zero_row_elimination = false),
+        variant("no S2 zero-col elim", |c| c.zero_col_elimination = false),
+        variant("no S3 delay merging", |c| c.delay_slot_merging = false),
+        variant("no S4 8-bit quant (16-bit)", |c| c.quantize_8bit = false),
+        variant("naive (none)", |_| {}),
+    ];
+    let naive = WdmConfig::naive();
+
+    let mut rep = Report::new(
+        "WDM optimization-strategy ablation (subordinate PEs | weight-block kB)",
+        &["layer (src×tgt,d,delay)", "all", "-S1", "-S2", "-S3", "-S4", "naive"],
+    );
+    let mut totals = vec![(0usize, 0usize); variants.len()];
+    for (pi, &(src, tgt, d, dl)) in probes.iter().enumerate() {
+        let mut rng = Rng::new(4000 + pi as u64);
+        let proj = realize_layer(src, tgt, d, dl, &mut rng);
+        let mut cells = vec![format!("{src}×{tgt},{d},{dl}")];
+        for (vi, (name, cfg)) in variants.iter().enumerate() {
+            let cfg = if name.starts_with("naive") { naive } else { *cfg };
+            let wdm = build_wdm_shape(&proj, src, tgt, cfg);
+            let rpd = wdm.rows_per_delay();
+            let kb = wdm.weight_block_bytes(wdm.n_rows(), wdm.n_cols(), &rpd) / 1024;
+            let pes = two_stage_split(&wdm, &pe, 1).map(|p| p.n_subordinates()).unwrap_or(0);
+            totals[vi].0 += pes;
+            totals[vi].1 += kb;
+            cells.push(format!("{pes} | {kb}"));
+        }
+        rep.row(cells);
+    }
+    rep.row({
+        let mut cells = vec!["TOTAL".to_string()];
+        cells.extend(totals.iter().map(|(p, k)| format!("{p} | {k}")));
+        cells
+    });
+    rep.finish();
+
+    let all = totals[0];
+    let naive_t = totals[5];
+    println!(
+        "\nfull strategy stack: {} subordinate PEs / {} kB vs naive {} PEs / {} kB → {:.1}× memory saving",
+        all.0,
+        all.1,
+        naive_t.0,
+        naive_t.1,
+        naive_t.1 as f64 / all.1.max(1) as f64
+    );
+    assert!(all.1 <= naive_t.1, "strategies must never increase memory");
+}

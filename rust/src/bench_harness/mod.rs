@@ -1,0 +1,203 @@
+//! Hand-rolled benchmark harness (criterion substitute — the offline
+//! vendored crate set has no criterion).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`Bench`] for timed measurements and [`Report`] to print the paper's
+//! table/figure rows as aligned text plus a machine-readable CSV dump under
+//! `bench_out/`.
+
+use std::time::Instant;
+
+/// Statistics over a set of per-iteration timings.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    fn from_samples(mut ns: Vec<f64>) -> Stats {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let pct = |p: f64| ns[((n as f64 - 1.0) * p).round() as usize];
+        Stats {
+            iters: n,
+            mean_ns: ns.iter().sum::<f64>() / n as f64,
+            p50_ns: pct(0.50),
+            p99_ns: pct(0.99),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+
+    /// Human-readable mean with unit scaling.
+    pub fn human_mean(&self) -> String {
+        human_ns(self.mean_ns)
+    }
+}
+
+/// Scale nanoseconds to a readable unit.
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Timed-measurement runner with warmup.
+pub struct Bench {
+    warmup_iters: usize,
+    measure_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, measure_iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, measure_iters: usize) -> Self {
+        Bench { warmup_iters, measure_iters }
+    }
+
+    /// Measure `f`, returning timing stats. The closure's return value is
+    /// passed through `std::hint::black_box` to defeat dead-code elimination.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "  [bench] {:<42} mean {:>12}  p50 {:>12}  p99 {:>12}  ({} iters)",
+            name,
+            human_ns(stats.mean_ns),
+            human_ns(stats.p50_ns),
+            human_ns(stats.p99_ns),
+            stats.iters
+        );
+        stats
+    }
+}
+
+/// Tabular report printer + CSV dump, one per paper table/figure.
+pub struct Report {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Report {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Print the aligned table and write `bench_out/<slug>.csv`.
+    pub fn finish(self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.columns));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        // CSV dump for downstream plotting.
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let dir = std::path::Path::new("bench_out");
+        let path = dir.join(format!("{}.csv", slug.trim_matches('_')));
+        let cols: Vec<&str> = self.columns.iter().map(|s| s.as_str()).collect();
+        // The CSV layer has no quoting — sanitize display-oriented cells.
+        let sanitized: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| c.replace([',', '\n'], ";")).collect())
+            .collect();
+        if let Err(e) = crate::io::csv::write_csv(&path, &cols, sanitized) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("(csv written to {})", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns && s.p99_ns <= s.max_ns);
+        assert_eq!(s.iters, 100);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let b = Bench::new(1, 5);
+        let mut calls = 0usize;
+        let s = b.run("noop", || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(s.iters, 5);
+        assert_eq!(calls, 6); // warmup + measured
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_ns(500.0).ends_with("ns"));
+        assert!(human_ns(5_000.0).ends_with("µs"));
+        assert!(human_ns(5_000_000.0).ends_with("ms"));
+        assert!(human_ns(5_000_000_000.0).ends_with('s'));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn report_rejects_bad_arity() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,310 @@
+//! Linear and quadratic discriminant analysis (closed-form, 4×4 Gaussian
+//! class models).
+
+use super::{Classifier, N_CLASSES, N_FEATURES};
+
+type Mat = [[f64; N_FEATURES]; N_FEATURES];
+
+/// Invert a 4×4 (symmetric PD in practice) matrix by Gauss–Jordan with
+/// partial pivoting. Returns (inverse, log|det|); the caller regularizes
+/// singular inputs beforehand.
+fn invert(m: &Mat) -> Option<(Mat, f64)> {
+    let n = N_FEATURES;
+    let mut a = *m;
+    let mut inv = [[0.0; N_FEATURES]; N_FEATURES];
+    for (i, row) in inv.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    let mut log_det = 0.0;
+    for col in 0..n {
+        // Pivot.
+        let mut pivot = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[pivot][col].abs() {
+                pivot = r;
+            }
+        }
+        if a[pivot][col].abs() < 1e-300 {
+            return None;
+        }
+        if pivot != col {
+            a.swap(pivot, col);
+            inv.swap(pivot, col);
+        }
+        let p = a[col][col];
+        log_det += p.abs().ln();
+        for j in 0..n {
+            a[col][j] /= p;
+            inv[col][j] /= p;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = a[r][col];
+                if f != 0.0 {
+                    for j in 0..n {
+                        a[r][j] -= f * a[col][j];
+                        inv[r][j] -= f * inv[col][j];
+                    }
+                }
+            }
+        }
+    }
+    Some((inv, log_det))
+}
+
+/// Per-class mean + covariance estimation with ridge regularization.
+fn class_stats(
+    x: &[[f64; N_FEATURES]],
+    y: &[usize],
+    pooled: bool,
+) -> ([usize; N_CLASSES], [[f64; N_FEATURES]; N_CLASSES], [Mat; N_CLASSES]) {
+    let mut count = [0usize; N_CLASSES];
+    let mut mean = [[0.0; N_FEATURES]; N_CLASSES];
+    for (row, &c) in x.iter().zip(y) {
+        count[c] += 1;
+        for j in 0..N_FEATURES {
+            mean[c][j] += row[j];
+        }
+    }
+    for c in 0..N_CLASSES {
+        let n = count[c].max(1) as f64;
+        for j in 0..N_FEATURES {
+            mean[c][j] /= n;
+        }
+    }
+    let mut cov = [[[0.0; N_FEATURES]; N_FEATURES]; N_CLASSES];
+    for (row, &c) in x.iter().zip(y) {
+        for j in 0..N_FEATURES {
+            for k in 0..N_FEATURES {
+                cov[c][j][k] += (row[j] - mean[c][j]) * (row[k] - mean[c][k]);
+            }
+        }
+    }
+    if pooled {
+        // Sum both classes' scatter, divide by total, copy to both slots.
+        let total = (count[0] + count[1]).max(1) as f64;
+        let mut shared = [[0.0; N_FEATURES]; N_FEATURES];
+        for c in 0..N_CLASSES {
+            for j in 0..N_FEATURES {
+                for k in 0..N_FEATURES {
+                    shared[j][k] += cov[c][j][k] / total;
+                }
+            }
+        }
+        cov = [shared, shared];
+    } else {
+        for c in 0..N_CLASSES {
+            let n = count[c].max(1) as f64;
+            for j in 0..N_FEATURES {
+                for k in 0..N_FEATURES {
+                    cov[c][j][k] /= n;
+                }
+            }
+        }
+    }
+    // Ridge.
+    for c in 0..N_CLASSES {
+        for (j, row) in cov[c].iter_mut().enumerate() {
+            row[j] += 1e-6;
+        }
+    }
+    (count, mean, cov)
+}
+
+/// Shared scoring core for LDA/QDA.
+#[derive(Clone, Debug, Default)]
+struct GaussianScorer {
+    prior_log: [f64; N_CLASSES],
+    mean: [[f64; N_FEATURES]; N_CLASSES],
+    inv: [Mat; N_CLASSES],
+    log_det: [f64; N_CLASSES],
+}
+
+impl GaussianScorer {
+    fn fit(x: &[[f64; N_FEATURES]], y: &[usize], pooled: bool) -> Self {
+        let (count, mean, cov) = class_stats(x, y, pooled);
+        let total = x.len().max(1) as f64;
+        let mut s = GaussianScorer { mean, ..Default::default() };
+        for c in 0..N_CLASSES {
+            s.prior_log[c] = ((count[c].max(1) as f64) / total).ln();
+            let (inv, log_det) = invert(&cov[c]).expect("regularized covariance is invertible");
+            s.inv[c] = inv;
+            s.log_det[c] = log_det;
+        }
+        s
+    }
+
+    fn score(&self, c: usize, x: &[f64; N_FEATURES]) -> f64 {
+        let mut d = [0.0; N_FEATURES];
+        for j in 0..N_FEATURES {
+            d[j] = x[j] - self.mean[c][j];
+        }
+        let mut maha = 0.0;
+        for j in 0..N_FEATURES {
+            for k in 0..N_FEATURES {
+                maha += d[j] * self.inv[c][j][k] * d[k];
+            }
+        }
+        self.prior_log[c] - 0.5 * (self.log_det[c] + maha)
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        usize::from(self.score(1, x) > self.score(0, x))
+    }
+}
+
+/// Linear discriminant analysis (pooled covariance).
+#[derive(Default)]
+pub struct Lda {
+    scorer: Option<GaussianScorer>,
+}
+
+impl Lda {
+    pub fn new() -> Self {
+        Lda::default()
+    }
+}
+
+impl Classifier for Lda {
+    fn name(&self) -> &'static str {
+        "LDA"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        self.scorer = Some(GaussianScorer::fit(x, y, true));
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        self.scorer.as_ref().expect("train first").predict(x)
+    }
+}
+
+/// Quadratic discriminant analysis (per-class covariance).
+#[derive(Default)]
+pub struct Qda {
+    scorer: Option<GaussianScorer>,
+}
+
+impl Qda {
+    pub fn new() -> Self {
+        Qda::default()
+    }
+}
+
+impl Classifier for Qda {
+    fn name(&self) -> &'static str {
+        "QDA"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        self.scorer = Some(GaussianScorer::fit(x, y, false));
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        self.scorer.as_ref().expect("train first").predict(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::metrics::accuracy;
+    use crate::rng::Rng;
+
+    #[test]
+    fn invert_identity_and_known() {
+        let eye: Mat = {
+            let mut m = [[0.0; 4]; 4];
+            for (i, row) in m.iter_mut().enumerate() {
+                row[i] = 1.0;
+            }
+            m
+        };
+        let (inv, log_det) = invert(&eye).unwrap();
+        assert_eq!(inv, eye);
+        assert!(log_det.abs() < 1e-12);
+
+        // Diagonal matrix.
+        let mut d = eye;
+        d[0][0] = 2.0;
+        d[1][1] = 4.0;
+        let (inv, log_det) = invert(&d).unwrap();
+        assert!((inv[0][0] - 0.5).abs() < 1e-12);
+        assert!((inv[1][1] - 0.25).abs() < 1e-12);
+        assert!((log_det - (8.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invert_roundtrips_random_spd() {
+        let mut rng = Rng::new(50);
+        for _ in 0..20 {
+            // A^T A + I is SPD.
+            let a: Mat = std::array::from_fn(|_| std::array::from_fn(|_| rng.normal()));
+            let mut spd = [[0.0; 4]; 4];
+            for i in 0..4 {
+                for j in 0..4 {
+                    for (k, row) in a.iter().enumerate() {
+                        spd[i][j] += row[i] * a[k][j];
+                    }
+                }
+                spd[i][i] += 1.0;
+            }
+            let (inv, _) = invert(&spd).unwrap();
+            // spd * inv ≈ I.
+            for i in 0..4 {
+                for j in 0..4 {
+                    let mut v = 0.0;
+                    for k in 0..4 {
+                        v += spd[i][k] * inv[k][j];
+                    }
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((v - want).abs() < 1e-8, "({i},{j}) = {v}");
+                }
+            }
+        }
+    }
+
+    fn gaussian_blobs(n: usize, seed: u64) -> (Vec<[f64; 4]>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let c = rng.below(2);
+            let shift = if c == 1 { 2.5 } else { 0.0 };
+            x.push([rng.normal() + shift, rng.normal(), rng.normal() - shift, rng.normal()]);
+            y.push(c);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn lda_separates_blobs() {
+        let (x, y) = gaussian_blobs(500, 51);
+        let mut lda = Lda::new();
+        lda.train(&x, &y);
+        let acc = accuracy(&lda.predict_batch(&x), &y);
+        assert!(acc > 0.95, "LDA on shifted gaussians, got {acc}");
+    }
+
+    #[test]
+    fn qda_beats_lda_on_unequal_covariances() {
+        // Class 0 tight, class 1 wide, same mean: only covariance separates.
+        let mut rng = Rng::new(52);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..800 {
+            let c = rng.below(2);
+            let s = if c == 1 { 3.0 } else { 0.5 };
+            x.push([rng.normal() * s, rng.normal() * s, rng.normal() * s, rng.normal() * s]);
+            y.push(c);
+        }
+        let mut lda = Lda::new();
+        lda.train(&x, &y);
+        let mut qda = Qda::new();
+        qda.train(&x, &y);
+        let acc_l = accuracy(&lda.predict_batch(&x), &y);
+        let acc_q = accuracy(&qda.predict_batch(&x), &y);
+        assert!(acc_q > acc_l + 0.15, "QDA {acc_q} should beat LDA {acc_l} here");
+        assert!(acc_q > 0.8);
+    }
+}

@@ -1,0 +1,100 @@
+//! Random forest: bootstrap-bagged CART trees with random feature subsets.
+
+use super::tree::DecisionTree;
+use super::{Classifier, N_FEATURES};
+use crate::rng::Rng;
+
+/// Majority-vote ensemble of randomized trees.
+pub struct RandomForest {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub seed: u64,
+    trees: Vec<DecisionTree>,
+}
+
+impl RandomForest {
+    pub fn new(n_trees: usize, max_depth: usize, min_samples_split: usize, seed: u64) -> Self {
+        RandomForest { n_trees, max_depth, min_samples_split, seed, trees: Vec::new() }
+    }
+
+    pub fn n_fitted_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+impl Classifier for RandomForest {
+    fn name(&self) -> &'static str {
+        "Random Forest"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        let mut rng = Rng::new(self.seed);
+        self.trees.clear();
+        let n = x.len();
+        for _ in 0..self.n_trees {
+            // Bootstrap sample.
+            let mut bx = Vec::with_capacity(n);
+            let mut by = Vec::with_capacity(n);
+            for _ in 0..n {
+                let i = rng.below(n);
+                bx.push(x[i]);
+                by.push(y[i]);
+            }
+            // Random feature subset *per split* (sklearn's max_features =
+            // √4 = 2) — per-tree masks starve trees on a 4-feature problem.
+            let mut tree = DecisionTree::new(self.max_depth, self.min_samples_split);
+            tree.per_split_features = Some((2, rng.next_u64()));
+            tree.train(&bx, &by);
+            self.trees.push(tree);
+        }
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        let votes: usize = self.trees.iter().map(|t| t.predict(x)).sum();
+        usize::from(votes * 2 > self.trees.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::metrics::accuracy;
+    use crate::rng::Rng;
+
+    #[test]
+    fn forest_beats_chance_and_is_deterministic() {
+        let mut rng = Rng::new(8);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..400 {
+            let a = rng.f64();
+            let b = rng.f64();
+            x.push([a, b, rng.f64(), rng.f64()]);
+            y.push(usize::from(a + b > 1.0));
+        }
+        let mut f1 = RandomForest::new(30, 8, 4, 42);
+        f1.train(&x, &y);
+        let acc = accuracy(&f1.predict_batch(&x), &y);
+        assert!(acc > 0.85, "forest should learn a linear boundary, got {acc}");
+        assert_eq!(f1.n_fitted_trees(), 30);
+
+        let mut f2 = RandomForest::new(30, 8, 4, 42);
+        f2.train(&x, &y);
+        assert_eq!(f1.predict_batch(&x), f2.predict_batch(&x), "same seed → same model");
+    }
+
+    #[test]
+    fn different_seeds_give_different_models() {
+        let mut rng = Rng::new(9);
+        let x: Vec<[f64; 4]> =
+            (0..200).map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()]).collect();
+        let y: Vec<usize> = (0..200).map(|_| rng.below(2)).collect();
+        let mut a = RandomForest::new(10, 6, 4, 1);
+        let mut b = RandomForest::new(10, 6, 4, 2);
+        a.train(&x, &y);
+        b.train(&x, &y);
+        // On noise labels, differently-seeded forests disagree somewhere.
+        assert_ne!(a.predict_batch(&x), b.predict_batch(&x));
+    }
+}

@@ -1,0 +1,110 @@
+//! k-nearest neighbours with standardized Euclidean distance.
+
+use super::metrics::Standardizer;
+use super::{Classifier, N_FEATURES};
+
+/// Brute-force kNN (the corpus is 16k rows; exact search is fast enough and
+/// exactness keeps Fig. 4 deterministic).
+pub struct Knn {
+    pub k: usize,
+    scaler: Option<Standardizer>,
+    x: Vec<[f64; N_FEATURES]>,
+    y: Vec<usize>,
+}
+
+impl Knn {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Knn { k, scaler: None, x: Vec::new(), y: Vec::new() }
+    }
+}
+
+impl Classifier for Knn {
+    fn name(&self) -> &'static str {
+        "kNN"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        let scaler = Standardizer::fit(x);
+        self.x = scaler.apply_all(x);
+        self.y = y.to_vec();
+        self.scaler = Some(scaler);
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        let q = self.scaler.as_ref().expect("train first").apply(x);
+        // Keep a small max-heap of the k best via a sorted insertion buffer
+        // (k is tiny).
+        let k = self.k.min(self.x.len());
+        let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+        for (row, &label) in self.x.iter().zip(&self.y) {
+            let mut d = 0.0;
+            for j in 0..N_FEATURES {
+                let t = row[j] - q[j];
+                d += t * t;
+            }
+            if best.len() < k {
+                best.push((d, label));
+                best.sort_by(|a, b| a.0.total_cmp(&b.0));
+            } else if d < best[k - 1].0 {
+                best[k - 1] = (d, label);
+                best.sort_by(|a, b| a.0.total_cmp(&b.0));
+            }
+        }
+        let ones: usize = best.iter().map(|&(_, l)| l).sum();
+        usize::from(ones * 2 > best.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::metrics::accuracy;
+    use crate::rng::Rng;
+
+    #[test]
+    fn memorizes_training_data_with_k1() {
+        let mut rng = Rng::new(20);
+        let x: Vec<[f64; 4]> =
+            (0..100).map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()]).collect();
+        let y: Vec<usize> = (0..100).map(|_| rng.below(2)).collect();
+        let mut knn = Knn::new(1);
+        knn.train(&x, &y);
+        assert_eq!(accuracy(&knn.predict_batch(&x), &y), 1.0);
+    }
+
+    #[test]
+    fn standardization_makes_scales_irrelevant() {
+        // Feature 0 informative in [0,1]; feature 1 pure noise at scale 1e6.
+        let mut rng = Rng::new(21);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..300 {
+            let a = rng.f64();
+            x.push([a, rng.f64() * 1e6, 0.0, 0.0]);
+            y.push(usize::from(a > 0.5));
+        }
+        let mut knn = Knn::new(5);
+        knn.train(&x, &y);
+        let acc = accuracy(&knn.predict_batch(&x), &y);
+        // Noise at huge scale gets standardized to σ=1; the informative
+        // feature stays usable.
+        assert!(acc > 0.8, "standardized kNN should cope with scales, got {acc}");
+    }
+
+    #[test]
+    fn majority_vote() {
+        // 3 close class-1 points vs 2 close class-0 points.
+        let x = vec![
+            [0.0, 0.0, 0.0, 0.0],
+            [0.1, 0.0, 0.0, 0.0],
+            [0.2, 0.0, 0.0, 0.0],
+            [5.0, 0.0, 0.0, 0.0],
+            [5.1, 0.0, 0.0, 0.0],
+        ];
+        let y = vec![1, 1, 1, 0, 0];
+        let mut knn = Knn::new(5);
+        knn.train(&x, &y);
+        assert_eq!(knn.predict(&[0.05, 0.0, 0.0, 0.0]), 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Linear models: logistic regression (full-batch gradient descent) and a
+//! linear SVM (hinge loss, SGD with L2 regularization, Pegasos-style).
+
+use super::metrics::Standardizer;
+use super::{Classifier, N_FEATURES};
+use crate::rng::Rng;
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// L2-free full-batch logistic regression on standardized features.
+pub struct LogisticRegression {
+    pub epochs: usize,
+    pub learning_rate: f64,
+    scaler: Option<Standardizer>,
+    w: [f64; N_FEATURES],
+    b: f64,
+}
+
+impl LogisticRegression {
+    pub fn new(epochs: usize, learning_rate: f64) -> Self {
+        LogisticRegression {
+            epochs,
+            learning_rate,
+            scaler: None,
+            w: [0.0; N_FEATURES],
+            b: 0.0,
+        }
+    }
+
+    fn raw(&self, x: &[f64; N_FEATURES]) -> f64 {
+        self.w.iter().zip(x).map(|(w, x)| w * x).sum::<f64>() + self.b
+    }
+}
+
+impl Classifier for LogisticRegression {
+    fn name(&self) -> &'static str {
+        "Logistic Regression"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        let scaler = Standardizer::fit(x);
+        let xs = scaler.apply_all(x);
+        self.scaler = Some(scaler);
+        self.w = [0.0; N_FEATURES];
+        self.b = 0.0;
+        let n = xs.len() as f64;
+        for _ in 0..self.epochs {
+            let mut gw = [0.0; N_FEATURES];
+            let mut gb = 0.0;
+            for (row, &label) in xs.iter().zip(y) {
+                let err = sigmoid(self.raw(row)) - label as f64;
+                for j in 0..N_FEATURES {
+                    gw[j] += err * row[j];
+                }
+                gb += err;
+            }
+            for j in 0..N_FEATURES {
+                self.w[j] -= self.learning_rate * gw[j] / n;
+            }
+            self.b -= self.learning_rate * gb / n;
+        }
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        let xs = self.scaler.as_ref().expect("train first").apply(x);
+        usize::from(self.raw(&xs) > 0.0)
+    }
+}
+
+/// Linear SVM via Pegasos SGD on the hinge loss.
+pub struct LinearSvm {
+    pub epochs: usize,
+    pub learning_rate: f64,
+    pub lambda: f64,
+    pub seed: u64,
+    scaler: Option<Standardizer>,
+    w: [f64; N_FEATURES],
+    b: f64,
+}
+
+impl LinearSvm {
+    pub fn new(epochs: usize, learning_rate: f64, lambda: f64, seed: u64) -> Self {
+        LinearSvm {
+            epochs,
+            learning_rate,
+            lambda,
+            seed,
+            scaler: None,
+            w: [0.0; N_FEATURES],
+            b: 0.0,
+        }
+    }
+
+    fn raw(&self, x: &[f64; N_FEATURES]) -> f64 {
+        self.w.iter().zip(x).map(|(w, x)| w * x).sum::<f64>() + self.b
+    }
+}
+
+impl Classifier for LinearSvm {
+    fn name(&self) -> &'static str {
+        "Linear SVM"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        let scaler = Standardizer::fit(x);
+        let xs = scaler.apply_all(x);
+        self.scaler = Some(scaler);
+        self.w = [0.0; N_FEATURES];
+        self.b = 0.0;
+        let mut rng = Rng::new(self.seed);
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut t = 1.0f64;
+        for _ in 0..self.epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let eta = self.learning_rate / (1.0 + self.learning_rate * self.lambda * t);
+                let ypm = if y[i] == 1 { 1.0 } else { -1.0 };
+                let margin = ypm * self.raw(&xs[i]);
+                // L2 shrink.
+                for w in &mut self.w {
+                    *w *= 1.0 - eta * self.lambda;
+                }
+                if margin < 1.0 {
+                    for j in 0..N_FEATURES {
+                        self.w[j] += eta * ypm * xs[i][j];
+                    }
+                    self.b += eta * ypm;
+                }
+                t += 1.0;
+            }
+        }
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        let xs = self.scaler.as_ref().expect("train first").apply(x);
+        usize::from(self.raw(&xs) > 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::metrics::accuracy;
+    use crate::rng::Rng;
+
+    fn linear_data(n: usize, seed: u64, margin: f64) -> (Vec<[f64; 4]>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        while x.len() < n {
+            let row = [rng.f64(), rng.f64(), rng.f64(), rng.f64()];
+            let score = 2.0 * row[0] - row[1] + 0.5 * row[2] - 0.6;
+            if score.abs() < margin {
+                continue; // enforce a margin band
+            }
+            x.push(row);
+            y.push(usize::from(score > 0.0));
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn logistic_learns_linear_boundary() {
+        let (x, y) = linear_data(500, 40, 0.05);
+        let mut lr = LogisticRegression::new(300, 0.5);
+        lr.train(&x, &y);
+        let acc = accuracy(&lr.predict_batch(&x), &y);
+        assert!(acc > 0.97, "logistic on separable data, got {acc}");
+    }
+
+    #[test]
+    fn svm_learns_linear_boundary() {
+        let (x, y) = linear_data(500, 41, 0.05);
+        let mut svm = LinearSvm::new(100, 0.1, 1e-4, 1);
+        svm.train(&x, &y);
+        let acc = accuracy(&svm.predict_batch(&x), &y);
+        assert!(acc > 0.97, "svm on separable data, got {acc}");
+    }
+
+    #[test]
+    fn svm_training_is_seed_deterministic() {
+        let (x, y) = linear_data(200, 42, 0.05);
+        let mut a = LinearSvm::new(20, 0.1, 1e-4, 7);
+        let mut b = LinearSvm::new(20, 0.1, 1e-4, 7);
+        a.train(&x, &y);
+        b.train(&x, &y);
+        assert_eq!(a.predict_batch(&x), b.predict_batch(&x));
+    }
+
+    #[test]
+    fn logistic_balanced_prior_gives_half_split_on_noise() {
+        // On pure noise the classifier should not collapse to one class
+        // when classes are balanced.
+        let mut rng = Rng::new(44);
+        let x: Vec<[f64; 4]> =
+            (0..400).map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()]).collect();
+        let y: Vec<usize> = (0..400).map(|i| i % 2).collect();
+        let mut lr = LogisticRegression::new(50, 0.5);
+        lr.train(&x, &y);
+        let ones: usize = lr.predict_batch(&x).iter().sum();
+        assert!(ones > 50 && ones < 350, "degenerate collapse: {ones}/400 ones");
+    }
+}

@@ -1,0 +1,148 @@
+//! Train/test split, accuracy, confusion counts, feature standardization.
+
+use super::N_FEATURES;
+use crate::rng::Rng;
+
+/// Shuffled train/test split (paper-style 80/20).
+pub fn train_test_split(
+    x: &[[f64; N_FEATURES]],
+    y: &[usize],
+    test_fraction: f64,
+    seed: u64,
+) -> (Vec<[f64; N_FEATURES]>, Vec<usize>, Vec<[f64; N_FEATURES]>, Vec<usize>) {
+    assert_eq!(x.len(), y.len());
+    assert!((0.0..1.0).contains(&test_fraction));
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let n_test = (x.len() as f64 * test_fraction).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    let take = |ids: &[usize]| -> (Vec<[f64; N_FEATURES]>, Vec<usize>) {
+        (ids.iter().map(|&i| x[i]).collect(), ids.iter().map(|&i| y[i]).collect())
+    };
+    let (xte, yte) = take(test_idx);
+    let (xtr, ytr) = take(train_idx);
+    (xtr, ytr, xte, yte)
+}
+
+/// Fraction of correct predictions.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// 2×2 confusion counts: `counts[truth][pred]`.
+pub fn confusion(pred: &[usize], truth: &[usize]) -> [[usize; 2]; 2] {
+    let mut m = [[0usize; 2]; 2];
+    for (&p, &t) in pred.iter().zip(truth) {
+        m[t][p] += 1;
+    }
+    m
+}
+
+/// Per-feature z-score standardization fitted on training data.
+///
+/// The scale-sensitive learners (kNN, linear models, MLP, discriminants)
+/// standardize internally so every classifier sees raw features at the API
+/// boundary.
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mean: [f64; N_FEATURES],
+    pub std: [f64; N_FEATURES],
+}
+
+impl Standardizer {
+    pub fn fit(x: &[[f64; N_FEATURES]]) -> Self {
+        let n = x.len().max(1) as f64;
+        let mut mean = [0.0; N_FEATURES];
+        for row in x {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = [0.0; N_FEATURES];
+        for row in x {
+            for j in 0..N_FEATURES {
+                let d = row[j] - mean[j];
+                var[j] += d * d;
+            }
+        }
+        let mut std = [0.0; N_FEATURES];
+        for j in 0..N_FEATURES {
+            std[j] = (var[j] / n).sqrt().max(1e-12);
+        }
+        Standardizer { mean, std }
+    }
+
+    #[inline]
+    pub fn apply(&self, x: &[f64; N_FEATURES]) -> [f64; N_FEATURES] {
+        let mut out = [0.0; N_FEATURES];
+        for j in 0..N_FEATURES {
+            out[j] = (x[j] - self.mean[j]) / self.std[j];
+        }
+        out
+    }
+
+    pub fn apply_all(&self, x: &[[f64; N_FEATURES]]) -> Vec<[f64; N_FEATURES]> {
+        x.iter().map(|row| self.apply(row)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_partitions_data() {
+        let x: Vec<[f64; 4]> = (0..100).map(|i| [i as f64; 4]).collect();
+        let y: Vec<usize> = (0..100).map(|i| i % 2).collect();
+        let (xtr, ytr, xte, yte) = train_test_split(&x, &y, 0.2, 1);
+        assert_eq!(xte.len(), 20);
+        assert_eq!(xtr.len(), 80);
+        assert_eq!(ytr.len(), 80);
+        assert_eq!(yte.len(), 20);
+        // Every original row appears exactly once.
+        let mut all: Vec<f64> = xtr.iter().chain(&xte).map(|r| r[0]).collect();
+        all.sort_by(f64::total_cmp);
+        assert_eq!(all, (0..100).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_differs_across_seeds() {
+        let x: Vec<[f64; 4]> = (0..100).map(|i| [i as f64; 4]).collect();
+        let y = vec![0usize; 100];
+        let (_, _, a, _) = train_test_split(&x, &y, 0.2, 1);
+        let (_, _, b, _) = train_test_split(&x, &y, 0.2, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn accuracy_and_confusion() {
+        let pred = vec![0, 1, 1, 0];
+        let truth = vec![0, 1, 0, 0];
+        assert!((accuracy(&pred, &truth) - 0.75).abs() < 1e-12);
+        let m = confusion(&pred, &truth);
+        assert_eq!(m, [[2, 1], [0, 1]]);
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_var() {
+        let x: Vec<[f64; 4]> = (0..50).map(|i| [i as f64, 2.0 * i as f64, 5.0, -(i as f64)]).collect();
+        let s = Standardizer::fit(&x);
+        let z = s.apply_all(&x);
+        for j in [0usize, 1, 3] {
+            let mean: f64 = z.iter().map(|r| r[j]).sum::<f64>() / 50.0;
+            let var: f64 = z.iter().map(|r| r[j] * r[j]).sum::<f64>() / 50.0;
+            assert!(mean.abs() < 1e-9);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+        // Constant feature: guarded std, stays finite.
+        assert!(z.iter().all(|r| r[2].is_finite()));
+    }
+}

@@ -1,0 +1,169 @@
+//! Multilayer perceptron — the paper's "MLP x" classifiers (x = hidden
+//! units). One tanh hidden layer, sigmoid output, SGD on cross-entropy with
+//! standardized inputs.
+
+use super::metrics::Standardizer;
+use super::{Classifier, N_FEATURES};
+use crate::rng::Rng;
+
+/// MLP with one hidden layer of `hidden` units.
+pub struct Mlp {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub learning_rate: f64,
+    pub seed: u64,
+    scaler: Option<Standardizer>,
+    /// w1[h][j], b1[h]: input → hidden.
+    w1: Vec<[f64; N_FEATURES]>,
+    b1: Vec<f64>,
+    /// w2[h], b2: hidden → output logit.
+    w2: Vec<f64>,
+    b2: f64,
+    /// Leaked name ("MLP 8"), created once per constructor call.
+    name: &'static str,
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl Mlp {
+    pub fn new(hidden: usize, epochs: usize, learning_rate: f64, seed: u64) -> Self {
+        // Fig. 4 labels these "MLP x"; leak the small name string so the
+        // Classifier trait can stay `&'static str`.
+        let name: &'static str = Box::leak(format!("MLP {hidden}").into_boxed_str());
+        Mlp {
+            hidden,
+            epochs,
+            learning_rate,
+            seed,
+            scaler: None,
+            w1: Vec::new(),
+            b1: Vec::new(),
+            w2: Vec::new(),
+            b2: 0.0,
+            name,
+        }
+    }
+
+    fn forward(&self, x: &[f64; N_FEATURES], h_out: &mut [f64]) -> f64 {
+        for (h, (w, b)) in self.w1.iter().zip(&self.b1).enumerate() {
+            let z: f64 = w.iter().zip(x).map(|(w, x)| w * x).sum::<f64>() + b;
+            h_out[h] = z.tanh();
+        }
+        let logit: f64 =
+            self.w2.iter().zip(h_out.iter()).map(|(w, h)| w * h).sum::<f64>() + self.b2;
+        logit
+    }
+}
+
+impl Classifier for Mlp {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        let scaler = Standardizer::fit(x);
+        let xs = scaler.apply_all(x);
+        self.scaler = Some(scaler);
+
+        let mut rng = Rng::new(self.seed);
+        // Xavier-ish init.
+        let scale1 = (1.0 / N_FEATURES as f64).sqrt();
+        let scale2 = (1.0 / self.hidden as f64).sqrt();
+        self.w1 = (0..self.hidden)
+            .map(|_| std::array::from_fn(|_| rng.normal() * scale1))
+            .collect();
+        self.b1 = vec![0.0; self.hidden];
+        self.w2 = (0..self.hidden).map(|_| rng.normal() * scale2).collect();
+        self.b2 = 0.0;
+
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut h = vec![0.0; self.hidden];
+        for epoch in 0..self.epochs {
+            rng.shuffle(&mut order);
+            // 1/√epoch decay keeps late epochs stable.
+            let lr = self.learning_rate / (1.0 + 0.05 * epoch as f64);
+            for &i in &order {
+                let logit = self.forward(&xs[i], &mut h);
+                let err = sigmoid(logit) - y[i] as f64; // dL/dlogit
+                // Hidden-layer gradients need the *pre-update* w2.
+                let w2_old = self.w2.clone();
+                // Output layer.
+                for (w2, &hv) in self.w2.iter_mut().zip(h.iter()) {
+                    *w2 -= lr * err * hv;
+                }
+                self.b2 -= lr * err;
+                // Hidden layer.
+                for hh in 0..self.hidden {
+                    let dh = err * w2_old[hh] * (1.0 - h[hh] * h[hh]);
+                    for j in 0..N_FEATURES {
+                        self.w1[hh][j] -= lr * dh * xs[i][j];
+                    }
+                    self.b1[hh] -= lr * dh;
+                }
+            }
+        }
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        let xs = self.scaler.as_ref().expect("train first").apply(x);
+        let mut h = vec![0.0; self.hidden];
+        usize::from(self.forward(&xs, &mut h) > 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::metrics::accuracy;
+    use crate::rng::Rng;
+
+    fn xor_data(n: usize, seed: u64) -> (Vec<[f64; 4]>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.f64();
+            let b = rng.f64();
+            x.push([a, b, 0.0, 0.0]);
+            y.push(usize::from((a > 0.5) != (b > 0.5)));
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn solves_xor() {
+        let (x, y) = xor_data(400, 60);
+        let mut mlp = Mlp::new(8, 300, 0.1, 1);
+        mlp.train(&x, &y);
+        let acc = accuracy(&mlp.predict_batch(&x), &y);
+        assert!(acc > 0.9, "MLP-8 should solve XOR, got {acc}");
+    }
+
+    #[test]
+    fn names_include_width() {
+        assert_eq!(Mlp::new(8, 1, 0.1, 1).name(), "MLP 8");
+        assert_eq!(Mlp::new(32, 1, 0.1, 1).name(), "MLP 32");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = xor_data(200, 61);
+        let mut a = Mlp::new(8, 50, 0.1, 5);
+        let mut b = Mlp::new(8, 50, 0.1, 5);
+        a.train(&x, &y);
+        b.train(&x, &y);
+        assert_eq!(a.predict_batch(&x), b.predict_batch(&x));
+    }
+
+    #[test]
+    fn different_seed_different_model() {
+        let (x, y) = xor_data(200, 62);
+        let mut a = Mlp::new(4, 10, 0.1, 1);
+        let mut b = Mlp::new(4, 10, 0.1, 2);
+        a.train(&x, &y);
+        b.train(&x, &y);
+        assert_ne!(a.predict_batch(&x), b.predict_batch(&x));
+    }
+}

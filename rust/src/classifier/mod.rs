@@ -1,0 +1,103 @@
+//! Twelve from-scratch binary classifiers (paper §IV-B).
+//!
+//! "We train 12 kinds of classifiers with the dataset acquired in
+//! Subsection IV-A, and the highest accuracy of 91.69% comes from the
+//! Adaptive Boost algorithm."
+//!
+//! All classifiers implement [`Classifier`] over the 4-feature layer
+//! character with labels {0 = serial, 1 = parallel}. The roster mirrors a
+//! standard scikit-learn comparison (the paper does not enumerate its 12;
+//! Fig. 4 shows AdaBoost plus "MLP x" variants — DESIGN.md §2):
+//!
+//! | name              | module          |
+//! |-------------------|-----------------|
+//! | AdaBoost          | [`adaboost`]    |
+//! | Decision Tree     | [`tree`]        |
+//! | Random Forest     | [`forest`]      |
+//! | Gradient Boosting | [`gboost`]      |
+//! | k-Nearest Neighb. | [`knn`]         |
+//! | Gaussian NB       | [`naive_bayes`] |
+//! | Logistic Regr.    | [`linear`]      |
+//! | Linear SVM        | [`linear`]      |
+//! | LDA               | [`discriminant`]|
+//! | QDA               | [`discriminant`]|
+//! | MLP-8             | [`mlp`]         |
+//! | MLP-32            | [`mlp`]         |
+
+pub mod adaboost;
+pub mod discriminant;
+pub mod forest;
+pub mod gboost;
+pub mod knn;
+pub mod linear;
+pub mod metrics;
+pub mod mlp;
+pub mod naive_bayes;
+pub mod stump;
+pub mod tree;
+
+pub use adaboost::AdaBoost;
+pub use metrics::{accuracy, train_test_split, Standardizer};
+
+use crate::io::Json;
+
+/// Number of input features (delay range, n_source, n_target, density).
+pub const N_FEATURES: usize = 4;
+/// Number of classes (serial, parallel).
+pub const N_CLASSES: usize = 2;
+
+/// A trainable binary classifier over the layer-character features.
+pub trait Classifier: Send {
+    /// Human-readable name (matches Fig. 4 x-axis labels).
+    fn name(&self) -> &'static str;
+
+    /// Fit on a training set. `x[i]` is a feature row, `y[i] ∈ {0, 1}`.
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]);
+
+    /// Predict the class of one feature row.
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize;
+
+    /// Batch prediction.
+    fn predict_batch(&self, x: &[[f64; N_FEATURES]]) -> Vec<usize> {
+        x.iter().map(|row| self.predict(row)).collect()
+    }
+
+    /// Model persistence (implemented by the deployed classifier).
+    fn to_json(&self) -> Option<Json> {
+        None
+    }
+}
+
+/// Instantiate the full 12-classifier roster with a given seed (seed feeds
+/// the stochastic learners: forest bagging, MLP init, SGD shuffles).
+pub fn roster(seed: u64) -> Vec<Box<dyn Classifier>> {
+    vec![
+        Box::new(adaboost::AdaBoost::new(100)),
+        Box::new(tree::DecisionTree::new(8, 5)),
+        Box::new(forest::RandomForest::new(40, 10, 5, seed)),
+        Box::new(gboost::GradientBoost::new(150, 0.3)),
+        Box::new(knn::Knn::new(5)),
+        Box::new(naive_bayes::GaussianNb::new()),
+        Box::new(linear::LogisticRegression::new(300, 0.1)),
+        Box::new(linear::LinearSvm::new(300, 0.05, 1e-4, seed)),
+        Box::new(discriminant::Lda::new()),
+        Box::new(discriminant::Qda::new()),
+        Box::new(mlp::Mlp::new(8, 200, 0.05, seed)),
+        Box::new(mlp::Mlp::new(32, 200, 0.05, seed ^ 0xabcdef)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_has_twelve_distinctly_named_classifiers() {
+        let r = roster(1);
+        assert_eq!(r.len(), 12);
+        let mut names: Vec<&str> = r.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 12, "duplicate classifier names");
+    }
+}

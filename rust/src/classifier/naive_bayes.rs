@@ -1,0 +1,129 @@
+//! Gaussian naive Bayes.
+
+use super::{Classifier, N_CLASSES, N_FEATURES};
+
+/// Per-class independent Gaussians with class priors.
+#[derive(Clone, Debug, Default)]
+pub struct GaussianNb {
+    prior_log: [f64; N_CLASSES],
+    mean: [[f64; N_FEATURES]; N_CLASSES],
+    var: [[f64; N_FEATURES]; N_CLASSES],
+}
+
+impl GaussianNb {
+    pub fn new() -> Self {
+        GaussianNb::default()
+    }
+
+    fn log_likelihood(&self, class: usize, x: &[f64; N_FEATURES]) -> f64 {
+        let mut ll = self.prior_log[class];
+        for j in 0..N_FEATURES {
+            let var = self.var[class][j];
+            let d = x[j] - self.mean[class][j];
+            ll += -0.5 * ((2.0 * std::f64::consts::PI * var).ln() + d * d / var);
+        }
+        ll
+    }
+}
+
+impl Classifier for GaussianNb {
+    fn name(&self) -> &'static str {
+        "Gaussian NB"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        let mut count = [0usize; N_CLASSES];
+        let mut mean = [[0.0; N_FEATURES]; N_CLASSES];
+        for (row, &c) in x.iter().zip(y) {
+            count[c] += 1;
+            for j in 0..N_FEATURES {
+                mean[c][j] += row[j];
+            }
+        }
+        for c in 0..N_CLASSES {
+            let n = count[c].max(1) as f64;
+            for j in 0..N_FEATURES {
+                mean[c][j] /= n;
+            }
+        }
+        let mut var = [[0.0; N_FEATURES]; N_CLASSES];
+        for (row, &c) in x.iter().zip(y) {
+            for j in 0..N_FEATURES {
+                let d = row[j] - mean[c][j];
+                var[c][j] += d * d;
+            }
+        }
+        for c in 0..N_CLASSES {
+            let n = count[c].max(1) as f64;
+            for j in 0..N_FEATURES {
+                // Variance smoothing à la sklearn (1e-9 of max variance is
+                // too data-dependent; a small absolute floor suffices here).
+                var[c][j] = (var[c][j] / n).max(1e-9);
+            }
+        }
+        let total = x.len().max(1) as f64;
+        for c in 0..N_CLASSES {
+            self.prior_log[c] = ((count[c].max(1) as f64) / total).ln();
+        }
+        self.mean = mean;
+        self.var = var;
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        usize::from(self.log_likelihood(1, x) > self.log_likelihood(0, x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::metrics::accuracy;
+    use crate::rng::Rng;
+
+    #[test]
+    fn separates_shifted_gaussians() {
+        let mut rng = Rng::new(30);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..400 {
+            let c = rng.below(2);
+            let shift = if c == 1 { 3.0 } else { 0.0 };
+            x.push([
+                rng.normal() + shift,
+                rng.normal() - shift,
+                rng.normal(),
+                rng.normal(),
+            ]);
+            y.push(c);
+        }
+        let mut nb = GaussianNb::new();
+        nb.train(&x, &y);
+        let acc = accuracy(&nb.predict_batch(&x), &y);
+        assert!(acc > 0.95, "well-separated gaussians, got {acc}");
+    }
+
+    #[test]
+    fn respects_priors_when_features_useless() {
+        let mut rng = Rng::new(31);
+        let x: Vec<[f64; 4]> = (0..200)
+            .map(|_| [rng.normal(), rng.normal(), rng.normal(), rng.normal()])
+            .collect();
+        // 90% class 0.
+        let y: Vec<usize> = (0..200).map(|i| usize::from(i % 10 == 0)).collect();
+        let mut nb = GaussianNb::new();
+        nb.train(&x, &y);
+        let preds = nb.predict_batch(&x);
+        let zeros = preds.iter().filter(|&&p| p == 0).count();
+        assert!(zeros > 150, "prior should dominate on noise features");
+    }
+
+    #[test]
+    fn zero_variance_feature_does_not_nan() {
+        let x = vec![[1.0, 5.0, 0.0, 0.0]; 10];
+        let y: Vec<usize> = (0..10).map(|i| i % 2).collect();
+        let mut nb = GaussianNb::new();
+        nb.train(&x, &y);
+        let p = nb.predict(&[1.0, 5.0, 0.0, 0.0]);
+        assert!(p < 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! Decision stumps — the weak learners behind AdaBoost and gradient
+//! boosting.
+
+use super::N_FEATURES;
+
+/// A one-split classifier: `x[feature] <= threshold → left else right`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stump {
+    pub feature: usize,
+    pub threshold: f64,
+    /// Output for the left branch (class for AdaBoost in ±1 space, value
+    /// for regression stumps).
+    pub left: f64,
+    pub right: f64,
+}
+
+impl Stump {
+    #[inline]
+    pub fn eval(&self, x: &[f64; N_FEATURES]) -> f64 {
+        if x[self.feature] <= self.threshold {
+            self.left
+        } else {
+            self.right
+        }
+    }
+}
+
+/// Candidate thresholds for a feature: midpoints between consecutive
+/// distinct sorted values (capped for speed on large corpora).
+pub fn candidate_thresholds(values: &mut Vec<f64>, max_candidates: usize) -> Vec<f64> {
+    values.sort_by(f64::total_cmp);
+    values.dedup();
+    if values.len() < 2 {
+        return values.clone();
+    }
+    let mids: Vec<f64> = values.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect();
+    if mids.len() <= max_candidates {
+        return mids;
+    }
+    // Subsample evenly.
+    let step = mids.len() as f64 / max_candidates as f64;
+    (0..max_candidates).map(|i| mids[(i as f64 * step) as usize]).collect()
+}
+
+/// Fit the stump minimizing weighted classification error in ±1 label space.
+///
+/// Returns the best stump and its weighted error. `y[i] ∈ {-1.0, +1.0}`,
+/// `w` are non-negative sample weights summing to ~1.
+pub fn fit_classification_stump(
+    x: &[[f64; N_FEATURES]],
+    y: &[f64],
+    w: &[f64],
+) -> (Stump, f64) {
+    let mut best = (
+        Stump { feature: 0, threshold: 0.0, left: 1.0, right: -1.0 },
+        f64::INFINITY,
+    );
+    for feature in 0..N_FEATURES {
+        // Sort samples once per feature; sweep thresholds accumulating the
+        // weighted class sums on the left side.
+        let mut order: Vec<usize> = (0..x.len()).collect();
+        order.sort_by(|&a, &b| x[a][feature].total_cmp(&x[b][feature]));
+
+        let total_pos: f64 = y.iter().zip(w).filter(|(y, _)| **y > 0.0).map(|(_, w)| w).sum();
+        let total_neg: f64 = y.iter().zip(w).filter(|(y, _)| **y < 0.0).map(|(_, w)| w).sum();
+
+        let mut left_pos = 0.0f64;
+        let mut left_neg = 0.0f64;
+        let mut i = 0usize;
+        while i < order.len() {
+            // Advance over ties so the threshold sits between distinct values.
+            let v = x[order[i]][feature];
+            while i < order.len() && x[order[i]][feature] == v {
+                let s = order[i];
+                if y[s] > 0.0 {
+                    left_pos += w[s];
+                } else {
+                    left_neg += w[s];
+                }
+                i += 1;
+            }
+            if i == order.len() {
+                break;
+            }
+            let threshold = 0.5 * (v + x[order[i]][feature]);
+            // Orientation A: left=+1, right=-1 → errors: left_neg + right_pos.
+            let err_a = left_neg + (total_pos - left_pos);
+            // Orientation B: the mirror.
+            let err_b = left_pos + (total_neg - left_neg);
+            let (err, left, right) =
+                if err_a <= err_b { (err_a, 1.0, -1.0) } else { (err_b, -1.0, 1.0) };
+            if err < best.1 {
+                best = (Stump { feature, threshold, left, right }, err);
+            }
+        }
+    }
+    best
+}
+
+/// Fit the stump minimizing weighted squared error against real-valued
+/// targets (for gradient boosting). Returns the stump; leaf values are the
+/// weighted means of each side.
+pub fn fit_regression_stump(
+    x: &[[f64; N_FEATURES]],
+    targets: &[f64],
+    max_candidates: usize,
+) -> Stump {
+    let n = x.len();
+    let mut best = Stump {
+        feature: 0,
+        threshold: f64::NEG_INFINITY,
+        left: 0.0,
+        right: targets.iter().sum::<f64>() / n.max(1) as f64,
+    };
+    let mut best_sse = f64::INFINITY;
+    for feature in 0..N_FEATURES {
+        let mut vals: Vec<f64> = x.iter().map(|r| r[feature]).collect();
+        let thresholds = candidate_thresholds(&mut vals, max_candidates);
+        // Pre-sort for a sweep.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| x[a][feature].total_cmp(&x[b][feature]));
+        let total_sum: f64 = targets.iter().sum();
+        let total_sq: f64 = targets.iter().map(|t| t * t).sum();
+
+        let mut i = 0usize;
+        let mut left_sum = 0.0f64;
+        let mut left_n = 0usize;
+        for &threshold in &thresholds {
+            while i < n && x[order[i]][feature] <= threshold {
+                left_sum += targets[order[i]];
+                left_n += 1;
+                i += 1;
+            }
+            if left_n == 0 || left_n == n {
+                continue;
+            }
+            let right_sum = total_sum - left_sum;
+            let right_n = n - left_n;
+            let left_mean = left_sum / left_n as f64;
+            let right_mean = right_sum / right_n as f64;
+            // SSE = Σt² − n_l·m_l² − n_r·m_r² (up to the constant Σt²).
+            let sse = total_sq - left_n as f64 * left_mean * left_mean
+                - right_n as f64 * right_mean * right_mean;
+            if sse < best_sse {
+                best_sse = sse;
+                best = Stump { feature, threshold, left: left_mean, right: right_mean };
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xy_separable() -> (Vec<[f64; 4]>, Vec<f64>) {
+        // Separable on feature 2 at 5.0.
+        let x: Vec<[f64; 4]> = (0..20)
+            .map(|i| [0.0, 1.0, if i < 10 { i as f64 / 3.0 } else { 6.0 + i as f64 }, 2.0])
+            .collect();
+        let y: Vec<f64> = (0..20).map(|i| if i < 10 { -1.0 } else { 1.0 }).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn classification_stump_finds_separator() {
+        let (x, y) = xy_separable();
+        let w = vec![1.0 / 20.0; 20];
+        let (stump, err) = fit_classification_stump(&x, &y, &w);
+        assert_eq!(stump.feature, 2);
+        assert!(err < 1e-12, "separable data → zero error, got {err}");
+        for (row, &label) in x.iter().zip(&y) {
+            assert_eq!(stump.eval(row), label);
+        }
+    }
+
+    #[test]
+    fn classification_stump_respects_weights() {
+        // Two conflicting points; the heavier one wins.
+        let x = vec![[0.0, 0.0, 1.0, 0.0], [0.0, 0.0, 2.0, 0.0]];
+        let y = vec![1.0, -1.0];
+        let (s, err) = fit_classification_stump(&x, &y, &[0.9, 0.1]);
+        assert!(err <= 0.1 + 1e-12);
+        assert_eq!(s.eval(&x[0]), 1.0);
+    }
+
+    #[test]
+    fn regression_stump_fits_step() {
+        let x: Vec<[f64; 4]> = (0..10).map(|i| [i as f64, 0.0, 0.0, 0.0]).collect();
+        let t: Vec<f64> = (0..10).map(|i| if i < 5 { -2.0 } else { 3.0 }).collect();
+        let s = fit_regression_stump(&x, &t, 64);
+        assert_eq!(s.feature, 0);
+        assert!((s.left - -2.0).abs() < 1e-9);
+        assert!((s.right - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thresholds_are_midpoints() {
+        let mut v = vec![3.0, 1.0, 2.0, 2.0];
+        let t = candidate_thresholds(&mut v, 16);
+        assert_eq!(t, vec![1.5, 2.5]);
+    }
+}

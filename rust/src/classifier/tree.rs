@@ -1,0 +1,328 @@
+//! CART decision tree (Gini impurity, binary splits).
+
+use super::{Classifier, N_FEATURES};
+
+/// Tree node: either a split or a leaf class.
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf(usize),
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// A depth-limited CART classifier.
+#[derive(Clone, Debug)]
+pub struct DecisionTree {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Optional feature subset restriction per split (random forests set
+    /// this per-tree via `feature_mask`).
+    pub feature_mask: [bool; N_FEATURES],
+    /// Random-forest mode: sample `k` candidate features *per split*
+    /// (sklearn's `max_features`) from the given seed.
+    pub per_split_features: Option<(usize, u64)>,
+    nodes: Vec<Node>,
+}
+
+impl DecisionTree {
+    pub fn new(max_depth: usize, min_samples_split: usize) -> Self {
+        DecisionTree {
+            max_depth,
+            min_samples_split,
+            feature_mask: [true; N_FEATURES],
+            per_split_features: None,
+            nodes: Vec::new(),
+        }
+    }
+
+    fn gini(counts: [f64; 2]) -> f64 {
+        let n = counts[0] + counts[1];
+        if n <= 0.0 {
+            return 0.0;
+        }
+        let p0 = counts[0] / n;
+        let p1 = counts[1] / n;
+        1.0 - p0 * p0 - p1 * p1
+    }
+
+    /// Best (feature, threshold, weighted-gini) over allowed features.
+    /// `w` are per-sample weights (AdaBoost reweights them each round).
+    fn best_split(
+        &self,
+        x: &[[f64; N_FEATURES]],
+        y: &[usize],
+        w: &[f64],
+        idx: &[usize],
+        rng: &mut Option<crate::rng::Rng>,
+    ) -> Option<(usize, f64, f64)> {
+        let mut best: Option<(usize, f64, f64)> = None;
+        let total: [f64; 2] = idx.iter().fold([0.0, 0.0], |mut acc, &i| {
+            acc[y[i]] += w[i];
+            acc
+        });
+        let n = total[0] + total[1];
+        // Per-split feature sampling (random-forest mode).
+        let split_mask: [bool; N_FEATURES] = match (&self.per_split_features, rng) {
+            (Some((k, _)), Some(rng)) => {
+                let mut m = [false; N_FEATURES];
+                for f in rng.sample_indices(N_FEATURES, (*k).min(N_FEATURES)) {
+                    m[f] = true;
+                }
+                m
+            }
+            _ => [true; N_FEATURES],
+        };
+        for feature in 0..N_FEATURES {
+            if !self.feature_mask[feature] || !split_mask[feature] {
+                continue;
+            }
+            let mut order: Vec<usize> = idx.to_vec();
+            order.sort_by(|&a, &b| x[a][feature].total_cmp(&x[b][feature]));
+            let mut left = [0.0f64; 2];
+            let mut i = 0usize;
+            while i < order.len() {
+                let v = x[order[i]][feature];
+                while i < order.len() && x[order[i]][feature] == v {
+                    left[y[order[i]]] += w[order[i]];
+                    i += 1;
+                }
+                if i == order.len() {
+                    break;
+                }
+                let right = [total[0] - left[0], total[1] - left[1]];
+                let nl = left[0] + left[1];
+                let nr = right[0] + right[1];
+                let g = (nl / n) * Self::gini(left) + (nr / n) * Self::gini(right);
+                let threshold = 0.5 * (v + x[order[i]][feature]);
+                if best.map_or(true, |(_, _, bg)| g < bg) {
+                    best = Some((feature, threshold, g));
+                }
+            }
+        }
+        best
+    }
+
+    fn majority(y: &[usize], w: &[f64], idx: &[usize]) -> usize {
+        let mut mass = [0.0f64; 2];
+        for &i in idx {
+            mass[y[i]] += w[i];
+        }
+        usize::from(mass[1] > mass[0])
+    }
+
+    fn build(
+        &mut self,
+        x: &[[f64; N_FEATURES]],
+        y: &[usize],
+        w: &[f64],
+        idx: Vec<usize>,
+        depth: usize,
+        rng: &mut Option<crate::rng::Rng>,
+    ) -> usize {
+        let mut mass = [0.0f64; 2];
+        for &i in &idx {
+            mass[y[i]] += w[i];
+        }
+        let pure = mass[0] <= 0.0 || mass[1] <= 0.0;
+        if pure || depth >= self.max_depth || idx.len() < self.min_samples_split {
+            let node = Node::Leaf(Self::majority(y, w, &idx));
+            self.nodes.push(node);
+            return self.nodes.len() - 1;
+        }
+        let Some((feature, threshold, gain_gini)) = self.best_split(x, y, w, &idx, rng) else {
+            self.nodes.push(Node::Leaf(Self::majority(y, w, &idx)));
+            return self.nodes.len() - 1;
+        };
+        // No useful split (e.g. identical rows with mixed labels).
+        let parent_gini = Self::gini(mass);
+        if gain_gini >= parent_gini - 1e-12 {
+            self.nodes.push(Node::Leaf(Self::majority(y, w, &idx)));
+            return self.nodes.len() - 1;
+        }
+        let (l_idx, r_idx): (Vec<usize>, Vec<usize>) =
+            idx.into_iter().partition(|&i| x[i][feature] <= threshold);
+        // Reserve this node's slot before recursing.
+        self.nodes.push(Node::Leaf(0));
+        let me = self.nodes.len() - 1;
+        let left = self.build(x, y, w, l_idx, depth + 1, rng);
+        let right = self.build(x, y, w, r_idx, depth + 1, rng);
+        self.nodes[me] = Node::Split { feature, threshold, left, right };
+        me
+    }
+
+    /// Number of nodes (diagnostics).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Fit with per-sample weights (the AdaBoost weak-learner entrypoint).
+    pub fn train_weighted(&mut self, x: &[[f64; N_FEATURES]], y: &[usize], w: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert_eq!(x.len(), w.len());
+        self.nodes.clear();
+        if x.is_empty() {
+            self.nodes.push(Node::Leaf(0));
+            return;
+        }
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let mut rng = self.per_split_features.map(|(_, seed)| crate::rng::Rng::new(seed));
+        self.build(x, y, w, idx, 0, &mut rng);
+    }
+
+    /// Serialize the fitted tree (for AdaBoost model persistence).
+    ///
+    /// Nodes encode as flat arrays: leaves `[class]`, splits
+    /// `[feature, threshold, left, right]`.
+    pub fn to_json(&self) -> crate::io::Json {
+        use crate::io::Json;
+        Json::obj(vec![
+            ("max_depth", Json::Num(self.max_depth as f64)),
+            ("min_samples_split", Json::Num(self.min_samples_split as f64)),
+            (
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| match n {
+                            Node::Leaf(c) => Json::nums(vec![*c as f64]),
+                            Node::Split { feature, threshold, left, right } => Json::nums(vec![
+                                *feature as f64,
+                                *threshold,
+                                *left as f64,
+                                *right as f64,
+                            ]),
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize a fitted tree.
+    pub fn from_json(j: &crate::io::Json) -> Option<DecisionTree> {
+        let max_depth = j.get("max_depth")?.as_usize()?;
+        let min_samples_split = j.get("min_samples_split")?.as_usize()?;
+        let nodes: Option<Vec<Node>> = j
+            .get("nodes")?
+            .as_arr()?
+            .iter()
+            .map(|n| {
+                let v = n.as_f64_vec()?;
+                match v.len() {
+                    1 => Some(Node::Leaf(v[0] as usize)),
+                    4 => Some(Node::Split {
+                        feature: v[0] as usize,
+                        threshold: v[1],
+                        left: v[2] as usize,
+                        right: v[3] as usize,
+                    }),
+                    _ => None,
+                }
+            })
+            .collect();
+        Some(DecisionTree {
+            max_depth,
+            min_samples_split,
+            feature_mask: [true; N_FEATURES],
+            per_split_features: None,
+            nodes: nodes?,
+        })
+    }
+}
+
+impl Classifier for DecisionTree {
+    fn name(&self) -> &'static str {
+        "Decision Tree"
+    }
+
+    fn train(&mut self, x: &[[f64; N_FEATURES]], y: &[usize]) {
+        let w = vec![1.0; x.len()];
+        self.train_weighted(x, y, &w);
+    }
+
+    fn predict(&self, x: &[f64; N_FEATURES]) -> usize {
+        // Root is node 0 when the tree was built from a split-first root;
+        // the builder pushes leaves first for pure roots, so node 0 is
+        // always the root either way... except split nodes reserve their
+        // slot before children. Root is the first node created: index 0
+        // only when the root was a leaf. Track instead: root is the node
+        // returned by build(), which is the *first* pushed frame = 0 for a
+        // leaf root, or the reserved slot (also the first pushed) = 0.
+        let mut node = 0usize;
+        loop {
+            match &self.nodes[node] {
+                Node::Leaf(c) => return *c,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::metrics::accuracy;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fits_axis_aligned_rectangle() {
+        // Class 1 inside [0.3, 0.7]² — needs depth ≥ 2.
+        let mut rng = Rng::new(5);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..500 {
+            let a = rng.f64();
+            let b = rng.f64();
+            x.push([a, b, 0.0, 0.0]);
+            y.push(usize::from((0.3..0.7).contains(&a) && (0.3..0.7).contains(&b)));
+        }
+        let mut t = DecisionTree::new(6, 2);
+        t.train(&x, &y);
+        let acc = accuracy(&t.predict_batch(&x), &y);
+        assert!(acc > 0.97, "rectangle should be carved out, got {acc}");
+    }
+
+    #[test]
+    fn depth_limit_restricts_size() {
+        let mut rng = Rng::new(6);
+        let x: Vec<[f64; 4]> =
+            (0..200).map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()]).collect();
+        let y: Vec<usize> = (0..200).map(|_| rng.below(2)).collect();
+        let mut shallow = DecisionTree::new(1, 2);
+        shallow.train(&x, &y);
+        // Depth 1 → at most 1 split + 2 leaves.
+        assert!(shallow.n_nodes() <= 3);
+    }
+
+    #[test]
+    fn pure_data_single_leaf() {
+        let x = vec![[1.0, 2.0, 3.0, 4.0]; 10];
+        let y = vec![1usize; 10];
+        let mut t = DecisionTree::new(5, 2);
+        t.train(&x, &y);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[0.0; 4]), 1);
+    }
+
+    #[test]
+    fn identical_rows_mixed_labels_dont_loop() {
+        let x = vec![[1.0; 4]; 10];
+        let y: Vec<usize> = (0..10).map(|i| i % 2).collect();
+        let mut t = DecisionTree::new(10, 2);
+        t.train(&x, &y);
+        assert_eq!(t.n_nodes(), 1, "unsplittable data → single leaf");
+    }
+
+    #[test]
+    fn feature_mask_restricts_splits() {
+        // Label depends only on feature 0, but the mask hides it.
+        let x: Vec<[f64; 4]> = (0..100).map(|i| [i as f64, 0.0, 0.0, 0.0]).collect();
+        let y: Vec<usize> = (0..100).map(|i| usize::from(i >= 50)).collect();
+        let mut t = DecisionTree::new(4, 2);
+        t.feature_mask = [false, true, true, true];
+        t.train(&x, &y);
+        let acc = accuracy(&t.predict_batch(&x), &y);
+        assert!(acc <= 0.6, "masked feature must be unusable, got {acc}");
+    }
+}

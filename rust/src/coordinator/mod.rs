@@ -1,0 +1,177 @@
+//! Leader pipeline: ties dataset acquisition, classifier training, model
+//! persistence and end-to-end compile+simulate runs together behind one
+//! API (and the `s2switch` CLI in `main.rs`).
+//!
+//! Concurrency note: the offline vendored crate set has no tokio, so the
+//! coordinator parallelizes CPU-bound stages with scoped OS threads
+//! (dataset labeling in [`crate::dataset::generate_grid`], per-seed
+//! classifier training in [`train_roster`]) — see DESIGN.md §2.
+
+use crate::classifier::{accuracy, roster, train_test_split, AdaBoost, Classifier};
+use crate::dataset::{generate_grid, Dataset, SweepConfig};
+use crate::hardware::PeSpec;
+use crate::io::Json;
+use crate::paradigm::parallel::WdmConfig;
+use crate::switching::SwitchingSystem;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Accuracy summary for one classifier across seeds (Fig. 4's bars +
+/// red ranges).
+#[derive(Clone, Debug)]
+pub struct ClassifierScore {
+    pub name: &'static str,
+    pub accuracies: Vec<f64>,
+}
+
+impl ClassifierScore {
+    pub fn mean(&self) -> f64 {
+        self.accuracies.iter().sum::<f64>() / self.accuracies.len().max(1) as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.accuracies.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.accuracies.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Generate (or load) the 16k-layer dataset, caching it as CSV.
+pub fn dataset_cached(path: &Path, cfg: &SweepConfig) -> Result<Dataset> {
+    if path.exists() {
+        let ds = Dataset::load_csv(path)?;
+        if ds.len() == cfg.n_layers() {
+            return Ok(ds);
+        }
+        eprintln!(
+            "cached dataset at {} has {} rows (want {}), regenerating",
+            path.display(),
+            ds.len(),
+            cfg.n_layers()
+        );
+    }
+    let t0 = Instant::now();
+    let ds = generate_grid(cfg, &PeSpec::default(), WdmConfig::default());
+    eprintln!("labeled {} layers in {:.2?}", ds.len(), t0.elapsed());
+    ds.save_csv(path)?;
+    Ok(ds)
+}
+
+/// Train the full 12-classifier roster over `n_seeds` train/test splits
+/// (paper: "training with 20 different random seeds"), in parallel across
+/// seeds. Returns per-classifier scores in roster order.
+pub fn train_roster(dataset: &Dataset, n_seeds: usize) -> Vec<ClassifierScore> {
+    let (x, y) = dataset.xy();
+    let names: Vec<&'static str> = roster(0).iter().map(|c| c.name()).collect();
+    // accuracies[seed][classifier]
+    let mut per_seed: Vec<Vec<f64>> = vec![Vec::new(); n_seeds];
+
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = n_seeds.div_ceil(n_threads.max(1)).max(1);
+    std::thread::scope(|scope| {
+        for (chunk_idx, slot) in per_seed.chunks_mut(chunk).enumerate() {
+            let x = &x;
+            let y = &y;
+            scope.spawn(move || {
+                for (k, out) in slot.iter_mut().enumerate() {
+                    let seed = (chunk_idx * chunk + k) as u64;
+                    let (xtr, ytr, xte, yte) = train_test_split(x, y, 0.2, seed);
+                    *out = roster(seed)
+                        .iter_mut()
+                        .map(|c| {
+                            c.train(&xtr, &ytr);
+                            accuracy(&c.predict_batch(&xte), &yte)
+                        })
+                        .collect();
+                }
+            });
+        }
+    });
+
+    names
+        .into_iter()
+        .enumerate()
+        .map(|(ci, name)| ClassifierScore {
+            name,
+            accuracies: per_seed.iter().map(|row| row[ci]).collect(),
+        })
+        .collect()
+}
+
+/// Train the deployed AdaBoost on the full corpus and persist it as JSON.
+pub fn train_and_save_adaboost(dataset: &Dataset, n_rounds: usize, path: &Path) -> Result<f64> {
+    let (x, y) = dataset.xy();
+    // Hold out 20% to report an honest accuracy next to the paper's 91.69%.
+    let (xtr, ytr, xte, yte) = train_test_split(&x, &y, 0.2, 42);
+    let mut ab = AdaBoost::new(n_rounds);
+    ab.train(&xtr, &ytr);
+    let acc = accuracy(&ab.predict_batch(&xte), &yte);
+    let json = ab.to_json().context("adaboost serializes")?;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, json.to_string_compact())?;
+    Ok(acc)
+}
+
+/// Load a previously saved AdaBoost model into a switching system.
+pub fn load_switching_system(model_path: &Path, pe: PeSpec) -> Result<SwitchingSystem> {
+    let text = std::fs::read_to_string(model_path)
+        .with_context(|| format!("reading {}", model_path.display()))?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing model json: {e}"))?;
+    let ab = AdaBoost::from_json(&json).context("malformed adaboost model json")?;
+    Ok(SwitchingSystem::with_classifier(Box::new(ab), pe))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_dataset() -> Dataset {
+        generate_grid(&SweepConfig::small(), &PeSpec::default(), WdmConfig::default())
+    }
+
+    #[test]
+    fn roster_training_produces_sane_scores() {
+        let ds = small_dataset();
+        let scores = train_roster(&ds, 2);
+        assert_eq!(scores.len(), 12);
+        for s in &scores {
+            assert_eq!(s.accuracies.len(), 2);
+            assert!(s.min() >= 0.0 && s.max() <= 1.0);
+            // 48-sample corpus: everything should beat coin flips on average
+            // except possibly the weakest learners; keep a loose floor.
+            assert!(s.mean() > 0.3, "{} mean {}", s.name, s.mean());
+        }
+    }
+
+    #[test]
+    fn adaboost_save_load_roundtrip() {
+        let ds = small_dataset();
+        let dir = std::env::temp_dir().join("s2switch_coord_test");
+        let path = dir.join("model.json");
+        let acc = train_and_save_adaboost(&ds, 40, &path).unwrap();
+        assert!(acc > 0.5, "held-out accuracy {acc}");
+        let sys = load_switching_system(&path, PeSpec::default()).unwrap();
+        // The loaded system prejudges without compiling.
+        let ch = crate::model::LayerCharacter::new(255, 255, 1.0, 1);
+        let _ = sys.prejudge(&ch);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dataset_cache_roundtrip() {
+        let dir = std::env::temp_dir().join("s2switch_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.csv");
+        let cfg = SweepConfig::small();
+        let a = dataset_cached(&path, &cfg).unwrap();
+        assert!(path.exists());
+        let b = dataset_cached(&path, &cfg).unwrap(); // loads from cache
+        assert_eq!(a.len(), b.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

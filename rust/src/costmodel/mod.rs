@@ -1,0 +1,28 @@
+//! DTCM cost models — the paper's Table I.
+//!
+//! Every data structure either paradigm loads into a PE's DTCM has a byte
+//! cost. The serial paradigm's cost is fully closed-form; the parallel
+//! paradigm's dominant-PE cost is closed-form while the subordinate-PE cost
+//! depends on the *realized* optimized weight-delay-map ("can't be
+//! accurately estimated" — Table I), which is why the paper (and we) obtain
+//! subordinate PE counts by actually running the parallel compiler.
+//!
+//! Transcription decisions for Table I's two garbled rows are documented in
+//! DESIGN.md §6.
+
+pub mod parallel;
+pub mod serial;
+
+pub use parallel::{DominantCost, SubordinateFixedCost};
+pub use serial::{SerialCost, SerialLayout};
+
+/// Bytes per 32-bit word (Table I writes costs as `(bits/8) * count`).
+pub const WORD32: usize = 4;
+/// Bytes per 16-bit half-word.
+pub const WORD16: usize = 2;
+/// Bytes per master-population-table entry (Table I: 96/8).
+pub const MPT_ENTRY: usize = 12;
+/// Projection types: excitatory + inhibitory (Table I `n_projection_type`).
+pub const N_PROJECTION_TYPE: usize = 2;
+/// LIF parameter count: 8 neuron + 6 synapse parameters (Table I).
+pub const N_LIF_PARAMS: usize = 8 + 6;

@@ -1,0 +1,172 @@
+//! Parallel-paradigm DTCM cost model (Table I, lower blocks).
+//!
+//! The dominant PE's structures are closed-form; the subordinate PEs' main
+//! structure — the optimized weight-delay-map — "can't be accurately
+//! estimated" (Table I) and is sized by actually building it in
+//! [`crate::paradigm::parallel`]. This module provides the closed-form rows
+//! plus the fixed per-subordinate overhead the splitting algorithm budgets
+//! around.
+
+use super::{MPT_ENTRY, N_LIF_PARAMS, N_PROJECTION_TYPE, WORD16, WORD32};
+
+/// Itemized dominant-PE cost (bytes), mirroring Table I's
+/// "parallel paradigm (dominant)" block.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DominantCost {
+    pub input_spike_buffer: usize,
+    pub reversed_order: usize,
+    pub input_merging_table: usize,
+    pub stacked_input: usize,
+    pub neuron_synapse_model: usize,
+    pub output_recording: usize,
+    pub stack_heap: usize,
+    pub hw_mgmt_os: usize,
+}
+
+impl DominantCost {
+    pub fn total(&self) -> usize {
+        self.input_spike_buffer
+            + self.reversed_order
+            + self.input_merging_table
+            + self.stacked_input
+            + self.neuron_synapse_model
+            + self.output_recording
+            + self.stack_heap
+            + self.hw_mgmt_os
+    }
+
+    /// (name, bytes) pairs in Table I order, for the T1 bench.
+    pub fn items(&self) -> [(&'static str, usize); 8] {
+        [
+            ("input spike buffer", self.input_spike_buffer),
+            ("reversed order", self.reversed_order),
+            ("input merging table", self.input_merging_table),
+            ("stacked input", self.stacked_input),
+            ("neuron and synapse model", self.neuron_synapse_model),
+            ("output recording", self.output_recording),
+            ("stack & heap", self.stack_heap),
+            ("hw mgmt & OS", self.hw_mgmt_os),
+        ]
+    }
+}
+
+/// Table I dominant-PE cost.
+///
+/// * `n_source_neuron` — source neurons feeding the layer;
+/// * `n_target_neuron` — target neurons of the layer (the dominant PE runs
+///   the neural update over the subordinate PEs' accumulated currents and
+///   records outputs — DESIGN.md §6);
+/// * `delay_range` — delay slots in the stacked input;
+/// * `n_source_vertex` — machine-graph in-edges (stack/heap bookkeeping).
+pub fn dominant_cost(
+    n_source_neuron: usize,
+    n_target_neuron: usize,
+    delay_range: usize,
+    n_source_vertex: usize,
+) -> DominantCost {
+    DominantCost {
+        // (32/8)*n_source_neuron.
+        input_spike_buffer: WORD32 * n_source_neuron,
+        // (32/16)*n_source_neuron*delay_range — 16-bit reverse-permutation
+        // indices mapping arrival order to weight-delay-map row order.
+        reversed_order: WORD16 * n_source_neuron * delay_range,
+        // n_source_neuron*delay_range*3 — 3 B/entry (row id + slot tag).
+        input_merging_table: 3 * n_source_neuron * delay_range,
+        // n_source_neuron*delay_range*4 — the stacked spike train the MAC
+        // array consumes, one word per (source, delay) lane.
+        stacked_input: 4 * n_source_neuron * delay_range,
+        // DESIGN.md §6: Table I's row is garbled; the dominant PE holds the
+        // LIF parameter block plus per-target membrane state.
+        neuron_synapse_model: WORD32 * N_LIF_PARAMS + WORD32 * n_target_neuron,
+        // (32/8)*n_target_neuron*4.
+        output_recording: WORD32 * n_target_neuron * 4,
+        // (96/8)*n_source_vertex.
+        stack_heap: MPT_ENTRY * n_source_vertex,
+        hw_mgmt_os: 6000,
+    }
+}
+
+/// Fixed (non-weight-delay-map) per-subordinate overhead from Table I's
+/// "parallel paradigm (subordinate)" block.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SubordinateFixedCost {
+    pub output_recording: usize,
+    pub stack_heap: usize,
+    pub hw_mgmt_os: usize,
+}
+
+impl SubordinateFixedCost {
+    pub fn total(&self) -> usize {
+        self.output_recording + self.stack_heap + self.hw_mgmt_os
+    }
+}
+
+/// Table I subordinate fixed cost for a chunk simulating `n_tgt_chunk`
+/// target columns.
+pub fn subordinate_fixed_cost(
+    n_tgt_chunk: usize,
+    delay_range: usize,
+    n_source_vertex: usize,
+) -> SubordinateFixedCost {
+    SubordinateFixedCost {
+        // (16/8)*n_neuron*delay_range*n_projection_type (verbatim Table I).
+        output_recording: WORD16 * n_tgt_chunk * delay_range * N_PROJECTION_TYPE,
+        // (96/8)*n_source_vertex.
+        stack_heap: MPT_ENTRY * n_source_vertex,
+        hw_mgmt_os: 6000,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::PeSpec;
+
+    #[test]
+    fn dominant_reference_values() {
+        let c = dominant_cost(255, 255, 16, 1);
+        assert_eq!(c.input_spike_buffer, 4 * 255);
+        assert_eq!(c.reversed_order, 2 * 255 * 16);
+        assert_eq!(c.input_merging_table, 3 * 255 * 16);
+        assert_eq!(c.stacked_input, 4 * 255 * 16);
+        assert_eq!(c.output_recording, 4 * 255 * 4);
+        assert_eq!(c.stack_heap, 12);
+        assert_eq!(c.hw_mgmt_os, 6000);
+        let item_sum: usize = c.items().iter().map(|(_, b)| b).sum();
+        assert_eq!(item_sum, c.total());
+    }
+
+    #[test]
+    fn one_dominant_suffices_across_paper_sweep() {
+        // Paper §IV-A: "Within the scope of these settings, one dominant PE
+        // is enough according to our calculation based on the cost model."
+        let budget = PeSpec::default().dtcm_bytes;
+        for &src in &[50usize, 250, 500] {
+            for &tgt in &[50usize, 250, 500] {
+                for &d in &[1usize, 8, 16] {
+                    let c = dominant_cost(src, tgt, d, src.div_ceil(255));
+                    assert!(
+                        c.total() <= budget,
+                        "dominant overflow at src={src} tgt={tgt} delay={d}: {} B",
+                        c.total()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dominant_scales_with_delay() {
+        let d1 = dominant_cost(500, 500, 1, 2).total();
+        let d16 = dominant_cost(500, 500, 16, 2).total();
+        assert!(d16 > d1);
+    }
+
+    #[test]
+    fn subordinate_fixed_values() {
+        let c = subordinate_fixed_cost(255, 16, 1);
+        assert_eq!(c.output_recording, 2 * 255 * 16 * 2);
+        assert_eq!(c.stack_heap, 12);
+        assert_eq!(c.total(), 2 * 255 * 16 * 2 + 12 + 6000);
+    }
+}

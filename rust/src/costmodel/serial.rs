@@ -1,0 +1,327 @@
+//! Serial-paradigm DTCM cost model (Table I, upper block) and the
+//! PE-allocation algorithm (§III-A / §IV-A).
+//!
+//! Layout rules from the paper:
+//! * target populations are split into sub-populations of at most 255
+//!   neurons per PE (sPyNNaker's capacity, ref [14]);
+//! * source populations are split into source *vertices* of at most 255
+//!   neurons (driving the master-population-table size);
+//! * layers whose synaptic matrix exceeds one PE's DTCM ("the DTCM of one PE
+//!   is incapable of holding all the data structures when the weight density
+//!   is over 25%") equally distribute the matrix into **2–4 adjacent PEs**
+//!   by splitting source rows; if even a 4-way split cannot fit, the target
+//!   split is deepened instead.
+
+use super::{MPT_ENTRY, N_LIF_PARAMS, N_PROJECTION_TYPE, WORD16, WORD32};
+use crate::hardware::PeSpec;
+use crate::model::LayerCharacter;
+
+/// Itemized serial-paradigm DTCM cost for one PE (bytes), mirroring Table I
+/// rows one-to-one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SerialCost {
+    pub input_spike_buffer: usize,
+    pub dma_buffer: usize,
+    pub master_population_table: usize,
+    pub address_list: usize,
+    pub synaptic_matrix: usize,
+    pub synaptic_input_buffer: usize,
+    pub neuron_synapse_model: usize,
+    pub output_recording: usize,
+    pub stack_heap: usize,
+    pub hw_mgmt_os: usize,
+}
+
+impl SerialCost {
+    /// Total bytes on this PE.
+    pub fn total(&self) -> usize {
+        self.input_spike_buffer
+            + self.dma_buffer
+            + self.master_population_table
+            + self.address_list
+            + self.synaptic_matrix
+            + self.synaptic_input_buffer
+            + self.neuron_synapse_model
+            + self.output_recording
+            + self.stack_heap
+            + self.hw_mgmt_os
+    }
+
+    /// (name, bytes) pairs in Table I order, for the T1 bench.
+    pub fn items(&self) -> [(&'static str, usize); 10] {
+        [
+            ("input spike buffer", self.input_spike_buffer),
+            ("DMA buffer", self.dma_buffer),
+            ("master population table", self.master_population_table),
+            ("address list", self.address_list),
+            ("synaptic matrix", self.synaptic_matrix),
+            ("synaptic input buffer", self.synaptic_input_buffer),
+            ("neuron and synapse model", self.neuron_synapse_model),
+            ("output recording", self.output_recording),
+            ("stack & heap", self.stack_heap),
+            ("hw mgmt & OS", self.hw_mgmt_os),
+        ]
+    }
+}
+
+/// Table I serial cost for one PE.
+///
+/// * `n_src_pe` — source neurons whose synaptic rows this PE stores;
+/// * `n_tgt_pe` — target neurons simulated on this PE;
+/// * `density` — weight density of the projection;
+/// * `delay_range` — maximum synaptic delay (ring-buffer slots);
+/// * `n_source_vertex` — source vertices in the machine graph (drives the
+///   master population table and stack/heap rows).
+pub fn serial_pe_cost(
+    n_src_pe: usize,
+    n_tgt_pe: usize,
+    density: f64,
+    delay_range: usize,
+    n_source_vertex: usize,
+) -> SerialCost {
+    SerialCost {
+        // (32/8)*n_neuron — one word per source neuron of in-flight spikes.
+        input_spike_buffer: WORD32 * n_src_pe,
+        // DRAM not involved in this paper's experiments.
+        dma_buffer: 0,
+        // (96/8)*n_source_vertex.
+        master_population_table: MPT_ENTRY * n_source_vertex,
+        // (32/8)*n_address_list_rows — one row per source neuron block.
+        address_list: WORD32 * n_src_pe,
+        // (32/8)*n_src*n_tgt*max_connected_rate — 4-byte synaptic words.
+        synaptic_matrix: (WORD32 as f64 * n_src_pe as f64 * n_tgt_pe as f64 * density).ceil()
+            as usize,
+        // (16/8)*n_neuron*delay_range*n_projection_type — the delay ring
+        // buffer, one 16-bit accumulator per (target, delay, type) slot.
+        synaptic_input_buffer: WORD16 * n_tgt_pe * delay_range * N_PROJECTION_TYPE,
+        // (32/8)*n_param with n_param = 8+6, held per neuron (DESIGN.md §6).
+        neuron_synapse_model: WORD32 * N_LIF_PARAMS * n_tgt_pe,
+        // (32/8)*(ceil(n/32)+1) + (32/8)*n*3 — spike bitmap + 3 words/neuron.
+        output_recording: WORD32 * (n_tgt_pe.div_ceil(32) + 1) + WORD32 * n_tgt_pe * 3,
+        // (96/8)*n_source_vertex.
+        stack_heap: MPT_ENTRY * n_source_vertex,
+        hw_mgmt_os: 6000,
+    }
+}
+
+/// One PE of a serial layout.
+#[derive(Clone, Debug)]
+pub struct SerialPe {
+    /// Which target chunk this PE serves.
+    pub target_chunk: usize,
+    /// Source-row split index within the chunk (0 when unsplit).
+    pub row_split: usize,
+    /// Source neurons handled by this PE.
+    pub n_src: usize,
+    /// Target neurons simulated/accumulated on this PE.
+    pub n_tgt: usize,
+    pub cost: SerialCost,
+}
+
+/// Result of serial PE allocation for one layer.
+#[derive(Clone, Debug)]
+pub struct SerialLayout {
+    pub pes: Vec<SerialPe>,
+    /// Target chunks (count of sub-populations).
+    pub n_target_chunks: usize,
+    /// Source vertices (master-population-table entries).
+    pub n_source_vertex: usize,
+}
+
+impl SerialLayout {
+    pub fn n_pes(&self) -> usize {
+        self.pes.len()
+    }
+
+    pub fn total_dtcm(&self) -> usize {
+        self.pes.iter().map(|p| p.cost.total()).sum()
+    }
+}
+
+/// Split `n` into `parts` near-equal chunks (first chunks get the remainder).
+pub fn balanced_split(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts >= 1);
+    let base = n / parts;
+    let rem = n % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Maximum synaptic-matrix split factor before deepening the target split
+/// ("equally distribute the synaptic matrix into 2-4 adjacent PEs").
+pub const MAX_ROW_SPLIT: usize = 4;
+
+/// Allocate serial-paradigm PEs for one layer per §III-A.
+///
+/// Returns `None` if the layer cannot be placed even with per-neuron target
+/// chunks and 4-way row splits (cannot happen for the paper's sweep but the
+/// API stays total).
+pub fn serial_layout(ch: &LayerCharacter, pe: &PeSpec) -> Option<SerialLayout> {
+    let budget = pe.dtcm_bytes;
+    let cap = pe.serial_neuron_cap;
+    let n_source_vertex = ch.n_source.div_ceil(cap);
+
+    let mut n_chunks = ch.n_target.div_ceil(cap);
+    'deepen: loop {
+        if n_chunks > ch.n_target {
+            return None;
+        }
+        let chunks = balanced_split(ch.n_target, n_chunks);
+        let mut pes = Vec::new();
+        for (chunk_idx, &n_tgt_pe) in chunks.iter().enumerate() {
+            // Find the smallest row split 1..=4 that fits this chunk.
+            let mut placed = false;
+            for k in 1..=MAX_ROW_SPLIT {
+                let rows = balanced_split(ch.n_source, k);
+                let fits = rows.iter().all(|&n_src_pe| {
+                    serial_pe_cost(n_src_pe, n_tgt_pe, ch.density, ch.delay_range as usize, n_source_vertex)
+                        .total()
+                        <= budget
+                });
+                if fits {
+                    for (ri, &n_src_pe) in rows.iter().enumerate() {
+                        pes.push(SerialPe {
+                            target_chunk: chunk_idx,
+                            row_split: ri,
+                            n_src: n_src_pe,
+                            n_tgt: n_tgt_pe,
+                            cost: serial_pe_cost(
+                                n_src_pe,
+                                n_tgt_pe,
+                                ch.density,
+                                ch.delay_range as usize,
+                                n_source_vertex,
+                            ),
+                        });
+                    }
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                // Even a 4-way row split does not fit: deepen target split.
+                n_chunks += 1;
+                continue 'deepen;
+            }
+        }
+        return Some(SerialLayout { pes, n_target_chunks: n_chunks, n_source_vertex });
+    }
+}
+
+/// Convenience: serial PE count for a layer character.
+pub fn serial_pe_count(ch: &LayerCharacter, pe: &PeSpec) -> Option<usize> {
+    serial_layout(ch, pe).map(|l| l.n_pes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Prop;
+
+    fn pe() -> PeSpec {
+        PeSpec::default()
+    }
+
+    #[test]
+    fn table1_reference_values() {
+        // 255×255, density 1.0, delay 16, one source vertex — the paper's
+        // per-PE reference configuration.
+        let c = serial_pe_cost(255, 255, 1.0, 16, 1);
+        assert_eq!(c.input_spike_buffer, 4 * 255);
+        assert_eq!(c.master_population_table, 12);
+        assert_eq!(c.address_list, 4 * 255);
+        assert_eq!(c.synaptic_matrix, 4 * 255 * 255);
+        assert_eq!(c.synaptic_input_buffer, 2 * 255 * 16 * 2);
+        assert_eq!(c.neuron_synapse_model, 4 * 14 * 255);
+        assert_eq!(c.output_recording, 4 * (8 + 1) + 4 * 255 * 3);
+        assert_eq!(c.stack_heap, 12);
+        assert_eq!(c.hw_mgmt_os, 6000);
+        assert_eq!(c.dma_buffer, 0);
+        let item_sum: usize = c.items().iter().map(|(_, b)| b).sum();
+        assert_eq!(item_sum, c.total());
+    }
+
+    #[test]
+    fn dense_255_needs_matrix_split() {
+        // Paper: "the DTCM of one PE is incapable of holding all the data
+        // structures when the weight density is over 25%".
+        let over = serial_pe_cost(255, 255, 0.26, 16, 1);
+        assert!(over.total() > pe().dtcm_bytes, "density 26% should overflow one PE");
+        let under = serial_pe_cost(255, 255, 0.20, 16, 1);
+        assert!(under.total() <= pe().dtcm_bytes, "density 20% should fit one PE");
+    }
+
+    #[test]
+    fn layout_small_sparse_is_single_pe() {
+        let ch = LayerCharacter::new(100, 100, 0.1, 4);
+        let l = serial_layout(&ch, &pe()).unwrap();
+        assert_eq!(l.n_pes(), 1);
+        assert_eq!(l.n_target_chunks, 1);
+        assert_eq!(l.n_source_vertex, 1);
+    }
+
+    #[test]
+    fn layout_dense_splits_rows() {
+        let ch = LayerCharacter::new(255, 255, 1.0, 16);
+        let l = serial_layout(&ch, &pe()).unwrap();
+        // 255×255 dense = 260 kB of matrix alone; needs several PEs.
+        assert!(l.n_pes() >= 4, "got {}", l.n_pes());
+        // Every PE fits its budget.
+        assert!(l.pes.iter().all(|p| p.cost.total() <= pe().dtcm_bytes));
+    }
+
+    #[test]
+    fn layout_large_population_splits_targets() {
+        let ch = LayerCharacter::new(500, 500, 0.1, 1);
+        let l = serial_layout(&ch, &pe()).unwrap();
+        assert!(l.n_target_chunks >= 2, "500 targets need ≥2 chunks (cap 255)");
+        assert_eq!(l.n_source_vertex, 2);
+    }
+
+    #[test]
+    fn balanced_split_sums_and_balance() {
+        Prop::new("balanced_split invariants", 300).check(
+            |g| {
+                let n = g.usize(0, 5000);
+                let parts = g.usize(1, 64);
+                (n, parts, balanced_split(n, parts))
+            },
+            |(n, parts, chunks)| {
+                chunks.len() == *parts
+                    && chunks.iter().sum::<usize>() == *n
+                    && chunks.iter().max().unwrap() - chunks.iter().min().unwrap() <= 1
+            },
+        );
+    }
+
+    #[test]
+    fn all_layout_pes_fit_budget_property() {
+        Prop::new("serial layout fits DTCM", 150).check(
+            |g| {
+                let ch = LayerCharacter::new(
+                    g.usize(50, 500),
+                    g.usize(50, 500),
+                    g.f64(0.1, 1.0),
+                    g.usize(1, 16) as u16,
+                );
+                ch
+            },
+            |ch| {
+                let l = serial_layout(ch, &PeSpec::default()).unwrap();
+                l.pes.iter().all(|p| p.cost.total() <= PeSpec::default().dtcm_bytes)
+                    && l.n_pes() >= ch.n_target.div_ceil(255)
+            },
+        );
+    }
+
+    #[test]
+    fn pe_count_monotone_in_density() {
+        let pe = pe();
+        let mut prev = 0;
+        for d in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
+            let ch = LayerCharacter::new(400, 400, d, 8);
+            let n = serial_pe_count(&ch, &pe).unwrap();
+            assert!(n >= prev, "PE count should not decrease with density");
+            prev = n;
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Per-timestep energy models for both paradigms.
+//!
+//! Energy = static leakage over the step latency (per occupied PE) +
+//! dynamic per-op costs: synaptic events and neuron updates on the ARM
+//! path; MAC operations, SRAM weight reads and merge scatters on the
+//! parallel path. Constants are SpiNNaker2-class orders of magnitude
+//! (22 nm FDSOI, cf. refs [10][13]); the deliverable is the *comparison*,
+//! not absolute joules.
+
+use super::timing::LayerTiming;
+use super::Activity;
+use crate::hardware::PeSpec;
+use crate::model::LayerCharacter;
+
+/// Per-timestep energy result (picojoules).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerEnergy {
+    pub step_pj: f64,
+    pub dynamic_pj: f64,
+    pub static_pj: f64,
+}
+
+/// Energy cost constants.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Static power per occupied PE (µW) — leakage + clock tree.
+    pub static_uw_per_pe: f64,
+    /// ARM energy per synaptic event (pJ): row fetch + accumulate.
+    pub pj_per_event: f64,
+    /// ARM energy per neuron update (pJ).
+    pub pj_per_neuron: f64,
+    /// Energy per MAC operation (pJ).
+    pub pj_per_mac: f64,
+    /// SRAM read energy per byte (pJ) — weight streaming into the array.
+    pub pj_per_sram_byte: f64,
+    /// Dominant-PE energy per merge-table scatter (pJ).
+    pub pj_per_merge: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            static_uw_per_pe: 300.0,
+            pj_per_event: 120.0,
+            pj_per_neuron: 200.0,
+            pj_per_mac: 2.5,
+            pj_per_sram_byte: 1.2,
+            pj_per_merge: 40.0,
+        }
+    }
+}
+
+impl EnergyModel {
+    fn static_pj(&self, pes: usize, step_ns: f64) -> f64 {
+        // µW × ns = femtojoules × 1e0 … convert: 1 µW = 1e-6 J/s =
+        // 1e-6 pJ/ps = 1e-3 pJ/ns.
+        self.static_uw_per_pe * 1e-3 * step_ns * pes as f64
+    }
+
+    /// Serial paradigm per-step energy.
+    pub fn serial(
+        &self,
+        ch: &LayerCharacter,
+        act: Activity,
+        pes: usize,
+        timing: &LayerTiming,
+    ) -> LayerEnergy {
+        let events = act.spikes_per_step * ch.density * ch.n_target as f64;
+        let dynamic =
+            events * self.pj_per_event + ch.n_target as f64 * self.pj_per_neuron;
+        let stat = self.static_pj(pes, timing.step_ns);
+        LayerEnergy { step_pj: dynamic + stat, dynamic_pj: dynamic, static_pj: stat }
+    }
+
+    /// Parallel paradigm per-step energy: the whole padded WDM is read and
+    /// multiplied every step (the sparsity-blindness the paper's intro
+    /// flags as the MAC path's weakness).
+    pub fn parallel(
+        &self,
+        ch: &LayerCharacter,
+        act: Activity,
+        pes: usize,
+        timing: &LayerTiming,
+        pe: &PeSpec,
+    ) -> LayerEnergy {
+        let d = ch.delay_range as f64;
+        let p_row = 1.0 - (1.0 - 1.0 / d).powf(ch.density * ch.n_target as f64);
+        let rows_pad =
+            ((ch.n_source as f64 * d * p_row) / pe.mac.cols as f64).ceil() * pe.mac.cols as f64;
+        let cols_pad =
+            (ch.n_target as f64 / pe.mac.rows as f64).ceil() * pe.mac.rows as f64;
+        let macs = rows_pad * cols_pad;
+        let merges = act.spikes_per_step * d * p_row;
+        let dynamic = macs * self.pj_per_mac
+            + macs * self.pj_per_sram_byte // 8-bit weights: 1 B per MAC
+            + merges * self.pj_per_merge
+            + ch.n_target as f64 * self.pj_per_neuron;
+        let stat = self.static_pj(pes, timing.step_ns);
+        LayerEnergy { step_pj: dynamic + stat, dynamic_pj: dynamic, static_pj: stat }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::timing::TimingModel;
+    use super::*;
+
+    fn setup(d: f64, delay: u16, rate: f64) -> (LayerCharacter, Activity) {
+        let ch = LayerCharacter::new(255, 255, d, delay);
+        let act = Activity { spikes_per_step: 255.0 * rate };
+        (ch, act)
+    }
+
+    #[test]
+    fn serial_energy_tracks_activity() {
+        let e = EnergyModel::default();
+        let t = TimingModel::default();
+        let (ch, quiet) = setup(0.5, 8, 0.01);
+        let (_, busy) = setup(0.5, 8, 0.5);
+        let tq = t.serial(&ch, quiet);
+        let tb = t.serial(&ch, busy);
+        assert!(
+            e.serial(&ch, busy, 2, &tb).dynamic_pj
+                > 5.0 * e.serial(&ch, quiet, 2, &tq).dynamic_pj
+        );
+    }
+
+    #[test]
+    fn parallel_energy_is_mostly_activity_blind() {
+        let e = EnergyModel::default();
+        let t = TimingModel::default();
+        let pe = PeSpec::default();
+        let (ch, quiet) = setup(0.5, 8, 0.01);
+        let (_, busy) = setup(0.5, 8, 0.5);
+        let tq = t.parallel(&ch, quiet, 2, &pe);
+        let tb = t.parallel(&ch, busy, 2, &pe);
+        let eq = e.parallel(&ch, quiet, 3, &tq, &pe).dynamic_pj;
+        let eb = e.parallel(&ch, busy, 3, &tb, &pe).dynamic_pj;
+        assert!(eb < eq * 1.5, "MAC energy dominated by the dense matmul");
+    }
+
+    #[test]
+    fn quiet_sparse_layer_cheaper_serially() {
+        // The paper's intro: the serial paradigm "fully utilizes the input
+        // sparsity to achieve energy savings".
+        let e = EnergyModel::default();
+        let t = TimingModel::default();
+        let pe = PeSpec::default();
+        let (ch, act) = setup(0.1, 8, 0.005);
+        let ts = t.serial(&ch, act);
+        let tp = t.parallel(&ch, act, 2, &pe);
+        assert!(
+            e.serial(&ch, act, 2, &ts).step_pj < e.parallel(&ch, act, 3, &tp, &pe).step_pj
+        );
+    }
+
+    #[test]
+    fn static_energy_scales_with_pes_and_time() {
+        let e = EnergyModel::default();
+        let a = e.static_pj(1, 1000.0);
+        assert!((e.static_pj(4, 1000.0) - 4.0 * a).abs() < 1e-9);
+        assert!((e.static_pj(1, 4000.0) - 4.0 * a).abs() < 1e-9);
+    }
+}

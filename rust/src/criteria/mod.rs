@@ -1,0 +1,191 @@
+//! Temporal and energy evaluation criteria — the paper's stated future
+//! work, implemented as an extension:
+//!
+//! > "Our future work will integrate the temporal and energy performances
+//! > as evaluation criteria into this switching system." (§IV-C)
+//!
+//! [`timing`] models per-timestep latency of each paradigm from first
+//! principles (ARM event loop vs MAC-array systolic schedule + dominant
+//! preprocessing); [`energy`] models per-timestep energy from per-op
+//! costs; [`MultiCriteriaSwitch`] extends the memory-only switching
+//! decision to a weighted (PE, time, energy) objective.
+//!
+//! Constants are order-of-magnitude SpiNNaker2-class numbers (150 MHz PE
+//! clock, tens of pJ per SRAM word / MAC) — documented per field and
+//! overridable; the *comparisons* between paradigms, not the absolute
+//! joules, are the deliverable.
+
+pub mod energy;
+pub mod timing;
+
+use crate::hardware::PeSpec;
+use crate::model::LayerCharacter;
+use crate::paradigm::Paradigm;
+
+pub use energy::{EnergyModel, LayerEnergy};
+pub use timing::{LayerTiming, TimingModel};
+
+/// Workload statistics a criteria evaluation needs: expected activity per
+/// timestep for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct Activity {
+    /// Expected source spikes per timestep.
+    pub spikes_per_step: f64,
+}
+
+impl Activity {
+    /// Assume each source neuron fires with rate `rate` per timestep.
+    pub fn from_rate(ch: &LayerCharacter, rate: f64) -> Activity {
+        Activity { spikes_per_step: ch.n_source as f64 * rate }
+    }
+}
+
+/// Relative weights of the three criteria. Memory-only (the paper's
+/// published system) is `{1, 0, 0}`.
+#[derive(Clone, Copy, Debug)]
+pub struct CriteriaWeights {
+    pub memory: f64,
+    pub time: f64,
+    pub energy: f64,
+}
+
+impl CriteriaWeights {
+    pub fn memory_only() -> Self {
+        CriteriaWeights { memory: 1.0, time: 0.0, energy: 0.0 }
+    }
+
+    pub fn balanced() -> Self {
+        CriteriaWeights { memory: 1.0, time: 1.0, energy: 1.0 }
+    }
+}
+
+/// Per-paradigm criteria evaluation for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct CriteriaScore {
+    pub pes: usize,
+    pub time: LayerTiming,
+    pub energy: LayerEnergy,
+}
+
+/// The extended switching decision: weighted normalized score over
+/// (PEs, step latency, step energy). Each criterion is normalized by the
+/// *other* paradigm's value, so weights express relative importance rather
+/// than unit conversions.
+pub struct MultiCriteriaSwitch {
+    pub timing: TimingModel,
+    pub energy: EnergyModel,
+    pub weights: CriteriaWeights,
+}
+
+impl MultiCriteriaSwitch {
+    pub fn new(weights: CriteriaWeights) -> Self {
+        MultiCriteriaSwitch {
+            timing: TimingModel::default(),
+            energy: EnergyModel::default(),
+            weights,
+        }
+    }
+
+    /// Evaluate both paradigms for a layer; returns (serial, parallel).
+    ///
+    /// `serial_pes`/`parallel_pes` come from the compilers (as in the
+    /// dataset labeler); activity drives the time/energy models.
+    pub fn evaluate(
+        &self,
+        ch: &LayerCharacter,
+        act: Activity,
+        serial_pes: usize,
+        parallel_pes: usize,
+        pe: &PeSpec,
+    ) -> (CriteriaScore, CriteriaScore) {
+        let t_s = self.timing.serial(ch, act);
+        let t_p = self.timing.parallel(ch, act, parallel_pes.saturating_sub(1).max(1), pe);
+        let e_s = self.energy.serial(ch, act, serial_pes, &t_s);
+        let e_p = self.energy.parallel(ch, act, parallel_pes, &t_p, pe);
+        (
+            CriteriaScore { pes: serial_pes, time: t_s, energy: e_s },
+            CriteriaScore { pes: parallel_pes, time: t_p, energy: e_p },
+        )
+    }
+
+    /// The weighted decision. Ties favor serial (as in the memory-only
+    /// labeler).
+    pub fn decide(
+        &self,
+        ch: &LayerCharacter,
+        act: Activity,
+        serial_pes: usize,
+        parallel_pes: usize,
+        pe: &PeSpec,
+    ) -> Paradigm {
+        let (s, p) = self.evaluate(ch, act, serial_pes, parallel_pes, pe);
+        let norm = |a: f64, b: f64| if a + b > 0.0 { a / (a + b) } else { 0.5 };
+        let w = self.weights;
+        let score_s = w.memory * norm(s.pes as f64, p.pes as f64)
+            + w.time * norm(s.time.step_ns, p.time.step_ns)
+            + w.energy * norm(s.energy.step_pj, p.energy.step_pj);
+        let score_p = w.memory * norm(p.pes as f64, s.pes as f64)
+            + w.time * norm(p.time.step_ns, s.time.step_ns)
+            + w.energy * norm(p.energy.step_pj, s.energy.step_pj);
+        if score_p < score_s {
+            Paradigm::Parallel
+        } else {
+            Paradigm::Serial
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe() -> PeSpec {
+        PeSpec::default()
+    }
+
+    #[test]
+    fn memory_only_matches_pe_comparison() {
+        let sw = MultiCriteriaSwitch::new(CriteriaWeights::memory_only());
+        let ch = LayerCharacter::new(255, 255, 0.5, 8);
+        let act = Activity::from_rate(&ch, 0.1);
+        assert_eq!(sw.decide(&ch, act, 3, 5, &pe()), Paradigm::Serial);
+        assert_eq!(sw.decide(&ch, act, 5, 3, &pe()), Paradigm::Parallel);
+        assert_eq!(sw.decide(&ch, act, 3, 3, &pe()), Paradigm::Serial, "tie → serial");
+    }
+
+    #[test]
+    fn high_activity_dense_layers_favor_parallel_in_time() {
+        // Event-driven serial degrades with spike rate × fan-out; the MAC
+        // array's dense matmul does not.
+        let sw = MultiCriteriaSwitch::new(CriteriaWeights { memory: 0.0, time: 1.0, energy: 0.0 });
+        let ch = LayerCharacter::new(255, 255, 1.0, 2);
+        let busy = Activity::from_rate(&ch, 0.5);
+        assert_eq!(sw.decide(&ch, busy, 4, 4, &pe()), Paradigm::Parallel);
+    }
+
+    #[test]
+    fn sparse_quiet_layers_favor_serial_in_energy() {
+        // Nearly-silent sparse input: event-driven processing does almost
+        // nothing; the MAC array still multiplies the whole (padded) map.
+        let sw =
+            MultiCriteriaSwitch::new(CriteriaWeights { memory: 0.0, time: 0.0, energy: 1.0 });
+        let ch = LayerCharacter::new(255, 255, 0.05, 8);
+        let quiet = Activity::from_rate(&ch, 0.001);
+        assert_eq!(sw.decide(&ch, quiet, 2, 2, &pe()), Paradigm::Serial);
+    }
+
+    #[test]
+    fn weights_shift_the_decision() {
+        // A layer where memory favors serial but time favors parallel:
+        // the weighting determines the outcome.
+        let ch = LayerCharacter::new(255, 255, 1.0, 2);
+        let busy = Activity::from_rate(&ch, 0.5);
+        let mem_only = MultiCriteriaSwitch::new(CriteriaWeights::memory_only());
+        let time_heavy =
+            MultiCriteriaSwitch::new(CriteriaWeights { memory: 0.1, time: 10.0, energy: 0.0 });
+        let d_mem = mem_only.decide(&ch, busy, 3, 5, &pe());
+        let d_time = time_heavy.decide(&ch, busy, 3, 5, &pe());
+        assert_eq!(d_mem, Paradigm::Serial);
+        assert_eq!(d_time, Paradigm::Parallel);
+    }
+}

@@ -1,0 +1,163 @@
+//! Per-timestep latency models for both paradigms.
+//!
+//! Serial (ARM, event-driven, §III-A): latency ≈ fixed tick overhead +
+//! synaptic-event processing (each arriving spike walks its matrix block)
+//! + time-triggered neural update over resident neurons.
+//!
+//! Parallel (MAC array, §III-B): dominant preprocessing (each spike's
+//! merge-table entries scatter into the stacked input) + the slowest
+//! subordinate's systolic matmul (64 MACs/cycle on the 4×16 array) +
+//! current reduction + neural update on the dominant.
+
+use super::Activity;
+use crate::hardware::PeSpec;
+use crate::model::LayerCharacter;
+
+/// Paradigm-agnostic timing result (per simulated timestep).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerTiming {
+    pub step_ns: f64,
+    /// Dominant contributor, for reports.
+    pub compute_ns: f64,
+    pub overhead_ns: f64,
+}
+
+/// Clock + per-op cycle costs (SpiNNaker2-class: 150 MHz PEs).
+#[derive(Clone, Copy, Debug)]
+pub struct TimingModel {
+    /// PE clock (Hz).
+    pub clock_hz: f64,
+    /// Fixed timer-tick overhead per step (cycles).
+    pub tick_cycles: f64,
+    /// ARM cycles per synaptic event (row fetch + ring-buffer accumulate).
+    pub cycles_per_event: f64,
+    /// ARM cycles per neuron LIF update.
+    pub cycles_per_neuron: f64,
+    /// Dominant cycles per merge-table entry per spike (stacked scatter).
+    pub cycles_per_merge: f64,
+    /// MACs per cycle on the 4×16 array.
+    pub macs_per_cycle: f64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel {
+            clock_hz: 150e6,
+            tick_cycles: 2_000.0,
+            cycles_per_event: 12.0,
+            cycles_per_neuron: 25.0,
+            cycles_per_merge: 6.0,
+            macs_per_cycle: 64.0,
+        }
+    }
+}
+
+impl TimingModel {
+    fn ns(&self, cycles: f64) -> f64 {
+        cycles / self.clock_hz * 1e9
+    }
+
+    /// Serial paradigm per-step latency. Synaptic events per step =
+    /// spikes × fan-out (density × n_target).
+    pub fn serial(&self, ch: &LayerCharacter, act: Activity) -> LayerTiming {
+        let events = act.spikes_per_step * ch.density * ch.n_target as f64;
+        let compute =
+            events * self.cycles_per_event + ch.n_target as f64 * self.cycles_per_neuron;
+        LayerTiming {
+            step_ns: self.ns(compute + self.tick_cycles),
+            compute_ns: self.ns(compute),
+            overhead_ns: self.ns(self.tick_cycles),
+        }
+    }
+
+    /// Parallel paradigm per-step latency with `n_subordinates` chunks.
+    ///
+    /// The WDM is consumed whole every step regardless of activity (that is
+    /// the MAC trade-off); rows ≈ expected non-empty (source, delay) lanes,
+    /// padded to the array geometry, split across subordinates which run in
+    /// parallel (the slowest chunk governs).
+    pub fn parallel(
+        &self,
+        ch: &LayerCharacter,
+        act: Activity,
+        n_subordinates: usize,
+        pe: &PeSpec,
+    ) -> LayerTiming {
+        let d = ch.delay_range as f64;
+        // Expected kept rows after zero-row elimination: lane (s, δ) is
+        // non-empty with prob 1 − (1 − 1/D)^(density·n_target).
+        let p_row = 1.0 - (1.0 - 1.0 / d).powf(ch.density * ch.n_target as f64);
+        let rows = ch.n_source as f64 * d * p_row;
+        let rows_pad = (rows / pe.mac.cols as f64).ceil() * pe.mac.cols as f64;
+        let cols_pad =
+            (ch.n_target as f64 / pe.mac.rows as f64).ceil() * pe.mac.rows as f64;
+        let macs_per_sub = rows_pad * cols_pad / n_subordinates.max(1) as f64;
+        let mac_cycles = macs_per_sub / self.macs_per_cycle;
+
+        // Dominant: merge-table scatter per spike (≈ one entry per kept
+        // delay slot of that source) + reduction + neural update.
+        let merges = act.spikes_per_step * d * p_row;
+        let dom_cycles = merges * self.cycles_per_merge
+            + ch.n_target as f64 * self.cycles_per_neuron
+            + n_subordinates as f64 * ch.n_target as f64; // current reduction
+        let compute = mac_cycles + dom_cycles;
+        LayerTiming {
+            step_ns: self.ns(compute + self.tick_cycles),
+            compute_ns: self.ns(compute),
+            overhead_ns: self.ns(self.tick_cycles),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ch(d: f64, delay: u16) -> LayerCharacter {
+        LayerCharacter::new(255, 255, d, delay)
+    }
+
+    #[test]
+    fn serial_latency_scales_with_activity() {
+        let m = TimingModel::default();
+        let quiet = m.serial(&ch(0.5, 8), Activity { spikes_per_step: 1.0 });
+        let busy = m.serial(&ch(0.5, 8), Activity { spikes_per_step: 100.0 });
+        assert!(busy.step_ns > quiet.step_ns * 5.0, "event-driven cost tracks spikes");
+    }
+
+    #[test]
+    fn parallel_latency_is_activity_insensitive() {
+        let m = TimingModel::default();
+        let pe = PeSpec::default();
+        let quiet = m.parallel(&ch(0.5, 8), Activity { spikes_per_step: 1.0 }, 2, &pe);
+        let busy = m.parallel(&ch(0.5, 8), Activity { spikes_per_step: 100.0 }, 2, &pe);
+        assert!(
+            busy.step_ns < quiet.step_ns * 1.5,
+            "MAC matmul dominates; spikes only touch the merge scatter"
+        );
+    }
+
+    #[test]
+    fn more_subordinates_reduce_parallel_latency() {
+        let m = TimingModel::default();
+        let pe = PeSpec::default();
+        let one = m.parallel(&ch(1.0, 16), Activity { spikes_per_step: 10.0 }, 1, &pe);
+        let eight = m.parallel(&ch(1.0, 16), Activity { spikes_per_step: 10.0 }, 8, &pe);
+        assert!(eight.step_ns < one.step_ns, "work splits across chunks");
+    }
+
+    #[test]
+    fn crossover_exists_in_activity() {
+        // On a sparse layer, low activity favors the event-driven serial
+        // path; high activity favors the MAC array — the temporal analogue
+        // of the paper's memory trade-off. (On fully dense layers parallel
+        // wins at any activity, which the test above covers.)
+        let m = TimingModel::default();
+        let pe = PeSpec::default();
+        let c = ch(0.05, 2);
+        let low = Activity { spikes_per_step: 2.0 };
+        let high = Activity { spikes_per_step: 200.0 };
+        assert!(m.serial(&c, low).step_ns < m.parallel(&c, low, 1, &pe).step_ns);
+        assert!(m.serial(&c, high).step_ns > m.parallel(&c, high, 1, &pe).step_ns);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dataset acquisition (paper §IV-A).
+//!
+//! "We run on parallel paradigm's compiler the randomly generated 16000 SNN
+//! layers, whose source and target neurons range from 50 to 500 with step
+//! length 50, weight density 10% − 100% with 10% step length, delay range
+//! 1 − 16 with step length 1."
+//!
+//! Each layer is compiled under both paradigms; the label is the paradigm
+//! needing fewer PEs (ties go to serial — no dominant-PE overhead). The
+//! serial PE count comes from the closed-form Table I model; the parallel
+//! count requires actually running the parallel compiler (Table I: the WDM
+//! size "can't be accurately estimated").
+
+pub mod generator;
+
+pub use generator::{generate_grid, label_layer, realize_layer, Dataset, Sample, SweepConfig};

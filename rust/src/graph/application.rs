@@ -1,0 +1,86 @@
+//! Application graph: one vertex per population, one edge per projection.
+
+use crate::model::{Network, PopulationId, ProjectionId};
+
+/// Application-graph vertex — wraps one population.
+#[derive(Clone, Debug)]
+pub struct AppVertex {
+    pub population: PopulationId,
+    pub n_neurons: usize,
+    pub label: String,
+}
+
+/// Application-graph edge — wraps one projection.
+#[derive(Clone, Debug)]
+pub struct AppEdge {
+    pub projection: ProjectionId,
+    pub source: PopulationId,
+    pub target: PopulationId,
+}
+
+/// The application graph (paper Fig. 2: "each vertex of the application
+/// graph contains all neurons of one layer, and edges indicate the
+/// projections of the inter- and inner-layer").
+#[derive(Clone, Debug)]
+pub struct AppGraph {
+    pub vertices: Vec<AppVertex>,
+    pub edges: Vec<AppEdge>,
+}
+
+impl AppGraph {
+    /// Interpret a network into its application graph.
+    pub fn from_network(net: &Network) -> Self {
+        let vertices = net
+            .populations
+            .iter()
+            .map(|p| AppVertex {
+                population: p.id,
+                n_neurons: p.n_neurons,
+                label: p.label.clone(),
+            })
+            .collect();
+        let edges = net
+            .projections
+            .iter()
+            .map(|p| AppEdge { projection: p.id, source: p.source, target: p.target })
+            .collect();
+        AppGraph { vertices, edges }
+    }
+
+    /// Edges targeting `pop`.
+    pub fn in_edges(&self, pop: PopulationId) -> Vec<&AppEdge> {
+        self.edges.iter().filter(|e| e.target == pop).collect()
+    }
+
+    /// Edges leaving `pop`.
+    pub fn out_edges(&self, pop: PopulationId) -> Vec<&AppEdge> {
+        self.edges.iter().filter(|e| e.source == pop).collect()
+    }
+
+    pub fn vertex(&self, pop: PopulationId) -> &AppVertex {
+        &self.vertices[pop.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Connector, LifParams, NetworkBuilder};
+    use crate::model::connector::SynapseDraw;
+
+    #[test]
+    fn mirrors_network_topology() {
+        let mut b = NetworkBuilder::new(1);
+        let a = b.spike_source("in", 10);
+        let h = b.lif_population("hid", 20, LifParams::default());
+        b.project(a, h, Connector::AllToAll, SynapseDraw::default(), 1.0);
+        let net = b.build();
+        let g = AppGraph::from_network(&net);
+        assert_eq!(g.vertices.len(), 2);
+        assert_eq!(g.edges.len(), 1);
+        assert_eq!(g.in_edges(h).len(), 1);
+        assert_eq!(g.out_edges(a).len(), 1);
+        assert_eq!(g.in_edges(a).len(), 0);
+        assert_eq!(g.vertex(h).n_neurons, 20);
+    }
+}

@@ -1,0 +1,158 @@
+//! Machine graph: sub-populations placed on PEs plus their induced edges.
+//!
+//! "The neuron population in each vertex is then split into one or several
+//! sub-populations to fit the SRAM resource of each PE. All the
+//! sub-populations and the corresponding projections between them form a
+//! machine graph." (paper §III)
+
+use crate::hardware::PeHandle;
+use crate::model::{PopulationId, ProjectionId};
+
+/// A contiguous neuron index range [lo, hi) of a population.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SliceRange {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl SliceRange {
+    pub fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+
+    pub fn contains(&self, idx: u32) -> bool {
+        (self.lo..self.hi).contains(&idx)
+    }
+}
+
+/// What role a machine vertex plays in its paradigm's PE group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VertexRole {
+    /// Serial-paradigm PE (neurons + synaptic rows).
+    Serial,
+    /// Parallel-paradigm dominant PE (spike preprocessing + neural update).
+    ParallelDominant,
+    /// Parallel-paradigm subordinate PE (weight-delay-map chunk on the MAC).
+    ParallelSubordinate,
+    /// Spike-source hosting PE.
+    Source,
+}
+
+/// One machine vertex: a sub-population slice assigned to one PE.
+#[derive(Clone, Debug)]
+pub struct MachineVertex {
+    pub id: usize,
+    pub population: PopulationId,
+    /// Target-neuron slice simulated/served by this vertex.
+    pub slice: SliceRange,
+    pub role: VertexRole,
+    /// The PE the vertex is placed on (set by placement).
+    pub pe: Option<PeHandle>,
+    /// DTCM bytes this vertex loads.
+    pub dtcm_bytes: usize,
+    pub label: String,
+}
+
+/// One machine edge: spikes flow from one machine vertex to another.
+#[derive(Clone, Debug)]
+pub struct MachineEdge {
+    pub projection: ProjectionId,
+    pub source_vertex: usize,
+    pub target_vertex: usize,
+}
+
+/// The machine graph.
+#[derive(Clone, Debug, Default)]
+pub struct MachineGraph {
+    pub vertices: Vec<MachineVertex>,
+    pub edges: Vec<MachineEdge>,
+}
+
+impl MachineGraph {
+    pub fn add_vertex(
+        &mut self,
+        population: PopulationId,
+        slice: SliceRange,
+        role: VertexRole,
+        dtcm_bytes: usize,
+        label: String,
+    ) -> usize {
+        let id = self.vertices.len();
+        self.vertices.push(MachineVertex { id, population, slice, role, pe: None, dtcm_bytes, label });
+        id
+    }
+
+    pub fn add_edge(&mut self, projection: ProjectionId, source_vertex: usize, target_vertex: usize) {
+        self.edges.push(MachineEdge { projection, source_vertex, target_vertex });
+    }
+
+    /// Vertices belonging to a population.
+    pub fn vertices_of(&self, pop: PopulationId) -> Vec<&MachineVertex> {
+        self.vertices.iter().filter(|v| v.population == pop).collect()
+    }
+
+    /// Machine edges fanning out of a vertex.
+    pub fn out_edges(&self, vertex: usize) -> Vec<&MachineEdge> {
+        self.edges.iter().filter(|e| e.source_vertex == vertex).collect()
+    }
+
+    /// Total DTCM across vertices (proxy for machine memory footprint).
+    pub fn total_dtcm(&self) -> usize {
+        self.vertices.iter().map(|v| v.dtcm_bytes).sum()
+    }
+
+    /// Place every vertex on a machine, allocating PEs in order.
+    pub fn place(&mut self, machine: &mut crate::hardware::Machine) -> crate::Result<()> {
+        for v in &mut self.vertices {
+            let pe = machine.allocate(&v.label, v.dtcm_bytes)?;
+            v.pe = Some(pe);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::Machine;
+
+    #[test]
+    fn slice_basics() {
+        let s = SliceRange { lo: 10, hi: 20 };
+        assert_eq!(s.len(), 10);
+        assert!(s.contains(10) && s.contains(19) && !s.contains(20));
+        assert!(!s.is_empty());
+        assert!(SliceRange { lo: 3, hi: 3 }.is_empty());
+    }
+
+    #[test]
+    fn build_and_place() {
+        let mut g = MachineGraph::default();
+        let a = g.add_vertex(
+            PopulationId(0),
+            SliceRange { lo: 0, hi: 100 },
+            VertexRole::Source,
+            1000,
+            "src".into(),
+        );
+        let b = g.add_vertex(
+            PopulationId(1),
+            SliceRange { lo: 0, hi: 50 },
+            VertexRole::Serial,
+            2000,
+            "tgt".into(),
+        );
+        g.add_edge(ProjectionId(0), a, b);
+        let mut m = Machine::single_chip();
+        g.place(&mut m).unwrap();
+        assert!(g.vertices.iter().all(|v| v.pe.is_some()));
+        assert_eq!(m.allocated_count(), 2);
+        assert_eq!(g.total_dtcm(), 3000);
+        assert_eq!(g.out_edges(a).len(), 1);
+        assert_eq!(g.vertices_of(PopulationId(1)).len(), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Application graph → machine graph mapping (paper Fig. 2, after ref [14]).
+//!
+//! The SNN model is interpreted into an *application graph* whose vertices
+//! hold one population each and whose edges are the projections. Each vertex
+//! is split into sub-population *machine vertices* sized to fit one PE, and
+//! the sub-population connectivity induces the *machine graph* plus the
+//! multicast *routing table* loaded into the NoC routers.
+
+pub mod application;
+pub mod machine_graph;
+pub mod routing;
+
+pub use application::{AppEdge, AppGraph, AppVertex};
+pub use machine_graph::{MachineEdge, MachineGraph, MachineVertex, SliceRange};
+pub use routing::{RoutingEntry, RoutingTable};

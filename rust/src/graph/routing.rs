@@ -1,0 +1,132 @@
+//! Multicast routing tables.
+//!
+//! "The connection relations of these sub-populations contribute to
+//! generating a routing table." (paper §III). SpiNNaker-style routing keys
+//! are (population, source-slice) pairs; each entry fans a source machine
+//! vertex's spikes out to every machine vertex that consumes them.
+
+use super::machine_graph::MachineGraph;
+use crate::hardware::PeHandle;
+use std::collections::BTreeMap;
+
+/// Routing key: identifies the spike-emitting machine vertex.
+pub type RouteKey = u32;
+
+/// One multicast route: key → set of destination PEs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutingEntry {
+    pub key: RouteKey,
+    pub source_vertex: usize,
+    pub destinations: Vec<PeHandle>,
+}
+
+/// The machine's routing table.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingTable {
+    pub entries: Vec<RoutingEntry>,
+    by_key: BTreeMap<RouteKey, usize>,
+}
+
+impl RoutingTable {
+    /// Derive the routing table from a placed machine graph.
+    ///
+    /// Panics if the graph has unplaced vertices (placement must precede
+    /// routing, as in Fig. 2's pipeline order).
+    pub fn from_machine_graph(graph: &MachineGraph) -> Self {
+        let mut table = RoutingTable::default();
+        for v in &graph.vertices {
+            let mut dests: Vec<PeHandle> = graph
+                .out_edges(v.id)
+                .iter()
+                .map(|e| {
+                    graph.vertices[e.target_vertex]
+                        .pe
+                        .expect("routing requires placed vertices")
+                })
+                .collect();
+            dests.sort();
+            dests.dedup();
+            if !dests.is_empty() {
+                let key = v.id as RouteKey;
+                table.by_key.insert(key, table.entries.len());
+                table.entries.push(RoutingEntry { key, source_vertex: v.id, destinations: dests });
+            }
+        }
+        table
+    }
+
+    /// Look up the destinations for a source vertex's spikes.
+    pub fn route(&self, key: RouteKey) -> Option<&RoutingEntry> {
+        self.by_key.get(&key).map(|&i| &self.entries[i])
+    }
+
+    /// Number of multicast entries (router memory proxy).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::machine_graph::{SliceRange, VertexRole};
+    use crate::hardware::Machine;
+    use crate::model::{PopulationId, ProjectionId};
+
+    fn placed_graph() -> MachineGraph {
+        let mut g = MachineGraph::default();
+        let s = g.add_vertex(PopulationId(0), SliceRange { lo: 0, hi: 10 }, VertexRole::Source, 100, "s".into());
+        let a = g.add_vertex(PopulationId(1), SliceRange { lo: 0, hi: 5 }, VertexRole::Serial, 100, "a".into());
+        let b = g.add_vertex(PopulationId(1), SliceRange { lo: 5, hi: 10 }, VertexRole::Serial, 100, "b".into());
+        g.add_edge(ProjectionId(0), s, a);
+        g.add_edge(ProjectionId(0), s, b);
+        let mut m = Machine::single_chip();
+        g.place(&mut m).unwrap();
+        g
+    }
+
+    #[test]
+    fn fans_out_to_all_consumers() {
+        let g = placed_graph();
+        let t = RoutingTable::from_machine_graph(&g);
+        assert_eq!(t.len(), 1);
+        let e = t.route(0).unwrap();
+        assert_eq!(e.destinations.len(), 2);
+    }
+
+    #[test]
+    fn leaf_vertices_emit_no_entries() {
+        let g = placed_graph();
+        let t = RoutingTable::from_machine_graph(&g);
+        assert!(t.route(1).is_none());
+        assert!(t.route(2).is_none());
+    }
+
+    #[test]
+    fn dedups_destinations() {
+        let mut g = MachineGraph::default();
+        let s = g.add_vertex(PopulationId(0), SliceRange { lo: 0, hi: 4 }, VertexRole::Source, 10, "s".into());
+        let a = g.add_vertex(PopulationId(1), SliceRange { lo: 0, hi: 4 }, VertexRole::Serial, 10, "a".into());
+        // Two projections between the same pair → one destination.
+        g.add_edge(ProjectionId(0), s, a);
+        g.add_edge(ProjectionId(1), s, a);
+        let mut m = Machine::single_chip();
+        g.place(&mut m).unwrap();
+        let t = RoutingTable::from_machine_graph(&g);
+        assert_eq!(t.route(0).unwrap().destinations.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "placed")]
+    fn requires_placement() {
+        let mut g = MachineGraph::default();
+        let s = g.add_vertex(PopulationId(0), SliceRange { lo: 0, hi: 4 }, VertexRole::Source, 10, "s".into());
+        let a = g.add_vertex(PopulationId(1), SliceRange { lo: 0, hi: 4 }, VertexRole::Serial, 10, "a".into());
+        g.add_edge(ProjectionId(0), s, a);
+        RoutingTable::from_machine_graph(&g);
+    }
+}

@@ -1,0 +1,197 @@
+//! A machine instance: PE allocation bookkeeping over a [`MachineSpec`].
+//!
+//! The mapping pipeline (graph partitioning → paradigm compilation) asks the
+//! machine for free PEs and charges each allocation with its DTCM usage; the
+//! machine enforces the per-PE budget and exposes utilization metrics that
+//! the evaluation benches report.
+
+use super::spec::MachineSpec;
+use anyhow::{bail, Result};
+
+/// Identifies one PE on the machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PeHandle {
+    pub chip_x: usize,
+    pub chip_y: usize,
+    pub core: usize,
+}
+
+impl std::fmt::Display for PeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{}):{}", self.chip_x, self.chip_y, self.core)
+    }
+}
+
+/// Allocation record for one PE.
+#[derive(Clone, Debug)]
+struct PeState {
+    allocated: bool,
+    dtcm_used: usize,
+    label: String,
+}
+
+/// A machine with allocation state.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    spec: MachineSpec,
+    pes: Vec<PeState>,
+    next_free: usize,
+}
+
+impl Machine {
+    pub fn new(spec: MachineSpec) -> Self {
+        let n = spec.total_pes();
+        Machine {
+            spec,
+            pes: vec![PeState { allocated: false, dtcm_used: 0, label: String::new() }; n],
+            next_free: 0,
+        }
+    }
+
+    /// Single-chip machine with default constants.
+    pub fn single_chip() -> Self {
+        Machine::new(MachineSpec::default())
+    }
+
+    pub fn spec(&self) -> &MachineSpec {
+        &self.spec
+    }
+
+    fn index(&self, pe: PeHandle) -> usize {
+        (pe.chip_y * self.spec.chips_x + pe.chip_x) * self.spec.chip.pes_per_chip + pe.core
+    }
+
+    fn handle(&self, idx: usize) -> PeHandle {
+        let per_chip = self.spec.chip.pes_per_chip;
+        let chip = idx / per_chip;
+        PeHandle {
+            chip_x: chip % self.spec.chips_x,
+            chip_y: chip / self.spec.chips_x,
+            core: idx % per_chip,
+        }
+    }
+
+    /// Allocate the next free PE, charging `dtcm_bytes` against its budget.
+    ///
+    /// Fails if the machine is full or the request exceeds the usable DTCM
+    /// (total minus the OS reserve — the reserve is accounted inside the
+    /// cost models, so `dtcm_bytes` here must already include it).
+    pub fn allocate(&mut self, label: &str, dtcm_bytes: usize) -> Result<PeHandle> {
+        if dtcm_bytes > self.spec.chip.pe.dtcm_bytes {
+            bail!(
+                "allocation '{label}' needs {dtcm_bytes} B DTCM > per-PE budget {} B",
+                self.spec.chip.pe.dtcm_bytes
+            );
+        }
+        // next_free is a low-water mark; scan forward from it.
+        while self.next_free < self.pes.len() && self.pes[self.next_free].allocated {
+            self.next_free += 1;
+        }
+        if self.next_free >= self.pes.len() {
+            bail!("machine full: all {} PEs allocated", self.pes.len());
+        }
+        let idx = self.next_free;
+        self.pes[idx] =
+            PeState { allocated: true, dtcm_used: dtcm_bytes, label: label.to_string() };
+        Ok(self.handle(idx))
+    }
+
+    /// Release a PE back to the pool.
+    pub fn free(&mut self, pe: PeHandle) {
+        let idx = self.index(pe);
+        self.pes[idx] = PeState { allocated: false, dtcm_used: 0, label: String::new() };
+        self.next_free = self.next_free.min(idx);
+    }
+
+    /// Number of allocated PEs.
+    pub fn allocated_count(&self) -> usize {
+        self.pes.iter().filter(|p| p.allocated).count()
+    }
+
+    /// Total DTCM bytes in use across allocated PEs.
+    pub fn total_dtcm_used(&self) -> usize {
+        self.pes.iter().map(|p| p.dtcm_used).sum()
+    }
+
+    /// DTCM used on one PE.
+    pub fn dtcm_used(&self, pe: PeHandle) -> usize {
+        self.pes[self.index(pe)].dtcm_used
+    }
+
+    /// Label attached to an allocation.
+    pub fn label(&self, pe: PeHandle) -> &str {
+        &self.pes[self.index(pe)].label
+    }
+
+    /// Mean DTCM utilization over allocated PEs (0..1).
+    pub fn mean_utilization(&self) -> f64 {
+        let used: Vec<f64> = self
+            .pes
+            .iter()
+            .filter(|p| p.allocated)
+            .map(|p| p.dtcm_used as f64 / self.spec.chip.pe.dtcm_bytes as f64)
+            .collect();
+        if used.is_empty() {
+            0.0
+        } else {
+            used.iter().sum::<f64>() / used.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_free_roundtrip() {
+        let mut m = Machine::single_chip();
+        let a = m.allocate("a", 1000).unwrap();
+        let b = m.allocate("b", 2000).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(m.allocated_count(), 2);
+        assert_eq!(m.total_dtcm_used(), 3000);
+        assert_eq!(m.label(a), "a");
+        m.free(a);
+        assert_eq!(m.allocated_count(), 1);
+        // Freed PE is reused first.
+        let c = m.allocate("c", 500).unwrap();
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn rejects_oversized_allocation() {
+        let mut m = Machine::single_chip();
+        assert!(m.allocate("huge", 200 * 1024).is_err());
+    }
+
+    #[test]
+    fn machine_fills_up() {
+        let mut m = Machine::single_chip();
+        for i in 0..152 {
+            m.allocate(&format!("pe{i}"), 100).unwrap();
+        }
+        assert!(m.allocate("overflow", 100).is_err());
+    }
+
+    #[test]
+    fn handles_cover_multichip_grid() {
+        let spec = MachineSpec { chips_x: 2, chips_y: 2, ..Default::default() };
+        let mut m = Machine::new(spec);
+        // Allocate past one chip's worth; handle should roll to the next chip.
+        let mut last = None;
+        for i in 0..(152 + 3) {
+            last = Some(m.allocate(&format!("{i}"), 10).unwrap());
+        }
+        let h = last.unwrap();
+        assert_eq!((h.chip_x, h.chip_y, h.core), (1, 0, 2));
+    }
+
+    #[test]
+    fn utilization_tracks_usage() {
+        let mut m = Machine::single_chip();
+        assert_eq!(m.mean_utilization(), 0.0);
+        m.allocate("half", 48 * 1024).unwrap();
+        assert!((m.mean_utilization() - 0.5).abs() < 0.01);
+    }
+}

@@ -1,0 +1,20 @@
+//! SpiNNaker2 machine model.
+//!
+//! The paper's hardware backend (§II): a massively parallel system scaling
+//! from one 152-PE chip to millions of cores. Each processing element (PE)
+//! couples an ARM Cortex-M4F (the *serial* processor) with a 4×16 MAC array
+//! (the *parallel* processor) and 128 kB local SRAM, of which the paper's
+//! cost model budgets 96 kB of DTCM for compiled data structures. PEs
+//! communicate over a Network-on-Chip.
+//!
+//! Submodules:
+//! * [`spec`] — static hardware constants and per-component descriptions.
+//! * [`machine`] — a machine instance with PE allocation bookkeeping.
+//! * [`noc`] — a hop-count/latency NoC model with multicast routing.
+
+pub mod machine;
+pub mod noc;
+pub mod spec;
+
+pub use machine::{Machine, PeHandle};
+pub use spec::{ChipSpec, MacArraySpec, MachineSpec, PeSpec};

@@ -1,0 +1,163 @@
+//! Static SpiNNaker2 hardware constants (paper §II + Table I assumptions).
+
+/// Geometry and precision of the per-PE MAC array.
+///
+/// "The MAC array on one PE has 64 MAC units in a 4×16 layout … Executing
+/// matrix multiplication requires operand memory alignment to adapt to this
+/// hardware architecture. The precision of operands could be 8-bit or
+/// 16-bit, and the output precision can be configured to 8-/16-/32-bit."
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MacArraySpec {
+    /// Rows of MAC units (output alignment unit).
+    pub rows: usize,
+    /// Columns of MAC units (input alignment unit).
+    pub cols: usize,
+    /// Operand precision in bits (8 or 16).
+    pub operand_bits: usize,
+    /// Accumulator/output precision in bits (8, 16 or 32).
+    pub output_bits: usize,
+}
+
+impl Default for MacArraySpec {
+    fn default() -> Self {
+        // The paper's experiments use 8-bit weights; we accumulate at 32-bit.
+        MacArraySpec { rows: 4, cols: 16, operand_bits: 8, output_bits: 32 }
+    }
+}
+
+impl MacArraySpec {
+    /// Number of MAC units.
+    pub fn units(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Pad `n` up to the row-alignment multiple.
+    pub fn align_rows(&self, n: usize) -> usize {
+        n.div_ceil(self.rows) * self.rows
+    }
+
+    /// Pad `n` up to the column-alignment multiple.
+    pub fn align_cols(&self, n: usize) -> usize {
+        n.div_ceil(self.cols) * self.cols
+    }
+}
+
+/// Per-PE memory and capacity constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PeSpec {
+    /// Total local SRAM per PE in bytes (128 kB on SpiNNaker2).
+    pub sram_bytes: usize,
+    /// DTCM budget available to compiled data structures (the paper raises
+    /// sPyNNaker's 64 kB to 96 kB for SpiNNaker2).
+    pub dtcm_bytes: usize,
+    /// Fixed "hw mgmt & OS" reserve inside the DTCM budget (Table I: 6000 B).
+    pub os_reserve_bytes: usize,
+    /// Serial-paradigm neuron capacity per PE (sPyNNaker's 255, §III-A).
+    pub serial_neuron_cap: usize,
+    /// MAC array attached to this PE.
+    pub mac: MacArraySpec,
+}
+
+impl Default for PeSpec {
+    fn default() -> Self {
+        PeSpec {
+            sram_bytes: 128 * 1024,
+            dtcm_bytes: 96 * 1024,
+            os_reserve_bytes: 6000,
+            serial_neuron_cap: 255,
+            mac: MacArraySpec::default(),
+        }
+    }
+}
+
+impl PeSpec {
+    /// DTCM bytes usable by paradigm data structures after the OS reserve.
+    pub fn usable_dtcm(&self) -> usize {
+        self.dtcm_bytes - self.os_reserve_bytes
+    }
+}
+
+/// Chip-level constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChipSpec {
+    /// PEs per chip (152 on the SpiNNaker2 chip, ref [11]).
+    pub pes_per_chip: usize,
+    pub pe: PeSpec,
+}
+
+impl Default for ChipSpec {
+    fn default() -> Self {
+        ChipSpec { pes_per_chip: 152, pe: PeSpec::default() }
+    }
+}
+
+/// A whole machine: a W×H grid of chips (scales to supercomputer size).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MachineSpec {
+    pub chips_x: usize,
+    pub chips_y: usize,
+    pub chip: ChipSpec,
+}
+
+impl Default for MachineSpec {
+    fn default() -> Self {
+        // Single-chip default, like the paper's per-layer experiments.
+        MachineSpec { chips_x: 1, chips_y: 1, chip: ChipSpec::default() }
+    }
+}
+
+impl MachineSpec {
+    /// A board-scale machine (SpiNNaker2 light board: 8×6 grid = 48 chips).
+    pub fn board() -> Self {
+        MachineSpec { chips_x: 8, chips_y: 6, chip: ChipSpec::default() }
+    }
+
+    pub fn chips(&self) -> usize {
+        self.chips_x * self.chips_y
+    }
+
+    pub fn total_pes(&self) -> usize {
+        self.chips() * self.chip.pes_per_chip
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_constants() {
+        let pe = PeSpec::default();
+        assert_eq!(pe.sram_bytes, 131072);
+        assert_eq!(pe.dtcm_bytes, 98304);
+        assert_eq!(pe.os_reserve_bytes, 6000);
+        assert_eq!(pe.serial_neuron_cap, 255);
+        assert_eq!(pe.mac.units(), 64);
+        assert_eq!(pe.mac.rows, 4);
+        assert_eq!(pe.mac.cols, 16);
+    }
+
+    #[test]
+    fn mac_alignment() {
+        let mac = MacArraySpec::default();
+        assert_eq!(mac.align_rows(1), 4);
+        assert_eq!(mac.align_rows(4), 4);
+        assert_eq!(mac.align_rows(5), 8);
+        assert_eq!(mac.align_cols(1), 16);
+        assert_eq!(mac.align_cols(16), 16);
+        assert_eq!(mac.align_cols(17), 32);
+        assert_eq!(mac.align_cols(0), 0);
+    }
+
+    #[test]
+    fn machine_pe_counts() {
+        assert_eq!(MachineSpec::default().total_pes(), 152);
+        assert_eq!(MachineSpec::board().total_pes(), 48 * 152);
+    }
+
+    #[test]
+    fn usable_dtcm_subtracts_reserve() {
+        let pe = PeSpec::default();
+        assert_eq!(pe.usable_dtcm(), 98304 - 6000);
+    }
+}

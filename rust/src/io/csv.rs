@@ -1,0 +1,90 @@
+//! Tiny CSV reader/writer for the dataset corpus.
+//!
+//! The dataset rows are purely numeric, so no quoting support is needed; we
+//! still reject fields containing commas/newlines on write to stay honest.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Write a CSV file with a header row.
+pub fn write_csv(
+    path: &Path,
+    header: &[&str],
+    rows: impl IntoIterator<Item = Vec<String>>,
+) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        for field in &row {
+            assert!(
+                !field.contains(',') && !field.contains('\n'),
+                "CSV field needs quoting (unsupported): {field:?}"
+            );
+        }
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a CSV file, returning (header, rows).
+pub fn read_csv(path: &Path) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let f = BufReader::new(std::fs::File::open(path)?);
+    let mut lines = f.lines();
+    let header = match lines.next() {
+        Some(h) => h?.split(',').map(str::to_string).collect(),
+        None => Vec::new(),
+    };
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        rows.push(line.split(',').map(str::to_string).collect());
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("s2switch_csv_test");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            vec![vec!["1".into(), "2.5".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let (hdr, rows) = read_csv(&path).unwrap();
+        assert_eq!(hdr, vec!["a", "b"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], vec!["1", "2.5"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "CSV field needs quoting")]
+    fn rejects_commas_in_fields() {
+        let dir = std::env::temp_dir().join("s2switch_csv_test2");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a"], vec![vec!["1,2".into()]]).unwrap();
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let dir = std::env::temp_dir().join("s2switch_csv_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        std::fs::write(&path, "h\n1\n\n2\n").unwrap();
+        let (_, rows) = read_csv(&path).unwrap();
+        assert_eq!(rows.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

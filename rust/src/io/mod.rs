@@ -1,0 +1,11 @@
+//! Lightweight JSON and CSV serialization (serde substitute — the offline
+//! vendored crate set has no serde).
+//!
+//! [`json`] provides a small value model + writer + recursive-descent parser
+//! sufficient for classifier model persistence and experiment manifests.
+//! [`csv`] provides dataset reading/writing for the 16k-layer corpus.
+
+pub mod csv;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,47 @@
+//! # s2switch — Fast-Switching Serial/Parallel SNN Compilation for SpiNNaker2
+//!
+//! Reproduction of *"Fast Switching Serial and Parallel Paradigms of SNN
+//! Inference on Multi-core Heterogeneous Neuromorphic Platform SpiNNaker2"*
+//! (Huang et al., 2024).
+//!
+//! The library implements the full stack the paper depends on:
+//!
+//! * [`model`] — SNN model representation (populations, projections, LIF).
+//! * [`graph`] — application graph → machine graph mapping and routing.
+//! * [`hardware`] — the SpiNNaker2 machine model (PEs, SRAM/DTCM, MAC array,
+//!   NoC).
+//! * [`costmodel`] — the paper's Table I DTCM cost models.
+//! * [`paradigm`] — the serial (ARM, event-driven) and parallel (MAC-array)
+//!   compilation paradigms.
+//! * [`classifier`] — twelve from-scratch classifiers used to *prejudge* the
+//!   cheaper paradigm per layer.
+//! * [`dataset`] — the 16,000-random-layer dataset acquisition pipeline.
+//! * [`switching`] — the paper's contribution: the classifier-integrated
+//!   fast-switching compilation system.
+//! * [`sim`] — a functional SpiNNaker2 simulator executing compiled layers
+//!   under either paradigm (parallel path runs AOT-compiled JAX/Pallas HLO
+//!   through PJRT via [`runtime`]).
+//! * [`coordinator`] — the leader pipeline tying everything together.
+//!
+//! Offline-environment substitutes (see DESIGN.md §2): [`bench_harness`]
+//! replaces criterion, [`prop`] replaces proptest, [`io`] replaces serde.
+
+pub mod bench_harness;
+pub mod classifier;
+pub mod coordinator;
+pub mod costmodel;
+pub mod criteria;
+pub mod dataset;
+pub mod graph;
+pub mod hardware;
+pub mod io;
+pub mod model;
+pub mod paradigm;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod switching;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,296 @@
+//! `s2switch` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline crate set):
+//!
+//! ```text
+//! s2switch dataset  [--out data/dataset.csv] [--small]
+//! s2switch train    [--data data/dataset.csv] [--seeds 20] [--out data/adaboost.json]
+//! s2switch decide   --src N --tgt N --density F --delay N [--model data/adaboost.json]
+//! s2switch compile  --src N --tgt N --density F --delay N [--mode serial|parallel|ideal|classifier]
+//! s2switch simulate [--steps 200] [--pjrt]   # demo 3-layer network
+//! ```
+
+use anyhow::{bail, Context, Result};
+use s2switch::coordinator::{
+    dataset_cached, load_switching_system, train_and_save_adaboost, train_roster,
+};
+use s2switch::dataset::SweepConfig;
+use s2switch::hardware::PeSpec;
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LayerCharacter, LifParams, NetworkBuilder};
+use s2switch::rng::Rng;
+use s2switch::sim::NetworkSim;
+use s2switch::switching::{SwitchMode, SwitchingSystem};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = &argv[i];
+            if !k.starts_with("--") {
+                bail!("unexpected argument '{k}' (flags are --key value)");
+            }
+            let key = k.trim_start_matches("--").to_string();
+            // Boolean flags: next token missing or another flag.
+            if i + 1 >= argv.len() || argv[i + 1].starts_with("--") {
+                flags.insert(key, "true".into());
+                i += 1;
+            } else {
+                flags.insert(key, argv[i + 1].clone());
+                i += 2;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [flags]
+  dataset   --out PATH --small            generate + label the sweep corpus
+  train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
+  decide    --src N --tgt N --density F --delay N --model PATH
+  compile   --src N --tgt N --density F --delay N --mode MODE
+  simulate  --steps N --pjrt              run the demo network end to end";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "dataset" => cmd_dataset(&args),
+        "train" => cmd_train(&args),
+        "decide" => cmd_decide(&args),
+        "compile" => cmd_compile(&args),
+        "simulate" => cmd_simulate(&args),
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out").unwrap_or("data/dataset.csv"));
+    let cfg = if args.has("small") { SweepConfig::small() } else { SweepConfig::default() };
+    let ds = dataset_cached(&out, &cfg)?;
+    let parallel_wins = ds.samples.iter().filter(|s| s.parallel_pes < s.serial_pes).count();
+    println!(
+        "dataset: {} layers → {} ({} favor parallel, {} favor serial)",
+        ds.len(),
+        out.display(),
+        parallel_wins,
+        ds.len() - parallel_wins
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.get("data").unwrap_or("data/dataset.csv"));
+    let out = PathBuf::from(args.get("out").unwrap_or("data/adaboost.json"));
+    let seeds: usize = args.parse_or("seeds", 20)?;
+    let cfg = if args.has("small") { SweepConfig::small() } else { SweepConfig::default() };
+    let ds = dataset_cached(&data, &cfg)?;
+
+    println!("training 12 classifiers × {seeds} seeds on {} layers…", ds.len());
+    let scores = train_roster(&ds, seeds);
+    let mut ranked: Vec<_> = scores.iter().collect();
+    ranked.sort_by(|a, b| b.mean().partial_cmp(&a.mean()).unwrap());
+    println!("{:<22} {:>7} {:>7} {:>7}", "classifier", "mean", "min", "max");
+    for s in ranked {
+        println!(
+            "{:<22} {:>6.2}% {:>6.2}% {:>6.2}%",
+            s.name,
+            100.0 * s.mean(),
+            100.0 * s.min(),
+            100.0 * s.max()
+        );
+    }
+    let acc = train_and_save_adaboost(&ds, 100, &out)?;
+    println!("deployed AdaBoost → {} (held-out accuracy {:.2}%)", out.display(), 100.0 * acc);
+    Ok(())
+}
+
+fn layer_flags(args: &Args) -> Result<LayerCharacter> {
+    Ok(LayerCharacter::new(
+        args.parse_or("src", 255usize)?,
+        args.parse_or("tgt", 255usize)?,
+        args.parse_or("density", 0.5f64)?,
+        args.parse_or("delay", 8u16)?,
+    ))
+}
+
+fn cmd_decide(args: &Args) -> Result<()> {
+    let ch = layer_flags(args)?;
+    let model = PathBuf::from(args.get("model").unwrap_or("data/adaboost.json"));
+    let sys = load_switching_system(&model, PeSpec::default())
+        .context("train a model first: s2switch train")?;
+    println!(
+        "layer (src={}, tgt={}, density={:.2}, delay={}) → {}",
+        ch.n_source,
+        ch.n_target,
+        ch.density,
+        ch.delay_range,
+        sys.prejudge(&ch)
+    );
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let ch = layer_flags(args)?;
+    let mode = match args.get("mode").unwrap_or("ideal") {
+        "serial" => SwitchMode::ForceSerial,
+        "parallel" => SwitchMode::ForceParallel,
+        "ideal" => SwitchMode::Ideal,
+        "classifier" => SwitchMode::Classifier,
+        m => bail!("unknown mode '{m}'"),
+    };
+    let mut sys = if mode == SwitchMode::Classifier {
+        let model = PathBuf::from(args.get("model").unwrap_or("data/adaboost.json"));
+        load_switching_system(&model, PeSpec::default())?
+    } else {
+        SwitchingSystem::new(mode, PeSpec::default())
+    };
+    // Realize the layer.
+    let mut rng = Rng::new(args.parse_or("seed", 1u64)?);
+    let synapses = Connector::FixedProbability(ch.density).build(
+        ch.n_source,
+        ch.n_target,
+        SynapseDraw { delay_range: ch.delay_range, w_max: 127, ..Default::default() },
+        &mut rng,
+    );
+    let proj = s2switch::model::Projection {
+        id: s2switch::model::ProjectionId(0),
+        source: s2switch::model::PopulationId(0),
+        target: s2switch::model::PopulationId(1),
+        synapses,
+        weight_scale: 0.01,
+    };
+    let layer = sys.compile_layer(&proj, ch.n_source, ch.n_target, LifParams::default())?;
+    println!(
+        "compiled under {}: {} PEs, {} B DTCM total ({} compiles run)",
+        layer.paradigm(),
+        layer.n_pes(),
+        layer.total_dtcm(),
+        sys.stats.total_compiles()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let steps: u64 = args.parse_or("steps", 200)?;
+    // --config FILE loads a JSON network description; otherwise a built-in
+    // demo network is used.
+    let net = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        s2switch::model::config::network_from_json(&text)?
+    } else {
+        let mut b = NetworkBuilder::new(11);
+        let inp = b.spike_source("input", 200);
+        let hid =
+            b.lif_population("hidden", 120, LifParams { alpha: 0.85, ..Default::default() });
+        let out = b.lif_population("output", 20, LifParams { alpha: 0.9, ..Default::default() });
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.4),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.015,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.9),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.build()
+    };
+
+    let rate: f64 = args.parse_or("rate", 0.15)?;
+
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (layers, _) = sys.compile_network(&net)?;
+    for (i, l) in layers.iter().enumerate() {
+        println!("layer {i}: {} ({} PEs)", l.paradigm(), l.n_pes());
+    }
+
+    // Place + route on the machine (Fig. 2's tail) and report.
+    let placement = s2switch::switching::Placement::new(
+        &net,
+        &layers,
+        s2switch::hardware::MachineSpec::default(),
+    )?;
+    println!(
+        "placed on {} PEs ({} routing entries, mean DTCM utilization {:.1}%)",
+        placement.n_pes(),
+        placement.routing.len(),
+        100.0 * placement.machine.mean_utilization()
+    );
+
+    let mut sim = if args.has("pjrt") {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let rt = Rc::new(RefCell::new(s2switch::runtime::PjrtRuntime::new(
+            s2switch::runtime::artifact_dir(),
+        )?));
+        NetworkSim::new(&net, layers, || {
+            Box::new(s2switch::runtime::PjrtMac::new(rt.clone()))
+        })?
+    } else {
+        NetworkSim::native(&net, layers)?
+    };
+
+    let sizes: Vec<usize> = net.populations.iter().map(|p| p.n_neurons).collect();
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(99);
+    let mut provider = move |p: s2switch::model::PopulationId, _t: u64| -> Vec<u32> {
+        (0..sizes[p.0] as u32).filter(|_| rng.chance(rate)).collect()
+    };
+    sim.run(steps, &mut provider);
+    let dt = t0.elapsed();
+    println!(
+        "simulated {steps} steps in {:.2?} ({:.0} steps/s)",
+        dt,
+        steps as f64 / dt.as_secs_f64()
+    );
+    for pop in &net.populations {
+        if pop.record_spikes {
+            println!("  {}: {} spikes", pop.label, sim.recorder.spike_count(pop.id));
+        }
+    }
+    // NoC traffic estimate for the recorded activity.
+    let noc = placement
+        .estimate_traffic(&s2switch::switching::placement::spike_counts(&sim.recorder));
+    println!("NoC estimate: {} multicast packets, {} inter-chip hops", noc.packets, noc.hops);
+
+    if let Some(out) = args.get("record") {
+        sim.recorder.save_spikes_csv(std::path::Path::new(out))?;
+        println!("spikes exported to {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Network-from-JSON configuration — the launcher's model description
+//! format.
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "populations": [
+//!     {"label": "in",  "n": 300, "kind": "spike_source"},
+//!     {"label": "hid", "n": 200, "kind": "lif", "alpha": 0.9, "v_th": 1.0,
+//!      "t_refrac": 0, "record_v": false}
+//!   ],
+//!   "projections": [
+//!     {"source": "in", "target": "hid", "connector": "fixed_probability",
+//!      "p": 0.3, "delay_range": 4, "w_min": 1, "w_max": 100,
+//!      "weight_scale": 0.01, "inhibitory": false}
+//!   ]
+//! }
+//! ```
+//!
+//! Supported connectors: `all_to_all`, `one_to_one`,
+//! `fixed_probability` (requires `p`).
+
+use super::connector::{Connector, SynapseDraw};
+use super::network::{Network, NetworkBuilder};
+use super::population::PopulationId;
+use super::projection::SynapseType;
+use super::LifParams;
+use crate::io::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+fn get_f64(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+/// Parse a network description (see module docs) into a [`Network`].
+pub fn network_from_json(text: &str) -> Result<Network> {
+    let j = Json::parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
+    let seed = get_f64(&j, "seed", 1.0) as u64;
+    let mut b = NetworkBuilder::new(seed);
+    let mut by_label: BTreeMap<String, PopulationId> = BTreeMap::new();
+
+    let pops = j
+        .get("populations")
+        .and_then(Json::as_arr)
+        .context("config needs a 'populations' array")?;
+    for p in pops {
+        let label = p
+            .get("label")
+            .and_then(Json::as_str)
+            .context("population needs a 'label'")?
+            .to_string();
+        let n = p
+            .get("n")
+            .and_then(Json::as_usize)
+            .context("population needs integer 'n'")?;
+        let kind = p.get("kind").and_then(Json::as_str).unwrap_or("lif");
+        let id = match kind {
+            "spike_source" => b.spike_source(&label, n),
+            "lif" => {
+                let params = LifParams {
+                    alpha: get_f64(p, "alpha", 0.9) as f32,
+                    v_th: get_f64(p, "v_th", 1.0) as f32,
+                    v_rest: get_f64(p, "v_rest", 0.0) as f32,
+                    t_refrac: get_f64(p, "t_refrac", 0.0) as u32,
+                    i_offset: get_f64(p, "i_offset", 0.0) as f32,
+                    v_init: get_f64(p, "v_init", 0.0) as f32,
+                    ..Default::default()
+                };
+                b.lif_population(&label, n, params)
+            }
+            other => bail!("unknown population kind '{other}'"),
+        };
+        if by_label.insert(label.clone(), id).is_some() {
+            bail!("duplicate population label '{label}'");
+        }
+    }
+
+    let projs = j.get("projections").and_then(Json::as_arr).unwrap_or(&[]);
+    for p in projs {
+        let src_label = p
+            .get("source")
+            .and_then(Json::as_str)
+            .context("projection needs 'source'")?;
+        let tgt_label = p
+            .get("target")
+            .and_then(Json::as_str)
+            .context("projection needs 'target'")?;
+        let src = *by_label
+            .get(src_label)
+            .with_context(|| format!("unknown population '{src_label}'"))?;
+        let tgt = *by_label
+            .get(tgt_label)
+            .with_context(|| format!("unknown population '{tgt_label}'"))?;
+        let connector = match p.get("connector").and_then(Json::as_str).unwrap_or("all_to_all")
+        {
+            "all_to_all" => Connector::AllToAll,
+            "one_to_one" => Connector::OneToOne,
+            "fixed_probability" => Connector::FixedProbability(
+                p.get("p")
+                    .and_then(Json::as_f64)
+                    .context("fixed_probability connector needs 'p'")?,
+            ),
+            other => bail!("unknown connector '{other}'"),
+        };
+        let draw = SynapseDraw {
+            w_min: get_f64(p, "w_min", 1.0) as u8,
+            w_max: get_f64(p, "w_max", 127.0) as u8,
+            delay_range: get_f64(p, "delay_range", 1.0) as u16,
+            syn_type: if p.get("inhibitory").and_then(Json::as_bool).unwrap_or(false) {
+                SynapseType::Inhibitory
+            } else {
+                SynapseType::Excitatory
+            },
+        };
+        let weight_scale = get_f64(p, "weight_scale", 0.01) as f32;
+        b.project(src, tgt, connector, draw, weight_scale);
+    }
+
+    Ok(b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = r#"{
+        "seed": 9,
+        "populations": [
+            {"label": "in", "n": 40, "kind": "spike_source"},
+            {"label": "hid", "n": 30, "kind": "lif", "alpha": 0.85},
+            {"label": "out", "n": 5, "kind": "lif", "t_refrac": 2}
+        ],
+        "projections": [
+            {"source": "in", "target": "hid", "connector": "fixed_probability",
+             "p": 0.4, "delay_range": 3, "w_max": 100, "weight_scale": 0.02},
+            {"source": "hid", "target": "out", "connector": "all_to_all",
+             "delay_range": 2, "weight_scale": 0.05, "inhibitory": true}
+        ]
+    }"#;
+
+    #[test]
+    fn demo_config_builds() {
+        let net = network_from_json(DEMO).unwrap();
+        assert_eq!(net.populations.len(), 3);
+        assert_eq!(net.projections.len(), 2);
+        assert!(net.populations[0].is_source());
+        assert_eq!(net.populations[1].lif_params().unwrap().alpha, 0.85);
+        assert_eq!(net.populations[2].lif_params().unwrap().t_refrac, 2);
+        assert_eq!(net.projections[1].synapses.len(), 150);
+        assert!(net.projections[1]
+            .synapses
+            .iter()
+            .all(|s| s.syn_type == SynapseType::Inhibitory));
+    }
+
+    #[test]
+    fn same_config_same_network() {
+        let a = network_from_json(DEMO).unwrap();
+        let b = network_from_json(DEMO).unwrap();
+        assert_eq!(a.projections[0].synapses, b.projections[0].synapses);
+    }
+
+    #[test]
+    fn helpful_errors() {
+        assert!(network_from_json("{").is_err());
+        assert!(network_from_json(r#"{"populations": [{"n": 3}]}"#).is_err());
+        let bad_ref = r#"{"populations": [{"label": "a", "n": 2}],
+                          "projections": [{"source": "a", "target": "zzz"}]}"#;
+        let err = network_from_json(bad_ref).unwrap_err().to_string();
+        assert!(err.contains("zzz"), "error should name the missing population: {err}");
+        let dup = r#"{"populations": [{"label": "a", "n": 2}, {"label": "a", "n": 3}]}"#;
+        assert!(network_from_json(dup).is_err());
+        let bad_conn = r#"{"populations": [{"label": "a", "n": 2}],
+                           "projections": [{"source": "a", "target": "a",
+                                            "connector": "magic"}]}"#;
+        assert!(network_from_json(bad_conn).is_err());
+    }
+}

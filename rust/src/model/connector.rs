@@ -1,0 +1,183 @@
+//! Synapse-generation strategies (PyNN-style connectors).
+//!
+//! The dataset generator uses [`Connector::FixedProbability`] to realize the
+//! paper's "weight density 10%–100%" sweep; examples use the others.
+
+use super::projection::{Synapse, SynapseType};
+use crate::rng::Rng;
+
+/// How to generate the synapses of a projection.
+#[derive(Clone, Debug)]
+pub enum Connector {
+    /// Every (source, target) pair gets a synapse.
+    AllToAll,
+    /// Each (source, target) pair gets a synapse with probability `p`
+    /// (the paper's *weight density*).
+    FixedProbability(f64),
+    /// Source i connects to target i (populations must be the same size).
+    OneToOne,
+    /// Explicit synapse list (used when loading trained models).
+    Explicit(Vec<Synapse>),
+}
+
+/// Weight/delay draw configuration for generated synapses.
+#[derive(Clone, Copy, Debug)]
+pub struct SynapseDraw {
+    /// Weight magnitudes drawn uniformly from [w_min, w_max] (quantized u8).
+    pub w_min: u8,
+    pub w_max: u8,
+    /// Delays drawn uniformly from [1, delay_range].
+    pub delay_range: u16,
+    pub syn_type: SynapseType,
+}
+
+impl Default for SynapseDraw {
+    fn default() -> Self {
+        SynapseDraw {
+            w_min: 1,
+            w_max: 255,
+            delay_range: 1,
+            syn_type: SynapseType::Excitatory,
+        }
+    }
+}
+
+impl Connector {
+    /// Materialize the synapse list for an (n_source × n_target) projection.
+    pub fn build(
+        &self,
+        n_source: usize,
+        n_target: usize,
+        draw: SynapseDraw,
+        rng: &mut Rng,
+    ) -> Vec<Synapse> {
+        let mk = |s: u32, t: u32, rng: &mut Rng| Synapse {
+            source: s,
+            target: t,
+            weight: draw.w_min + rng.below((draw.w_max - draw.w_min + 1) as usize) as u8,
+            delay: 1 + rng.below(draw.delay_range as usize) as u16,
+            syn_type: draw.syn_type,
+        };
+        match self {
+            Connector::AllToAll => {
+                let mut out = Vec::with_capacity(n_source * n_target);
+                for s in 0..n_source as u32 {
+                    for t in 0..n_target as u32 {
+                        out.push(mk(s, t, rng));
+                    }
+                }
+                out
+            }
+            Connector::FixedProbability(p) => {
+                let mut out = Vec::new();
+                for s in 0..n_source as u32 {
+                    for t in 0..n_target as u32 {
+                        if rng.chance(*p) {
+                            out.push(mk(s, t, rng));
+                        }
+                    }
+                }
+                out
+            }
+            Connector::OneToOne => {
+                assert_eq!(
+                    n_source, n_target,
+                    "OneToOne requires equal population sizes"
+                );
+                (0..n_source as u32).map(|i| mk(i, i, rng)).collect()
+            }
+            Connector::Explicit(list) => {
+                for s in list {
+                    assert!((s.source as usize) < n_source, "source index out of range");
+                    assert!((s.target as usize) < n_target, "target index out of range");
+                    assert!(s.delay >= 1, "delays are 1-based");
+                }
+                list.clone()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Prop;
+
+    #[test]
+    fn all_to_all_count() {
+        let mut rng = Rng::new(1);
+        let syns = Connector::AllToAll.build(10, 20, SynapseDraw::default(), &mut rng);
+        assert_eq!(syns.len(), 200);
+    }
+
+    #[test]
+    fn one_to_one_diagonal() {
+        let mut rng = Rng::new(2);
+        let syns = Connector::OneToOne.build(8, 8, SynapseDraw::default(), &mut rng);
+        assert_eq!(syns.len(), 8);
+        assert!(syns.iter().all(|s| s.source == s.target));
+    }
+
+    #[test]
+    #[should_panic(expected = "equal population sizes")]
+    fn one_to_one_requires_square() {
+        let mut rng = Rng::new(3);
+        Connector::OneToOne.build(8, 9, SynapseDraw::default(), &mut rng);
+    }
+
+    #[test]
+    fn fixed_probability_density_close() {
+        let mut rng = Rng::new(4);
+        let p = 0.3;
+        let syns =
+            Connector::FixedProbability(p).build(200, 200, SynapseDraw::default(), &mut rng);
+        let density = syns.len() as f64 / (200.0 * 200.0);
+        assert!((density - p).abs() < 0.02, "density {density}");
+    }
+
+    #[test]
+    fn delays_and_weights_within_draw_bounds() {
+        Prop::new("connector draw bounds", 50).check(
+            |g| {
+                let dr = g.usize(1, 16) as u16;
+                let mut rng = Rng::new(g.i64(0, 1 << 30) as u64);
+                let draw = SynapseDraw { delay_range: dr, w_min: 5, w_max: 9, ..Default::default() };
+                let syns = Connector::FixedProbability(0.5).build(20, 20, draw, &mut rng);
+                (dr, syns)
+            },
+            |(dr, syns)| {
+                syns.iter().all(|s| {
+                    (1..=*dr).contains(&s.delay) && (5..=9).contains(&s.weight)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn explicit_passthrough_and_validation() {
+        let mut rng = Rng::new(5);
+        let list = vec![Synapse {
+            source: 0,
+            target: 1,
+            weight: 7,
+            delay: 2,
+            syn_type: SynapseType::Inhibitory,
+        }];
+        let syns = Connector::Explicit(list.clone()).build(2, 2, SynapseDraw::default(), &mut rng);
+        assert_eq!(syns, list);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn explicit_rejects_bad_indices() {
+        let mut rng = Rng::new(6);
+        let list = vec![Synapse {
+            source: 5,
+            target: 0,
+            weight: 1,
+            delay: 1,
+            syn_type: SynapseType::Excitatory,
+        }];
+        Connector::Explicit(list).build(2, 2, SynapseDraw::default(), &mut rng);
+    }
+}

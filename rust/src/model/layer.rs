@@ -1,0 +1,99 @@
+//! Layer characterization — the classifier's feature space.
+//!
+//! The paper (§IV-A) characterizes one SNN layer (one population of the
+//! application graph plus its incoming projection) by four factors:
+//! **delay range, source neuron number, target neuron number, weight
+//! density**. These four numbers are both the dataset generator's sweep
+//! axes and the classifier's input features.
+
+use super::projection::Projection;
+
+/// The four-factor layer character from the paper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerCharacter {
+    pub n_source: usize,
+    pub n_target: usize,
+    /// Weight density in (0, 1]: fraction of possible synapses present.
+    pub density: f64,
+    /// Maximum synaptic delay in timesteps (1..=16 in the paper's sweep).
+    pub delay_range: u16,
+}
+
+impl LayerCharacter {
+    pub fn new(n_source: usize, n_target: usize, density: f64, delay_range: u16) -> Self {
+        assert!(n_source > 0 && n_target > 0, "empty layer");
+        assert!((0.0..=1.0).contains(&density), "density out of range");
+        assert!(delay_range >= 1, "delay range is 1-based");
+        LayerCharacter { n_source, n_target, density, delay_range }
+    }
+
+    /// Measure the character of a realized projection.
+    pub fn of_projection(proj: &Projection, n_source: usize, n_target: usize) -> Self {
+        LayerCharacter {
+            n_source,
+            n_target,
+            density: proj.density(n_source, n_target),
+            delay_range: proj.delay_range(),
+        }
+    }
+
+    /// Feature vector in the order used throughout the classifier stack:
+    /// `[delay_range, n_source, n_target, density]`.
+    pub fn features(&self) -> [f64; 4] {
+        [
+            self.delay_range as f64,
+            self.n_source as f64,
+            self.n_target as f64,
+            self.density,
+        ]
+    }
+
+    /// Expected number of synapses.
+    pub fn expected_synapses(&self) -> f64 {
+        self.n_source as f64 * self.n_target as f64 * self.density
+    }
+}
+
+/// Feature names matching [`LayerCharacter::features`] order.
+pub const FEATURE_NAMES: [&str; 4] = ["delay_range", "n_source", "n_target", "density"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{PopulationId, ProjectionId, Synapse, SynapseType};
+
+    #[test]
+    fn feature_order_stable() {
+        let c = LayerCharacter::new(100, 200, 0.5, 8);
+        assert_eq!(c.features(), [8.0, 100.0, 200.0, 0.5]);
+    }
+
+    #[test]
+    fn of_projection_measures() {
+        let proj = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses: vec![
+                Synapse { source: 0, target: 0, weight: 1, delay: 3, syn_type: SynapseType::Excitatory },
+                Synapse { source: 1, target: 1, weight: 1, delay: 7, syn_type: SynapseType::Excitatory },
+            ],
+            weight_scale: 1.0,
+        };
+        let c = LayerCharacter::of_projection(&proj, 2, 2);
+        assert_eq!(c.delay_range, 7);
+        assert!((c.density - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "density out of range")]
+    fn rejects_bad_density() {
+        LayerCharacter::new(10, 10, 1.5, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty layer")]
+    fn rejects_empty() {
+        LayerCharacter::new(0, 10, 0.5, 1);
+    }
+}

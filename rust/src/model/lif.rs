@@ -1,0 +1,173 @@
+//! Leaky integrate-and-fire dynamics (paper Eq. 1, after ref [15]):
+//!
+//! ```text
+//! V_i^{t+1} = Σ_j W_ji · x_j^{t-d(j,i)} + α · V_i^t − z_i^t · V_th
+//! ```
+//!
+//! A neuron spikes when its updated membrane potential reaches `v_th`; the
+//! subtractive reset (−z·V_th) follows the paper's formulation.
+//!
+//! This module is the *reference semantics* shared by the serial engine, the
+//! parallel engine, and the L1/L2 JAX artifacts — all three must agree with
+//! [`lif_step`] exactly (the pytest oracle `ref.py` mirrors this formula).
+
+/// LIF neuron + synapse parameters.
+///
+/// Table I charges `(32/8)*n_param` with `n_param = 8 + 6` (8 neuron + 6
+/// synapse parameters) for the "neuron and synapse model" entry; the fields
+/// here are the 8 neuron parameters, and the 6 synapse-model parameters are
+/// the per-projection-type decay/scale constants kept with the projection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LifParams {
+    /// Membrane leak factor α per timestep (0 < α ≤ 1).
+    pub alpha: f32,
+    /// Spike threshold.
+    pub v_th: f32,
+    /// Reset potential offset (subtractive reset uses v_th; this field
+    /// supports the clamp-to-rest variant).
+    pub v_rest: f32,
+    /// Refractory period in timesteps (0 = none).
+    pub t_refrac: u32,
+    /// Constant bias current added each step.
+    pub i_offset: f32,
+    /// Initial membrane potential.
+    pub v_init: f32,
+    /// Excitatory input scale.
+    pub w_exc_scale: f32,
+    /// Inhibitory input scale.
+    pub w_inh_scale: f32,
+}
+
+impl Default for LifParams {
+    fn default() -> Self {
+        LifParams {
+            alpha: 0.9,
+            v_th: 1.0,
+            v_rest: 0.0,
+            t_refrac: 0,
+            i_offset: 0.0,
+            v_init: 0.0,
+            w_exc_scale: 1.0,
+            w_inh_scale: 1.0,
+        }
+    }
+}
+
+impl LifParams {
+    /// Number of neuron-model parameters (Table I's "8").
+    pub const N_NEURON_PARAMS: usize = 8;
+    /// Number of synapse-model parameters (Table I's "6").
+    pub const N_SYNAPSE_PARAMS: usize = 6;
+}
+
+/// One reference LIF step for a single neuron.
+///
+/// `input` is the already-delay-resolved synaptic input current
+/// (excitatory − inhibitory, scaled); returns `(v_next, spiked)`.
+#[inline]
+pub fn lif_step(p: &LifParams, v: f32, input: f32, refrac_left: u32) -> (f32, bool, u32) {
+    if refrac_left > 0 {
+        // Hold at rest during refractory period; input is discarded.
+        return (p.v_rest, false, refrac_left - 1);
+    }
+    let v_new = input + p.alpha * v + p.i_offset;
+    if v_new >= p.v_th {
+        // Subtractive reset per Eq. (1): v − z·V_th with z = 1.
+        (v_new - p.v_th, true, p.t_refrac)
+    } else {
+        (v_new, false, 0)
+    }
+}
+
+/// Vectorized reference step over a population (used by tests as the oracle
+/// for both execution engines and mirrored by python/compile/kernels/ref.py).
+pub fn lif_step_batch(
+    p: &LifParams,
+    v: &mut [f32],
+    input: &[f32],
+    refrac: &mut [u32],
+    spikes_out: &mut Vec<u32>,
+) {
+    assert_eq!(v.len(), input.len());
+    assert_eq!(v.len(), refrac.len());
+    spikes_out.clear();
+    for i in 0..v.len() {
+        let (vn, spiked, r) = lif_step(p, v[i], input[i], refrac[i]);
+        v[i] = vn;
+        refrac[i] = r;
+        if spiked {
+            spikes_out.push(i as u32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subthreshold_decays() {
+        let p = LifParams::default();
+        let (v, spiked, _) = lif_step(&p, 0.5, 0.0, 0);
+        assert!(!spiked);
+        assert!((v - 0.45).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threshold_crossing_spikes_and_subtractive_reset() {
+        let p = LifParams::default();
+        let (v, spiked, _) = lif_step(&p, 0.5, 0.8, 0);
+        assert!(spiked);
+        // v_new = 0.8 + 0.45 = 1.25 >= 1.0 → reset to 0.25
+        assert!((v - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn refractory_holds_and_counts_down() {
+        let p = LifParams { t_refrac: 2, ..Default::default() };
+        let (v, s, r) = lif_step(&p, 0.3, 100.0, 2);
+        assert!(!s);
+        assert_eq!(v, p.v_rest);
+        assert_eq!(r, 1);
+        let (_, s2, r2) = lif_step(&p, v, 100.0, r);
+        assert!(!s2);
+        assert_eq!(r2, 0);
+        // Out of refractory: fires again.
+        let (_, s3, r3) = lif_step(&p, 0.0, 100.0, 0);
+        assert!(s3);
+        assert_eq!(r3, p.t_refrac);
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let p = LifParams::default();
+        let mut v = vec![0.0, 0.5, 0.99, 2.0];
+        let input = vec![0.1, 0.2, 0.3, 0.0];
+        let mut refrac = vec![0, 0, 0, 0];
+        let mut spikes = Vec::new();
+        let v0 = v.clone();
+        lif_step_batch(&p, &mut v, &input, &mut refrac, &mut spikes);
+        for i in 0..4 {
+            let (vs, sp, _) = lif_step(&p, v0[i], input[i], 0);
+            assert_eq!(v[i], vs);
+            assert_eq!(spikes.contains(&(i as u32)), sp);
+        }
+    }
+
+    #[test]
+    fn bias_current_accumulates_to_spike() {
+        let p = LifParams { i_offset: 0.3, alpha: 1.0, ..Default::default() };
+        let mut v = 0.0;
+        let mut fired_at = None;
+        for t in 0..10 {
+            let (vn, sp, _) = lif_step(&p, v, 0.0, 0);
+            v = vn;
+            if sp {
+                fired_at = Some(t);
+                break;
+            }
+        }
+        // 0.3/step with no leak → crosses 1.0 on step 3 (v=1.2).
+        assert_eq!(fired_at, Some(3));
+    }
+}

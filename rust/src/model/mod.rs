@@ -1,0 +1,32 @@
+//! SNN model representation.
+//!
+//! The compilation pipeline (paper Fig. 2) starts from a trained or
+//! ANN-converted SNN model. We represent it as a set of neuron
+//! [`Population`]s wired by [`Projection`]s whose synapses are produced by a
+//! [`connector`]. Neuron dynamics are leaky integrate-and-fire
+//! ([`lif::LifParams`], paper Eq. 1).
+//!
+//! Submodules:
+//! * [`lif`] — LIF neuron/synapse parameters and the reference update rule.
+//! * [`population`] — a named group of neurons sharing parameters.
+//! * [`connector`] — synapse-generation strategies (all-to-all,
+//!   fixed-probability, one-to-one, explicit list).
+//! * [`projection`] — a source→target edge carrying a synapse list.
+//! * [`network`] — the whole model plus a builder API.
+//! * [`layer`] — the 4-feature layer characterization (delay range, source
+//!   neurons, target neurons, weight density) the classifier consumes.
+
+pub mod config;
+pub mod connector;
+pub mod layer;
+pub mod lif;
+pub mod network;
+pub mod population;
+pub mod projection;
+
+pub use connector::Connector;
+pub use layer::LayerCharacter;
+pub use lif::LifParams;
+pub use network::{Network, NetworkBuilder};
+pub use population::{Population, PopulationId};
+pub use projection::{Projection, ProjectionId, Synapse, SynapseType};

@@ -1,0 +1,194 @@
+//! The whole SNN model plus a builder API.
+
+use super::connector::{Connector, SynapseDraw};
+use super::lif::LifParams;
+use super::population::{Population, PopulationId};
+use super::projection::{Projection, ProjectionId};
+use crate::rng::Rng;
+
+/// A complete SNN model: populations + projections.
+#[derive(Clone, Debug, Default)]
+pub struct Network {
+    pub populations: Vec<Population>,
+    pub projections: Vec<Projection>,
+}
+
+impl Network {
+    pub fn population(&self, id: PopulationId) -> &Population {
+        &self.populations[id.0]
+    }
+
+    pub fn projection(&self, id: ProjectionId) -> &Projection {
+        &self.projections[id.0]
+    }
+
+    /// Projections whose target is `pop`.
+    pub fn incoming(&self, pop: PopulationId) -> Vec<&Projection> {
+        self.projections.iter().filter(|p| p.target == pop).collect()
+    }
+
+    /// Projections whose source is `pop`.
+    pub fn outgoing(&self, pop: PopulationId) -> Vec<&Projection> {
+        self.projections.iter().filter(|p| p.source == pop).collect()
+    }
+
+    /// Total neuron count.
+    pub fn total_neurons(&self) -> usize {
+        self.populations.iter().map(|p| p.n_neurons).sum()
+    }
+
+    /// Total synapse count.
+    pub fn total_synapses(&self) -> usize {
+        self.projections.iter().map(|p| p.synapses.len()).sum()
+    }
+
+    /// Populations in topological order where possible (sources first).
+    /// Cycles (recurrent nets) are appended in id order after the DAG part.
+    pub fn topo_order(&self) -> Vec<PopulationId> {
+        let n = self.populations.len();
+        let mut indeg = vec![0usize; n];
+        for proj in &self.projections {
+            if proj.source != proj.target {
+                indeg[proj.target.0] += 1;
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut seen = vec![false; n];
+        while let Some(i) = queue.pop() {
+            if seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            order.push(PopulationId(i));
+            for proj in &self.projections {
+                if proj.source.0 == i && proj.source != proj.target {
+                    indeg[proj.target.0] -= 1;
+                    if indeg[proj.target.0] == 0 {
+                        queue.push(proj.target.0);
+                    }
+                }
+            }
+        }
+        for i in 0..n {
+            if !seen[i] {
+                order.push(PopulationId(i));
+            }
+        }
+        order
+    }
+}
+
+/// Fluent builder for [`Network`].
+pub struct NetworkBuilder {
+    net: Network,
+    rng: Rng,
+}
+
+impl NetworkBuilder {
+    pub fn new(seed: u64) -> Self {
+        NetworkBuilder { net: Network::default(), rng: Rng::new(seed) }
+    }
+
+    /// Add a LIF population; returns its id.
+    pub fn lif_population(&mut self, label: &str, n: usize, params: LifParams) -> PopulationId {
+        let id = PopulationId(self.net.populations.len());
+        self.net.populations.push(Population::lif(id, label, n, params));
+        id
+    }
+
+    /// Add an external spike-source population; returns its id.
+    pub fn spike_source(&mut self, label: &str, n: usize) -> PopulationId {
+        let id = PopulationId(self.net.populations.len());
+        self.net.populations.push(Population::spike_source(id, label, n));
+        id
+    }
+
+    /// Connect two populations; returns the projection id.
+    pub fn project(
+        &mut self,
+        source: PopulationId,
+        target: PopulationId,
+        connector: Connector,
+        draw: SynapseDraw,
+        weight_scale: f32,
+    ) -> ProjectionId {
+        let n_source = self.net.population(source).n_neurons;
+        let n_target = self.net.population(target).n_neurons;
+        let synapses = connector.build(n_source, n_target, draw, &mut self.rng);
+        let id = ProjectionId(self.net.projections.len());
+        self.net.projections.push(Projection { id, source, target, synapses, weight_scale });
+        id
+    }
+
+    pub fn build(self) -> Network {
+        self.net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SynapseType;
+
+    fn small_net() -> Network {
+        let mut b = NetworkBuilder::new(42);
+        let inp = b.spike_source("in", 10);
+        let hid = b.lif_population("hid", 20, LifParams::default());
+        let out = b.lif_population("out", 5, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 4, ..Default::default() },
+            0.01,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::AllToAll,
+            SynapseDraw { delay_range: 2, syn_type: SynapseType::Excitatory, ..Default::default() },
+            0.01,
+        );
+        b.build()
+    }
+
+    #[test]
+    fn builder_wires_everything() {
+        let net = small_net();
+        assert_eq!(net.populations.len(), 3);
+        assert_eq!(net.projections.len(), 2);
+        assert_eq!(net.total_neurons(), 35);
+        assert_eq!(net.incoming(PopulationId(1)).len(), 1);
+        assert_eq!(net.outgoing(PopulationId(1)).len(), 1);
+        assert_eq!(net.projection(ProjectionId(1)).synapses.len(), 100);
+    }
+
+    #[test]
+    fn topo_order_sources_first() {
+        let net = small_net();
+        let order = net.topo_order();
+        let pos = |id: usize| order.iter().position(|p| p.0 == id).unwrap();
+        assert!(pos(0) < pos(1));
+        assert!(pos(1) < pos(2));
+    }
+
+    #[test]
+    fn topo_order_handles_recurrence() {
+        let mut b = NetworkBuilder::new(1);
+        let a = b.lif_population("a", 5, LifParams::default());
+        let c = b.lif_population("b", 5, LifParams::default());
+        b.project(a, c, Connector::OneToOne, SynapseDraw::default(), 1.0);
+        b.project(c, a, Connector::OneToOne, SynapseDraw::default(), 1.0); // cycle
+        let net = b.build();
+        let order = net.topo_order();
+        assert_eq!(order.len(), 2); // all populations present despite cycle
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = small_net();
+        let b = small_net();
+        assert_eq!(a.projections[0].synapses, b.projections[0].synapses);
+    }
+}

@@ -1,0 +1,83 @@
+//! Neuron populations — the vertices of the application graph.
+
+use super::lif::LifParams;
+
+/// Index of a population within a [`crate::model::Network`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PopulationId(pub usize);
+
+/// What the population's neurons do.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NeuronKind {
+    /// Leaky integrate-and-fire dynamics (paper Eq. 1).
+    Lif(LifParams),
+    /// External spike source: per-timestep list of firing neuron indices.
+    /// Used for model inputs (the paper's input populations).
+    SpikeSource,
+}
+
+/// A named group of neurons sharing parameters — one layer of the SNN.
+#[derive(Clone, Debug)]
+pub struct Population {
+    pub id: PopulationId,
+    pub label: String,
+    pub n_neurons: usize,
+    pub kind: NeuronKind,
+    /// Whether spike output of this population is recorded by the simulator.
+    pub record_spikes: bool,
+    /// Whether membrane voltage is recorded.
+    pub record_v: bool,
+}
+
+impl Population {
+    pub fn lif(id: PopulationId, label: &str, n_neurons: usize, params: LifParams) -> Self {
+        Population {
+            id,
+            label: label.to_string(),
+            n_neurons,
+            kind: NeuronKind::Lif(params),
+            record_spikes: true,
+            record_v: false,
+        }
+    }
+
+    pub fn spike_source(id: PopulationId, label: &str, n_neurons: usize) -> Self {
+        Population {
+            id,
+            label: label.to_string(),
+            n_neurons,
+            kind: NeuronKind::SpikeSource,
+            record_spikes: false,
+            record_v: false,
+        }
+    }
+
+    /// LIF parameters if this is a LIF population.
+    pub fn lif_params(&self) -> Option<&LifParams> {
+        match &self.kind {
+            NeuronKind::Lif(p) => Some(p),
+            NeuronKind::SpikeSource => None,
+        }
+    }
+
+    pub fn is_source(&self) -> bool {
+        matches!(self.kind, NeuronKind::SpikeSource)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let p = Population::lif(PopulationId(0), "hidden", 100, LifParams::default());
+        assert_eq!(p.n_neurons, 100);
+        assert!(p.lif_params().is_some());
+        assert!(!p.is_source());
+
+        let s = Population::spike_source(PopulationId(1), "input", 64);
+        assert!(s.is_source());
+        assert!(s.lif_params().is_none());
+    }
+}

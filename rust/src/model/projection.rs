@@ -1,0 +1,153 @@
+//! Projections — the edges of the application graph.
+//!
+//! A projection connects a source population to a target population with a
+//! list of synapses. Each synapse carries the fields the serial paradigm's
+//! synaptic-matrix rows store (paper §III-A): weight, delay, synapse type
+//! (excitatory/inhibitory) and target neuron index; the source index is the
+//! row key.
+
+use super::population::PopulationId;
+
+/// Index of a projection within a [`crate::model::Network`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProjectionId(pub usize);
+
+/// Excitatory or inhibitory (the paper's two projection types;
+/// `n_projection_type = 2` in Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SynapseType {
+    Excitatory,
+    Inhibitory,
+}
+
+impl SynapseType {
+    pub const COUNT: usize = 2;
+
+    pub fn index(self) -> usize {
+        match self {
+            SynapseType::Excitatory => 0,
+            SynapseType::Inhibitory => 1,
+        }
+    }
+}
+
+/// One synapse. Weights are kept as quantized 8-bit magnitudes (the paper's
+/// experiments use 8-bit weights) with a per-projection scale; delay is in
+/// timesteps, 1-based like sPyNNaker (a spike at t affects the target at
+/// t + delay).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Synapse {
+    pub source: u32,
+    pub target: u32,
+    /// Quantized weight magnitude (0..=255).
+    pub weight: u8,
+    /// Delay in timesteps, 1..=delay_range.
+    pub delay: u16,
+    pub syn_type: SynapseType,
+}
+
+/// A source→target edge carrying its synapse list.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    pub id: ProjectionId,
+    pub source: PopulationId,
+    pub target: PopulationId,
+    pub synapses: Vec<Synapse>,
+    /// Weight dequantization scale: effective weight = weight * scale.
+    pub weight_scale: f32,
+}
+
+impl Projection {
+    /// Maximum delay used by any synapse (the layer's delay range).
+    pub fn delay_range(&self) -> u16 {
+        self.synapses.iter().map(|s| s.delay).max().unwrap_or(1)
+    }
+
+    /// Fraction of possible (source, target) pairs that have a synapse.
+    pub fn density(&self, n_source: usize, n_target: usize) -> f64 {
+        if n_source == 0 || n_target == 0 {
+            return 0.0;
+        }
+        // Count distinct (source,target) pairs; multiple synapses per pair
+        // (multapses) are rare in our generators but guard anyway.
+        let mut pairs: Vec<(u32, u32)> = self.synapses.iter().map(|s| (s.source, s.target)).collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        pairs.len() as f64 / (n_source as f64 * n_target as f64)
+    }
+
+    /// Per-source-neuron synapse counts (serial paradigm's row lengths).
+    pub fn row_lengths(&self, n_source: usize) -> Vec<u32> {
+        let mut rows = vec![0u32; n_source];
+        for s in &self.synapses {
+            rows[s.source as usize] += 1;
+        }
+        rows
+    }
+
+    /// Maximum row length (drives the serial synaptic-matrix row pitch).
+    pub fn max_row_length(&self, n_source: usize) -> u32 {
+        self.row_lengths(n_source).into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn syn(s: u32, t: u32, d: u16) -> Synapse {
+        Synapse { source: s, target: t, weight: 10, delay: d, syn_type: SynapseType::Excitatory }
+    }
+
+    #[test]
+    fn delay_range_is_max() {
+        let p = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses: vec![syn(0, 0, 1), syn(0, 1, 5), syn(1, 0, 3)],
+            weight_scale: 1.0,
+        };
+        assert_eq!(p.delay_range(), 5);
+    }
+
+    #[test]
+    fn density_counts_distinct_pairs() {
+        let p = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses: vec![syn(0, 0, 1), syn(0, 0, 2), syn(1, 1, 1)],
+            weight_scale: 1.0,
+        };
+        // (0,0) duplicated → 2 distinct pairs of 4 possible.
+        assert!((p.density(2, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_lengths_and_max() {
+        let p = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses: vec![syn(0, 0, 1), syn(0, 1, 1), syn(2, 0, 1)],
+            weight_scale: 1.0,
+        };
+        assert_eq!(p.row_lengths(3), vec![2, 0, 1]);
+        assert_eq!(p.max_row_length(3), 2);
+    }
+
+    #[test]
+    fn empty_projection_defaults() {
+        let p = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses: vec![],
+            weight_scale: 1.0,
+        };
+        assert_eq!(p.delay_range(), 1);
+        assert_eq!(p.density(10, 10), 0.0);
+        assert_eq!(p.max_row_length(10), 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! The two SNN compilation paradigms (paper §III).
+//!
+//! * [`serial`] — ARM-processor paradigm: event-based synaptic processing
+//!   driven by a master population table, address list and synaptic-matrix
+//!   blocks; time-triggered LIF update (sPyNNaker lineage, ref [14]).
+//! * [`parallel`] — MAC-array paradigm: a dominant PE pre-processes spikes
+//!   into a stacked input that subordinate PEs multiply against an
+//!   optimized weight-delay-map (refs [7][8]).
+//!
+//! Both compile a [`crate::model::Projection`]-defined layer into loadable
+//! per-PE programs, report their DTCM footprint per Table I, and are
+//! executable by [`crate::sim`]. The [`Paradigm`] enum is the switching
+//! system's decision alphabet.
+
+pub mod parallel;
+pub mod serial;
+
+/// Which paradigm a layer is compiled under — the classifier's label space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Paradigm {
+    Serial,
+    Parallel,
+}
+
+impl Paradigm {
+    /// Label encoding used by the dataset/classifiers (serial=0, parallel=1).
+    pub fn label(self) -> usize {
+        match self {
+            Paradigm::Serial => 0,
+            Paradigm::Parallel => 1,
+        }
+    }
+
+    pub fn from_label(label: usize) -> Paradigm {
+        if label == 0 {
+            Paradigm::Serial
+        } else {
+            Paradigm::Parallel
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Paradigm::Serial => "serial",
+            Paradigm::Parallel => "parallel",
+        }
+    }
+}
+
+impl std::fmt::Display for Paradigm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_roundtrip() {
+        assert_eq!(Paradigm::from_label(Paradigm::Serial.label()), Paradigm::Serial);
+        assert_eq!(Paradigm::from_label(Paradigm::Parallel.label()), Paradigm::Parallel);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(Paradigm::Serial.to_string(), "serial");
+        assert_eq!(Paradigm::Parallel.to_string(), "parallel");
+    }
+}

@@ -1,0 +1,252 @@
+//! Parallel-paradigm compiler: one layer → dominant + subordinate programs.
+
+use super::splitting::{two_stage_split, SplitPlan};
+use super::structures::DominantTables;
+use super::wdm::{build_wdm, Wdm, WdmConfig};
+use crate::costmodel::parallel::{dominant_cost, DominantCost};
+use crate::hardware::PeSpec;
+use crate::model::{LayerCharacter, LifParams, Projection};
+use anyhow::{ensure, Context, Result};
+
+/// One subordinate PE's program: a WDM chunk destined for the MAC array.
+#[derive(Clone, Debug)]
+pub struct SubordinateProgram {
+    /// Row range [lo, hi) of the WDM this PE holds.
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// Column range [lo, hi) of the WDM this PE accumulates.
+    pub col_lo: usize,
+    pub col_hi: usize,
+    /// Dense row-major chunk weights, `(row_hi-row_lo) × (col_hi-col_lo)`.
+    pub weights: Vec<i16>,
+    /// Cost-model DTCM bytes (aligned weight block + tables + fixed).
+    pub dtcm_bytes: usize,
+}
+
+impl SubordinateProgram {
+    pub fn n_rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.col_hi - self.col_lo
+    }
+
+    #[inline]
+    pub fn weight(&self, local_row: usize, local_col: usize) -> i16 {
+        self.weights[local_row * self.n_cols() + local_col]
+    }
+}
+
+/// A fully compiled parallel layer.
+#[derive(Clone, Debug)]
+pub struct ParallelCompiled {
+    pub wdm: Wdm,
+    pub tables: DominantTables,
+    pub dominant_cost: DominantCost,
+    pub subordinates: Vec<SubordinateProgram>,
+    pub plan: SplitPlan,
+    pub character: LayerCharacter,
+    pub params: LifParams,
+    pub weight_scale: f32,
+    pub n_source: usize,
+    pub n_target: usize,
+    pub n_source_vertex: usize,
+}
+
+impl ParallelCompiled {
+    /// Total PEs: one dominant + the subordinates.
+    pub fn n_pes(&self) -> usize {
+        1 + self.subordinates.len()
+    }
+
+    /// Total cost-model DTCM across all PEs.
+    pub fn total_dtcm(&self) -> usize {
+        self.dominant_cost.total()
+            + self.subordinates.iter().map(|s| s.dtcm_bytes).sum::<usize>()
+    }
+}
+
+/// Compile one layer (projection) under the parallel paradigm.
+pub fn compile_parallel(
+    proj: &Projection,
+    n_source: usize,
+    n_target: usize,
+    params: LifParams,
+    pe: &PeSpec,
+    config: WdmConfig,
+) -> Result<ParallelCompiled> {
+    let character = LayerCharacter::of_projection(proj, n_source, n_target);
+    let n_source_vertex = n_source.div_ceil(pe.serial_neuron_cap);
+
+    // Dominant PE: closed-form Table I cost; the paper verifies one dominant
+    // suffices across its sweep — we enforce it.
+    let dom = dominant_cost(n_source, n_target, character.delay_range as usize, n_source_vertex);
+    ensure!(
+        dom.total() <= pe.dtcm_bytes,
+        "dominant PE overflows DTCM ({} B > {} B); layer outside supported envelope",
+        dom.total(),
+        pe.dtcm_bytes
+    );
+
+    // Build the optimized WDM and split it.
+    let wdm = build_wdm(proj, n_source, n_target, config);
+    let plan = two_stage_split(&wdm, pe, n_source_vertex)
+        .context("weight-delay-map cannot be split to fit any PE")?;
+
+    // Materialize per-chunk weight blocks.
+    let subordinates: Vec<SubordinateProgram> = plan
+        .chunks
+        .iter()
+        .map(|ch| {
+            let (r0, r1, c0, c1) = (ch.row_lo, ch.row_hi, ch.col_lo, ch.col_hi);
+            let mut weights = Vec::with_capacity((r1 - r0) * (c1 - c0));
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    weights.push(wdm.weight(r, c));
+                }
+            }
+            SubordinateProgram {
+                row_lo: r0,
+                row_hi: r1,
+                col_lo: c0,
+                col_hi: c1,
+                weights,
+                dtcm_bytes: ch.dtcm_bytes,
+            }
+        })
+        .collect();
+
+    let tables = DominantTables::from_wdm(&wdm, n_source);
+
+    Ok(ParallelCompiled {
+        wdm,
+        tables,
+        dominant_cost: dom,
+        subordinates,
+        plan,
+        character,
+        params,
+        weight_scale: proj.weight_scale,
+        n_source,
+        n_target,
+        n_source_vertex,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{PopulationId, ProjectionId};
+    use crate::rng::Rng;
+
+    fn make_proj(n_src: usize, n_tgt: usize, density: f64, delay: u16, seed: u64) -> Projection {
+        let mut rng = Rng::new(seed);
+        let synapses = Connector::FixedProbability(density).build(
+            n_src,
+            n_tgt,
+            SynapseDraw { delay_range: delay, w_max: 127, ..Default::default() },
+            &mut rng,
+        );
+        Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses,
+            weight_scale: 0.01,
+        }
+    }
+
+    fn compile(n_src: usize, n_tgt: usize, d: f64, dl: u16, seed: u64) -> ParallelCompiled {
+        let proj = make_proj(n_src, n_tgt, d, dl, seed);
+        compile_parallel(
+            &proj,
+            n_src,
+            n_tgt,
+            LifParams::default(),
+            &PeSpec::default(),
+            WdmConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn small_layer_is_dominant_plus_one() {
+        let c = compile(50, 50, 0.5, 1, 1);
+        assert_eq!(c.n_pes(), 2);
+    }
+
+    #[test]
+    fn chunks_reassemble_wdm() {
+        let c = compile(300, 300, 0.8, 8, 2);
+        assert!(c.subordinates.len() > 1);
+        // Every WDM cell appears in exactly one chunk with the same weight.
+        let mut covered = vec![false; c.wdm.n_rows() * c.wdm.n_cols()];
+        for sub in &c.subordinates {
+            for r in sub.row_lo..sub.row_hi {
+                for col in sub.col_lo..sub.col_hi {
+                    let idx = r * c.wdm.n_cols() + col;
+                    assert!(!covered[idx]);
+                    covered[idx] = true;
+                    assert_eq!(
+                        sub.weight(r - sub.row_lo, col - sub.col_lo),
+                        c.wdm.weight(r, col)
+                    );
+                }
+            }
+        }
+        assert!(covered.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn all_pes_fit_budget() {
+        for (ns, nt, d, dl, seed) in
+            [(500, 500, 1.0, 16, 3), (50, 500, 0.2, 4, 4), (500, 50, 0.9, 16, 5)]
+        {
+            let c = compile(ns, nt, d, dl, seed);
+            let budget = PeSpec::default().dtcm_bytes;
+            assert!(c.dominant_cost.total() <= budget);
+            assert!(c.subordinates.iter().all(|s| s.dtcm_bytes <= budget));
+        }
+    }
+
+    #[test]
+    fn parallel_beats_serial_on_dense_low_delay() {
+        // The paper's headline trend: "the parallel paradigm improves with
+        // decreasing delay range and increasing weight density".
+        let c = compile(255, 255, 1.0, 1, 6);
+        let serial = crate::costmodel::serial::serial_pe_count(
+            &c.character,
+            &PeSpec::default(),
+        )
+        .unwrap();
+        assert!(
+            c.n_pes() < serial,
+            "parallel {} should beat serial {serial} at density 1.0, delay 1",
+            c.n_pes()
+        );
+    }
+
+    #[test]
+    fn serial_beats_parallel_on_sparse_high_delay() {
+        let c = compile(255, 255, 0.1, 16, 7);
+        let serial = crate::costmodel::serial::serial_pe_count(
+            &c.character,
+            &PeSpec::default(),
+        )
+        .unwrap();
+        assert!(
+            serial < c.n_pes(),
+            "serial {serial} should beat parallel {} at density 0.1, delay 16",
+            c.n_pes()
+        );
+    }
+
+    #[test]
+    fn pe_count_grows_with_delay() {
+        let d1 = compile(300, 300, 0.9, 1, 8).n_pes();
+        let d16 = compile(300, 300, 0.9, 16, 8).n_pes();
+        assert!(d16 > d1);
+    }
+}

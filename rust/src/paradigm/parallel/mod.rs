@@ -1,0 +1,23 @@
+//! Parallel paradigm (paper §III-B): MAC-array-accelerated synaptic
+//! processing.
+//!
+//! A *dominant* PE pre-processes arriving spikes — via the reversed-order
+//! and input-merging tables — into a *stacked input* vector laid out to
+//! match the *optimized weight-delay-map* (WDM); *subordinate* PEs multiply
+//! the stacked input against their WDM chunk on the 4×16 MAC array. When the
+//! WDM exceeds one PE's DTCM it is "split into multiple cores in a
+//! spatial-temporal balancing way by the two-stage splitting algorithm".
+//!
+//! * [`wdm`] — WDM construction with the four optimization strategies.
+//! * [`splitting`] — the two-stage (rows × columns) splitting algorithm.
+//! * [`structures`] — dominant-PE spike-preprocessing tables.
+//! * [`compiler`] — compiles one layer into dominant + subordinate programs.
+
+pub mod compiler;
+pub mod splitting;
+pub mod structures;
+pub mod wdm;
+
+pub use compiler::{compile_parallel, ParallelCompiled, SubordinateProgram};
+pub use structures::DominantTables;
+pub use wdm::{Wdm, WdmConfig};

@@ -1,0 +1,278 @@
+//! The two-stage splitting algorithm (paper §III-B).
+//!
+//! "If one subordinate PE does not have sufficient DTCM to save the whole
+//! optimized weight-delay-map, it will be split into multiple cores in a
+//! spatial-temporal balancing way by the two-stage splitting algorithm."
+//!
+//! Stage 1 (*temporal*) splits the stacked-input rows — the (source, delay)
+//! lanes; stage 2 (*spatial*) splits the target columns. The search picks
+//! the (row parts × col parts) grid with the fewest subordinate PEs whose
+//! every chunk fits the DTCM budget; ties prefer the more balanced grid
+//! (|rows − cols| minimal) and then fewer column parts (column splits
+//! duplicate the stacked input across PEs at runtime).
+
+use super::wdm::Wdm;
+use crate::costmodel::parallel::subordinate_fixed_cost;
+use crate::costmodel::serial::balanced_split;
+use crate::hardware::PeSpec;
+
+/// One subordinate chunk of the WDM grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub row_lo: usize,
+    pub row_hi: usize,
+    pub col_lo: usize,
+    pub col_hi: usize,
+    /// Cost-model DTCM bytes for this chunk.
+    pub dtcm_bytes: usize,
+}
+
+/// The chosen split.
+#[derive(Clone, Debug)]
+pub struct SplitPlan {
+    pub row_parts: usize,
+    pub col_parts: usize,
+    pub chunks: Vec<Chunk>,
+}
+
+impl SplitPlan {
+    pub fn n_subordinates(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+/// DTCM bytes of a chunk holding `r` rows × `c` cols of `wdm`.
+///
+/// Chunk contents: the aligned weight block, 4 B per row key, 2 B per column
+/// id, one 32-bit accumulator per padded output column, plus Table I's fixed
+/// subordinate block.
+pub fn chunk_bytes(
+    wdm: &Wdm,
+    r: usize,
+    c: usize,
+    rows_per_delay: &[usize],
+    n_source_vertex: usize,
+) -> usize {
+    let weight_block = wdm.weight_block_bytes(r, c, rows_per_delay);
+    let row_keys = 4 * r;
+    let col_ids = 2 * c;
+    let accumulators = 4 * wdm.config.mac.align_rows(c);
+    let fixed = subordinate_fixed_cost(c, wdm.delay_range as usize, n_source_vertex).total();
+    weight_block + row_keys + col_ids + accumulators + fixed
+}
+
+/// Worst-case chunk bytes for an (nr × nc) grid: the largest chunk governs.
+///
+/// `global_rpd` is the whole-map rows-per-delay profile, computed once by
+/// the caller (only consulted when S3/delay-merging is off): the worst
+/// chunk's per-delay rows are conservatively the global profile scaled
+/// down; the compiler re-checks exact chunk costs afterwards.
+fn grid_max_chunk_bytes(
+    wdm: &Wdm,
+    nr: usize,
+    nc: usize,
+    n_source_vertex: usize,
+    global_rpd: &[usize],
+    rpd_scratch: &mut Vec<usize>,
+) -> usize {
+    let r_max = wdm.n_rows().div_ceil(nr);
+    let c_max = wdm.n_cols().div_ceil(nc);
+    if wdm.config.delay_slot_merging {
+        // rows-per-delay is ignored under S3 — skip building it.
+        chunk_bytes(wdm, r_max, c_max, &[], n_source_vertex)
+    } else {
+        rpd_scratch.clear();
+        rpd_scratch.extend(global_rpd.iter().map(|&x| x.div_ceil(nr)));
+        chunk_bytes(wdm, r_max, c_max, rpd_scratch, n_source_vertex)
+    }
+}
+
+/// Run the two-stage split search.
+///
+/// Returns `None` when even a fully split grid (1 row × 1 col per chunk)
+/// cannot fit — practically impossible for the paper's sweep.
+pub fn two_stage_split(wdm: &Wdm, pe: &PeSpec, n_source_vertex: usize) -> Option<SplitPlan> {
+    let budget = pe.dtcm_bytes;
+    let (nrows, ncols) = (wdm.n_rows().max(1), wdm.n_cols().max(1));
+    let global_rpd = if wdm.config.delay_slot_merging { Vec::new() } else { wdm.rows_per_delay() };
+    let mut scratch = Vec::new();
+
+    let mut best: Option<(usize, usize, usize)> = None; // (total, nr, nc)
+    for nc in 1..=ncols {
+        // Any grid with nc column parts needs ≥ nc PEs: once the incumbent
+        // total can no longer be improved, stop scanning wider grids.
+        if let Some((t, _, _)) = best {
+            if nc > t {
+                break;
+            }
+        }
+        // Smallest nr that fits for this nc (bytes decrease with nr).
+        // Binary search over nr.
+        let mut fits = |nr: usize| {
+            grid_max_chunk_bytes(wdm, nr, nc, n_source_vertex, &global_rpd, &mut scratch)
+                <= budget
+        };
+        if !fits(nrows) {
+            continue; // even single-row chunks overflow at this column width
+        }
+        let mut lo = 1usize;
+        let mut hi = nrows;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if fits(mid) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let nr = lo;
+        let total = nr * nc;
+        let better = match best {
+            None => true,
+            Some((t, bnr, bnc)) => {
+                total < t
+                    || (total == t
+                        && (nr.abs_diff(nc), nc) < (bnr.abs_diff(bnc), bnc))
+            }
+        };
+        if better {
+            best = Some((total, nr, nc));
+        }
+        // A perfect single-PE fit cannot be beaten.
+        if total == 1 {
+            break;
+        }
+    }
+
+    let (_, nr, nc) = best?;
+    // Materialize balanced chunk bounds with exact per-chunk costs.
+    let row_sizes = balanced_split(wdm.n_rows(), nr);
+    let col_sizes = balanced_split(wdm.n_cols(), nc);
+    let mut chunks = Vec::with_capacity(nr * nc);
+    let mut row_lo = 0usize;
+    for &rs in &row_sizes {
+        let mut col_lo = 0usize;
+        // Exact per-delay row profile of this chunk.
+        let mut rpd = vec![0usize; wdm.delay_range as usize + 1];
+        for rk in &wdm.rows[row_lo..row_lo + rs] {
+            rpd[rk.delay as usize] += 1;
+        }
+        for &cs in &col_sizes {
+            let bytes = chunk_bytes(wdm, rs, cs, &rpd, n_source_vertex);
+            chunks.push(Chunk {
+                row_lo,
+                row_hi: row_lo + rs,
+                col_lo,
+                col_hi: col_lo + cs,
+                dtcm_bytes: bytes,
+            });
+            col_lo += cs;
+        }
+        row_lo += rs;
+    }
+
+    // The balanced materialization can only shrink chunks relative to the
+    // worst-case bound used in the search, so every chunk fits.
+    debug_assert!(chunks.iter().all(|c| c.dtcm_bytes <= budget));
+    Some(SplitPlan { row_parts: nr, col_parts: nc, chunks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{PopulationId, Projection, ProjectionId};
+    use crate::paradigm::parallel::wdm::{build_wdm, WdmConfig};
+    use crate::prop::Prop;
+    use crate::rng::Rng;
+
+    fn make_wdm(n_src: usize, n_tgt: usize, density: f64, delay: u16, seed: u64) -> Wdm {
+        let mut rng = Rng::new(seed);
+        let synapses = Connector::FixedProbability(density).build(
+            n_src,
+            n_tgt,
+            SynapseDraw { delay_range: delay, w_max: 127, ..Default::default() },
+            &mut rng,
+        );
+        let proj = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses,
+            weight_scale: 1.0,
+        };
+        build_wdm(&proj, n_src, n_tgt, WdmConfig::default())
+    }
+
+    #[test]
+    fn small_wdm_fits_one_subordinate() {
+        let wdm = make_wdm(50, 50, 0.3, 1, 1);
+        let plan = two_stage_split(&wdm, &PeSpec::default(), 1).unwrap();
+        assert_eq!(plan.n_subordinates(), 1);
+    }
+
+    #[test]
+    fn large_wdm_splits_and_fits() {
+        let wdm = make_wdm(500, 500, 0.9, 16, 2);
+        let plan = two_stage_split(&wdm, &PeSpec::default(), 2).unwrap();
+        assert!(plan.n_subordinates() > 1);
+        let budget = PeSpec::default().dtcm_bytes;
+        assert!(plan.chunks.iter().all(|c| c.dtcm_bytes <= budget));
+    }
+
+    #[test]
+    fn chunks_tile_the_wdm_exactly() {
+        Prop::new("two-stage chunks tile", 30).check(
+            |g| {
+                let wdm = make_wdm(
+                    g.usize(50, 300),
+                    g.usize(50, 300),
+                    g.f64(0.1, 1.0),
+                    g.usize(1, 16) as u16,
+                    g.i64(0, 1 << 20) as u64,
+                );
+                let plan = two_stage_split(&wdm, &PeSpec::default(), 1).unwrap();
+                (wdm.n_rows(), wdm.n_cols(), plan)
+            },
+            |(nrows, ncols, plan)| {
+                // Chunk cells sum to the full grid and chunks are disjoint
+                // row/col intervals per grid construction.
+                let cells: usize = plan
+                    .chunks
+                    .iter()
+                    .map(|c| (c.row_hi - c.row_lo) * (c.col_hi - c.col_lo))
+                    .sum();
+                cells == nrows * ncols
+                    && plan.chunks.len() == plan.row_parts * plan.col_parts
+            },
+        );
+    }
+
+    #[test]
+    fn more_delay_means_more_subordinates_when_dense() {
+        let pe = PeSpec::default();
+        let s1 = two_stage_split(&make_wdm(300, 300, 1.0, 1, 3), &pe, 1).unwrap();
+        let s16 = two_stage_split(&make_wdm(300, 300, 1.0, 16, 3), &pe, 1).unwrap();
+        assert!(
+            s16.n_subordinates() > s1.n_subordinates(),
+            "delay 16 ({}) should need more PEs than delay 1 ({})",
+            s16.n_subordinates(),
+            s1.n_subordinates()
+        );
+    }
+
+    #[test]
+    fn grid_is_reasonably_balanced() {
+        let wdm = make_wdm(400, 400, 1.0, 16, 4);
+        let plan = two_stage_split(&wdm, &PeSpec::default(), 1).unwrap();
+        // "spatial-temporal balancing": neither dimension should be split to
+        // shreds while the other stays whole, unless forced.
+        assert!(plan.row_parts >= 1 && plan.col_parts >= 1);
+        let budget = PeSpec::default().dtcm_bytes;
+        // No chunk wastes more than half its budget unless the grid is 1×1.
+        if plan.n_subordinates() > 1 {
+            let max = plan.chunks.iter().map(|c| c.dtcm_bytes).max().unwrap();
+            assert!(max * 2 > budget, "over-split: max chunk only {max} B of {budget} B");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Dominant-PE spike-preprocessing tables (paper §III-B).
+//!
+//! "The reversed order and input merging table are saved in the dominant PE
+//! to pre-process the spikes in the stacked input buffer to adapt to the
+//! data layout of the optimized weight-delay-map."
+//!
+//! At runtime, a spike from source `s` at timestep `t` must set the stacked-
+//! input lanes `(s, δ)` for every delay `δ` the WDM keeps for `s` — but in
+//! the stacked buffer of timestep `t + δ`. The *reversed order* table gives,
+//! per source, the span of its entries inside the *input merging table*;
+//! each merging-table entry carries the delay and the WDM row index.
+
+use super::wdm::Wdm;
+
+/// One input-merging-table entry: (delay, WDM row index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MergeEntry {
+    pub delay: u16,
+    pub row: u32,
+}
+
+/// The dominant PE's preprocessing tables.
+#[derive(Clone, Debug, Default)]
+pub struct DominantTables {
+    /// Per source neuron: [start, end) span into `merging`.
+    pub reversed_order: Vec<(u32, u32)>,
+    /// Merging entries grouped by source (span order), delay-sorted within.
+    pub merging: Vec<MergeEntry>,
+}
+
+impl DominantTables {
+    /// Derive the tables from a built WDM.
+    pub fn from_wdm(wdm: &Wdm, n_source: usize) -> Self {
+        // Bucket WDM rows by source.
+        let mut per_source: Vec<Vec<MergeEntry>> = vec![Vec::new(); n_source];
+        for (row, rk) in wdm.rows.iter().enumerate() {
+            per_source[rk.source as usize].push(MergeEntry { delay: rk.delay, row: row as u32 });
+        }
+        let mut reversed_order = Vec::with_capacity(n_source);
+        let mut merging = Vec::with_capacity(wdm.n_rows());
+        for entries in &mut per_source {
+            entries.sort_by_key(|e| e.delay);
+            let start = merging.len() as u32;
+            merging.extend_from_slice(entries);
+            reversed_order.push((start, merging.len() as u32));
+        }
+        DominantTables { reversed_order, merging }
+    }
+
+    /// The merge entries of one source neuron.
+    pub fn entries_of(&self, source: u32) -> &[MergeEntry] {
+        let (lo, hi) = self.reversed_order[source as usize];
+        &self.merging[lo as usize..hi as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{PopulationId, Projection, ProjectionId};
+    use crate::paradigm::parallel::wdm::{build_wdm, WdmConfig};
+    use crate::rng::Rng;
+
+    fn wdm_for(n_src: usize, n_tgt: usize, density: f64, delay: u16) -> Wdm {
+        let mut rng = Rng::new(5);
+        let synapses = Connector::FixedProbability(density).build(
+            n_src,
+            n_tgt,
+            SynapseDraw { delay_range: delay, w_max: 127, ..Default::default() },
+            &mut rng,
+        );
+        let proj = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses,
+            weight_scale: 1.0,
+        };
+        build_wdm(&proj, n_src, n_tgt, WdmConfig::default())
+    }
+
+    #[test]
+    fn spans_cover_all_rows_exactly_once() {
+        let wdm = wdm_for(40, 40, 0.4, 6);
+        let t = DominantTables::from_wdm(&wdm, 40);
+        assert_eq!(t.merging.len(), wdm.n_rows());
+        let mut seen = vec![false; wdm.n_rows()];
+        for s in 0..40 {
+            for e in t.entries_of(s) {
+                assert!(!seen[e.row as usize], "row referenced twice");
+                seen[e.row as usize] = true;
+                // Entry's row really belongs to this source and delay.
+                let rk = wdm.rows[e.row as usize];
+                assert_eq!(rk.source, s);
+                assert_eq!(rk.delay, e.delay);
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn entries_delay_sorted_per_source() {
+        let wdm = wdm_for(30, 30, 0.8, 8);
+        let t = DominantTables::from_wdm(&wdm, 30);
+        for s in 0..30 {
+            let e = t.entries_of(s);
+            assert!(e.windows(2).all(|w| w[0].delay <= w[1].delay));
+        }
+    }
+
+    #[test]
+    fn silent_source_has_empty_span() {
+        // Source 1 gets no synapses.
+        let proj = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses: vec![crate::model::Synapse {
+                source: 0,
+                target: 0,
+                weight: 3,
+                delay: 2,
+                syn_type: crate::model::SynapseType::Excitatory,
+            }],
+            weight_scale: 1.0,
+        };
+        let wdm = build_wdm(&proj, 3, 2, WdmConfig::default());
+        let t = DominantTables::from_wdm(&wdm, 3);
+        assert_eq!(t.entries_of(0).len(), 1);
+        assert_eq!(t.entries_of(1).len(), 0);
+        assert_eq!(t.entries_of(2).len(), 0);
+    }
+}

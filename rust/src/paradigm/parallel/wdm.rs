@@ -1,0 +1,391 @@
+//! The optimized weight-delay-map (WDM).
+//!
+//! Logical form: a matrix `W[(source, delay) row][target column]` such that
+//! the synaptic input of target `c` at timestep `t` is
+//! `Σ_rows stacked[t][row] · W[row][c]`, where `stacked[t][(s, δ)] = 1` iff
+//! source `s` fired at `t − δ`. Stored dense so the MAC array can consume
+//! it; the four optimization strategies attack the zero-padding and sparsity
+//! memory weaknesses the paper attributes to refs [7][8]:
+//!
+//! * **S1 zero-row elimination** — only (source, delay) pairs that carry at
+//!   least one synapse get a row (realization-dependent, which is exactly
+//!   why Table I says the WDM size "can't be accurately estimated").
+//! * **S2 zero-column elimination** — targets with no synapses get no
+//!   column.
+//! * **S3 delay-slot merging** — rows of all delay slots share one
+//!   contiguous matrix, so MAC alignment padding is paid once instead of
+//!   once per delay block.
+//! * **S4 8-bit quantization** — signed 8-bit weights (type folded into the
+//!   sign) instead of 16-bit operands.
+//!
+//! Each strategy can be disabled individually for the ablation bench.
+
+use crate::hardware::MacArraySpec;
+use crate::model::{Projection, Synapse, SynapseType};
+
+/// Strategy toggles + MAC geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct WdmConfig {
+    pub zero_row_elimination: bool,
+    pub zero_col_elimination: bool,
+    pub delay_slot_merging: bool,
+    pub quantize_8bit: bool,
+    pub mac: MacArraySpec,
+}
+
+impl Default for WdmConfig {
+    fn default() -> Self {
+        WdmConfig {
+            zero_row_elimination: true,
+            zero_col_elimination: true,
+            delay_slot_merging: true,
+            quantize_8bit: true,
+            mac: MacArraySpec::default(),
+        }
+    }
+}
+
+impl WdmConfig {
+    /// All strategies disabled — the naive dense baseline.
+    pub fn naive() -> Self {
+        WdmConfig {
+            zero_row_elimination: false,
+            zero_col_elimination: false,
+            delay_slot_merging: false,
+            quantize_8bit: false,
+            mac: MacArraySpec::default(),
+        }
+    }
+
+    /// Bytes per stored weight under S4.
+    pub fn bytes_per_weight(&self) -> usize {
+        if self.quantize_8bit {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+/// A WDM row key: one (source, delay) lane of the stacked input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct RowKey {
+    /// Delay first: rows are delay-major so one delay slot's rows are
+    /// contiguous (what the stacked-input writer wants).
+    pub delay: u16,
+    pub source: u32,
+}
+
+/// The built weight-delay-map (logical, unpadded).
+#[derive(Clone, Debug)]
+pub struct Wdm {
+    pub rows: Vec<RowKey>,
+    /// Kept target columns (projection-local target ids).
+    pub cols: Vec<u32>,
+    /// Dense row-major weights, `rows.len() × cols.len()`, signed:
+    /// excitatory positive, inhibitory negative.
+    pub weights: Vec<i16>,
+    pub config: WdmConfig,
+    /// Full delay range of the layer (stacked-input ring depth).
+    pub delay_range: u16,
+}
+
+impl Wdm {
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    #[inline]
+    pub fn weight(&self, row: usize, col: usize) -> i16 {
+        self.weights[row * self.cols.len() + col]
+    }
+
+    /// Stored bytes of the weight block for a chunk of `r` rows × `c` cols,
+    /// honoring alignment (S3) and quantization (S4). The contraction
+    /// dimension (rows) aligns to the MAC's 16-lane input side, the output
+    /// dimension (cols) to its 4-lane output side.
+    ///
+    /// `rows_per_delay` is only consulted when S3 is off: each delay block
+    /// pads separately.
+    pub fn weight_block_bytes(&self, r: usize, c: usize, rows_per_delay: &[usize]) -> usize {
+        let mac = self.config.mac;
+        let c_pad = mac.align_rows(c);
+        let bpw = self.config.bytes_per_weight();
+        if self.config.delay_slot_merging {
+            mac.align_cols(r) * c_pad * bpw
+        } else {
+            rows_per_delay
+                .iter()
+                .map(|&rd| mac.align_cols(rd) * c_pad * bpw)
+                .sum()
+        }
+    }
+
+    /// Row counts per delay slot (for unmerged padding accounting).
+    pub fn rows_per_delay(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.delay_range as usize + 1];
+        for rk in &self.rows {
+            counts[rk.delay as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Fold a synapse's type into a signed weight.
+#[inline]
+fn signed_weight(s: &Synapse) -> i32 {
+    match s.syn_type {
+        SynapseType::Excitatory => s.weight as i32,
+        SynapseType::Inhibitory => -(s.weight as i32),
+    }
+}
+
+/// Shared S1/S2 occupancy analysis: the kept (row, column) sets.
+fn wdm_shape(
+    proj: &Projection,
+    n_source: usize,
+    n_target: usize,
+    config: WdmConfig,
+) -> (Vec<RowKey>, Vec<u32>, u16) {
+    let delay_range = proj.delay_range();
+    let n_lanes = n_source * delay_range as usize;
+    let lane = |s: &Synapse| (s.delay as usize - 1) * n_source + s.source as usize;
+    let mut row_used = vec![false; n_lanes];
+    let mut col_used = vec![false; n_target];
+    for s in &proj.synapses {
+        row_used[lane(s)] = true;
+        col_used[s.target as usize] = true;
+    }
+    // S1: row set.
+    let rows: Vec<RowKey> = (0..n_lanes)
+        .filter(|&l| !config.zero_row_elimination || row_used[l])
+        .map(|l| RowKey { delay: (l / n_source) as u16 + 1, source: (l % n_source) as u32 })
+        .collect();
+    // S2: column set.
+    let cols: Vec<u32> = (0..n_target as u32)
+        .filter(|&t| !config.zero_col_elimination || col_used[t as usize])
+        .collect();
+    (rows, cols, delay_range)
+}
+
+/// Build only the WDM *shape* (rows/columns kept; no weight block).
+///
+/// Sufficient for PE counting — the two-stage split depends only on the
+/// shape — and ~5× cheaper than [`build_wdm`] on dense layers, which is
+/// what makes labeling the 16k-layer corpus tractable. `weight()` must not
+/// be called on the result.
+pub fn build_wdm_shape(
+    proj: &Projection,
+    n_source: usize,
+    n_target: usize,
+    config: WdmConfig,
+) -> Wdm {
+    let (rows, cols, delay_range) = wdm_shape(proj, n_source, n_target, config);
+    Wdm { rows, cols, weights: Vec::new(), config, delay_range }
+}
+
+/// Build the optimized WDM for one layer.
+pub fn build_wdm(proj: &Projection, n_source: usize, n_target: usize, config: WdmConfig) -> Wdm {
+    let (rows, cols, delay_range) = wdm_shape(proj, n_source, n_target, config);
+    let n_lanes = n_source * delay_range as usize;
+    let lane = |s: &Synapse| (s.delay as usize - 1) * n_source + s.source as usize;
+
+    // Dense index maps.
+    let mut row_of = vec![usize::MAX; n_lanes];
+    for (i, rk) in rows.iter().enumerate() {
+        row_of[(rk.delay as usize - 1) * n_source + rk.source as usize] = i;
+    }
+    let mut col_of = vec![usize::MAX; n_target];
+    for (i, &c) in cols.iter().enumerate() {
+        col_of[c as usize] = i;
+    }
+
+    // Fill weights (sum multapses, saturate to i16 — weights are ≤ 255 so a
+    // pair would need 128 multapses to saturate).
+    let mut weights = vec![0i16; rows.len() * cols.len()];
+    for s in &proj.synapses {
+        let r = row_of[lane(s)];
+        let c = col_of[s.target as usize];
+        debug_assert!(r != usize::MAX && c != usize::MAX);
+        let idx = r * cols.len() + c;
+        weights[idx] = (weights[idx] as i32 + signed_weight(s)).clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+    }
+
+    Wdm { rows, cols, weights, config, delay_range }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{PopulationId, ProjectionId};
+    use crate::rng::Rng;
+    use crate::prop::Prop;
+
+    fn proj_with(synapses: Vec<Synapse>) -> Projection {
+        Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses,
+            weight_scale: 1.0,
+        }
+    }
+
+    fn syn(s: u32, t: u32, w: u8, d: u16, inh: bool) -> Synapse {
+        Synapse {
+            source: s,
+            target: t,
+            weight: w,
+            delay: d,
+            syn_type: if inh { SynapseType::Inhibitory } else { SynapseType::Excitatory },
+        }
+    }
+
+    #[test]
+    fn rows_and_cols_eliminate_zeros() {
+        let p = proj_with(vec![syn(0, 0, 5, 1, false), syn(0, 2, 6, 3, false)]);
+        let wdm = build_wdm(&p, 4, 4, WdmConfig::default());
+        assert_eq!(wdm.n_rows(), 2); // (d1,s0) and (d3,s0)
+        assert_eq!(wdm.cols, vec![0, 2]);
+        assert_eq!(wdm.weight(0, 0), 5);
+        assert_eq!(wdm.weight(1, 1), 6);
+    }
+
+    #[test]
+    fn naive_config_keeps_everything() {
+        let p = proj_with(vec![syn(0, 0, 5, 2, false)]);
+        let wdm = build_wdm(&p, 3, 4, WdmConfig::naive());
+        assert_eq!(wdm.n_rows(), 3 * 2); // all (source, delay) lanes, delay range 2
+        assert_eq!(wdm.n_cols(), 4);
+    }
+
+    #[test]
+    fn inhibitory_weights_are_negative() {
+        let p = proj_with(vec![syn(1, 1, 9, 1, true)]);
+        let wdm = build_wdm(&p, 2, 2, WdmConfig::default());
+        assert_eq!(wdm.weight(0, 0), -9);
+    }
+
+    #[test]
+    fn rows_are_delay_major_sorted() {
+        let mut rng = Rng::new(3);
+        let syns = Connector::FixedProbability(0.4).build(
+            30,
+            30,
+            SynapseDraw { delay_range: 8, w_max: 127, ..Default::default() },
+            &mut rng,
+        );
+        let wdm = build_wdm(&proj_with(syns), 30, 30, WdmConfig::default());
+        let mut sorted = wdm.rows.clone();
+        sorted.sort();
+        assert_eq!(wdm.rows, sorted);
+    }
+
+    #[test]
+    fn matvec_matches_bruteforce() {
+        // The WDM linear map must equal direct synapse accumulation.
+        let mut rng = Rng::new(7);
+        let syns = Connector::FixedProbability(0.5).build(
+            20,
+            15,
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            &mut rng,
+        );
+        let p = proj_with(syns.clone());
+        let wdm = build_wdm(&p, 20, 15, WdmConfig::default());
+
+        // Pretend every source fired at delay-offset δ0 = 2 steps ago:
+        // active rows are exactly delay == 2.
+        let mut via_wdm = vec![0i32; 15];
+        for (r, rk) in wdm.rows.iter().enumerate() {
+            if rk.delay == 2 {
+                for (ci, &c) in wdm.cols.iter().enumerate() {
+                    via_wdm[c as usize] += wdm.weight(r, ci) as i32;
+                }
+            }
+        }
+        let mut direct = vec![0i32; 15];
+        for s in &syns {
+            if s.delay == 2 {
+                direct[s.target as usize] += s.weight as i32;
+            }
+        }
+        assert_eq!(via_wdm, direct);
+    }
+
+    #[test]
+    fn merged_padding_never_exceeds_unmerged() {
+        let mut rng = Rng::new(11);
+        let syns = Connector::FixedProbability(0.3).build(
+            50,
+            50,
+            SynapseDraw { delay_range: 8, w_max: 127, ..Default::default() },
+            &mut rng,
+        );
+        let p = proj_with(syns);
+        let merged = build_wdm(&p, 50, 50, WdmConfig::default());
+        let unmerged =
+            build_wdm(&p, 50, 50, WdmConfig { delay_slot_merging: false, ..Default::default() });
+        let rpd = merged.rows_per_delay();
+        let b_merged = merged.weight_block_bytes(merged.n_rows(), merged.n_cols(), &rpd);
+        let b_unmerged = unmerged.weight_block_bytes(unmerged.n_rows(), unmerged.n_cols(), &rpd);
+        assert!(b_merged <= b_unmerged, "S3 must not increase bytes");
+    }
+
+    #[test]
+    fn quantization_halves_weight_bytes() {
+        let p = proj_with(vec![syn(0, 0, 5, 1, false)]);
+        let w8 = build_wdm(&p, 16, 4, WdmConfig::default());
+        let w16 = build_wdm(&p, 16, 4, WdmConfig { quantize_8bit: false, ..Default::default() });
+        let rpd = w8.rows_per_delay();
+        assert_eq!(
+            w8.weight_block_bytes(16, 4, &rpd) * 2,
+            w16.weight_block_bytes(16, 4, &rpd)
+        );
+    }
+
+    #[test]
+    fn shape_build_matches_full_build() {
+        // The labeling fast path must agree exactly with the compile path.
+        Prop::new("wdm shape == full build shape", 40).check(
+            |g| {
+                let n_src = g.usize(10, 200);
+                let n_tgt = g.usize(10, 200);
+                let density = g.f64(0.05, 1.0);
+                let delay = g.usize(1, 16) as u16;
+                let seed = g.i64(0, 1 << 30) as u64;
+                (n_src, n_tgt, density, delay, seed)
+            },
+            |&(n_src, n_tgt, density, delay, seed)| {
+                let mut rng = Rng::new(seed);
+                let syns = Connector::FixedProbability(density).build(
+                    n_src,
+                    n_tgt,
+                    SynapseDraw { delay_range: delay, w_max: 127, ..Default::default() },
+                    &mut rng,
+                );
+                let p = proj_with(syns);
+                let full = build_wdm(&p, n_src, n_tgt, WdmConfig::default());
+                let shape = super::build_wdm_shape(&p, n_src, n_tgt, WdmConfig::default());
+                full.rows == shape.rows
+                    && full.cols == shape.cols
+                    && full.delay_range == shape.delay_range
+                    && shape.weights.is_empty()
+            },
+        );
+    }
+
+    #[test]
+    fn alignment_pads_to_mac_geometry() {
+        let p = proj_with(vec![syn(0, 0, 5, 1, false)]);
+        let wdm = build_wdm(&p, 2, 2, WdmConfig::default());
+        // 1 row, 1 col → padded to 16 rows × 4 cols × 1 B.
+        let rpd = wdm.rows_per_delay();
+        assert_eq!(wdm.weight_block_bytes(1, 1, &rpd), 16 * 4);
+    }
+}

@@ -1,0 +1,248 @@
+//! Serial-paradigm compiler: one layer → per-PE loadable programs.
+//!
+//! Follows the §III-A rules: targets split into ≤255-neuron sub-populations,
+//! sources into ≤255-neuron vertices; dense layers additionally split their
+//! synaptic matrix over 2–4 adjacent PEs by source rows. The PE layout is
+//! delegated to [`crate::costmodel::serial::serial_layout`] so the compiled
+//! artifact and the cost model can never disagree about PE counts.
+
+use super::structures::{
+    build_structures, AddressList, MasterPopulationTable, SynapticMatrix,
+};
+use crate::costmodel::serial::{balanced_split, serial_layout, SerialCost};
+use crate::graph::machine_graph::SliceRange;
+use crate::hardware::PeSpec;
+use crate::model::{LayerCharacter, LifParams, Projection};
+use anyhow::{bail, Context, Result};
+
+/// One PE's compiled serial program.
+#[derive(Clone, Debug)]
+pub struct SerialPeProgram {
+    /// Target neurons simulated on this PE (projection-local indices).
+    pub target_slice: SliceRange,
+    /// Source rows stored on this PE (projection-local indices).
+    pub source_slice: SliceRange,
+    pub mpt: MasterPopulationTable,
+    pub address_list: AddressList,
+    pub matrix: SynapticMatrix,
+    /// Delay ring-buffer depth (= layer delay range).
+    pub delay_range: u16,
+    pub params: LifParams,
+    pub weight_scale: f32,
+    /// Table I cost-model breakdown for this PE.
+    pub cost: SerialCost,
+}
+
+impl SerialPeProgram {
+    /// Actual bytes of variable-size structures (≤ the cost model, which
+    /// budgets the worst case n_src*n_tgt*density).
+    pub fn actual_structure_bytes(&self) -> usize {
+        self.mpt.dtcm_bytes() + self.address_list.dtcm_bytes() + self.matrix.dtcm_bytes()
+    }
+}
+
+/// A fully compiled serial layer.
+#[derive(Clone, Debug)]
+pub struct SerialCompiled {
+    pub pes: Vec<SerialPeProgram>,
+    pub character: LayerCharacter,
+    pub n_target_chunks: usize,
+    pub n_source_vertex: usize,
+}
+
+impl SerialCompiled {
+    pub fn n_pes(&self) -> usize {
+        self.pes.len()
+    }
+
+    /// Total cost-model DTCM across PEs.
+    pub fn total_dtcm(&self) -> usize {
+        self.pes.iter().map(|p| p.cost.total()).sum()
+    }
+}
+
+/// Compile one layer (projection) under the serial paradigm.
+///
+/// `n_source`/`n_target` are the projection's population sizes; `params` the
+/// target population's LIF parameters.
+pub fn compile_serial(
+    proj: &Projection,
+    n_source: usize,
+    n_target: usize,
+    params: LifParams,
+    pe: &PeSpec,
+) -> Result<SerialCompiled> {
+    let character = LayerCharacter::of_projection(proj, n_source, n_target);
+    let layout = serial_layout(&character, pe)
+        .context("layer does not fit the machine under the serial paradigm")?;
+
+    // Recover the chunk boundaries the layout used.
+    let tgt_chunks = balanced_split(n_target, layout.n_target_chunks);
+    let mut tgt_bounds = Vec::with_capacity(tgt_chunks.len());
+    let mut acc = 0u32;
+    for &c in &tgt_chunks {
+        tgt_bounds.push(SliceRange { lo: acc, hi: acc + c as u32 });
+        acc += c as u32;
+    }
+    // Source vertices: ≤255-neuron global key ranges.
+    let src_vertex_chunks = balanced_split(n_source, layout.n_source_vertex);
+    let mut src_vertices: Vec<(u32, u32)> = Vec::new();
+    let mut acc = 0u32;
+    for &c in &src_vertex_chunks {
+        src_vertices.push((acc, acc + c as u32));
+        acc += c as u32;
+    }
+
+    let mut pes = Vec::with_capacity(layout.pes.len());
+    for lp in &layout.pes {
+        let tgt = tgt_bounds[lp.target_chunk];
+        // Row-split bounds within the full source range.
+        let row_parts = layout
+            .pes
+            .iter()
+            .filter(|p| p.target_chunk == lp.target_chunk)
+            .count();
+        let rows = balanced_split(n_source, row_parts);
+        let mut lo = 0u32;
+        for r in rows.iter().take(lp.row_split) {
+            lo += *r as u32;
+        }
+        let src = SliceRange { lo, hi: lo + rows[lp.row_split] as u32 };
+
+        // Synapses on this PE: its source rows × its target slice, with
+        // targets re-based to PE-local indices.
+        let mut local: Vec<_> = proj
+            .synapses
+            .iter()
+            .filter(|s| src.contains(s.source) && tgt.contains(s.target))
+            .copied()
+            .collect();
+        for s in &mut local {
+            s.target -= tgt.lo;
+        }
+        // Source vertices clipped to this PE's row range.
+        let my_vertices: Vec<(u32, u32)> = src_vertices
+            .iter()
+            .filter_map(|&(lo_v, hi_v)| {
+                let lo_c = lo_v.max(src.lo);
+                let hi_c = hi_v.min(src.hi);
+                (lo_c < hi_c).then_some((lo_c, hi_c))
+            })
+            .collect();
+        if my_vertices.is_empty() {
+            bail!("internal: PE with no source coverage");
+        }
+        let (mpt, address_list, matrix) = build_structures(&local, &my_vertices);
+        pes.push(SerialPeProgram {
+            target_slice: tgt,
+            source_slice: src,
+            mpt,
+            address_list,
+            matrix,
+            delay_range: character.delay_range,
+            params,
+            weight_scale: proj.weight_scale,
+            cost: lp.cost,
+        });
+    }
+
+    Ok(SerialCompiled {
+        pes,
+        character,
+        n_target_chunks: layout.n_target_chunks,
+        n_source_vertex: layout.n_source_vertex,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::connector::SynapseDraw;
+    use crate::model::{Connector, PopulationId, ProjectionId};
+    use crate::rng::Rng;
+
+    fn make_proj(n_src: usize, n_tgt: usize, density: f64, delay: u16, seed: u64) -> Projection {
+        let mut rng = Rng::new(seed);
+        let synapses = Connector::FixedProbability(density).build(
+            n_src,
+            n_tgt,
+            SynapseDraw { delay_range: delay, w_max: 127, ..Default::default() },
+            &mut rng,
+        );
+        Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses,
+            weight_scale: 0.01,
+        }
+    }
+
+    #[test]
+    fn small_layer_compiles_to_one_pe() {
+        let proj = make_proj(100, 100, 0.1, 4, 1);
+        let c = compile_serial(&proj, 100, 100, LifParams::default(), &PeSpec::default()).unwrap();
+        assert_eq!(c.n_pes(), 1);
+        let pe = &c.pes[0];
+        assert_eq!(pe.target_slice, SliceRange { lo: 0, hi: 100 });
+        assert_eq!(pe.matrix.words.len(), proj.synapses.len());
+    }
+
+    #[test]
+    fn synapses_partition_exactly_across_pes() {
+        // Dense layer large enough to force target + row splits.
+        let proj = make_proj(300, 300, 0.9, 8, 2);
+        let c = compile_serial(&proj, 300, 300, LifParams::default(), &PeSpec::default()).unwrap();
+        assert!(c.n_pes() > 1);
+        let total: usize = c.pes.iter().map(|p| p.matrix.words.len()).sum();
+        assert_eq!(total, proj.synapses.len(), "no synapse lost or duplicated");
+    }
+
+    #[test]
+    fn every_pe_respects_budget_and_cost_model_bounds_actual() {
+        let proj = make_proj(500, 400, 0.5, 16, 3);
+        let c = compile_serial(&proj, 500, 400, LifParams::default(), &PeSpec::default()).unwrap();
+        for pe in &c.pes {
+            assert!(pe.cost.total() <= PeSpec::default().dtcm_bytes);
+            // The cost model's synaptic-matrix budget is an expectation; the
+            // realized matrix must be within a few std-devs of it.
+            let budgeted = pe.cost.synaptic_matrix as f64;
+            let actual = pe.matrix.dtcm_bytes() as f64;
+            assert!(
+                actual < budgeted * 1.2 + 2048.0,
+                "realized matrix {actual} far above budget {budgeted}"
+            );
+        }
+    }
+
+    #[test]
+    fn event_path_resolves_all_sources() {
+        let proj = make_proj(200, 150, 0.3, 5, 4);
+        let c = compile_serial(&proj, 200, 150, LifParams::default(), &PeSpec::default()).unwrap();
+        // Every synapse must be reachable via MPT → address list → block.
+        let mut found = 0usize;
+        for pe in &c.pes {
+            for src in pe.source_slice.lo..pe.source_slice.hi {
+                if let Some(slot) = pe.mpt.lookup(src) {
+                    let entry = pe.address_list.entries[slot as usize];
+                    found += pe.matrix.block(entry).len();
+                }
+            }
+        }
+        assert_eq!(found, proj.synapses.len());
+    }
+
+    #[test]
+    fn pe_count_matches_cost_model_layout() {
+        for (ns, nt, d, dl, seed) in
+            [(255, 255, 1.0, 16, 5), (500, 500, 0.1, 1, 6), (50, 500, 0.5, 8, 7)]
+        {
+            let proj = make_proj(ns, nt, d, dl, seed);
+            let c = compile_serial(&proj, ns, nt, LifParams::default(), &PeSpec::default()).unwrap();
+            let expect =
+                crate::costmodel::serial::serial_pe_count(&c.character, &PeSpec::default())
+                    .unwrap();
+            assert_eq!(c.n_pes(), expect);
+        }
+    }
+}

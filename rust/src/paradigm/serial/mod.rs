@@ -1,0 +1,13 @@
+//! Serial paradigm (paper §III-A): event-based synaptic processing on the
+//! ARM core, time-triggered LIF update.
+//!
+//! * [`structures`] — the runtime data structures the compiler emits
+//!   (master population table, address list, packed synaptic matrix).
+//! * [`compiler`] — compiles one layer into per-PE [`SerialPeProgram`]s
+//!   following the §III-A partitioning rules and the Table I cost model.
+
+pub mod compiler;
+pub mod structures;
+
+pub use compiler::{compile_serial, SerialCompiled, SerialPeProgram};
+pub use structures::{AddressEntry, AddressList, MasterPopulationTable, SynapticMatrix, SynapticWord};

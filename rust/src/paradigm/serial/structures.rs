@@ -1,0 +1,279 @@
+//! Serial-paradigm runtime data structures (paper §III-A).
+//!
+//! "The source neuron index embedded in the spiking package unlocks an entry
+//! of the pre-loaded master population table. This entry points at one item
+//! of the address list, indicating the first address and matrix row length
+//! of a block of synaptic matrix on local SRAM. Each row within one block
+//! saves the synaptic information between the spiked source neuron and one
+//! of the target neurons, including weight, delay, synapse type (excitatory
+//! or inhibitory), and target neuron index."
+
+use crate::model::{Synapse, SynapseType};
+
+/// A packed 32-bit synaptic word, sPyNNaker-style:
+///
+/// ```text
+/// bits 31..24  weight magnitude (8-bit quantized)
+/// bits 23..19  delay (5 bits, 1..=31 timesteps)
+/// bit  18      synapse type (0 = excitatory, 1 = inhibitory)
+/// bits 17..0   target neuron index (PE-local)
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SynapticWord(pub u32);
+
+impl SynapticWord {
+    pub const TARGET_BITS: u32 = 18;
+    pub const TARGET_MASK: u32 = (1 << Self::TARGET_BITS) - 1;
+
+    pub fn pack(weight: u8, delay: u16, syn_type: SynapseType, target: u32) -> Self {
+        assert!(delay >= 1 && delay < 32, "delay {delay} outside packable range 1..=31");
+        assert!(target <= Self::TARGET_MASK, "target index {target} overflows packing");
+        let t = match syn_type {
+            SynapseType::Excitatory => 0u32,
+            SynapseType::Inhibitory => 1u32,
+        };
+        SynapticWord(
+            (weight as u32) << 24 | (delay as u32) << 19 | t << 18 | target,
+        )
+    }
+
+    pub fn weight(self) -> u8 {
+        (self.0 >> 24) as u8
+    }
+
+    pub fn delay(self) -> u16 {
+        ((self.0 >> 19) & 0x1f) as u16
+    }
+
+    pub fn syn_type(self) -> SynapseType {
+        if (self.0 >> 18) & 1 == 0 {
+            SynapseType::Excitatory
+        } else {
+            SynapseType::Inhibitory
+        }
+    }
+
+    pub fn target(self) -> u32 {
+        self.0 & Self::TARGET_MASK
+    }
+}
+
+/// Address-list entry: where one source neuron's synaptic-matrix block
+/// starts and how many rows (synapses) it holds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AddressEntry {
+    pub first_word: u32,
+    pub row_length: u32,
+}
+
+/// The address list: one entry per source neuron handled by this PE.
+#[derive(Clone, Debug, Default)]
+pub struct AddressList {
+    pub entries: Vec<AddressEntry>,
+}
+
+impl AddressList {
+    /// Table I bytes: (32/8)*n_address_list_rows.
+    pub fn dtcm_bytes(&self) -> usize {
+        4 * self.entries.len()
+    }
+}
+
+/// Master population table: maps a global source-neuron key to the
+/// (PE-local) address-list slot. One entry per source *vertex* (sub-
+/// population), each covering a contiguous global key range.
+#[derive(Clone, Debug, Default)]
+pub struct MasterPopulationTable {
+    /// (key_lo, key_hi_exclusive, address_list_base) per source vertex.
+    pub entries: Vec<(u32, u32, u32)>,
+}
+
+impl MasterPopulationTable {
+    /// Resolve a global source neuron id to its address-list index.
+    pub fn lookup(&self, source_global: u32) -> Option<u32> {
+        // Entries are few (n_source_vertex ≤ 2 in the paper's sweep); linear
+        // scan is faster than binary search at this size.
+        for &(lo, hi, base) in &self.entries {
+            if (lo..hi).contains(&source_global) {
+                return Some(base + (source_global - lo));
+            }
+        }
+        None
+    }
+
+    /// Table I bytes: (96/8)*n_source_vertex.
+    pub fn dtcm_bytes(&self) -> usize {
+        12 * self.entries.len()
+    }
+}
+
+/// The synaptic matrix: all blocks concatenated, indexed via [`AddressList`].
+#[derive(Clone, Debug, Default)]
+pub struct SynapticMatrix {
+    pub words: Vec<SynapticWord>,
+}
+
+impl SynapticMatrix {
+    /// Table I bytes: 4 bytes per word actually stored.
+    pub fn dtcm_bytes(&self) -> usize {
+        4 * self.words.len()
+    }
+
+    /// The rows of one source neuron's block.
+    pub fn block(&self, entry: AddressEntry) -> &[SynapticWord] {
+        let lo = entry.first_word as usize;
+        &self.words[lo..lo + entry.row_length as usize]
+    }
+}
+
+/// Build (master population table, address list, synaptic matrix) for one
+/// PE from the synapses it stores.
+///
+/// * `synapses` — synapses with *global* source ids and *PE-local* target
+///   ids (the compiler pre-filters and re-bases targets);
+/// * `source_vertices` — global source-id ranges, one per source vertex.
+pub fn build_structures(
+    synapses: &[Synapse],
+    source_vertices: &[(u32, u32)],
+) -> (MasterPopulationTable, AddressList, SynapticMatrix) {
+    // Group synapses by source neuron: one block per source.
+    let n_sources: u32 = source_vertices.iter().map(|&(lo, hi)| hi - lo).sum();
+    let mut per_source: Vec<Vec<&Synapse>> = vec![Vec::new(); n_sources as usize];
+    // Map global source id → dense address-list slot (vertex-major order).
+    let slot_of = |global: u32| -> Option<u32> {
+        let mut base = 0u32;
+        for &(lo, hi) in source_vertices {
+            if (lo..hi).contains(&global) {
+                return Some(base + (global - lo));
+            }
+            base += hi - lo;
+        }
+        None
+    };
+    for syn in synapses {
+        let slot = slot_of(syn.source).expect("synapse source outside declared vertices");
+        per_source[slot as usize].push(syn);
+    }
+
+    let mut mpt = MasterPopulationTable::default();
+    let mut base = 0u32;
+    for &(lo, hi) in source_vertices {
+        mpt.entries.push((lo, hi, base));
+        base += hi - lo;
+    }
+
+    let mut address_list = AddressList::default();
+    let mut matrix = SynapticMatrix::default();
+    for block in &per_source {
+        let first_word = matrix.words.len() as u32;
+        for syn in block {
+            matrix
+                .words
+                .push(SynapticWord::pack(syn.weight, syn.delay, syn.syn_type, syn.target));
+        }
+        address_list
+            .entries
+            .push(AddressEntry { first_word, row_length: block.len() as u32 });
+    }
+    (mpt, address_list, matrix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Prop;
+
+    #[test]
+    fn word_pack_roundtrip() {
+        Prop::new("synaptic word roundtrip", 500).check(
+            |g| {
+                (
+                    g.usize(0, 255) as u8,
+                    g.usize(1, 31) as u16,
+                    g.bool(0.5),
+                    g.usize(0, (1 << 18) - 1) as u32,
+                )
+            },
+            |&(w, d, inh, t)| {
+                let ty = if inh { SynapseType::Inhibitory } else { SynapseType::Excitatory };
+                let word = SynapticWord::pack(w, d, ty, t);
+                word.weight() == w && word.delay() == d && word.syn_type() == ty && word.target() == t
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "outside packable range")]
+    fn word_rejects_delay_zero() {
+        SynapticWord::pack(1, 0, SynapseType::Excitatory, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows packing")]
+    fn word_rejects_huge_target() {
+        SynapticWord::pack(1, 1, SynapseType::Excitatory, 1 << 18);
+    }
+
+    fn syn(s: u32, t: u32, w: u8, d: u16) -> Synapse {
+        Synapse { source: s, target: t, weight: w, delay: d, syn_type: SynapseType::Excitatory }
+    }
+
+    #[test]
+    fn build_and_lookup_path() {
+        // Two source vertices: global ids [0,3) and [10,12).
+        let synapses = vec![syn(0, 1, 5, 1), syn(0, 2, 6, 2), syn(2, 0, 7, 1), syn(10, 1, 8, 3)];
+        let (mpt, al, mat) = build_structures(&synapses, &[(0, 3), (10, 12)]);
+        assert_eq!(mpt.entries.len(), 2);
+        assert_eq!(al.entries.len(), 5); // 3 + 2 source neurons
+
+        // Event path for global source 0: two rows.
+        let slot = mpt.lookup(0).unwrap();
+        let block = mat.block(al.entries[slot as usize]);
+        assert_eq!(block.len(), 2);
+        assert_eq!(block[0].weight(), 5);
+        assert_eq!(block[1].target(), 2);
+
+        // Source 1 has no synapses: empty block.
+        let slot1 = mpt.lookup(1).unwrap();
+        assert_eq!(al.entries[slot1 as usize].row_length, 0);
+
+        // Second vertex re-bases correctly.
+        let slot10 = mpt.lookup(10).unwrap();
+        assert_eq!(slot10, 3);
+        let b10 = mat.block(al.entries[3]);
+        assert_eq!(b10[0].weight(), 8);
+
+        // Out-of-range key misses.
+        assert_eq!(mpt.lookup(5), None);
+        assert_eq!(mpt.lookup(12), None);
+
+        // Byte accounting matches Table I formulas.
+        assert_eq!(mpt.dtcm_bytes(), 12 * 2);
+        assert_eq!(al.dtcm_bytes(), 4 * 5);
+        assert_eq!(mat.dtcm_bytes(), 4 * 4);
+    }
+
+    #[test]
+    fn blocks_cover_matrix_exactly() {
+        Prop::new("address list covers matrix", 100).check(
+            |g| {
+                let n_src = g.usize(1, 20);
+                let n_syn = g.usize(0, 60);
+                let syns = g.vec(n_syn, |g| {
+                    syn(
+                        g.usize(0, n_src - 1) as u32,
+                        g.usize(0, 9) as u32,
+                        g.usize(1, 127) as u8,
+                        g.usize(1, 16) as u16,
+                    )
+                });
+                (n_src, syns)
+            },
+            |(n_src, syns)| {
+                let (_, al, mat) = build_structures(syns, &[(0, *n_src as u32)]);
+                let covered: u32 = al.entries.iter().map(|e| e.row_length).sum();
+                covered as usize == mat.words.len() && al.entries.len() == *n_src
+            },
+        );
+    }
+}

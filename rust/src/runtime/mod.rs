@@ -1,0 +1,16 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs once at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 JAX model (which calls the L1 Pallas MAC kernel) to **HLO
+//! text** under `artifacts/`. This module loads those files with the `xla`
+//! crate (`HloModuleProto::from_text_file` → compile on the PJRT CPU client)
+//! and exposes them to the simulator; Python is never on the request path.
+//!
+//! HLO shapes are static, so the matvec artifacts come in shape *buckets*;
+//! the runtime pads operands up to the bucket and truncates results. WDM
+//! chunk weights are uploaded once per chunk as device buffers and reused
+//! every timestep.
+
+pub mod pjrt;
+
+pub use pjrt::{artifact_dir, matvec_bucket, PjrtMac, PjrtRuntime, MATVEC_BUCKETS};

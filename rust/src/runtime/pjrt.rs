@@ -1,0 +1,235 @@
+//! PJRT client wrapper, executable cache, and the PJRT-backed MAC backend.
+
+use crate::sim::backend::MacBackend;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Matvec shape buckets `(rows, cols)` emitted by `python/compile/aot.py`.
+/// Rows = stacked-input lanes (contraction), cols = target neurons.
+pub const MATVEC_BUCKETS: &[(usize, usize)] = &[(256, 256), (2048, 256), (8192, 256)];
+
+/// LIF-step size bucket emitted alongside (see `aot.py`).
+pub const LIF_BUCKET: usize = 256;
+
+/// Smallest bucket that fits an `(r, c)` matvec, if any.
+pub fn matvec_bucket(r: usize, c: usize) -> Option<(usize, usize)> {
+    MATVEC_BUCKETS.iter().copied().find(|&(br, bc)| r <= br && c <= bc)
+}
+
+/// Default artifacts directory: `$S2SWITCH_ARTIFACTS` or `./artifacts`.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var_os("S2SWITCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// PJRT CPU client plus a compiled-executable cache.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, dir: dir.as_ref().to_path_buf(), exes: HashMap::new() })
+    }
+
+    /// Load + compile `<dir>/<name>.hlo.txt` (cached).
+    pub fn load(&mut self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.exes.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached_executables(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+/// MAC backend executing matvecs through the AOT Pallas/JAX artifact.
+///
+/// Weights are uploaded to the device once per distinct chunk (keyed by the
+/// chunk's storage address — stable for the engine's lifetime) and reused
+/// every timestep; only the stacked-input vector travels per call.
+pub struct PjrtMac {
+    rt: Rc<RefCell<PjrtRuntime>>,
+    weight_buffers: HashMap<(usize, usize, usize), xla::PjRtBuffer>,
+    /// Telemetry: device executions issued.
+    pub executions: u64,
+}
+
+impl PjrtMac {
+    pub fn new(rt: Rc<RefCell<PjrtRuntime>>) -> Self {
+        PjrtMac { rt, weight_buffers: HashMap::new(), executions: 0 }
+    }
+
+    fn weights_key(weights: &[f32], r: usize, c: usize) -> (usize, usize, usize) {
+        (weights.as_ptr() as usize, r, c)
+    }
+}
+
+impl PjrtMac {
+    /// One bucketed artifact execution (rows ≤ smallest fitting bucket).
+    fn matvec_single(
+        &mut self,
+        stacked: &[f32],
+        weights: &[f32],
+        n_rows: usize,
+        n_cols: usize,
+    ) -> Vec<f32> {
+        let (br, bc) = matvec_bucket(n_rows, n_cols).unwrap_or_else(|| {
+            panic!("no matvec artifact bucket fits {n_rows}×{n_cols}")
+        });
+        let mut rt = self.rt.borrow_mut();
+        let exe = rt
+            .load(&format!("mac_matvec_{br}x{bc}"))
+            .expect("matvec artifact must be built (make artifacts)");
+
+        // Pad stacked to [br].
+        let mut s = vec![0.0f32; br];
+        s[..n_rows].copy_from_slice(stacked);
+        let s_buf = rt
+            .client
+            .buffer_from_host_buffer(&s, &[br], None)
+            .expect("stacked upload");
+
+        // Weights: cached padded upload [br, bc].
+        let key = Self::weights_key(weights, n_rows, n_cols);
+        if !self.weight_buffers.contains_key(&key) {
+            let mut w = vec![0.0f32; br * bc];
+            for r in 0..n_rows {
+                w[r * bc..r * bc + n_cols]
+                    .copy_from_slice(&weights[r * n_cols..(r + 1) * n_cols]);
+            }
+            let buf = rt
+                .client
+                .buffer_from_host_buffer(&w, &[br, bc], None)
+                .expect("weights upload");
+            self.weight_buffers.insert(key, buf);
+        }
+        let w_buf = &self.weight_buffers[&key];
+
+        let result = exe.execute_b(&[&s_buf, w_buf]).expect("matvec execute");
+        self.executions += 1;
+        let lit = result[0][0].to_literal_sync().expect("readback");
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1().expect("tuple1").to_vec::<f32>().expect("f32 vec");
+        out[..n_cols].to_vec()
+    }
+}
+
+/// Row-tile size for decomposed execution (§Perf iteration 3): interpret-
+/// mode pallas lowers to an XLA while-loop that carries the whole weight
+/// operand per grid step, making one big-bucket call O(rows²·cols). Running
+/// ceil(rows/256) small-bucket calls and summing is 15–20× faster and
+/// exactly equal (integer-valued operands).
+const ROW_TILE: usize = 256;
+
+impl MacBackend for PjrtMac {
+    fn matvec(
+        &mut self,
+        stacked: &[f32],
+        weights: &[f32],
+        n_rows: usize,
+        n_cols: usize,
+    ) -> Vec<f32> {
+        assert_eq!(stacked.len(), n_rows);
+        assert_eq!(weights.len(), n_rows * n_cols);
+        if n_rows <= ROW_TILE {
+            return self.matvec_single(stacked, weights, n_rows, n_cols);
+        }
+        let mut out = vec![0.0f32; n_cols];
+        let mut r0 = 0usize;
+        while r0 < n_rows {
+            let r1 = (r0 + ROW_TILE).min(n_rows);
+            // Skip fully-silent row tiles (stacked input is sparse).
+            if stacked[r0..r1].iter().any(|&s| s != 0.0) {
+                let part = self.matvec_single(
+                    &stacked[r0..r1],
+                    &weights[r0 * n_cols..r1 * n_cols],
+                    r1 - r0,
+                    n_cols,
+                );
+                for (o, p) in out.iter_mut().zip(part) {
+                    *o += p;
+                }
+            }
+            r0 = r1;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Convenience: run the fused LIF-step artifact (used by the e2e example and
+/// integration tests to validate the L2 model end-to-end).
+///
+/// Artifact signature (see `python/compile/model.py`):
+/// `lif_step_256(v[256], current[256], alpha, v_th) -> (v_next[256], spiked[256])`.
+pub fn run_lif_step(
+    rt: &mut PjrtRuntime,
+    v: &[f32],
+    current: &[f32],
+    alpha: f32,
+    v_th: f32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let n = LIF_BUCKET;
+    anyhow::ensure!(v.len() <= n && current.len() <= n, "exceeds LIF bucket {n}");
+    let exe = rt.load(&format!("lif_step_{n}"))?;
+    let mut vp = vec![0.0f32; n];
+    vp[..v.len()].copy_from_slice(v);
+    let mut cp = vec![0.0f32; n];
+    cp[..current.len()].copy_from_slice(current);
+    let args = [
+        xla::Literal::vec1(&vp).reshape(&[n as i64]).map_err(|e| anyhow!("{e:?}"))?,
+        xla::Literal::vec1(&cp).reshape(&[n as i64]).map_err(|e| anyhow!("{e:?}"))?,
+        xla::Literal::scalar(alpha),
+        xla::Literal::scalar(v_th),
+    ];
+    let result = exe.execute::<xla::Literal>(&args).map_err(|e| anyhow!("{e:?}"))?;
+    let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+    let (v_next, spiked) = lit.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+    Ok((
+        v_next.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[..v.len()].to_vec(),
+        spiked.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[..v.len()].to_vec(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(matvec_bucket(10, 10), Some((256, 256)));
+        assert_eq!(matvec_bucket(256, 256), Some((256, 256)));
+        assert_eq!(matvec_bucket(257, 10), Some((2048, 256)));
+        assert_eq!(matvec_bucket(4000, 100), Some((8192, 256)));
+        assert_eq!(matvec_bucket(10_000, 10), None);
+        assert_eq!(matvec_bucket(10, 300), None);
+    }
+
+    // PJRT-backed execution tests live in rust/tests/pjrt_integration.rs —
+    // they need `make artifacts` to have run first.
+}

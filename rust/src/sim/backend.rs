@@ -1,0 +1,81 @@
+//! MAC-array execution backends.
+//!
+//! The subordinate-PE matmul (stacked spike vector × WDM chunk) can run on
+//! a native Rust path or through the AOT-compiled JAX/Pallas artifact via
+//! PJRT. Both operate on integer-valued f32 (spike counts and quantized
+//! weights), so results are exactly equal as long as values stay below 2²⁴
+//! — which the LIF regime guarantees by orders of magnitude.
+
+/// A backend that can run the MAC-array matvec.
+pub trait MacBackend {
+    /// `out[c] = Σ_r stacked[r] · weights[r · n_cols + c]`
+    ///
+    /// `stacked` has `n_rows` entries; `weights` is row-major
+    /// `n_rows × n_cols`.
+    fn matvec(&mut self, stacked: &[f32], weights: &[f32], n_rows: usize, n_cols: usize)
+        -> Vec<f32>;
+
+    /// Backend label for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Plain Rust matvec — the default backend.
+#[derive(Default)]
+pub struct NativeMac;
+
+impl MacBackend for NativeMac {
+    fn matvec(
+        &mut self,
+        stacked: &[f32],
+        weights: &[f32],
+        n_rows: usize,
+        n_cols: usize,
+    ) -> Vec<f32> {
+        assert_eq!(stacked.len(), n_rows);
+        assert_eq!(weights.len(), n_rows * n_cols);
+        let mut out = vec![0.0f32; n_cols];
+        for (r, &s) in stacked.iter().enumerate() {
+            if s == 0.0 {
+                continue; // stacked input is sparse: skip silent lanes
+            }
+            let row = &weights[r * n_cols..(r + 1) * n_cols];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += s * w;
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_manual() {
+        let mut b = NativeMac;
+        // 3 rows × 2 cols.
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let s = vec![1.0, 0.0, 2.0];
+        let out = b.matvec(&s, &w, 3, 2);
+        assert_eq!(out, vec![1.0 + 10.0, 2.0 + 12.0]);
+    }
+
+    #[test]
+    fn zero_stacked_gives_zeros() {
+        let mut b = NativeMac;
+        let out = b.matvec(&[0.0; 4], &[1.0; 8], 4, 2);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut b = NativeMac;
+        b.matvec(&[1.0; 3], &[1.0; 5], 3, 2);
+    }
+}

@@ -1,0 +1,29 @@
+//! Functional SpiNNaker2 simulator.
+//!
+//! Executes compiled layers timestep-by-timestep with exactly the runtime
+//! semantics §III describes:
+//!
+//! * [`serial_engine`] — event-based synaptic processing: spike → master
+//!   population table → address list → synaptic-matrix block → delay ring
+//!   buffer, per serial PE.
+//! * [`parallel_engine`] — dominant-PE preprocessing (reversed order /
+//!   input-merging tables → stacked input ring) + subordinate MAC-array
+//!   matmuls, optionally through the AOT-compiled JAX/Pallas HLO via PJRT
+//!   ([`crate::runtime`]).
+//! * [`network`] — whole-network simulation: population LIF state, spike
+//!   routing between layers, recording.
+//!
+//! **Numerical equivalence**: weights are integers (quantized u8 magnitudes,
+//! sign = synapse type) and both engines accumulate them exactly (i32 /
+//! integer-valued f32 ≤ 2²⁴), so serial and parallel execution produce
+//! bit-identical spike trains — property-tested in [`network`].
+
+pub mod backend;
+pub mod network;
+pub mod parallel_engine;
+pub mod serial_engine;
+
+pub use backend::{MacBackend, NativeMac};
+pub use network::{NetworkSim, Recorder, SpikeProvider};
+pub use parallel_engine::ParallelLayerEngine;
+pub use serial_engine::SerialLayerEngine;

@@ -1,0 +1,209 @@
+//! Event-based serial execution engine (paper §III-A runtime semantics).
+//!
+//! Per timestep `t` each serial PE:
+//! 1. reads + clears ring-buffer slot `t mod D` — excitatory minus
+//!    inhibitory accumulators become the synaptic input current;
+//! 2. processes the spikes arriving this step: master population table →
+//!    address list → synaptic-matrix block; each synaptic word's weight is
+//!    accumulated into slot `(t + delay) mod D` of its type's buffer.
+//!
+//! (Reading before writing makes a D-slot ring sufficient for delays up to
+//! D: a write at delay D lands in the slot just cleared, to be read exactly
+//! D steps later.)
+
+use crate::model::SynapseType;
+use crate::paradigm::serial::SerialCompiled;
+
+struct PeState {
+    /// Ring buffer: `[slot][type][local target]`, i32 accumulators
+    /// (16-bit in hardware per Table I; i32 here to keep saturation out of
+    /// the equivalence story — values stay far below either limit).
+    ring: Vec<i32>,
+    n_tgt: usize,
+    delay_range: usize,
+}
+
+impl PeState {
+    #[inline]
+    fn idx(&self, slot: usize, syn_type: usize, target: usize) -> usize {
+        (slot * SynapseType::COUNT + syn_type) * self.n_tgt + target
+    }
+}
+
+/// Executes one serially-compiled layer.
+pub struct SerialLayerEngine {
+    compiled: SerialCompiled,
+    pes: Vec<PeState>,
+    n_target: usize,
+    t: u64,
+    /// Synaptic events processed (telemetry for the perf benches).
+    pub events: u64,
+}
+
+impl SerialLayerEngine {
+    pub fn new(compiled: SerialCompiled, n_target: usize) -> Self {
+        let pes = compiled
+            .pes
+            .iter()
+            .map(|p| {
+                let n_tgt = p.target_slice.len();
+                let delay_range = p.delay_range as usize;
+                PeState {
+                    ring: vec![0; delay_range * SynapseType::COUNT * n_tgt],
+                    n_tgt,
+                    delay_range,
+                }
+            })
+            .collect();
+        SerialLayerEngine { compiled, pes, n_target, t: 0, events: 0 }
+    }
+
+    pub fn timestep(&self) -> u64 {
+        self.t
+    }
+
+    /// Advance one timestep: consume this step's ring slot into per-target
+    /// currents, then process `spikes_in` (source-population neuron ids
+    /// firing *this* step) into future slots.
+    pub fn step_currents(&mut self, spikes_in: &[u32]) -> Vec<f32> {
+        let mut currents = vec![0.0f32; self.n_target];
+        let t = self.t as usize;
+
+        // Phase 1: neural-input read-out (time-triggered).
+        for (prog, pe) in self.compiled.pes.iter().zip(&mut self.pes) {
+            let slot = t % pe.delay_range;
+            let scale = prog.weight_scale;
+            for local in 0..pe.n_tgt {
+                let e = pe.idx(slot, SynapseType::Excitatory.index(), local);
+                let i = pe.idx(slot, SynapseType::Inhibitory.index(), local);
+                let net = pe.ring[e] - pe.ring[i];
+                pe.ring[e] = 0;
+                pe.ring[i] = 0;
+                if net != 0 {
+                    currents[prog.target_slice.lo as usize + local] += net as f32 * scale;
+                }
+            }
+        }
+
+        // Phase 2: event-based synaptic processing of this step's spikes.
+        for &src in spikes_in {
+            for (prog, pe) in self.compiled.pes.iter().zip(&mut self.pes) {
+                if !prog.source_slice.contains(src) {
+                    continue;
+                }
+                let Some(slot_idx) = prog.mpt.lookup(src) else { continue };
+                let entry = prog.address_list.entries[slot_idx as usize];
+                for word in prog.matrix.block(entry) {
+                    let write_slot = (t + word.delay() as usize) % pe.delay_range;
+                    let j = pe.idx(write_slot, word.syn_type().index(), word.target() as usize);
+                    pe.ring[j] += word.weight() as i32;
+                    self.events += 1;
+                }
+            }
+        }
+
+        self.t += 1;
+        currents
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::PeSpec;
+    use crate::model::{
+        LifParams, PopulationId, Projection, ProjectionId, Synapse, SynapseType,
+    };
+    use crate::paradigm::serial::compile_serial;
+
+    fn engine_for(synapses: Vec<Synapse>, n_src: usize, n_tgt: usize) -> SerialLayerEngine {
+        let proj = Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses,
+            weight_scale: 0.5,
+        };
+        let c = compile_serial(&proj, n_src, n_tgt, LifParams::default(), &PeSpec::default())
+            .unwrap();
+        SerialLayerEngine::new(c, n_tgt)
+    }
+
+    fn syn(s: u32, t: u32, w: u8, d: u16, inh: bool) -> Synapse {
+        Synapse {
+            source: s,
+            target: t,
+            weight: w,
+            delay: d,
+            syn_type: if inh { SynapseType::Inhibitory } else { SynapseType::Excitatory },
+        }
+    }
+
+    #[test]
+    fn delay_one_arrives_next_step() {
+        let mut e = engine_for(vec![syn(0, 1, 10, 1, false)], 2, 3);
+        let c0 = e.step_currents(&[0]); // spike at t=0
+        assert_eq!(c0, vec![0.0, 0.0, 0.0], "nothing due at t=0");
+        let c1 = e.step_currents(&[]);
+        assert_eq!(c1, vec![0.0, 5.0, 0.0], "weight 10 × scale 0.5 at t=1");
+        let c2 = e.step_currents(&[]);
+        assert_eq!(c2, vec![0.0, 0.0, 0.0], "one-shot delivery");
+    }
+
+    #[test]
+    fn delay_equal_to_range_wraps_correctly() {
+        let mut e = engine_for(vec![syn(0, 0, 8, 4, false), syn(0, 1, 8, 1, false)], 1, 2);
+        e.step_currents(&[0]);
+        let mut hits = Vec::new();
+        for t in 1..=5 {
+            let c = e.step_currents(&[]);
+            for (n, &v) in c.iter().enumerate() {
+                if v != 0.0 {
+                    hits.push((t, n, v));
+                }
+            }
+        }
+        assert_eq!(hits, vec![(1, 1, 4.0), (4, 0, 4.0)]);
+    }
+
+    #[test]
+    fn excitation_and_inhibition_cancel() {
+        let mut e =
+            engine_for(vec![syn(0, 0, 9, 2, false), syn(1, 0, 9, 2, true)], 2, 1);
+        e.step_currents(&[0, 1]);
+        e.step_currents(&[]);
+        let c = e.step_currents(&[]);
+        assert_eq!(c, vec![0.0], "equal E and I at the same slot cancel");
+    }
+
+    #[test]
+    fn repeated_spikes_accumulate() {
+        let mut e = engine_for(vec![syn(0, 0, 3, 2, false)], 1, 1);
+        e.step_currents(&[0]); // lands at t=2
+        e.step_currents(&[0]); // lands at t=3
+        let c2 = e.step_currents(&[]);
+        assert_eq!(c2, vec![1.5]);
+        let c3 = e.step_currents(&[]);
+        assert_eq!(c3, vec![1.5]);
+    }
+
+    #[test]
+    fn split_layer_routes_to_correct_chunks() {
+        // Dense enough to need several PEs; currents must land at global
+        // target indices regardless of the split.
+        let mut syns = Vec::new();
+        for s in 0..300u32 {
+            syns.push(syn(s, (s * 7) % 280, 1, 1, false));
+        }
+        let mut e = engine_for(syns.clone(), 300, 280);
+        let all: Vec<u32> = (0..300).collect();
+        e.step_currents(&all);
+        let c = e.step_currents(&[]);
+        let mut expect = vec![0.0f32; 280];
+        for s in &syns {
+            expect[s.target as usize] += 0.5;
+        }
+        assert_eq!(c, expect);
+        assert_eq!(e.events, 300);
+    }
+}

@@ -1,0 +1,276 @@
+//! Machine-graph construction, placement and routing for compiled networks
+//! (the tail of the paper's Fig. 2 pipeline: machine graph → routing table
+//! → load on SpiNNaker2).
+//!
+//! Turns a [`crate::switching::CompiledLayer`] list into machine vertices
+//! (serial PEs, parallel dominant/subordinate PEs, source-hosting PEs),
+//! places them on a [`Machine`], derives the multicast [`RoutingTable`],
+//! and exposes NoC traffic estimation for simulated spike activity.
+
+use super::CompiledLayer;
+use crate::graph::machine_graph::{MachineGraph, SliceRange, VertexRole};
+use crate::graph::routing::RoutingTable;
+use crate::hardware::noc::{Noc, NocConfig};
+use crate::hardware::{Machine, MachineSpec};
+use crate::model::Network;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// A placed, routed network.
+pub struct Placement {
+    pub graph: MachineGraph,
+    pub machine: Machine,
+    pub routing: RoutingTable,
+    /// Vertices that *emit* each population's spikes (source hosts for
+    /// spike sources; neuron-updating vertices for LIF populations).
+    pub emitters: BTreeMap<usize, Vec<usize>>,
+}
+
+impl Placement {
+    /// Build, place and route a compiled network on a fresh machine.
+    pub fn new(net: &Network, layers: &[CompiledLayer], spec: MachineSpec) -> Result<Placement> {
+        let mut graph = MachineGraph::default();
+        let mut emitters: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        let pe_spec = spec.chip.pe;
+
+        // 1. Source-hosting vertices for spike sources with serial consumers.
+        for pop in &net.populations {
+            if !pop.is_source() {
+                continue;
+            }
+            let serial_consumer = net.projections.iter().zip(layers).any(|(proj, l)| {
+                proj.source == pop.id && matches!(l, CompiledLayer::Serial(_))
+            });
+            if !serial_consumer {
+                emitters.insert(pop.id.0, Vec::new());
+                continue;
+            }
+            let n_hosts = pop.n_neurons.div_ceil(pe_spec.serial_neuron_cap);
+            let chunk = pop.n_neurons.div_ceil(n_hosts);
+            let mut lo = 0u32;
+            let mut vs = Vec::new();
+            for h in 0..n_hosts {
+                let hi = ((h + 1) * chunk).min(pop.n_neurons) as u32;
+                // Source hosts carry the spike-source state: one word per
+                // neuron plus the OS reserve.
+                let dtcm = 4 * (hi - lo) as usize + pe_spec.os_reserve_bytes;
+                vs.push(graph.add_vertex(
+                    pop.id,
+                    SliceRange { lo, hi },
+                    VertexRole::Source,
+                    dtcm,
+                    format!("{}[{}]", pop.label, h),
+                ));
+                lo = hi;
+            }
+            emitters.insert(pop.id.0, vs);
+        }
+
+        // 2. Layer vertices.
+        let mut layer_vertices: Vec<Vec<usize>> = Vec::new();
+        for (proj, layer) in net.projections.iter().zip(layers) {
+            let tgt_pop = proj.target;
+            let mut vs = Vec::new();
+            match layer {
+                CompiledLayer::Serial(c) => {
+                    for (i, p) in c.pes.iter().enumerate() {
+                        let v = graph.add_vertex(
+                            tgt_pop,
+                            p.target_slice,
+                            VertexRole::Serial,
+                            p.cost.total(),
+                            format!("proj{}-serial[{}]", proj.id.0, i),
+                        );
+                        vs.push(v);
+                    }
+                    // Serial PEs update their target neurons → they emit.
+                    emitters.entry(tgt_pop.0).or_default().extend(vs.iter().copied());
+                }
+                CompiledLayer::Parallel(c) => {
+                    let n_tgt = c.n_target as u32;
+                    let dom = graph.add_vertex(
+                        tgt_pop,
+                        SliceRange { lo: 0, hi: n_tgt },
+                        VertexRole::ParallelDominant,
+                        c.dominant_cost.total(),
+                        format!("proj{}-dominant", proj.id.0),
+                    );
+                    vs.push(dom);
+                    // The dominant runs the neural update → it emits.
+                    emitters.entry(tgt_pop.0).or_default().push(dom);
+                    for (i, sub) in c.subordinates.iter().enumerate() {
+                        let v = graph.add_vertex(
+                            tgt_pop,
+                            SliceRange { lo: sub.col_lo as u32, hi: sub.col_hi as u32 },
+                            VertexRole::ParallelSubordinate,
+                            sub.dtcm_bytes,
+                            format!("proj{}-sub[{}]", proj.id.0, i),
+                        );
+                        vs.push(v);
+                        // Dominant feeds stacked input to subordinates and
+                        // collects currents back: bidirectional edges.
+                        graph.add_edge(proj.id, dom, v);
+                        graph.add_edge(proj.id, v, dom);
+                    }
+                }
+            }
+            layer_vertices.push(vs);
+        }
+
+        // 3. Spike-flow edges: every emitter of the source population fans
+        //    out to the layer's receiving vertices (serial PEs, or the
+        //    dominant for parallel layers).
+        for ((proj, layer), vs) in net.projections.iter().zip(layers).zip(&layer_vertices) {
+            let receivers: Vec<usize> = match layer {
+                CompiledLayer::Serial(_) => vs.clone(),
+                CompiledLayer::Parallel(_) => vec![vs[0]],
+            };
+            if let Some(srcs) = emitters.get(&proj.source.0) {
+                for &s in srcs {
+                    for &r in &receivers {
+                        if s != r {
+                            graph.add_edge(proj.id, s, r);
+                        }
+                    }
+                }
+            }
+        }
+
+        // 4. Place and route.
+        let mut machine = Machine::new(spec);
+        graph.place(&mut machine).context("placing machine graph")?;
+        let routing = RoutingTable::from_machine_graph(&graph);
+
+        Ok(Placement { graph, machine, routing, emitters })
+    }
+
+    /// Estimate NoC traffic for observed per-population spike counts:
+    /// every spike of population `p` is one multicast packet from each of
+    /// its emitting vertices' PEs along the routing table. Returns the NoC
+    /// with packet/hop telemetry filled in.
+    pub fn estimate_traffic(&self, spike_counts: &BTreeMap<usize, u64>) -> Noc {
+        let mut noc = Noc::new(NocConfig::default());
+        for (&pop, &count) in spike_counts {
+            let Some(emitters) = self.emitters.get(&pop) else { continue };
+            for &v in emitters {
+                let Some(entry) = self.routing.route(v as u32) else { continue };
+                let src = self.graph.vertices[v].pe.expect("placed");
+                // Spikes distribute across this population's emitters.
+                let share = count / emitters.len().max(1) as u64;
+                for _ in 0..share {
+                    noc.multicast(src, &entry.destinations);
+                }
+            }
+        }
+        noc
+    }
+
+    /// Total PEs used (matches `switching::network_pe_count`).
+    pub fn n_pes(&self) -> usize {
+        self.machine.allocated_count()
+    }
+}
+
+/// Convenience: spike counts per population from a recorder.
+pub fn spike_counts(recorder: &crate::sim::Recorder) -> BTreeMap<usize, u64> {
+    recorder.spikes.iter().map(|(&p, v)| (p, v.len() as u64)).collect()
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::PeSpec;
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{LifParams, NetworkBuilder};
+    use crate::switching::{SwitchMode, SwitchingSystem};
+
+    fn compiled(mode: SwitchMode) -> (Network, Vec<CompiledLayer>) {
+        let mut b = NetworkBuilder::new(3);
+        let inp = b.spike_source("in", 300);
+        let hid = b.lif_population("hid", 100, LifParams::default());
+        let out = b.lif_population("out", 10, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.01,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.9),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        let net = b.build();
+        let mut sys = SwitchingSystem::new(mode, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        (net, layers)
+    }
+
+    #[test]
+    fn placement_matches_pe_accounting() {
+        for mode in [SwitchMode::ForceSerial, SwitchMode::ForceParallel, SwitchMode::Ideal] {
+            let (net, layers) = compiled(mode);
+            let p = Placement::new(&net, &layers, MachineSpec::default()).unwrap();
+            let expected =
+                crate::switching::network_pe_count(&net, &layers, &PeSpec::default());
+            assert_eq!(p.n_pes(), expected, "mode {mode:?}");
+            // All vertices placed within DTCM budgets (Machine enforces it).
+            assert!(p.graph.vertices.iter().all(|v| v.pe.is_some()));
+        }
+    }
+
+    #[test]
+    fn serial_source_pops_get_hosts_parallel_do_not() {
+        let (net, layers) = compiled(SwitchMode::ForceSerial);
+        let p = Placement::new(&net, &layers, MachineSpec::default()).unwrap();
+        assert_eq!(p.emitters[&0].len(), 2, "300 sources → 2 host PEs");
+
+        let (net, layers) = compiled(SwitchMode::ForceParallel);
+        let p = Placement::new(&net, &layers, MachineSpec::default()).unwrap();
+        assert!(p.emitters[&0].is_empty(), "parallel consumers absorb sources");
+    }
+
+    #[test]
+    fn routing_covers_spike_flow() {
+        let (net, layers) = compiled(SwitchMode::ForceSerial);
+        let p = Placement::new(&net, &layers, MachineSpec::default()).unwrap();
+        // Every emitter of a population with downstream consumers has a
+        // route.
+        for &v in &p.emitters[&0] {
+            assert!(p.routing.route(v as u32).is_some(), "source host must route");
+        }
+        for &v in &p.emitters[&1] {
+            assert!(p.routing.route(v as u32).is_some(), "hidden emitters must route");
+        }
+        // Terminal population emits nowhere.
+        for &v in &p.emitters[&2] {
+            assert!(p.routing.route(v as u32).is_none());
+        }
+    }
+
+    #[test]
+    fn traffic_estimation_counts_packets() {
+        let (net, layers) = compiled(SwitchMode::Ideal);
+        let p = Placement::new(&net, &layers, MachineSpec::default()).unwrap();
+        let mut counts = BTreeMap::new();
+        counts.insert(1usize, 50u64); // hidden pop fired 50 times
+        let noc = p.estimate_traffic(&counts);
+        assert!(noc.packets > 0, "spikes must become packets");
+    }
+
+    #[test]
+    fn machine_overflow_is_an_error() {
+        let (net, layers) = compiled(SwitchMode::ForceSerial);
+        // A machine with only 2 PEs cannot host this network.
+        let tiny = MachineSpec {
+            chips_x: 1,
+            chips_y: 1,
+            chip: crate::hardware::ChipSpec { pes_per_chip: 2, ..Default::default() },
+        };
+        assert!(Placement::new(&net, &layers, tiny).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration tests over the AOT bridge: artifacts/*.hlo.txt (built by
+//! `make artifacts`) loaded and executed through PJRT, checked against the
+//! native Rust paths. Requires the artifacts to exist — the Makefile's
+//! `test` target guarantees ordering.
+
+use s2switch::hardware::PeSpec;
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, NetworkBuilder, PopulationId};
+use s2switch::rng::Rng;
+use s2switch::runtime::{artifact_dir, PjrtMac, PjrtRuntime};
+use s2switch::sim::backend::{MacBackend, NativeMac};
+use s2switch::sim::NetworkSim;
+use s2switch::switching::{SwitchMode, SwitchingSystem};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn runtime() -> Rc<RefCell<PjrtRuntime>> {
+    let dir = artifact_dir();
+    assert!(
+        dir.join("mac_matvec_256x256.hlo.txt").exists(),
+        "artifacts missing — run `make artifacts` first (looked in {})",
+        dir.display()
+    );
+    Rc::new(RefCell::new(PjrtRuntime::new(dir).expect("pjrt cpu client")))
+}
+
+#[test]
+fn pjrt_matvec_equals_native_exactly() {
+    let rt = runtime();
+    let mut pjrt = PjrtMac::new(rt);
+    let mut native = NativeMac;
+    let mut rng = Rng::new(1);
+    for &(r, c) in &[(10usize, 10usize), (100, 64), (256, 256), (300, 200), (2048, 256)] {
+        let stacked: Vec<f32> = (0..r).map(|_| rng.below(4) as f32).collect();
+        let weights: Vec<f32> =
+            (0..r * c).map(|_| rng.range_i64(-127, 127) as f32).collect();
+        let a = pjrt.matvec(&stacked, &weights, r, c);
+        let b = native.matvec(&stacked, &weights, r, c);
+        assert_eq!(a, b, "pjrt != native at {r}x{c}");
+    }
+    assert!(pjrt.executions >= 5);
+}
+
+#[test]
+fn pjrt_weight_buffers_are_cached_across_steps() {
+    let rt = runtime();
+    let mut pjrt = PjrtMac::new(rt);
+    let weights: Vec<f32> = (0..64 * 32).map(|i| (i % 7) as f32).collect();
+    let s1: Vec<f32> = vec![1.0; 64];
+    let s2: Vec<f32> = vec![2.0; 64];
+    let a = pjrt.matvec(&s1, &weights, 64, 32);
+    let b = pjrt.matvec(&s2, &weights, 64, 32);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(*y, 2.0 * *x, "same weights, doubled stacked input");
+    }
+}
+
+#[test]
+fn lif_artifact_matches_rust_reference() {
+    let rt = runtime();
+    let mut rt = rt.borrow_mut();
+    let params = LifParams { alpha: 0.9, v_th: 1.0, ..Default::default() };
+    let mut rng = Rng::new(2);
+    let n = 200usize;
+    let v: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 0.5).collect();
+    let cur: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+
+    let (v_next, spiked) =
+        s2switch::runtime::pjrt::run_lif_step(&mut rt, &v, &cur, params.alpha, params.v_th)
+            .expect("lif artifact runs");
+
+    for i in 0..n {
+        let (want_v, want_spike, _) = s2switch::model::lif::lif_step(&params, v[i], cur[i], 0);
+        assert!((v_next[i] - want_v).abs() < 1e-5, "v[{i}]: {} vs {want_v}", v_next[i]);
+        assert_eq!(spiked[i] > 0.5, want_spike, "spike[{i}]");
+    }
+}
+
+#[test]
+fn full_network_identical_under_pjrt_and_native() {
+    // The three-layer claim: serial engine ≡ parallel engine on PJRT —
+    // same spike trains through the whole stack.
+    let build = || {
+        let mut b = NetworkBuilder::new(42);
+        let inp = b.spike_source("in", 60);
+        let hid = b.lif_population("hid", 40, LifParams { alpha: 0.85, ..Default::default() });
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.build()
+    };
+
+    let run = |pjrt: bool| -> Vec<(u64, u32)> {
+        let net = build();
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceParallel, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = if pjrt {
+            let rt = runtime();
+            NetworkSim::new(&net, layers, || Box::new(PjrtMac::new(rt.clone()))).unwrap()
+        } else {
+            NetworkSim::native(&net, layers).unwrap()
+        };
+        let mut rng = Rng::new(77);
+        let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
+            (0..60u32).filter(|_| rng.chance(0.25)).collect()
+        };
+        sim.run(50, &mut provider);
+        sim.recorder.spikes_of(PopulationId(1)).to_vec()
+    };
+
+    let native = run(false);
+    let pjrt = run(true);
+    assert!(!native.is_empty(), "network must spike");
+    assert_eq!(native, pjrt, "PJRT and native execution must agree exactly");
+}
