@@ -1,14 +1,19 @@
 //! Bench P1 — the paper's *motivating* quantity: compile-time and host-RAM
-//! saving of prejudged switching vs compile-both-then-pick.
+//! saving of prejudged switching vs compile-both-then-pick, plus the
+//! scaling of the threaded [`CompilePipeline`] itself.
 //!
 //! "the compiling time and the RAM occupation on the host PC are not
 //! negligible … The problem of compiling time gets even worse when
 //! compiling with two paradigms sequentially. Moreover, saving two
 //! compiling results may cause a RAM crisis on the host PC."
 //!
-//! We compile a batch of layers under each policy and report wall-clock,
-//! number of paradigm compilations, and bytes of discarded (wasted)
-//! compilation results.
+//! Part 1 compiles a batch of layers under each policy and reports
+//! wall-clock, number of paradigm compilations, and bytes of discarded
+//! (wasted) compilation results. Part 2 compiles the 640-layer medium
+//! sweep grid as one network through `SwitchingSystem::compile_network`
+//! sequentially (`--jobs 1`) and fanned out over all CPUs, asserting
+//! layer-for-layer identical results, and writes the machine-readable
+//! baseline to `BENCH_compile.json` (override with `S2SWITCH_BENCH_OUT`).
 //!
 //! ```bash
 //! cargo bench --bench compile_time
@@ -17,11 +22,31 @@
 use s2switch::bench_harness::{human_ns, Report};
 use s2switch::dataset::{generate_grid, realize_layer, SweepConfig};
 use s2switch::hardware::PeSpec;
-use s2switch::model::LifParams;
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder};
 use s2switch::paradigm::parallel::WdmConfig;
 use s2switch::rng::Rng;
 use s2switch::switching::{SwitchMode, SwitchingSystem};
 use std::time::Instant;
+
+/// The medium sweep grid (640 layers) realized as one network: each grid
+/// item becomes a spike-source → LIF projection.
+fn sweep_network() -> Network {
+    let cfg = SweepConfig::medium();
+    let mut b = NetworkBuilder::new(2024);
+    for (i, &(src, tgt, d, dl, _seed)) in cfg.items().iter().enumerate() {
+        let s = b.spike_source(&format!("in{i}"), src);
+        let t = b.lif_population(&format!("l{i}"), tgt, LifParams::default());
+        b.project(
+            s,
+            t,
+            Connector::FixedProbability(d),
+            SynapseDraw { delay_range: dl, w_max: 127, ..Default::default() },
+            0.01,
+        );
+    }
+    b.build()
+}
 
 fn main() {
     let pe = PeSpec::default();
@@ -81,4 +106,81 @@ fn main() {
         ideal / fast,
         if fast < ideal { "saving reproduced ✓" } else { "NOT reproduced ✗" }
     );
+
+    // ---- Part 2: pipeline scaling on the 640-layer medium grid ---------
+    let n_jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    println!(
+        "\nrealizing the medium sweep grid as one {}-layer network…",
+        SweepConfig::medium().n_layers()
+    );
+    let net = sweep_network();
+
+    let mut seq = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    seq.set_jobs(1);
+    let t0 = Instant::now();
+    let run_seq = seq.compile_network_report(&net).unwrap();
+    let t_seq = t0.elapsed();
+
+    let mut par = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    par.set_jobs(n_jobs);
+    let t0 = Instant::now();
+    let run_par = par.compile_network_report(&net).unwrap();
+    let t_par = t0.elapsed();
+
+    // The pipeline's contract: identical layers and stats at any job count.
+    let identical = run_seq.layers.len() == run_par.layers.len()
+        && run_seq
+            .layers
+            .iter()
+            .zip(&run_par.layers)
+            .all(|(a, b)| a.paradigm() == b.paradigm() && a.n_pes() == b.n_pes())
+        && seq.stats == par.stats;
+
+    let speedup = t_seq.as_secs_f64() / t_par.as_secs_f64();
+    let mut rep = Report::new(
+        "CompilePipeline scaling — 640-layer medium grid, ideal (compile-both) mode",
+        &["jobs", "wall-clock", "paradigm compiles", "cache hits"],
+    );
+    rep.row(vec![
+        "1".into(),
+        human_ns(t_seq.as_nanos() as f64),
+        seq.stats.total_compiles().to_string(),
+        seq.stats.cache_hits.to_string(),
+    ]);
+    rep.row(vec![
+        n_jobs.to_string(),
+        human_ns(t_par.as_nanos() as f64),
+        par.stats.total_compiles().to_string(),
+        par.stats.cache_hits.to_string(),
+    ]);
+    rep.finish();
+    println!(
+        "pipeline with {n_jobs} jobs: {speedup:.2}× vs sequential, outputs identical: {} → {}",
+        identical,
+        if speedup > 1.0 && identical { "scaling reproduced ✓" } else { "NOT reproduced ✗" }
+    );
+
+    // ---- Machine-readable baseline -------------------------------------
+    let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_compile.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"compile_time\",\n  \"probe_layers\": {},\n  \"policy_wall_ns\": {{\n    \"serial_only\": {},\n    \"parallel_only\": {},\n    \"ideal\": {},\n    \"classifier\": {}\n  }},\n  \"classifier_speedup_vs_ideal\": {:.4},\n  \"pipeline\": {{\n    \"grid_layers\": {},\n    \"jobs\": {},\n    \"sequential_ns\": {},\n    \"parallel_ns\": {},\n    \"speedup\": {:.4},\n    \"deterministic\": {},\n    \"paradigm_compiles\": {},\n    \"cache_hits\": {}\n  }}\n}}\n",
+        probes.len(),
+        times["serial only"].as_nanos(),
+        times["parallel only"].as_nanos(),
+        times["ideal (compile both)"].as_nanos(),
+        times["classifier (prejudged)"].as_nanos(),
+        ideal / fast,
+        run_seq.layers.len(),
+        n_jobs,
+        t_seq.as_nanos(),
+        t_par.as_nanos(),
+        speedup,
+        identical,
+        par.stats.total_compiles(),
+        par.stats.cache_hits,
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("baseline written to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

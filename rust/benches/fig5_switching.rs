@@ -15,10 +15,20 @@
 use s2switch::bench_harness::Report;
 use s2switch::classifier::{AdaBoost, Classifier};
 use s2switch::coordinator::dataset_cached;
-use s2switch::dataset::SweepConfig;
+use s2switch::dataset::{Sample, SweepConfig};
 use s2switch::paradigm::Paradigm;
+use s2switch::switching::SwitchPolicy;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+
+/// PEs the corpus sample needs under `paradigm` — both counts were produced
+/// by the pipeline's estimate mode at labeling time.
+fn pes_under(s: &Sample, paradigm: Paradigm) -> usize {
+    match paradigm {
+        Paradigm::Serial => s.serial_pes,
+        Paradigm::Parallel => s.parallel_pes,
+    }
+}
 
 fn main() {
     let full = std::env::var_os("S2SWITCH_FULL").is_some();
@@ -54,12 +64,11 @@ fn main() {
         a.n += 1;
         a.serial += s.serial_pes;
         a.parallel += s.parallel_pes;
-        a.ideal += s.serial_pes.min(s.parallel_pes);
+        // The ideal line is SwitchPolicy's comparison — the same code path
+        // Ideal-mode compilation and dataset labeling run.
+        a.ideal += pes_under(s, SwitchPolicy::cheaper(s.serial_pes, s.parallel_pes));
         let pred = Paradigm::from_label(ab.predict(&s.features()));
-        a.real += match pred {
-            Paradigm::Serial => s.serial_pes,
-            Paradigm::Parallel => s.parallel_pes,
-        };
+        a.real += pes_under(s, pred);
         a.correct += usize::from(pred == s.label());
     }
 

@@ -11,8 +11,9 @@ use s2switch::costmodel::parallel::{dominant_cost, subordinate_fixed_cost};
 use s2switch::costmodel::serial::{serial_layout, serial_pe_cost};
 use s2switch::dataset::realize_layer;
 use s2switch::hardware::PeSpec;
-use s2switch::model::LayerCharacter;
+use s2switch::model::{LayerCharacter, LifParams};
 use s2switch::paradigm::parallel::wdm::{build_wdm, WdmConfig};
+use s2switch::paradigm::{LayerJob, ParadigmCompiler, ParallelCompiler, SerialCompiler};
 use s2switch::rng::Rng;
 
 fn main() {
@@ -100,4 +101,41 @@ fn main() {
         serial_layout(&LayerCharacter::new(500, 500, 1.0, 16), &pe).unwrap().n_pes()
     });
     bench.run("dominant_cost (closed form)", || dominant_cost(n, n, delay, 1).total());
+
+    // ---- ParadigmCompiler: estimate tier vs materialize tier -----------
+    // The trait's contract: the shape-only estimate (what the dataset
+    // labeler runs 32,000 times) and the full compile report identical PE
+    // counts and DTCM-consistent totals.
+    let mut rep = Report::new(
+        "ParadigmCompiler — estimate vs full compile (PE counts must match)",
+        &["layer", "paradigm", "est PEs", "compiled PEs", "est DTCM B", "compiled DTCM B"],
+    );
+    let mut all_match = true;
+    for &(ns, nt, d, dl, seed) in
+        &[(255usize, 255usize, 1.0, 1u16, 21u64), (255, 255, 0.1, 16, 22), (500, 300, 0.5, 8, 23)]
+    {
+        let mut rng = Rng::new(seed);
+        let proj = realize_layer(ns, nt, d, dl, &mut rng);
+        let job = LayerJob::new(&proj, ns, nt, LifParams::default());
+        for c in
+            [&SerialCompiler as &dyn ParadigmCompiler, &ParallelCompiler::new(WdmConfig::default())]
+        {
+            let est = c.estimate(&job, &pe).unwrap();
+            let full = c.compile(&job, &pe).unwrap();
+            all_match &= est.layer_pes == full.n_pes();
+            rep.row(vec![
+                format!("{ns}x{nt} d={d:.1} dl={dl}"),
+                c.paradigm().to_string(),
+                est.total_pes().to_string(),
+                full.cost_estimate(&pe).total_pes().to_string(),
+                est.dtcm_bytes.to_string(),
+                full.total_dtcm().to_string(),
+            ]);
+        }
+    }
+    rep.finish();
+    println!(
+        "estimate tier agrees with materialize tier: {}",
+        if all_match { "reproduced ✓" } else { "NOT reproduced ✗" }
+    );
 }

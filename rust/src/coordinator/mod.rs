@@ -4,11 +4,12 @@
 //!
 //! Concurrency note: the offline vendored crate set has no tokio, so the
 //! coordinator parallelizes CPU-bound stages with scoped OS threads
-//! (dataset labeling in [`crate::dataset::generate_grid`], per-seed
-//! classifier training in [`train_roster`]) — see DESIGN.md §2.
+//! (layer compilation and estimate-mode labeling through
+//! [`crate::switching::CompilePipeline`], per-seed classifier training in
+//! [`train_roster`]) — see DESIGN.md §2.
 
 use crate::classifier::{accuracy, roster, train_test_split, AdaBoost, Classifier};
-use crate::dataset::{generate_grid, Dataset, SweepConfig};
+use crate::dataset::{generate_grid_jobs, Dataset, SweepConfig};
 use crate::hardware::PeSpec;
 use crate::io::Json;
 use crate::paradigm::parallel::WdmConfig;
@@ -41,6 +42,12 @@ impl ClassifierScore {
 
 /// Generate (or load) the 16k-layer dataset, caching it as CSV.
 pub fn dataset_cached(path: &Path, cfg: &SweepConfig) -> Result<Dataset> {
+    dataset_cached_jobs(path, cfg, 0)
+}
+
+/// [`dataset_cached`] with an explicit labeling worker-thread count
+/// (0 = auto).
+pub fn dataset_cached_jobs(path: &Path, cfg: &SweepConfig, jobs: usize) -> Result<Dataset> {
     if path.exists() {
         let ds = Dataset::load_csv(path)?;
         if ds.len() == cfg.n_layers() {
@@ -54,7 +61,7 @@ pub fn dataset_cached(path: &Path, cfg: &SweepConfig) -> Result<Dataset> {
         );
     }
     let t0 = Instant::now();
-    let ds = generate_grid(cfg, &PeSpec::default(), WdmConfig::default());
+    let ds = generate_grid_jobs(cfg, &PeSpec::default(), WdmConfig::default(), jobs);
     eprintln!("labeled {} layers in {:.2?}", ds.len(), t0.elapsed());
     ds.save_csv(path)?;
     Ok(ds)
@@ -129,6 +136,7 @@ pub fn load_switching_system(model_path: &Path, pe: PeSpec) -> Result<SwitchingS
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dataset::generate_grid;
 
     fn small_dataset() -> Dataset {
         generate_grid(&SweepConfig::small(), &PeSpec::default(), WdmConfig::default())

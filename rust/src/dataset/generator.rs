@@ -1,15 +1,22 @@
-//! Grid sweep generation + double-compile labeling.
+//! Grid sweep generation + estimate-mode labeling.
+//!
+//! Labeling one layer is "run both compilers via the pipeline in estimate
+//! mode": the serial and parallel [`crate::paradigm::ParadigmCompiler`]s
+//! report shape-only [`crate::paradigm::CostEstimate`]s and
+//! [`SwitchPolicy::cheaper`] ranks them — the *same* code path the Ideal
+//! switching mode uses, so the 16k-layer corpus and the real compiler can
+//! never disagree about what "cheaper" means.
 
-use crate::costmodel::serial::serial_pe_count;
 use crate::hardware::PeSpec;
 use crate::io::csv;
 use crate::model::connector::{Connector, SynapseDraw};
-use crate::model::{LayerCharacter, PopulationId, Projection, ProjectionId};
-use crate::paradigm::parallel::splitting::two_stage_split;
-use crate::paradigm::parallel::wdm::{build_wdm_shape, WdmConfig};
-use crate::paradigm::Paradigm;
+use crate::model::{LayerCharacter, LifParams, PopulationId, Projection, ProjectionId};
+use crate::paradigm::parallel::wdm::WdmConfig;
+use crate::paradigm::{LayerJob, ParadigmCompiler, Paradigm, ParallelCompiler, SerialCompiler};
 use crate::rng::Rng;
-use anyhow::{Context, Result};
+use crate::switching::pipeline::{fan_out, CompileJob, CompilePipeline};
+use crate::switching::SwitchPolicy;
+use anyhow::{ensure, Context, Result};
 use std::path::Path;
 
 /// The paper's sweep axes.
@@ -63,6 +70,31 @@ impl SweepConfig {
     pub fn n_layers(&self) -> usize {
         self.sources.len() * self.targets.len() * self.densities.len() * self.delays.len()
     }
+
+    /// Flatten the grid into `(src, tgt, density, delay, connector seed)`
+    /// work items. Each item carries its own derived RNG seed so labeling
+    /// results are independent of thread scheduling.
+    pub fn items(&self) -> Vec<(usize, usize, f64, u16, u64)> {
+        let mut items = Vec::with_capacity(self.n_layers());
+        let mut idx = 0u64;
+        for &src in &self.sources {
+            for &tgt in &self.targets {
+                for &d in &self.densities {
+                    for &dl in &self.delays {
+                        items.push((
+                            src,
+                            tgt,
+                            d,
+                            dl,
+                            self.seed.wrapping_add(idx.wrapping_mul(0x9E3779B97F4A7C15)),
+                        ));
+                        idx += 1;
+                    }
+                }
+            }
+        }
+        items
+    }
 }
 
 /// One labeled layer.
@@ -74,13 +106,10 @@ pub struct Sample {
 }
 
 impl Sample {
-    /// The cheaper paradigm; ties go to serial.
+    /// The cheaper paradigm — [`SwitchPolicy::cheaper`], the same
+    /// comparison Ideal-mode compilation runs (ties go to serial).
     pub fn label(&self) -> Paradigm {
-        if self.parallel_pes < self.serial_pes {
-            Paradigm::Parallel
-        } else {
-            Paradigm::Serial
-        }
+        SwitchPolicy::cheaper(self.serial_pes, self.parallel_pes)
     }
 
     /// Classifier features `[delay_range, n_source, n_target, density]`.
@@ -94,6 +123,17 @@ impl Sample {
 pub struct Dataset {
     pub samples: Vec<Sample>,
 }
+
+/// Column names of the dataset CSV, in order.
+pub const CSV_COLUMNS: [&str; 7] = [
+    "delay_range",
+    "n_source",
+    "n_target",
+    "density",
+    "serial_pes",
+    "parallel_pes",
+    "label",
+];
 
 impl Dataset {
     pub fn len(&self) -> usize {
@@ -116,7 +156,7 @@ impl Dataset {
     pub fn save_csv(&self, path: &Path) -> Result<()> {
         csv::write_csv(
             path,
-            &["delay_range", "n_source", "n_target", "density", "serial_pes", "parallel_pes", "label"],
+            &CSV_COLUMNS,
             self.samples.iter().map(|s| {
                 vec![
                     s.character.delay_range.to_string(),
@@ -132,16 +172,36 @@ impl Dataset {
         Ok(())
     }
 
-    /// Load from CSV.
+    /// Load from CSV, validating the header against [`CSV_COLUMNS`] and
+    /// every row's shape/content (errors name the offending 1-based line).
     pub fn load_csv(path: &Path) -> Result<Dataset> {
-        let (_, rows) = csv::read_csv(path)?;
+        let (header, rows) = csv::read_csv(path)?;
+        ensure!(
+            header == CSV_COLUMNS,
+            "dataset csv {}: header {:?} does not match expected columns {:?}",
+            path.display(),
+            header,
+            CSV_COLUMNS
+        );
         let mut samples = Vec::with_capacity(rows.len());
-        for row in rows {
-            let f = |i: usize| -> Result<f64> {
-                row.get(i)
-                    .context("short row")?
-                    .parse::<f64>()
-                    .context("bad number in dataset csv")
+        for (i, row) in rows.iter().enumerate() {
+            let line = i + 2; // 1-based, after the header row
+            ensure!(
+                row.len() == CSV_COLUMNS.len(),
+                "dataset csv {} line {line}: {} fields, expected {}",
+                path.display(),
+                row.len(),
+                CSV_COLUMNS.len()
+            );
+            let f = |col: usize| -> Result<f64> {
+                row[col].parse::<f64>().with_context(|| {
+                    format!(
+                        "dataset csv {} line {line}: bad number {:?} in column '{}'",
+                        path.display(),
+                        row[col],
+                        CSV_COLUMNS[col]
+                    )
+                })
             };
             samples.push(Sample {
                 character: LayerCharacter::new(
@@ -182,11 +242,14 @@ pub fn realize_layer(
     }
 }
 
-/// Label one layer: realize its synapses, compile both paradigms, count PEs.
+/// Label one layer: realize its synapses, run **both** paradigm compilers
+/// in estimate mode, count PEs.
 ///
-/// The parallel count runs the real WDM build + two-stage split (skipping
-/// chunk-weight materialization, which does not affect PE counts); the
-/// serial count uses the closed-form Table I layout.
+/// The parallel estimate runs the real WDM build + two-stage split
+/// (skipping chunk-weight materialization, which does not affect PE
+/// counts); the serial estimate uses the closed-form Table I layout. The
+/// character is the *nominal* sweep coordinate (what the classifier will
+/// see at prejudging time — before any compilation).
 pub fn label_layer(
     n_source: usize,
     n_target: usize,
@@ -197,69 +260,53 @@ pub fn label_layer(
     rng: &mut Rng,
 ) -> Sample {
     let proj = realize_layer(n_source, n_target, density, delay_range, rng);
-    // Use the *nominal* sweep coordinates as the character (what the
-    // classifier will see at prejudging time — before any compilation).
     let character = LayerCharacter::new(n_source, n_target, density, delay_range);
-
-    // Serial per-layer PE count = target-side layout (Table I) plus the
-    // ceil(n_source/255) PEs hosting the source population — the paper's
-    // source-side 255 cap (and what makes its gesture model need 9 serial
-    // PEs for 2048 inputs). The parallel paradigm absorbs source handling
-    // into the dominant PE's input-spike buffer, so no analogous charge.
-    let hosting = n_source.div_ceil(pe.serial_neuron_cap);
-    let serial_pes = serial_pe_count(&character, pe)
-        .expect("sweep layer must be serially placeable")
-        + hosting;
-
-    let n_source_vertex = n_source.div_ceil(pe.serial_neuron_cap);
-    // Shape-only WDM: PE counting never touches the weight block.
-    let wdm = build_wdm_shape(&proj, n_source, n_target, config);
-    let plan = two_stage_split(&wdm, pe, n_source_vertex)
+    let job = LayerJob::new(&proj, n_source, n_target, LifParams::default())
+        .with_character(character);
+    let serial = SerialCompiler
+        .estimate(&job, pe)
+        .expect("sweep layer must be serially placeable");
+    let parallel = ParallelCompiler::new(config)
+        .estimate(&job, pe)
         .expect("sweep layer must be parallel placeable");
-    let parallel_pes = 1 + plan.n_subordinates();
-
-    Sample { character, serial_pes, parallel_pes }
+    Sample {
+        character,
+        serial_pes: serial.total_pes(),
+        parallel_pes: parallel.total_pes(),
+    }
 }
 
-/// Generate the full labeled grid, parallelized over OS threads.
+/// Generate the full labeled grid through the compile pipeline's estimate
+/// mode, parallelized over OS threads (auto thread count).
 pub fn generate_grid(cfg: &SweepConfig, pe: &PeSpec, config: WdmConfig) -> Dataset {
-    // Flatten the grid into work items, each with its own derived RNG seed
-    // so results are independent of thread scheduling.
-    let mut items: Vec<(usize, usize, f64, u16, u64)> = Vec::with_capacity(cfg.n_layers());
-    let mut idx = 0u64;
-    for &src in &cfg.sources {
-        for &tgt in &cfg.targets {
-            for &d in &cfg.densities {
-                for &dl in &cfg.delays {
-                    items.push((src, tgt, d, dl, cfg.seed.wrapping_add(idx.wrapping_mul(0x9E3779B97F4A7C15))));
-                    idx += 1;
-                }
-            }
-        }
-    }
+    generate_grid_jobs(cfg, pe, config, 0)
+}
 
-    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let chunk = items.len().div_ceil(n_threads.max(1));
-    let mut samples = vec![
+/// [`generate_grid`] with an explicit worker-thread count (0 = one per
+/// CPU, 1 = sequential).
+pub fn generate_grid_jobs(
+    cfg: &SweepConfig,
+    pe: &PeSpec,
+    config: WdmConfig,
+    jobs: usize,
+) -> Dataset {
+    let items = cfg.items();
+    let pipeline = CompilePipeline::new(*pe, config).with_jobs(jobs);
+    let samples = fan_out(pipeline.jobs(), items.len(), |i| {
+        let (src, tgt, d, dl, seed) = items[i];
+        let mut rng = Rng::new(seed);
+        let proj = realize_layer(src, tgt, d, dl, &mut rng);
+        let character = LayerCharacter::new(src, tgt, d, dl);
+        let job = CompileJob::from_character(&proj, character, LifParams::default(), seed);
+        let (serial, parallel) = pipeline
+            .estimate_pair(&job)
+            .expect("sweep layer must be placeable under both paradigms");
         Sample {
-            character: LayerCharacter::new(1, 1, 0.0, 1),
-            serial_pes: 0,
-            parallel_pes: 0
-        };
-        items.len()
-    ];
-
-    std::thread::scope(|scope| {
-        for (slot, work) in samples.chunks_mut(chunk).zip(items.chunks(chunk)) {
-            scope.spawn(move || {
-                for (out, &(src, tgt, d, dl, seed)) in slot.iter_mut().zip(work) {
-                    let mut rng = Rng::new(seed);
-                    *out = label_layer(src, tgt, d, dl, pe, config, &mut rng);
-                }
-            });
+            character,
+            serial_pes: serial.total_pes(),
+            parallel_pes: parallel.total_pes(),
         }
     });
-
     Dataset { samples }
 }
 
@@ -271,6 +318,7 @@ mod tests {
     fn sweep_grid_sizes() {
         assert_eq!(SweepConfig::default().n_layers(), 16_000);
         assert_eq!(SweepConfig::small().n_layers(), 48);
+        assert_eq!(SweepConfig::small().items().len(), 48);
     }
 
     #[test]
@@ -294,12 +342,26 @@ mod tests {
 
     #[test]
     fn generation_is_scheduling_independent() {
-        // Per-item seeds mean the parallel generation equals a serial rerun.
+        // Per-item seeds mean any worker count labels identically.
         let cfg = SweepConfig::small();
         let pe = PeSpec::default();
-        let a = generate_grid(&cfg, &pe, WdmConfig::default());
-        let b = generate_grid(&cfg, &pe, WdmConfig::default());
+        let a = generate_grid_jobs(&cfg, &pe, WdmConfig::default(), 1);
+        let b = generate_grid_jobs(&cfg, &pe, WdmConfig::default(), 8);
         assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn grid_labels_match_label_layer() {
+        // The pipeline estimate path and the direct label_layer path are
+        // the same code; spot-check agreement on the small grid.
+        let cfg = SweepConfig::small();
+        let pe = PeSpec::default();
+        let ds = generate_grid(&cfg, &pe, WdmConfig::default());
+        for (&(src, tgt, d, dl, seed), sample) in cfg.items().iter().zip(&ds.samples) {
+            let direct =
+                label_layer(src, tgt, d, dl, &pe, WdmConfig::default(), &mut Rng::new(seed));
+            assert_eq!(*sample, direct);
+        }
     }
 
     #[test]
@@ -315,6 +377,48 @@ mod tests {
             assert_eq!(a.parallel_pes, b.parallel_pes);
             assert!((a.character.density - b.character.density).abs() < 1e-6);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_csv_rejects_wrong_header() {
+        let dir = std::env::temp_dir().join("s2switch_ds_hdr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "a,b,c\n1,2,3\n").unwrap();
+        let err = Dataset::load_csv(&path).unwrap_err().to_string();
+        assert!(err.contains("header"), "unhelpful error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_csv_reports_offending_line() {
+        let dir = std::env::temp_dir().join("s2switch_ds_row_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Short row on (1-based) line 3.
+        let path = dir.join("short.csv");
+        std::fs::write(
+            &path,
+            "delay_range,n_source,n_target,density,serial_pes,parallel_pes,label\n\
+             4,100,100,0.5,3,4,1\n\
+             4,100,100\n",
+        )
+        .unwrap();
+        let err = Dataset::load_csv(&path).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "unhelpful error: {err}");
+
+        // Non-numeric field on line 2.
+        let path = dir.join("nan.csv");
+        std::fs::write(
+            &path,
+            "delay_range,n_source,n_target,density,serial_pes,parallel_pes,label\n\
+             4,oops,100,0.5,3,4,1\n",
+        )
+        .unwrap();
+        let err = format!("{:#}", Dataset::load_csv(&path).unwrap_err());
+        assert!(err.contains("line 2") && err.contains("n_source"), "unhelpful error: {err}");
+
         std::fs::remove_dir_all(&dir).ok();
     }
 

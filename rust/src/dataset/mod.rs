@@ -13,4 +13,7 @@
 
 pub mod generator;
 
-pub use generator::{generate_grid, label_layer, realize_layer, Dataset, Sample, SweepConfig};
+pub use generator::{
+    generate_grid, generate_grid_jobs, label_layer, realize_layer, Dataset, Sample, SweepConfig,
+    CSV_COLUMNS,
+};

@@ -12,12 +12,16 @@
 //!   NoC).
 //! * [`costmodel`] — the paper's Table I DTCM cost models.
 //! * [`paradigm`] — the serial (ARM, event-driven) and parallel (MAC-array)
-//!   compilation paradigms.
+//!   compilation paradigms, unified behind the object-safe
+//!   [`paradigm::ParadigmCompiler`] trait (shape-only estimate tier + full
+//!   materialization tier; DESIGN.md §1).
 //! * [`classifier`] — twelve from-scratch classifiers used to *prejudge* the
 //!   cheaper paradigm per layer.
 //! * [`dataset`] — the 16,000-random-layer dataset acquisition pipeline.
 //! * [`switching`] — the paper's contribution: the classifier-integrated
-//!   fast-switching compilation system.
+//!   fast-switching compilation system, split into the pure
+//!   [`switching::SwitchPolicy`] decision and the threaded, cache-aware
+//!   [`switching::CompilePipeline`] execution engine.
 //! * [`sim`] — a functional SpiNNaker2 simulator executing compiled layers
 //!   under either paradigm (parallel path runs AOT-compiled JAX/Pallas HLO
 //!   through PJRT via [`runtime`]).

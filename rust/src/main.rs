@@ -3,16 +3,20 @@
 //! Subcommands (hand-rolled parser; clap is not in the offline crate set):
 //!
 //! ```text
-//! s2switch dataset  [--out data/dataset.csv] [--small]
+//! s2switch dataset  [--out data/dataset.csv] [--small] [--jobs N]
 //! s2switch train    [--data data/dataset.csv] [--seeds 20] [--out data/adaboost.json]
 //! s2switch decide   --src N --tgt N --density F --delay N [--model data/adaboost.json]
 //! s2switch compile  --src N --tgt N --density F --delay N [--mode serial|parallel|ideal|classifier]
-//! s2switch simulate [--steps 200] [--pjrt]   # demo 3-layer network
+//! s2switch simulate [--steps 200] [--pjrt] [--jobs N]   # demo 3-layer network
 //! ```
+//!
+//! `--jobs N` sets the compile-pipeline worker-thread count (0 = one
+//! thread per CPU) for dataset labeling and network compilation.
 
 use anyhow::{bail, Context, Result};
 use s2switch::coordinator::{
-    dataset_cached, load_switching_system, train_and_save_adaboost, train_roster,
+    dataset_cached, dataset_cached_jobs, load_switching_system, train_and_save_adaboost,
+    train_roster,
 };
 use s2switch::dataset::SweepConfig;
 use s2switch::hardware::PeSpec;
@@ -71,11 +75,12 @@ impl Args {
 }
 
 const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [flags]
-  dataset   --out PATH --small            generate + label the sweep corpus
+  dataset   --out PATH --small --jobs N   generate + label the sweep corpus
   train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
   decide    --src N --tgt N --density F --delay N --model PATH
   compile   --src N --tgt N --density F --delay N --mode MODE
-  simulate  --steps N --pjrt              run the demo network end to end";
+  simulate  --steps N --pjrt --jobs N     run the demo network end to end
+  (--jobs N: compile-pipeline worker threads, 0 = one per CPU)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -97,7 +102,8 @@ fn main() -> Result<()> {
 fn cmd_dataset(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").unwrap_or("data/dataset.csv"));
     let cfg = if args.has("small") { SweepConfig::small() } else { SweepConfig::default() };
-    let ds = dataset_cached(&out, &cfg)?;
+    let jobs: usize = args.parse_or("jobs", 0)?;
+    let ds = dataset_cached_jobs(&out, &cfg, jobs)?;
     let parallel_wins = ds.samples.iter().filter(|s| s.parallel_pes < s.serial_pes).count();
     println!(
         "dataset: {} layers → {} ({} favor parallel, {} favor serial)",
@@ -135,6 +141,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--jobs N` (absent or 0 → one worker per CPU, resolved by the pipeline).
+fn resolve_jobs(args: &Args) -> Result<usize> {
+    args.parse_or("jobs", 0)
+}
+
 fn layer_flags(args: &Args) -> Result<LayerCharacter> {
     Ok(LayerCharacter::new(
         args.parse_or("src", 255usize)?,
@@ -149,13 +160,12 @@ fn cmd_decide(args: &Args) -> Result<()> {
     let model = PathBuf::from(args.get("model").unwrap_or("data/adaboost.json"));
     let sys = load_switching_system(&model, PeSpec::default())
         .context("train a model first: s2switch train")?;
+    let verdict = sys
+        .prejudge(&ch)
+        .expect("a loaded classifier system always prejudges");
     println!(
         "layer (src={}, tgt={}, density={:.2}, delay={}) → {}",
-        ch.n_source,
-        ch.n_target,
-        ch.density,
-        ch.delay_range,
-        sys.prejudge(&ch)
+        ch.n_source, ch.n_target, ch.density, ch.delay_range, verdict
     );
     Ok(())
 }
@@ -175,6 +185,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
     } else {
         SwitchingSystem::new(mode, PeSpec::default())
     };
+    sys.set_jobs(resolve_jobs(args)?);
     // Realize the layer.
     let mut rng = Rng::new(args.parse_or("seed", 1u64)?);
     let synapses = Connector::FixedProbability(ch.density).build(
@@ -234,10 +245,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let rate: f64 = args.parse_or("rate", 0.15)?;
 
     let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
-    let (layers, _) = sys.compile_network(&net)?;
+    sys.set_jobs(resolve_jobs(args)?);
+    let run = sys.compile_network_report(&net)?;
+    let layers = run.layers;
     for (i, l) in layers.iter().enumerate() {
-        println!("layer {i}: {} ({} PEs)", l.paradigm(), l.n_pes());
+        println!(
+            "layer {i}: {} ({} PEs, compiled in {:.2?})",
+            l.paradigm(),
+            l.n_pes(),
+            std::time::Duration::from_nanos(run.layer_nanos[i])
+        );
     }
+    println!(
+        "compiled {} layers on {} worker(s) in {:.2?} ({} compiles, {} cache hits)",
+        layers.len(),
+        sys.jobs(),
+        std::time::Duration::from_nanos(run.wall_nanos),
+        run.stats.total_compiles(),
+        run.stats.cache_hits
+    );
 
     // Place + route on the machine (Fig. 2's tail) and report.
     let placement = s2switch::switching::Placement::new(

@@ -11,9 +11,32 @@
 //! per-PE programs, report their DTCM footprint per Table I, and are
 //! executable by [`crate::sim`]. The [`Paradigm`] enum is the switching
 //! system's decision alphabet.
+//!
+//! The [`ParadigmCompiler`] trait (DESIGN.md §1) unifies the two compile
+//! entry points behind one object-safe interface with **two tiers**:
+//!
+//! * [`ParadigmCompiler::estimate`] — shape-only PE/DTCM accounting, the
+//!   path the 16k-layer dataset labeler runs 32,000 times (it never needs
+//!   per-PE programs, only counts);
+//! * [`ParadigmCompiler::compile`] — full per-PE program materialization,
+//!   the path real network deployment runs.
+//!
+//! Both tiers are implemented from the same cost-model/splitting code so
+//! `estimate(job).layer_pes == compile(job).n_pes()` by construction; the
+//! labeler and the real compiler can no longer diverge.
 
 pub mod parallel;
 pub mod serial;
+
+use crate::costmodel::parallel::dominant_cost;
+use crate::costmodel::serial::serial_layout;
+use crate::hardware::PeSpec;
+use crate::model::{LayerCharacter, LifParams, Projection};
+use anyhow::{ensure, Context, Result};
+use self::parallel::splitting::two_stage_split;
+use self::parallel::wdm::build_wdm_shape;
+use self::parallel::{compile_parallel, ParallelCompiled, WdmConfig};
+use self::serial::{compile_serial, SerialCompiled};
 
 /// Which paradigm a layer is compiled under — the classifier's label space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -53,9 +76,238 @@ impl std::fmt::Display for Paradigm {
     }
 }
 
+/// A compiled layer under whichever paradigm was selected.
+#[derive(Clone, Debug)]
+pub enum CompiledLayer {
+    Serial(SerialCompiled),
+    Parallel(ParallelCompiled),
+}
+
+impl CompiledLayer {
+    pub fn paradigm(&self) -> Paradigm {
+        match self {
+            CompiledLayer::Serial(_) => Paradigm::Serial,
+            CompiledLayer::Parallel(_) => Paradigm::Parallel,
+        }
+    }
+
+    pub fn n_pes(&self) -> usize {
+        match self {
+            CompiledLayer::Serial(c) => c.n_pes(),
+            CompiledLayer::Parallel(c) => c.n_pes(),
+        }
+    }
+
+    pub fn total_dtcm(&self) -> usize {
+        match self {
+            CompiledLayer::Serial(c) => c.total_dtcm(),
+            CompiledLayer::Parallel(c) => c.total_dtcm(),
+        }
+    }
+
+    pub fn character(&self) -> &LayerCharacter {
+        match self {
+            CompiledLayer::Serial(c) => &c.character,
+            CompiledLayer::Parallel(c) => &c.character,
+        }
+    }
+
+    /// Cost summary of a materialized layer, in the same units
+    /// [`ParadigmCompiler::estimate`] reports — so Ideal-mode decisions made
+    /// *after* compiling both and labeler decisions made *before* compiling
+    /// anything feed identical numbers into [`CostEstimate`] comparisons.
+    pub fn cost_estimate(&self, pe: &PeSpec) -> CostEstimate {
+        let source_hosting_pes = match self {
+            CompiledLayer::Serial(c) => {
+                c.character.n_source.div_ceil(pe.serial_neuron_cap)
+            }
+            CompiledLayer::Parallel(_) => 0,
+        };
+        CostEstimate {
+            paradigm: self.paradigm(),
+            layer_pes: self.n_pes(),
+            source_hosting_pes,
+            dtcm_bytes: self.total_dtcm(),
+        }
+    }
+}
+
+/// Shape-only cost of compiling one layer under one paradigm.
+///
+/// The serial paradigm additionally charges `ceil(n_source/255)` PEs to host
+/// the source population (sPyNNaker maps input populations to cores); the
+/// parallel paradigm absorbs source handling into the dominant PE's
+/// input-spike buffer (§III-B) and charges nothing. [`CostEstimate::total_pes`]
+/// is the quantity every serial-vs-parallel comparison in the system ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostEstimate {
+    pub paradigm: Paradigm,
+    /// PEs occupied by the layer itself (serial layout PEs, or the parallel
+    /// dominant + subordinates).
+    pub layer_pes: usize,
+    /// Extra PEs charged for hosting the source population.
+    pub source_hosting_pes: usize,
+    /// Cost-model DTCM bytes across the layer's PEs.
+    pub dtcm_bytes: usize,
+}
+
+impl CostEstimate {
+    /// The PE count the switching decision compares.
+    pub fn total_pes(&self) -> usize {
+        self.layer_pes + self.source_hosting_pes
+    }
+}
+
+/// One layer's compile input: the realized projection plus the population
+/// sizes and target-neuron parameters the compilers need.
+///
+/// `character` is the 4-factor character the estimator (and prejudger) sees.
+/// [`LayerJob::new`] measures it from the projection; the dataset labeler
+/// overrides it with the *nominal* sweep coordinates via
+/// [`LayerJob::with_character`] (the classifier must see pre-compilation
+/// numbers, exactly as it will at deployment time).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerJob<'a> {
+    pub proj: &'a Projection,
+    pub character: LayerCharacter,
+    pub n_source: usize,
+    pub n_target: usize,
+    pub params: LifParams,
+}
+
+impl<'a> LayerJob<'a> {
+    pub fn new(
+        proj: &'a Projection,
+        n_source: usize,
+        n_target: usize,
+        params: LifParams,
+    ) -> Self {
+        LayerJob {
+            proj,
+            character: LayerCharacter::of_projection(proj, n_source, n_target),
+            n_source,
+            n_target,
+            params,
+        }
+    }
+
+    /// Override the measured character (dataset labeling uses the nominal
+    /// sweep coordinates).
+    pub fn with_character(mut self, character: LayerCharacter) -> Self {
+        self.character = character;
+        self
+    }
+}
+
+/// One paradigm's compiler, object-safe so the switching system can hold
+/// and dispatch over `&dyn ParadigmCompiler`.
+pub trait ParadigmCompiler: Send + Sync {
+    fn paradigm(&self) -> Paradigm;
+
+    /// Shape-only cost estimate: PE count and cost-model DTCM bytes without
+    /// materializing any per-PE program. This is the dataset labeler's path
+    /// (and the cheap half of an Ideal-mode comparison).
+    fn estimate(&self, job: &LayerJob<'_>, pe: &PeSpec) -> Result<CostEstimate>;
+
+    /// Full materialization: per-PE loadable programs, executable by
+    /// [`crate::sim`].
+    fn compile(&self, job: &LayerJob<'_>, pe: &PeSpec) -> Result<CompiledLayer>;
+}
+
+/// The serial (ARM, event-driven) paradigm behind [`ParadigmCompiler`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SerialCompiler;
+
+impl ParadigmCompiler for SerialCompiler {
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Serial
+    }
+
+    fn estimate(&self, job: &LayerJob<'_>, pe: &PeSpec) -> Result<CostEstimate> {
+        let layout = serial_layout(&job.character, pe)
+            .context("layer does not fit the machine under the serial paradigm")?;
+        Ok(CostEstimate {
+            paradigm: Paradigm::Serial,
+            layer_pes: layout.n_pes(),
+            source_hosting_pes: job.n_source.div_ceil(pe.serial_neuron_cap),
+            dtcm_bytes: layout.total_dtcm(),
+        })
+    }
+
+    fn compile(&self, job: &LayerJob<'_>, pe: &PeSpec) -> Result<CompiledLayer> {
+        Ok(CompiledLayer::Serial(compile_serial(
+            job.proj,
+            job.n_source,
+            job.n_target,
+            job.params,
+            pe,
+        )?))
+    }
+}
+
+/// The parallel (MAC-array) paradigm behind [`ParadigmCompiler`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParallelCompiler {
+    pub config: WdmConfig,
+}
+
+impl ParallelCompiler {
+    pub fn new(config: WdmConfig) -> Self {
+        ParallelCompiler { config }
+    }
+}
+
+impl ParadigmCompiler for ParallelCompiler {
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Parallel
+    }
+
+    fn estimate(&self, job: &LayerJob<'_>, pe: &PeSpec) -> Result<CostEstimate> {
+        let n_source_vertex = job.n_source.div_ceil(pe.serial_neuron_cap);
+        let dom = dominant_cost(
+            job.n_source,
+            job.n_target,
+            job.character.delay_range as usize,
+            n_source_vertex,
+        );
+        ensure!(
+            dom.total() <= pe.dtcm_bytes,
+            "dominant PE overflows DTCM ({} B > {} B); layer outside supported envelope",
+            dom.total(),
+            pe.dtcm_bytes
+        );
+        // Shape-only WDM: PE counting never touches the weight block.
+        let wdm = build_wdm_shape(job.proj, job.n_source, job.n_target, self.config);
+        let plan = two_stage_split(&wdm, pe, n_source_vertex)
+            .context("weight-delay-map cannot be split to fit any PE")?;
+        let dtcm_bytes =
+            dom.total() + plan.chunks.iter().map(|c| c.dtcm_bytes).sum::<usize>();
+        Ok(CostEstimate {
+            paradigm: Paradigm::Parallel,
+            layer_pes: 1 + plan.n_subordinates(),
+            source_hosting_pes: 0,
+            dtcm_bytes,
+        })
+    }
+
+    fn compile(&self, job: &LayerJob<'_>, pe: &PeSpec) -> Result<CompiledLayer> {
+        Ok(CompiledLayer::Parallel(compile_parallel(
+            job.proj,
+            job.n_source,
+            job.n_target,
+            job.params,
+            pe,
+            self.config,
+        )?))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{PopulationId, ProjectionId};
+    use crate::rng::Rng;
 
     #[test]
     fn label_roundtrip() {
@@ -67,5 +319,54 @@ mod tests {
     fn display_names() {
         assert_eq!(Paradigm::Serial.to_string(), "serial");
         assert_eq!(Paradigm::Parallel.to_string(), "parallel");
+    }
+
+    fn proj(n_src: usize, n_tgt: usize, d: f64, dl: u16, seed: u64) -> Projection {
+        let mut rng = Rng::new(seed);
+        Projection {
+            id: ProjectionId(0),
+            source: PopulationId(0),
+            target: PopulationId(1),
+            synapses: Connector::FixedProbability(d).build(
+                n_src,
+                n_tgt,
+                SynapseDraw { delay_range: dl, w_max: 127, ..Default::default() },
+                &mut rng,
+            ),
+            weight_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn estimate_matches_compile_pe_counts() {
+        // The two tiers must never disagree: shape-only estimates and fully
+        // materialized layers report identical PE counts on the same job.
+        let pe = PeSpec::default();
+        for (ns, nt, d, dl, seed) in
+            [(100, 100, 0.5, 4, 1), (255, 255, 1.0, 1, 2), (300, 200, 0.2, 16, 3)]
+        {
+            let p = proj(ns, nt, d, dl, seed);
+            let job = LayerJob::new(&p, ns, nt, LifParams::default());
+            let compilers: [&dyn ParadigmCompiler; 2] =
+                [&SerialCompiler, &ParallelCompiler::new(WdmConfig::default())];
+            for c in compilers {
+                let est = c.estimate(&job, &pe).unwrap();
+                let full = c.compile(&job, &pe).unwrap();
+                assert_eq!(est.paradigm, c.paradigm());
+                assert_eq!(est.layer_pes, full.n_pes(), "{} PE count", c.paradigm());
+                assert_eq!(full.cost_estimate(&pe).total_pes(), est.total_pes());
+            }
+        }
+    }
+
+    #[test]
+    fn serial_estimate_charges_source_hosting() {
+        let pe = PeSpec::default();
+        let p = proj(300, 100, 0.3, 4, 7);
+        let job = LayerJob::new(&p, 300, 100, LifParams::default());
+        let s = SerialCompiler.estimate(&job, &pe).unwrap();
+        assert_eq!(s.source_hosting_pes, 2, "300 sources need 2 hosting PEs");
+        let par = ParallelCompiler::new(WdmConfig::default()).estimate(&job, &pe).unwrap();
+        assert_eq!(par.source_hosting_pes, 0, "parallel absorbs source handling");
     }
 }

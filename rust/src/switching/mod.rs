@@ -12,17 +12,27 @@
 //! * [`SwitchMode::Ideal`] — compile **both**, keep the cheaper (Fig. 5
 //!   pink line; what the paper's label collection does, at 2× compile cost);
 //! * [`SwitchMode::Classifier`] — the fast-switching system (purple line).
+//!
+//! Architecture (DESIGN.md §1): the *decision* lives in
+//! [`policy::SwitchPolicy`], the *execution* in [`pipeline::CompilePipeline`]
+//! (threaded fan-out + compile cache + atomic stats), and the per-paradigm
+//! compilers behind [`crate::paradigm::ParadigmCompiler`]. `SwitchingSystem`
+//! is the thin stateful front the CLI, benches and examples drive.
 
+pub mod pipeline;
 pub mod placement;
+pub mod policy;
 
+pub use crate::paradigm::CompiledLayer;
+pub use pipeline::{CompileJob, CompilePipeline, PipelineRun};
 pub use placement::Placement;
+pub use policy::SwitchPolicy;
 
 use crate::classifier::{AdaBoost, Classifier};
 use crate::dataset::Dataset;
 use crate::hardware::PeSpec;
 use crate::model::{LayerCharacter, LifParams, Network, Projection};
-use crate::paradigm::parallel::{compile_parallel, ParallelCompiled, WdmConfig};
-use crate::paradigm::serial::{compile_serial, SerialCompiled};
+use crate::paradigm::parallel::WdmConfig;
 use crate::paradigm::Paradigm;
 use anyhow::Result;
 
@@ -37,49 +47,18 @@ pub enum SwitchMode {
     Classifier,
 }
 
-/// A compiled layer under whichever paradigm was selected.
-#[derive(Clone, Debug)]
-pub enum CompiledLayer {
-    Serial(SerialCompiled),
-    Parallel(ParallelCompiled),
-}
-
-impl CompiledLayer {
-    pub fn paradigm(&self) -> Paradigm {
-        match self {
-            CompiledLayer::Serial(_) => Paradigm::Serial,
-            CompiledLayer::Parallel(_) => Paradigm::Parallel,
-        }
-    }
-
-    pub fn n_pes(&self) -> usize {
-        match self {
-            CompiledLayer::Serial(c) => c.n_pes(),
-            CompiledLayer::Parallel(c) => c.n_pes(),
-        }
-    }
-
-    pub fn total_dtcm(&self) -> usize {
-        match self {
-            CompiledLayer::Serial(c) => c.total_dtcm(),
-            CompiledLayer::Parallel(c) => c.total_dtcm(),
-        }
-    }
-
-    pub fn character(&self) -> &LayerCharacter {
-        match self {
-            CompiledLayer::Serial(c) => &c.character,
-            CompiledLayer::Parallel(c) => &c.character,
-        }
-    }
-}
-
 /// Compile-effort accounting (the quantity the paper's fast switching
 /// saves: how many paradigm compilations actually ran).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CompileStats {
     pub serial_compiles: usize,
     pub parallel_compiles: usize,
+    /// Shape-only cost estimates run (the dataset labeler's path — never
+    /// materializes per-PE programs).
+    pub serial_estimates: usize,
+    pub parallel_estimates: usize,
+    /// Jobs served from the compile cache instead of recompiling.
+    pub cache_hits: usize,
     /// Peak bytes of *discarded* compilation results (the "RAM crisis on
     /// the host PC" term: Ideal mode materializes both and throws one away).
     pub discarded_dtcm: usize,
@@ -89,39 +68,40 @@ impl CompileStats {
     pub fn total_compiles(&self) -> usize {
         self.serial_compiles + self.parallel_compiles
     }
+
+    pub fn total_estimates(&self) -> usize {
+        self.serial_estimates + self.parallel_estimates
+    }
 }
 
 /// The classifier-integrated switching system.
 pub struct SwitchingSystem {
-    pub mode: SwitchMode,
-    pub classifier: Option<Box<dyn Classifier>>,
-    pub pe: PeSpec,
-    pub wdm_config: WdmConfig,
+    /// The per-layer decision (mode + optional trained prejudger).
+    pub policy: SwitchPolicy,
+    /// Snapshot of the pipeline's cumulative accounting after the most
+    /// recent compile call.
     pub stats: CompileStats,
+    pipeline: CompilePipeline,
 }
 
 impl SwitchingSystem {
     /// A system in the given mode without a classifier (panics if asked to
-    /// prejudge). Use [`SwitchingSystem::with_classifier`] for
-    /// `SwitchMode::Classifier`.
+    /// prejudge in `SwitchMode::Classifier`). Use
+    /// [`SwitchingSystem::with_classifier`] for the deployed configuration.
     pub fn new(mode: SwitchMode, pe: PeSpec) -> Self {
-        SwitchingSystem {
-            mode,
-            classifier: None,
-            pe,
-            wdm_config: WdmConfig::default(),
-            stats: CompileStats::default(),
-        }
+        Self::from_policy(SwitchPolicy::forced(mode), pe)
     }
 
     /// The deployed configuration: prejudge with a trained classifier.
     pub fn with_classifier(classifier: Box<dyn Classifier>, pe: PeSpec) -> Self {
+        Self::from_policy(SwitchPolicy::with_classifier(classifier), pe)
+    }
+
+    pub fn from_policy(policy: SwitchPolicy, pe: PeSpec) -> Self {
         SwitchingSystem {
-            mode: SwitchMode::Classifier,
-            classifier: Some(classifier),
-            pe,
-            wdm_config: WdmConfig::default(),
+            policy,
             stats: CompileStats::default(),
+            pipeline: CompilePipeline::new(pe, WdmConfig::default()),
         }
     }
 
@@ -134,23 +114,35 @@ impl SwitchingSystem {
         Self::with_classifier(Box::new(ab), pe)
     }
 
+    pub fn mode(&self) -> SwitchMode {
+        self.policy.mode
+    }
+
+    /// The PE spec every compile (and cache key) uses — owned by the
+    /// pipeline so the two can never disagree.
+    pub fn pe(&self) -> PeSpec {
+        self.pipeline.pe
+    }
+
+    pub fn wdm_config(&self) -> WdmConfig {
+        self.pipeline.wdm
+    }
+
+    /// Worker threads used by [`SwitchingSystem::compile_network`]
+    /// (0 = one per CPU, 1 = sequential).
+    pub fn set_jobs(&mut self, jobs: usize) {
+        self.pipeline.set_jobs(jobs);
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.pipeline.jobs()
+    }
+
     /// Predict the paradigm for a layer character *without compiling* —
-    /// the fast decision that replaces double compilation.
-    pub fn prejudge(&self, ch: &LayerCharacter) -> Paradigm {
-        match self.mode {
-            SwitchMode::ForceSerial => Paradigm::Serial,
-            SwitchMode::ForceParallel => Paradigm::Parallel,
-            SwitchMode::Ideal => {
-                panic!("Ideal mode has no prejudgment; it compiles both")
-            }
-            SwitchMode::Classifier => {
-                let c = self
-                    .classifier
-                    .as_ref()
-                    .expect("Classifier mode requires a trained classifier");
-                Paradigm::from_label(c.predict(&ch.features()))
-            }
-        }
+    /// the fast decision that replaces double compilation. `None` means
+    /// the mode (Ideal) has no prejudgment and compiles both.
+    pub fn prejudge(&self, ch: &LayerCharacter) -> Option<Paradigm> {
+        self.policy.prejudge(ch)
     }
 
     /// Compile one layer under the system's policy.
@@ -161,65 +153,41 @@ impl SwitchingSystem {
         n_target: usize,
         params: LifParams,
     ) -> Result<CompiledLayer> {
-        let pe = self.pe;
-        let wdm_config = self.wdm_config;
-        let compile_s = |stats: &mut CompileStats| -> Result<SerialCompiled> {
-            stats.serial_compiles += 1;
-            compile_serial(proj, n_source, n_target, params, &pe)
-        };
-        let compile_p = |stats: &mut CompileStats| -> Result<ParallelCompiled> {
-            stats.parallel_compiles += 1;
-            compile_parallel(proj, n_source, n_target, params, &pe, wdm_config)
-        };
-        match self.mode {
-            SwitchMode::ForceSerial => Ok(CompiledLayer::Serial(compile_s(&mut self.stats)?)),
-            SwitchMode::ForceParallel => {
-                Ok(CompiledLayer::Parallel(compile_p(&mut self.stats)?))
-            }
-            SwitchMode::Ideal => {
-                let s = compile_s(&mut self.stats)?;
-                let p = compile_p(&mut self.stats)?;
-                // Compare per-layer costs the way the dataset labels do:
-                // serial additionally charges source-hosting PEs
-                // (ceil(n_source/255)); ties go to serial.
-                let s_pes = s.n_pes() + n_source.div_ceil(pe.serial_neuron_cap);
-                if p.n_pes() < s_pes {
-                    self.stats.discarded_dtcm += s.total_dtcm();
-                    Ok(CompiledLayer::Parallel(p))
-                } else {
-                    self.stats.discarded_dtcm += p.total_dtcm();
-                    Ok(CompiledLayer::Serial(s))
-                }
-            }
-            SwitchMode::Classifier => {
-                let ch = LayerCharacter::of_projection(proj, n_source, n_target);
-                match self.prejudge(&ch) {
-                    Paradigm::Serial => Ok(CompiledLayer::Serial(compile_s(&mut self.stats)?)),
-                    Paradigm::Parallel => {
-                        Ok(CompiledLayer::Parallel(compile_p(&mut self.stats)?))
-                    }
-                }
-            }
-        }
+        let job = CompileJob::new(proj, n_source, n_target, params);
+        let run = self.pipeline.run(&self.policy, std::slice::from_ref(&job))?;
+        self.stats = run.stats;
+        Ok(run.layers.into_iter().next().expect("one job in, one layer out"))
     }
 
-    /// Compile every projection of a network; returns layers in projection
-    /// order plus the total PE count (layer PEs only; see
-    /// [`network_pe_count`] for whole-machine accounting).
+    /// Compile every projection of a network through the pipeline; returns
+    /// layers in projection order plus the total PE count (layer PEs only;
+    /// see [`network_pe_count`] for whole-machine accounting).
     pub fn compile_network(&mut self, net: &Network) -> Result<(Vec<CompiledLayer>, usize)> {
-        let mut layers = Vec::with_capacity(net.projections.len());
-        for proj in &net.projections {
-            let n_source = net.population(proj.source).n_neurons;
-            let n_target = net.population(proj.target).n_neurons;
-            let params = net
-                .population(proj.target)
-                .lif_params()
-                .copied()
-                .unwrap_or_default();
-            layers.push(self.compile_layer(proj, n_source, n_target, params)?);
-        }
-        let pes = layers.iter().map(|l| l.n_pes()).sum();
-        Ok((layers, pes))
+        let run = self.compile_network_report(net)?;
+        let pes = run.layer_pes();
+        Ok((run.layers, pes))
+    }
+
+    /// Like [`SwitchingSystem::compile_network`] but returns the full
+    /// pipeline report (stats snapshot + per-layer timing).
+    pub fn compile_network_report(&mut self, net: &Network) -> Result<PipelineRun> {
+        let jobs: Vec<CompileJob> = net
+            .projections
+            .iter()
+            .map(|proj| {
+                let n_source = net.population(proj.source).n_neurons;
+                let n_target = net.population(proj.target).n_neurons;
+                let params = net
+                    .population(proj.target)
+                    .lif_params()
+                    .copied()
+                    .unwrap_or_default();
+                CompileJob::new(proj, n_source, n_target, params)
+            })
+            .collect();
+        let run = self.pipeline.run(&self.policy, &jobs)?;
+        self.stats = run.stats;
+        Ok(run)
     }
 }
 
@@ -301,6 +269,12 @@ mod tests {
     }
 
     #[test]
+    fn ideal_mode_has_no_prejudgment() {
+        let sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        assert_eq!(sys.prejudge(&LayerCharacter::new(10, 10, 0.5, 1)), None);
+    }
+
+    #[test]
     fn classifier_mode_compiles_once_and_tracks_ideal() {
         // Train on a medium grid, then verify the switcher compiles exactly
         // one paradigm per layer and agrees with ideal often.
@@ -322,8 +296,7 @@ mod tests {
         assert!(agree >= 3, "classifier should usually match ideal, got {agree}/4");
     }
 
-    #[test]
-    fn compile_network_sums_pes() {
+    fn demo_network() -> Network {
         let mut b = NetworkBuilder::new(9);
         let inp = b.spike_source("in", 200);
         let hid = b.lif_population("hid", 100, LifParams::default());
@@ -342,11 +315,47 @@ mod tests {
             SynapseDraw { delay_range: 2, w_max: 127, ..Default::default() },
             0.01,
         );
-        let net = b.build();
+        b.build()
+    }
+
+    #[test]
+    fn compile_network_sums_pes() {
+        let net = demo_network();
         let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
         let (layers, pes) = sys.compile_network(&net).unwrap();
         assert_eq!(layers.len(), 2);
         assert_eq!(pes, layers.iter().map(|l| l.n_pes()).sum::<usize>());
+    }
+
+    #[test]
+    fn compile_network_is_jobs_invariant() {
+        // The pipeline contract at network level: any worker count produces
+        // layer-for-layer identical outputs and identical stats.
+        let net = demo_network();
+        let mut seq = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        seq.set_jobs(1);
+        let (layers_seq, pes_seq) = seq.compile_network(&net).unwrap();
+
+        let mut par = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        par.set_jobs(4);
+        let (layers_par, pes_par) = par.compile_network(&net).unwrap();
+
+        assert_eq!(pes_seq, pes_par);
+        assert_eq!(seq.stats, par.stats);
+        for (a, b) in layers_seq.iter().zip(&layers_par) {
+            assert_eq!(a.paradigm(), b.paradigm());
+            assert_eq!(a.n_pes(), b.n_pes());
+            assert_eq!(a.total_dtcm(), b.total_dtcm());
+        }
+    }
+
+    #[test]
+    fn compile_network_report_times_every_layer() {
+        let net = demo_network();
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let run = sys.compile_network_report(&net).unwrap();
+        assert_eq!(run.layer_nanos.len(), run.layers.len());
+        assert!(run.wall_nanos > 0);
     }
 
     #[test]

@@ -1,0 +1,668 @@
+//! Parallel, cache-aware layer compilation (DESIGN.md §1–§2).
+//!
+//! The paper's whole point is cheap paradigm selection at layer
+//! granularity; [`CompilePipeline`] makes the *compile stack* scale the
+//! same way:
+//!
+//! * **fan-out** — layer jobs are distributed over scoped OS threads (the
+//!   same idiom as `generate_grid`/`train_roster`; the offline crate set
+//!   has no rayon/tokio). [`fan_out`] is the shared primitive.
+//! * **dedup** — a compile cache keyed by `(LayerCharacter, connector
+//!   seed, PeSpec, WdmConfig, LifParams, paradigm)` guarantees the same
+//!   layer is never compiled twice, even when duplicate jobs race on
+//!   different threads (per-key `OnceLock` blocks the losers instead of
+//!   recompiling).
+//! * **accounting** — a thread-safe [`CompileStats`] (atomics) counts the
+//!   paradigm compilations that actually ran — the quantity fast switching
+//!   saves — plus per-layer wall-clock in [`PipelineRun::layer_nanos`].
+//!
+//! Determinism: outputs and stats are independent of thread count and
+//! scheduling. Decisions are precomputed on the caller thread, results go
+//! to index-addressed slots, and cache-level accounting is per unique key.
+
+use super::policy::SwitchPolicy;
+use super::CompileStats;
+use crate::hardware::PeSpec;
+use crate::model::{LayerCharacter, LifParams, Projection};
+use crate::paradigm::parallel::WdmConfig;
+use crate::paradigm::{
+    CompiledLayer, CostEstimate, LayerJob, ParadigmCompiler, Paradigm, ParallelCompiler,
+    SerialCompiler,
+};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Fan `n` independent index-addressed tasks out over `jobs` scoped OS
+/// threads. Workers pull the next index from a shared atomic counter
+/// (work stealing), so heavy-tailed per-item costs — the sweep grid is
+/// sorted small-to-large — still balance. `jobs <= 1` runs inline. Output
+/// order is by index regardless of scheduling.
+pub fn fan_out<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    if jobs <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..jobs.min(n))
+            .map(|_| {
+                let f = &f;
+                let next = &next;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(local) => {
+                    for (i, v) in local {
+                        out[i] = Some(v);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// Content fingerprint of a projection's synapse list (FNV-1a). Stands in
+/// for the connector seed when the caller realized the projection itself.
+pub fn projection_fingerprint(proj: &Projection) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    eat(proj.synapses.len() as u64);
+    for s in &proj.synapses {
+        eat(((s.source as u64) << 32) | s.target as u64);
+        eat(((s.weight as u64) << 32)
+            | ((s.delay as u64) << 8)
+            | s.syn_type.index() as u64);
+    }
+    eat(proj.weight_scale.to_bits() as u64);
+    h
+}
+
+/// One layer to compile: the pipeline's unit of work.
+#[derive(Clone, Copy, Debug)]
+pub struct CompileJob<'a> {
+    pub proj: &'a Projection,
+    pub n_source: usize,
+    pub n_target: usize,
+    pub params: LifParams,
+    /// The character the prejudger/estimator sees.
+    pub character: LayerCharacter,
+    /// Cache identity of the synapse realization: the connector seed when
+    /// known, else a content fingerprint.
+    pub seed: u64,
+}
+
+impl<'a> CompileJob<'a> {
+    /// A job for a realized projection: measured character, content
+    /// fingerprint as the cache seed.
+    pub fn new(
+        proj: &'a Projection,
+        n_source: usize,
+        n_target: usize,
+        params: LifParams,
+    ) -> Self {
+        CompileJob {
+            proj,
+            n_source,
+            n_target,
+            params,
+            character: LayerCharacter::of_projection(proj, n_source, n_target),
+            seed: projection_fingerprint(proj),
+        }
+    }
+
+    /// A job with a known (nominal) character and connector seed — the
+    /// dataset labeler's constructor; skips measuring the projection.
+    pub fn from_character(
+        proj: &'a Projection,
+        character: LayerCharacter,
+        params: LifParams,
+        seed: u64,
+    ) -> Self {
+        CompileJob {
+            proj,
+            n_source: character.n_source,
+            n_target: character.n_target,
+            params,
+            character,
+            seed,
+        }
+    }
+
+    fn layer_job(&self) -> LayerJob<'a> {
+        LayerJob {
+            proj: self.proj,
+            character: self.character,
+            n_source: self.n_source,
+            n_target: self.n_target,
+            params: self.params,
+        }
+    }
+}
+
+/// Cache key: everything that determines a compile's output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct CacheKey {
+    paradigm: Paradigm,
+    estimate_only: bool,
+    n_source: usize,
+    n_target: usize,
+    density_bits: u64,
+    delay_range: u16,
+    seed: u64,
+    params_bits: [u32; 8],
+    pe_bits: u64,
+    wdm_bits: u64,
+}
+
+fn fold(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x1000_0000_01b3);
+}
+
+fn pe_bits(pe: &PeSpec) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in [
+        pe.sram_bytes,
+        pe.dtcm_bytes,
+        pe.os_reserve_bytes,
+        pe.serial_neuron_cap,
+        pe.mac.rows,
+        pe.mac.cols,
+        pe.mac.operand_bits,
+        pe.mac.output_bits,
+    ] {
+        fold(&mut h, v as u64);
+    }
+    h
+}
+
+fn wdm_bits(c: &WdmConfig) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    fold(
+        &mut h,
+        (c.zero_row_elimination as u64)
+            | (c.zero_col_elimination as u64) << 1
+            | (c.delay_slot_merging as u64) << 2
+            | (c.quantize_8bit as u64) << 3,
+    );
+    for v in [c.mac.rows, c.mac.cols, c.mac.operand_bits, c.mac.output_bits] {
+        fold(&mut h, v as u64);
+    }
+    h
+}
+
+fn params_bits(p: &LifParams) -> [u32; 8] {
+    [
+        p.alpha.to_bits(),
+        p.v_th.to_bits(),
+        p.v_rest.to_bits(),
+        p.t_refrac,
+        p.i_offset.to_bits(),
+        p.v_init.to_bits(),
+        p.w_exc_scale.to_bits(),
+        p.w_inh_scale.to_bits(),
+    ]
+}
+
+// anyhow::Error is not Clone, so cached failures are stored rendered.
+type CompileSlot = Arc<OnceLock<Result<Arc<CompiledLayer>, String>>>;
+type EstimateSlot = Arc<OnceLock<Result<CostEstimate, String>>>;
+/// An Ideal-mode compile-both-pick-cheaper outcome: the winning layer.
+type DecisionSlot = Arc<OnceLock<Result<Arc<CompiledLayer>, String>>>;
+
+#[derive(Default)]
+struct CacheInner {
+    compiles: HashMap<CacheKey, CompileSlot>,
+    estimates: HashMap<CacheKey, EstimateSlot>,
+    /// Ideal-mode outcomes, keyed paradigm-agnostically (the stored winner
+    /// carries its own paradigm). Lets a repeated layer skip *both*
+    /// recompiles even though the losing compile was evicted.
+    decisions: HashMap<CacheKey, DecisionSlot>,
+}
+
+#[derive(Default)]
+struct AtomicStats {
+    serial_compiles: AtomicUsize,
+    parallel_compiles: AtomicUsize,
+    serial_estimates: AtomicUsize,
+    parallel_estimates: AtomicUsize,
+    cache_hits: AtomicUsize,
+    discarded_dtcm: AtomicUsize,
+}
+
+impl AtomicStats {
+    fn snapshot(&self) -> CompileStats {
+        CompileStats {
+            serial_compiles: self.serial_compiles.load(Ordering::Relaxed),
+            parallel_compiles: self.parallel_compiles.load(Ordering::Relaxed),
+            serial_estimates: self.serial_estimates.load(Ordering::Relaxed),
+            parallel_estimates: self.parallel_estimates.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            discarded_dtcm: self.discarded_dtcm.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One pipeline run's output: layers in job order plus accounting.
+#[derive(Clone, Debug)]
+pub struct PipelineRun {
+    pub layers: Vec<CompiledLayer>,
+    /// Cumulative stats of the pipeline that produced this run (the
+    /// pipeline's cache — and therefore its accounting — persists across
+    /// runs).
+    pub stats: CompileStats,
+    /// Per-layer wall-clock, nanoseconds, in job order (cache hits ≈ 0).
+    pub layer_nanos: Vec<u64>,
+    pub wall_nanos: u64,
+}
+
+impl PipelineRun {
+    /// Layer PEs only (source hosting excluded), the seed
+    /// `compile_network` contract.
+    pub fn layer_pes(&self) -> usize {
+        self.layers.iter().map(|l| l.n_pes()).sum()
+    }
+}
+
+/// The unified compile front-end: fans layers over threads, deduplicates
+/// through the compile cache, aggregates thread-safe stats.
+pub struct CompilePipeline {
+    pub pe: PeSpec,
+    pub wdm: WdmConfig,
+    jobs: usize,
+    cache: Mutex<CacheInner>,
+    stats: AtomicStats,
+}
+
+impl CompilePipeline {
+    pub fn new(pe: PeSpec, wdm: WdmConfig) -> Self {
+        CompilePipeline {
+            pe,
+            wdm,
+            jobs: 1,
+            cache: Mutex::new(CacheInner::default()),
+            stats: AtomicStats::default(),
+        }
+    }
+
+    /// Builder-style worker-thread count (0 = one per CPU; 1 = inline).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.set_jobs(jobs);
+        self
+    }
+
+    /// Worker-thread count. `0` means auto (one worker per CPU) — the
+    /// single definition of the CLI's `--jobs 0` convention.
+    pub fn set_jobs(&mut self, jobs: usize) {
+        self.jobs = if jobs == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            jobs
+        };
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Cumulative stats across every run/estimate this pipeline served.
+    pub fn stats(&self) -> CompileStats {
+        self.stats.snapshot()
+    }
+
+    fn key(&self, paradigm: Paradigm, estimate_only: bool, job: &CompileJob) -> CacheKey {
+        CacheKey {
+            paradigm,
+            estimate_only,
+            n_source: job.n_source,
+            n_target: job.n_target,
+            density_bits: job.character.density.to_bits(),
+            delay_range: job.character.delay_range,
+            seed: job.seed,
+            params_bits: params_bits(&job.params),
+            pe_bits: pe_bits(&self.pe),
+            wdm_bits: wdm_bits(&self.wdm),
+        }
+    }
+
+    fn compiler(&self, paradigm: Paradigm) -> Box<dyn ParadigmCompiler> {
+        match paradigm {
+            Paradigm::Serial => Box::new(SerialCompiler),
+            Paradigm::Parallel => Box::new(ParallelCompiler::new(self.wdm)),
+        }
+    }
+
+    /// Compile one paradigm for one job through the cache. Returns the
+    /// (shared) layer and whether this call actually ran the compiler.
+    fn cached_compile(
+        &self,
+        paradigm: Paradigm,
+        job: &CompileJob,
+    ) -> Result<(Arc<CompiledLayer>, bool)> {
+        let slot: CompileSlot = {
+            let mut cache = self.cache.lock().expect("compile cache poisoned");
+            cache.compiles.entry(self.key(paradigm, false, job)).or_default().clone()
+        };
+        let mut fresh = false;
+        let res = slot.get_or_init(|| {
+            fresh = true;
+            let counter = match paradigm {
+                Paradigm::Serial => &self.stats.serial_compiles,
+                Paradigm::Parallel => &self.stats.parallel_compiles,
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            self.compiler(paradigm)
+                .compile(&job.layer_job(), &self.pe)
+                .map(Arc::new)
+                .map_err(|e| format!("{e:#}"))
+        });
+        if !fresh {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        match res {
+            Ok(layer) => Ok((layer.clone(), fresh)),
+            Err(e) => Err(anyhow!("{e}")),
+        }
+    }
+
+    /// Estimate one paradigm for one job through the cache (shape-only —
+    /// the dataset labeler's path).
+    fn cached_estimate(&self, paradigm: Paradigm, job: &CompileJob) -> Result<CostEstimate> {
+        let slot: EstimateSlot = {
+            let mut cache = self.cache.lock().expect("compile cache poisoned");
+            cache.estimates.entry(self.key(paradigm, true, job)).or_default().clone()
+        };
+        let mut fresh = false;
+        let res = slot.get_or_init(|| {
+            fresh = true;
+            let counter = match paradigm {
+                Paradigm::Serial => &self.stats.serial_estimates,
+                Paradigm::Parallel => &self.stats.parallel_estimates,
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            self.compiler(paradigm)
+                .estimate(&job.layer_job(), &self.pe)
+                .map_err(|e| format!("{e:#}"))
+        });
+        if !fresh {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        match res {
+            Ok(est) => Ok(*est),
+            Err(e) => Err(anyhow!("{e}")),
+        }
+    }
+
+    /// Shape-only estimates under **both** paradigms — run-both-compilers
+    /// in estimate mode, the dataset labeler's whole job. Returns
+    /// (serial, parallel).
+    pub fn estimate_pair(&self, job: &CompileJob) -> Result<(CostEstimate, CostEstimate)> {
+        Ok((
+            self.cached_estimate(Paradigm::Serial, job)?,
+            self.cached_estimate(Paradigm::Parallel, job)?,
+        ))
+    }
+
+    fn run_one(&self, decision: Option<Paradigm>, job: &CompileJob) -> Result<CompiledLayer> {
+        match decision {
+            Some(paradigm) => {
+                let (layer, _) = self.cached_compile(paradigm, job)?;
+                Ok((*layer).clone())
+            }
+            // Ideal: compile both, keep the cheaper (2× compile cost; the
+            // loser's bytes are the "RAM crisis on the host PC" term). The
+            // outcome is cached once per key; the losing compile is charged
+            // to `discarded_dtcm` and *evicted* so the discarded bytes do
+            // not stay resident — only winners are retained.
+            None => self.cached_decision(job).map(|layer| (*layer).clone()),
+        }
+    }
+
+    /// The compile-both-pick-cheaper outcome for one job, computed at most
+    /// once per cache key.
+    fn cached_decision(&self, job: &CompileJob) -> Result<Arc<CompiledLayer>> {
+        let slot: DecisionSlot = {
+            let mut cache = self.cache.lock().expect("compile cache poisoned");
+            // Paradigm-agnostic key: the filler paradigm is never read back.
+            cache.decisions.entry(self.key(Paradigm::Serial, false, job)).or_default().clone()
+        };
+        let mut fresh = false;
+        let res = slot.get_or_init(|| {
+            fresh = true;
+            let compile_both = || -> Result<Arc<CompiledLayer>> {
+                let (s, s_fresh) = self.cached_compile(Paradigm::Serial, job)?;
+                let (p, p_fresh) = self.cached_compile(Paradigm::Parallel, job)?;
+                let s_est = s.cost_estimate(&self.pe);
+                let p_est = p.cost_estimate(&self.pe);
+                let (winner, loser, loser_fresh, loser_paradigm) =
+                    match SwitchPolicy::decide(&s_est, &p_est) {
+                        Paradigm::Serial => (s, p, p_fresh, Paradigm::Parallel),
+                        Paradigm::Parallel => (p, s, s_fresh, Paradigm::Serial),
+                    };
+                if loser_fresh {
+                    self.stats.discarded_dtcm.fetch_add(loser.total_dtcm(), Ordering::Relaxed);
+                }
+                self.cache
+                    .lock()
+                    .expect("compile cache poisoned")
+                    .compiles
+                    .remove(&self.key(loser_paradigm, false, job));
+                Ok(winner)
+            };
+            compile_both().map_err(|e| format!("{e:#}"))
+        });
+        if !fresh {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        match res {
+            Ok(layer) => Ok(layer.clone()),
+            Err(e) => Err(anyhow!("{e}")),
+        }
+    }
+
+    /// Compile a batch of layers under `policy`, fanned over this
+    /// pipeline's worker threads. Layers come back in job order; the first
+    /// failing job's error is returned (after all jobs finish).
+    pub fn run(&self, policy: &SwitchPolicy, jobs: &[CompileJob]) -> Result<PipelineRun> {
+        let t0 = Instant::now();
+        // Prejudge on the caller thread: the classifier is cheap (µs) and
+        // `dyn Classifier` is not required to be Sync.
+        let decisions: Vec<Option<Paradigm>> =
+            jobs.iter().map(|j| policy.prejudge(&j.character)).collect();
+
+        let results = fan_out(self.jobs, jobs.len(), |i| {
+            let t = Instant::now();
+            let layer = self.run_one(decisions[i], &jobs[i]);
+            (layer, t.elapsed().as_nanos() as u64)
+        });
+
+        let mut layers = Vec::with_capacity(results.len());
+        let mut layer_nanos = Vec::with_capacity(results.len());
+        for (layer, nanos) in results {
+            layers.push(layer?);
+            layer_nanos.push(nanos);
+        }
+        Ok(PipelineRun {
+            layers,
+            stats: self.stats.snapshot(),
+            layer_nanos,
+            wall_nanos: t0.elapsed().as_nanos() as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::realize_layer;
+    use crate::rng::Rng;
+    use crate::switching::SwitchMode;
+
+    fn probe_projs() -> Vec<(usize, usize, Projection)> {
+        // Deliberate duplicates (same spec + seed → identical synapses) so
+        // the cache has work to do under Ideal's double compilation.
+        let specs: [(usize, usize, f64, u16, u64); 8] = [
+            (100, 100, 0.5, 4, 1),
+            (255, 255, 1.0, 1, 2),
+            (100, 100, 0.5, 4, 1),
+            (200, 150, 0.3, 8, 3),
+            (255, 255, 1.0, 1, 2),
+            (120, 300, 0.2, 16, 4),
+            (100, 100, 0.5, 4, 1),
+            (300, 120, 0.8, 2, 5),
+        ];
+        specs
+            .iter()
+            .map(|&(ns, nt, d, dl, seed)| {
+                (ns, nt, realize_layer(ns, nt, d, dl, &mut Rng::new(seed)))
+            })
+            .collect()
+    }
+
+    fn run_with_jobs(n_jobs: usize) -> PipelineRun {
+        let pipeline =
+            CompilePipeline::new(PeSpec::default(), WdmConfig::default()).with_jobs(n_jobs);
+        let policy = SwitchPolicy::forced(SwitchMode::Ideal);
+        let projs = probe_projs();
+        let jobs: Vec<CompileJob> = projs
+            .iter()
+            .map(|(ns, nt, p)| CompileJob::new(p, *ns, *nt, LifParams::default()))
+            .collect();
+        pipeline.run(&policy, &jobs).unwrap()
+    }
+
+    #[test]
+    fn parallel_run_is_deterministic_and_matches_sequential() {
+        let seq = run_with_jobs(1);
+        let par = run_with_jobs(8);
+        assert_eq!(seq.layers.len(), par.layers.len());
+        for (a, b) in seq.layers.iter().zip(&par.layers) {
+            assert_eq!(a.paradigm(), b.paradigm(), "paradigm choice must not depend on jobs");
+            assert_eq!(a.n_pes(), b.n_pes(), "PE count must not depend on jobs");
+            assert_eq!(a.total_dtcm(), b.total_dtcm());
+        }
+        assert_eq!(seq.stats, par.stats, "stats must not depend on jobs/scheduling");
+        // 8 jobs, 5 unique layers, Ideal mode: exactly 5 compiles per
+        // paradigm; each of the 3 duplicate jobs hits the decision cache.
+        assert_eq!(seq.stats.serial_compiles, 5);
+        assert_eq!(seq.stats.parallel_compiles, 5);
+        assert_eq!(seq.stats.cache_hits, 3);
+        assert!(seq.stats.discarded_dtcm > 0, "ideal mode discards one result per layer");
+    }
+
+    #[test]
+    fn repeated_layer_compiles_exactly_once() {
+        let mut rng = Rng::new(9);
+        let proj = realize_layer(120, 120, 0.5, 4, &mut rng);
+        let job = CompileJob::new(&proj, 120, 120, LifParams::default());
+        let jobs = vec![job; 3];
+        let pipeline =
+            CompilePipeline::new(PeSpec::default(), WdmConfig::default()).with_jobs(3);
+        let run = pipeline
+            .run(&SwitchPolicy::forced(SwitchMode::ForceSerial), &jobs)
+            .unwrap();
+        assert_eq!(run.layers.len(), 3);
+        assert_eq!(run.stats.serial_compiles, 1, "one underlying compile");
+        assert_eq!(run.stats.cache_hits, 2);
+        assert!(run.layers.iter().all(|l| l.n_pes() == run.layers[0].n_pes()));
+    }
+
+    #[test]
+    fn ideal_mode_evicts_the_losing_compile() {
+        let mut rng = Rng::new(21);
+        let proj = realize_layer(255, 255, 1.0, 1, &mut rng); // parallel wins here
+        let job = CompileJob::new(&proj, 255, 255, LifParams::default());
+        let pipeline = CompilePipeline::new(PeSpec::default(), WdmConfig::default());
+        let run = pipeline.run(&SwitchPolicy::forced(SwitchMode::Ideal), &[job]).unwrap();
+        assert_eq!(run.layers[0].paradigm(), Paradigm::Parallel);
+        assert_eq!(run.stats.serial_compiles, 1);
+        assert!(run.stats.discarded_dtcm > 0);
+        // The losing serial layer was discarded AND evicted: forcing serial
+        // on the same job recompiles it, while the parallel winner is still
+        // served from the cache.
+        let run2 =
+            pipeline.run(&SwitchPolicy::forced(SwitchMode::ForceSerial), &[job]).unwrap();
+        assert_eq!(run2.stats.serial_compiles, 2, "evicted loser must recompile");
+        let run3 =
+            pipeline.run(&SwitchPolicy::forced(SwitchMode::ForceParallel), &[job]).unwrap();
+        assert_eq!(run3.stats.parallel_compiles, 1, "winner stays cached");
+        assert_eq!(run3.stats.cache_hits, run2.stats.cache_hits + 1);
+    }
+
+    #[test]
+    fn estimates_deduplicate_too() {
+        let mut rng = Rng::new(11);
+        let proj = realize_layer(150, 150, 0.4, 6, &mut rng);
+        let job = CompileJob::new(&proj, 150, 150, LifParams::default());
+        let pipeline = CompilePipeline::new(PeSpec::default(), WdmConfig::default());
+        let (s1, p1) = pipeline.estimate_pair(&job).unwrap();
+        let (s2, p2) = pipeline.estimate_pair(&job).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(p1, p2);
+        let stats = pipeline.stats();
+        assert_eq!(stats.serial_estimates, 1);
+        assert_eq!(stats.parallel_estimates, 1);
+        assert_eq!(stats.cache_hits, 2);
+        assert_eq!(stats.total_compiles(), 0, "estimate mode materializes nothing");
+    }
+
+    #[test]
+    fn estimate_and_compile_report_identical_pes_through_the_pipeline() {
+        let mut rng = Rng::new(13);
+        let proj = realize_layer(255, 255, 1.0, 1, &mut rng);
+        let job = CompileJob::new(&proj, 255, 255, LifParams::default());
+        let pipeline = CompilePipeline::new(PeSpec::default(), WdmConfig::default());
+        let (s_est, p_est) = pipeline.estimate_pair(&job).unwrap();
+        let (s, _) = pipeline.cached_compile(Paradigm::Serial, &job).unwrap();
+        let (p, _) = pipeline.cached_compile(Paradigm::Parallel, &job).unwrap();
+        assert_eq!(s_est.layer_pes, s.n_pes());
+        assert_eq!(p_est.layer_pes, p.n_pes());
+        assert_eq!(s_est.total_pes(), s.cost_estimate(&pipeline.pe).total_pes());
+        assert_eq!(p_est.total_pes(), p.cost_estimate(&pipeline.pe).total_pes());
+    }
+
+    #[test]
+    fn fan_out_preserves_index_order() {
+        for jobs in [1, 3, 7] {
+            let got = fan_out(jobs, 100, |i| i * i);
+            assert_eq!(got, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+        assert!(fan_out(4, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_realizations() {
+        let a = realize_layer(100, 100, 0.5, 4, &mut Rng::new(1));
+        let b = realize_layer(100, 100, 0.5, 4, &mut Rng::new(2));
+        let a2 = realize_layer(100, 100, 0.5, 4, &mut Rng::new(1));
+        assert_eq!(projection_fingerprint(&a), projection_fingerprint(&a2));
+        assert_ne!(projection_fingerprint(&a), projection_fingerprint(&b));
+    }
+}

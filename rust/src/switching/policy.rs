@@ -1,0 +1,127 @@
+//! The switching *decision*, separated from compile *execution*.
+//!
+//! [`SwitchPolicy`] is the single source of truth for two things the seed
+//! code duplicated in three places (the Ideal arm of `compile_layer`, the
+//! dataset labeler, and the Fig. 5 bench):
+//!
+//! 1. **the comparison** — serial `layer PEs + source-hosting PEs` vs
+//!    parallel `PEs`, ties to serial ([`SwitchPolicy::cheaper`]);
+//! 2. **the pre-compile judgment** — which compiler(s) a given
+//!    [`SwitchMode`] runs for a layer ([`SwitchPolicy::prejudge`]:
+//!    `Some(paradigm)` = compile exactly that one, `None` = Ideal, compile
+//!    both and keep the [`SwitchPolicy::decide`] winner).
+
+use super::SwitchMode;
+use crate::classifier::Classifier;
+use crate::model::LayerCharacter;
+use crate::paradigm::{CostEstimate, Paradigm};
+
+/// The per-layer paradigm decision: a mode plus (for
+/// [`SwitchMode::Classifier`]) the trained prejudger.
+pub struct SwitchPolicy {
+    pub mode: SwitchMode,
+    pub classifier: Option<Box<dyn Classifier>>,
+}
+
+impl SwitchPolicy {
+    /// A policy that needs no model (panics on prejudging if `mode` is
+    /// [`SwitchMode::Classifier`] — use [`SwitchPolicy::with_classifier`]).
+    pub fn forced(mode: SwitchMode) -> Self {
+        SwitchPolicy { mode, classifier: None }
+    }
+
+    /// The deployed configuration: prejudge with a trained classifier.
+    pub fn with_classifier(classifier: Box<dyn Classifier>) -> Self {
+        SwitchPolicy { mode: SwitchMode::Classifier, classifier: Some(classifier) }
+    }
+
+    /// **The** serial-vs-parallel comparison (ties go to serial — no
+    /// dominant-PE overhead). Everything that ranks the two paradigms —
+    /// Ideal-mode compilation, dataset labeling, the Fig. 5 aggregation —
+    /// must call this, with serial charged for source hosting per
+    /// [`CostEstimate::total_pes`].
+    pub fn cheaper(serial_total_pes: usize, parallel_total_pes: usize) -> Paradigm {
+        if parallel_total_pes < serial_total_pes {
+            Paradigm::Parallel
+        } else {
+            Paradigm::Serial
+        }
+    }
+
+    /// Rank two cost estimates (shape-only or materialized — both report
+    /// the same units).
+    pub fn decide(serial: &CostEstimate, parallel: &CostEstimate) -> Paradigm {
+        Self::cheaper(serial.total_pes(), parallel.total_pes())
+    }
+
+    /// Predict the paradigm for a layer character *without compiling*.
+    /// `None` means the mode has no pre-compile judgment (Ideal compiles
+    /// both paradigms and decides afterwards).
+    pub fn prejudge(&self, ch: &LayerCharacter) -> Option<Paradigm> {
+        match self.mode {
+            SwitchMode::ForceSerial => Some(Paradigm::Serial),
+            SwitchMode::ForceParallel => Some(Paradigm::Parallel),
+            SwitchMode::Ideal => None,
+            SwitchMode::Classifier => {
+                let c = self
+                    .classifier
+                    .as_ref()
+                    .expect("Classifier mode requires a trained classifier");
+                Some(Paradigm::from_label(c.predict(&ch.features())))
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for SwitchPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SwitchPolicy")
+            .field("mode", &self.mode)
+            .field("classifier", &self.classifier.as_ref().map(|c| c.name()))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cheaper_ties_go_to_serial() {
+        assert_eq!(SwitchPolicy::cheaper(5, 5), Paradigm::Serial);
+        assert_eq!(SwitchPolicy::cheaper(5, 4), Paradigm::Parallel);
+        assert_eq!(SwitchPolicy::cheaper(4, 5), Paradigm::Serial);
+    }
+
+    #[test]
+    fn decide_includes_source_hosting() {
+        let serial = CostEstimate {
+            paradigm: Paradigm::Serial,
+            layer_pes: 3,
+            source_hosting_pes: 2,
+            dtcm_bytes: 0,
+        };
+        let parallel = CostEstimate {
+            paradigm: Paradigm::Parallel,
+            layer_pes: 4,
+            source_hosting_pes: 0,
+            dtcm_bytes: 0,
+        };
+        // 4 < 3 + 2: hosting flips the decision to parallel.
+        assert_eq!(SwitchPolicy::decide(&serial, &parallel), Paradigm::Parallel);
+    }
+
+    #[test]
+    fn forced_modes_prejudge_without_model() {
+        let ch = LayerCharacter::new(10, 10, 0.5, 1);
+        assert_eq!(
+            SwitchPolicy::forced(SwitchMode::ForceSerial).prejudge(&ch),
+            Some(Paradigm::Serial)
+        );
+        assert_eq!(
+            SwitchPolicy::forced(SwitchMode::ForceParallel).prejudge(&ch),
+            Some(Paradigm::Parallel)
+        );
+        assert_eq!(SwitchPolicy::forced(SwitchMode::Ideal).prejudge(&ch), None);
+    }
+}

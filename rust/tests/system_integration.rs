@@ -66,7 +66,7 @@ fn switching_system_never_worse_than_best_single_paradigm_on_average() {
         tot_p += sample.parallel_pes;
         tot_i += sample.serial_pes.min(sample.parallel_pes);
         let ch = s2switch::model::LayerCharacter::new(src, tgt, d, dl);
-        tot_c += match sys.prejudge(&ch) {
+        tot_c += match sys.prejudge(&ch).expect("classifier system always prejudges") {
             Paradigm::Serial => sample.serial_pes,
             Paradigm::Parallel => sample.parallel_pes,
         };
@@ -107,11 +107,11 @@ fn model_persistence_end_to_end() {
     // trends in the corpus; a sane model must get these poles right).
     assert_eq!(
         sys.prejudge(&s2switch::model::LayerCharacter::new(255, 255, 1.0, 1)),
-        Paradigm::Parallel
+        Some(Paradigm::Parallel)
     );
     assert_eq!(
         sys.prejudge(&s2switch::model::LayerCharacter::new(255, 255, 0.1, 16)),
-        Paradigm::Serial
+        Some(Paradigm::Serial)
     );
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -155,4 +155,50 @@ fn compiled_network_simulates_under_all_modes() {
     assert!(!results[0].is_empty());
     assert_eq!(results[0], results[1], "serial ≡ parallel");
     assert_eq!(results[0], results[2], "≡ ideal mix");
+}
+
+#[test]
+fn pipeline_jobs_do_not_change_sweep_labels_or_network_compiles() {
+    // End-to-end determinism of the threaded compile pipeline: the labeled
+    // corpus and a compiled network must be identical at any worker count.
+    let cfg = SweepConfig::small();
+    let pe = PeSpec::default();
+    let seq = s2switch::dataset::generate_grid_jobs(&cfg, &pe, WdmConfig::default(), 1);
+    let par = s2switch::dataset::generate_grid_jobs(&cfg, &pe, WdmConfig::default(), 6);
+    assert_eq!(seq.samples, par.samples);
+
+    let build = || {
+        let mut b = NetworkBuilder::new(17);
+        let inp = b.spike_source("in", 300);
+        let hid = b.lif_population("hid", 200, LifParams::default());
+        let out = b.lif_population("out", 40, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.7),
+            SynapseDraw { delay_range: 8, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.build()
+    };
+    let net = build();
+    let mut a = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    a.set_jobs(1);
+    let (layers_a, pes_a) = a.compile_network(&net).unwrap();
+    let mut b = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    b.set_jobs(8);
+    let (layers_b, pes_b) = b.compile_network(&net).unwrap();
+    assert_eq!(pes_a, pes_b);
+    assert_eq!(a.stats, b.stats);
+    for (la, lb) in layers_a.iter().zip(&layers_b) {
+        assert_eq!(la.paradigm(), lb.paradigm());
+        assert_eq!(la.n_pes(), lb.n_pes());
+    }
 }
