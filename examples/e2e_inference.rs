@@ -1,16 +1,16 @@
 //! End-to-end driver: the full three-layer stack on a real small workload.
 //!
 //! Pipeline: label corpus → train AdaBoost prejudger → compile a
-//! gesture-class SNN (2048-20-4 @ 3.16%) with fast switching → simulate
-//! 500 timesteps of synthetic DVS-like input where the parallel layers'
-//! MAC matmuls execute through the **AOT-compiled JAX/Pallas artifact via
-//! PJRT** — and cross-check every spike against the pure-native run.
-//!
-//! Reports: per-layer paradigm choice, PE/DTCM footprint, spike counts,
-//! wall-clock throughput for both backends. Recorded in EXPERIMENTS.md §E2E.
+//! gesture-class SNN (2048-20-4 @ 3.16%) with fast switching → run a
+//! **batch of synthetic DVS-like samples** through the
+//! [`BatchRunner`](s2switch::sim::BatchRunner), verifying the batched path
+//! is bit-identical at any worker count and reporting per-sample
+//! throughput. With `--features pjrt` (and `make artifacts`) an extra
+//! single-sim pass cross-checks every spike against the AOT-compiled
+//! JAX/Pallas artifact running through PJRT.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_inference
+//! cargo run --release --example e2e_inference
 //! ```
 
 use s2switch::dataset::{generate_grid, SweepConfig};
@@ -19,15 +19,12 @@ use s2switch::model::connector::{Connector, SynapseDraw};
 use s2switch::model::{LifParams, Network, NetworkBuilder, PopulationId};
 use s2switch::paradigm::parallel::WdmConfig;
 use s2switch::rng::Rng;
-use s2switch::runtime::{artifact_dir, PjrtMac, PjrtRuntime};
-use s2switch::sim::NetworkSim;
+use s2switch::sim::BatchRunner;
 use s2switch::switching::{network_pe_count, SwitchingSystem};
-use std::cell::RefCell;
-use std::rc::Rc;
-use std::time::Instant;
 
 const STEPS: u64 = 500;
 const N_INPUT: usize = 2048;
+const SAMPLES: usize = 8;
 
 fn build_net() -> Network {
     let mut b = NetworkBuilder::new(2048);
@@ -41,7 +38,7 @@ fn build_net() -> Network {
 }
 
 /// Synthetic DVS-like stimulus: a moving bump of activity over the 2048
-/// input neurons plus background noise (deterministic).
+/// input neurons plus background noise (deterministic per sample seed).
 fn stimulus(t: u64, rng: &mut Rng) -> Vec<u32> {
     let center = ((t as f64 * 13.7) as usize) % N_INPUT;
     let mut spikes: Vec<u32> = (0..N_INPUT as u32)
@@ -54,6 +51,11 @@ fn stimulus(t: u64, rng: &mut Rng) -> Vec<u32> {
         .collect();
     spikes.dedup();
     spikes
+}
+
+fn provider_for(sample: usize) -> impl FnMut(PopulationId, u64) -> Vec<u32> {
+    let mut rng = Rng::new(424242 + sample as u64);
+    move |_p: PopulationId, t: u64| stimulus(t, &mut rng)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -84,59 +86,81 @@ fn main() -> anyhow::Result<()> {
         2 * layers.len()
     );
 
-    // Native run.
-    println!("\n── simulate {STEPS} steps (native MAC) ──");
-    let run = |use_pjrt: bool| -> anyhow::Result<(Vec<(u64, u32)>, Vec<(u64, u32)>, f64, u64)> {
-        let net = build_net();
-        let mut sys2 = SwitchingSystem::train_adaboost(&dataset, 100, pe);
-        let (layers, _) = sys2.compile_network(&net)?;
-        let mut sim = if use_pjrt {
-            let rt = Rc::new(RefCell::new(PjrtRuntime::new(artifact_dir())?));
-            NetworkSim::new(&net, layers, || Box::new(PjrtMac::new(rt.clone())))?
-        } else {
-            NetworkSim::native(&net, layers)?
-        };
-        let mut rng = Rng::new(424242);
-        let mut provider = move |_p: PopulationId, t: u64| stimulus(t, &mut rng);
-        let t0 = Instant::now();
-        sim.run(STEPS, &mut provider);
-        let secs = t0.elapsed().as_secs_f64();
-        let events = sim.recorder.total_spikes() as u64;
-        Ok((
-            sim.recorder.spikes_of(PopulationId(1)).to_vec(),
-            sim.recorder.spikes_of(PopulationId(2)).to_vec(),
-            secs,
-            events,
-        ))
-    };
-
-    let (hid_n, out_n, secs_native, _) = run(false)?;
+    // ── batched native inference ─────────────────────────────────────────
+    println!("\n── batch: {SAMPLES} DVS samples × {STEPS} steps (native MAC) ──");
+    let runner = BatchRunner::new(&net, layers.clone())?;
+    let seq = runner.run(SAMPLES, STEPS, provider_for); // jobs resolved to CPUs
+    for (i, rec) in seq.recorders.iter().enumerate() {
+        println!(
+            "sample {i}: hidden={:>4} classes={:>3} spikes in {:.3}s",
+            rec.spike_count(PopulationId(1)),
+            rec.spike_count(PopulationId(2)),
+            seq.sample_nanos[i] as f64 / 1e9,
+        );
+    }
     println!(
-        "native: {:.3}s ({:.0} steps/s) | spikes hidden={} classes={}",
-        secs_native,
-        STEPS as f64 / secs_native,
-        hid_n.len(),
-        out_n.len()
+        "batch on {} worker(s): {:.3}s wall | {:.0} steps/s | {:.2} Mevents/s | {:.2} MMAC/s",
+        seq.jobs,
+        seq.wall_nanos as f64 / 1e9,
+        seq.steps_per_sec(),
+        seq.events_per_sec() / 1e6,
+        seq.macs_per_sec() / 1e6,
     );
 
-    println!("\n── simulate {STEPS} steps (PJRT: AOT JAX/Pallas MAC kernel) ──");
-    let (hid_p, out_p, secs_pjrt, _) = run(true)?;
-    println!(
-        "pjrt:   {:.3}s ({:.0} steps/s) | spikes hidden={} classes={}",
-        secs_pjrt,
-        STEPS as f64 / secs_pjrt,
-        hid_p.len(),
-        out_p.len()
+    // Worker-count invariance: single worker must reproduce every sample.
+    let single = BatchRunner::new(&net, layers.clone())?
+        .with_jobs(1)
+        .run(SAMPLES, STEPS, provider_for);
+    anyhow::ensure!(
+        single.recorders == seq.recorders,
+        "BatchRunner output must be identical at any worker count"
     );
+    println!("✓ batch output identical at jobs=1 and jobs={}", seq.jobs);
 
-    anyhow::ensure!(hid_n == hid_p && out_n == out_p, "backends must agree bit-exactly");
-    println!("\n✓ PJRT and native spike trains identical ({} + {} spikes)", hid_n.len(), out_n.len());
-
-    // Class histogram — the "inference result" of the workload.
+    // Class histogram of sample 0 — the "inference result" of the workload.
     let mut hist = [0usize; 4];
-    for &(_, n) in &out_n {
+    for &(_, n) in seq.recorders[0].spikes_of(PopulationId(2)) {
         hist[n as usize] += 1;
     }
-    println!("class spike histogram: {hist:?}");
+    println!("sample 0 class spike histogram: {hist:?}");
+
+    pjrt_crosscheck(&net, layers, &seq.recorders[0])?;
+    Ok(())
+}
+
+/// PJRT pass: rerun sample 0 through the AOT JAX/Pallas MAC artifact and
+/// demand bit-identical spike trains against the batched native run.
+#[cfg(feature = "pjrt")]
+fn pjrt_crosscheck(
+    net: &Network,
+    layers: Vec<s2switch::switching::CompiledLayer>,
+    native: &s2switch::sim::Recorder,
+) -> anyhow::Result<()> {
+    use s2switch::runtime::{artifact_dir, PjrtMac, PjrtRuntime};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    use std::time::Instant;
+
+    println!("\n── simulate sample 0 × {STEPS} steps (PJRT: AOT JAX/Pallas MAC kernel) ──");
+    let rt = Rc::new(RefCell::new(PjrtRuntime::new(artifact_dir())?));
+    let mut sim =
+        s2switch::sim::NetworkSim::new(net, layers, || Box::new(PjrtMac::new(rt.clone())))?;
+    let mut provider = provider_for(0);
+    let t0 = Instant::now();
+    sim.run(STEPS, &mut provider);
+    let secs = t0.elapsed().as_secs_f64();
+    println!("pjrt: {:.3}s ({:.0} steps/s)", secs, STEPS as f64 / secs);
+    anyhow::ensure!(&sim.recorder == native, "PJRT and native spike trains must be identical");
+    println!("✓ PJRT and native spike trains identical ({} spikes)", native.total_spikes());
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_crosscheck(
+    _net: &Network,
+    _layers: Vec<s2switch::switching::CompiledLayer>,
+    _native: &s2switch::sim::Recorder,
+) -> anyhow::Result<()> {
+    println!("\n(built without the `pjrt` feature — skipping the PJRT cross-check)");
     Ok(())
 }

@@ -1,9 +1,15 @@
-//! Simulator throughput bench — the §Perf L3 hot path.
+//! Simulator throughput bench — the §Runtime-Perf hot path.
 //!
-//! Measures steps/s and synaptic events/s for the serial engine and
-//! MACs/s for the parallel engine (native backend) across layer shapes,
-//! plus end-to-end network throughput. Drives the EXPERIMENTS.md §Perf
-//! iteration log.
+//! Measures, on the native backend:
+//! * per-layer-shape steps/s, synaptic events/s (serial) and issued MACs/s
+//!   (parallel) across the sweep envelope;
+//! * end-to-end steps/s on the demo 3-layer network (the CLI's `simulate`
+//!   network) — the single-thread number the ≥2× refactor target tracks;
+//! * batch scaling: S samples fanned over 1/2/4/8 `BatchRunner` workers,
+//!   asserting recorders are bit-identical at every worker count.
+//!
+//! Writes the machine-readable baseline to `BENCH_sim.json` (override with
+//! `S2SWITCH_BENCH_OUT`), the way compile_time writes `BENCH_compile.json`.
 //!
 //! ```bash
 //! cargo bench --bench sim_throughput
@@ -12,24 +18,56 @@
 use s2switch::bench_harness::{Bench, Report};
 use s2switch::dataset::realize_layer;
 use s2switch::hardware::PeSpec;
-use s2switch::model::{LifParams, PopulationId};
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder, PopulationId};
 use s2switch::paradigm::parallel::{compile_parallel, WdmConfig};
 use s2switch::paradigm::serial::compile_serial;
 use s2switch::rng::Rng;
-use s2switch::sim::{NativeMac, ParallelLayerEngine, SerialLayerEngine};
+use s2switch::sim::{BatchRunner, NativeMac, NetworkSim, ParallelLayerEngine, SerialLayerEngine};
+use s2switch::switching::{SwitchMode, SwitchingSystem};
 use std::time::Instant;
 
 const STEPS: usize = 200;
+const BATCH_SAMPLES: usize = 32;
+const BATCH_STEPS: u64 = 200;
+/// Warmup/measure split for [`Bench`]; the e2e telemetry divisor derives
+/// from `WARMUP` so the two cannot drift apart.
+const WARMUP: usize = 1;
+const MEASURE: usize = 5;
+
+/// The CLI's `simulate` demo network (200-120-20, mixed-density).
+fn demo_network() -> Network {
+    let mut b = NetworkBuilder::new(11);
+    let inp = b.spike_source("input", 200);
+    let hid = b.lif_population("hidden", 120, LifParams::default());
+    let out = b.lif_population("output", 20, LifParams::default());
+    b.project(
+        inp,
+        hid,
+        Connector::FixedProbability(0.4),
+        SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+        0.015,
+    );
+    b.project(
+        hid,
+        out,
+        Connector::FixedProbability(0.9),
+        SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+        0.02,
+    );
+    b.build()
+}
 
 fn main() {
     let pe = PeSpec::default();
     let shapes: Vec<(usize, usize, f64, u16)> =
         vec![(255, 255, 0.1, 4), (255, 255, 0.5, 8), (500, 500, 0.3, 16), (2048, 20, 0.0316, 1)];
-    let bench = Bench::new(1, 5);
+    let bench = Bench::new(WARMUP, MEASURE);
 
+    // ---- Part 1: per-layer engine throughput -----------------------------
     let mut rep = Report::new(
         "Simulator throughput (native backend)",
-        &["layer", "serial Mevents/s", "serial steps/s", "parallel GMAC/s", "parallel steps/s"],
+        &["layer", "serial Mevents/s", "serial steps/s", "parallel MMAC/s", "parallel steps/s"],
     );
     for (si, &(src, tgt, d, dl)) in shapes.iter().enumerate() {
         let mut rng = Rng::new(7000 + si as u64);
@@ -62,44 +100,101 @@ fn main() {
             format!("{src}×{tgt},{d},{dl}"),
             format!("{:.2}", se.events as f64 / dt_s / 1e6),
             format!("{:.0}", STEPS as f64 / dt_s),
-            format!("{:.2}", pe_eng.macs as f64 / dt_p / 1e9),
+            format!("{:.2}", pe_eng.macs as f64 / dt_p / 1e6),
             format!("{:.0}", STEPS as f64 / dt_p),
         ]);
     }
     rep.finish();
 
-    // End-to-end demo network (the CLI's `simulate` network).
-    bench.run("e2e 3-layer network, 100 steps (ideal compile)", || {
-        use s2switch::model::connector::{Connector, SynapseDraw};
-        use s2switch::model::NetworkBuilder;
-        use s2switch::switching::{SwitchMode, SwitchingSystem};
-        let mut b = NetworkBuilder::new(11);
-        let inp = b.spike_source("input", 200);
-        let hid = b.lif_population("hidden", 120, LifParams::default());
-        let out = b.lif_population("output", 20, LifParams::default());
-        b.project(
-            inp,
-            hid,
-            Connector::FixedProbability(0.4),
-            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
-            0.015,
-        );
-        b.project(
-            hid,
-            out,
-            Connector::FixedProbability(0.9),
-            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
-            0.02,
-        );
-        let net = b.build();
-        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
-        let (layers, _) = sys.compile_network(&net).unwrap();
-        let mut sim = s2switch::sim::NetworkSim::native(&net, layers).unwrap();
+    // ---- Part 2: end-to-end single-thread throughput ---------------------
+    let net = demo_network();
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (layers, _) = sys.compile_network(&net).unwrap();
+
+    // One persistent sim, reset between iterations — the steady-state loop.
+    let mut sim = NetworkSim::native(&net, layers.clone()).unwrap();
+    let e2e = bench.run("e2e 3-layer network, 200 steps (ideal compile)", || {
+        sim.reset();
         let mut rng = Rng::new(99);
         let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
             (0..200u32).filter(|_| rng.chance(0.15)).collect()
         };
-        sim.run(100, &mut provider);
+        sim.run(STEPS as u64, &mut provider);
         sim.recorder.total_spikes()
     });
+    let e2e_steps_s = STEPS as f64 / (e2e.p50_ns / 1e9);
+    // Cumulative telemetry over warmup + measured iterations.
+    let iters = (e2e.iters + WARMUP) as f64;
+    let events_s = sim.total_events() as f64 / iters / (e2e.mean_ns / 1e9);
+    let macs_s = sim.total_macs() as f64 / iters / (e2e.mean_ns / 1e9);
+    println!(
+        "e2e single-thread: {e2e_steps_s:.0} steps/s | {:.2} Mevents/s | {:.2} MMAC/s (issued)",
+        events_s / 1e6,
+        macs_s / 1e6
+    );
+
+    // ---- Part 3: batch scaling over workers ------------------------------
+    let provider_for = |sample: usize| {
+        let mut rng = Rng::new(4200 + sample as u64);
+        move |_p: PopulationId, _t: u64| -> Vec<u32> {
+            (0..200u32).filter(|_| rng.chance(0.15)).collect()
+        }
+    };
+    let mut rep = Report::new(
+        "BatchRunner scaling — 32 samples × 200 steps, demo 3-layer network",
+        &["jobs", "wall-clock ms", "steps/s", "speedup", "identical"],
+    );
+    let mut baseline: Option<(f64, Vec<s2switch::sim::Recorder>)> = None;
+    let mut batch_rows: Vec<(usize, u64, f64, f64, bool)> = Vec::new();
+    for jobs in [1usize, 2, 4, 8] {
+        let run = BatchRunner::new(&net, layers.clone())
+            .unwrap()
+            .with_jobs(jobs)
+            .run(BATCH_SAMPLES, BATCH_STEPS, provider_for);
+        let wall_s = run.wall_nanos as f64 / 1e9;
+        let (base_wall, identical) = match &baseline {
+            None => {
+                baseline = Some((wall_s, run.recorders.clone()));
+                (wall_s, true)
+            }
+            Some((b, recs)) => (*b, *recs == run.recorders),
+        };
+        let speedup = base_wall / wall_s;
+        assert!(identical, "batch output must be jobs-invariant (jobs={jobs})");
+        rep.row(vec![
+            jobs.to_string(),
+            format!("{:.1}", wall_s * 1e3),
+            format!("{:.0}", run.steps_per_sec()),
+            format!("{speedup:.2}×"),
+            identical.to_string(),
+        ]);
+        batch_rows.push((jobs, run.wall_nanos, run.steps_per_sec(), speedup, identical));
+    }
+    rep.finish();
+
+    // ---- Machine-readable baseline ---------------------------------------
+    let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into());
+    let batch_json: Vec<String> = batch_rows
+        .iter()
+        .map(|(jobs, wall_ns, steps_s, speedup, ident)| {
+            format!(
+                "    {{ \"jobs\": {jobs}, \"wall_ns\": {wall_ns}, \"steps_per_s\": {steps_s:.1}, \"speedup\": {speedup:.4}, \"identical\": {ident} }}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"sim_throughput\",\n  \"e2e\": {{\n    \"network\": \"demo 200-120-20\",\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"batch\": {{\n    \"samples\": {},\n    \"steps_per_sample\": {},\n    \"runs\": [\n{}\n    ]\n  }}\n}}\n",
+        STEPS,
+        e2e.p50_ns,
+        e2e_steps_s,
+        events_s,
+        macs_s,
+        BATCH_SAMPLES,
+        BATCH_STEPS,
+        batch_json.join(",\n"),
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("baseline written to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

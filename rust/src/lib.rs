@@ -23,8 +23,10 @@
 //!   [`switching::SwitchPolicy`] decision and the threaded, cache-aware
 //!   [`switching::CompilePipeline`] execution engine.
 //! * [`sim`] — a functional SpiNNaker2 simulator executing compiled layers
-//!   under either paradigm (parallel path runs AOT-compiled JAX/Pallas HLO
-//!   through PJRT via [`runtime`]).
+//!   under either paradigm with zero steady-state allocations, plus
+//!   [`sim::BatchRunner`] for multi-sample batched inference (the parallel
+//!   path can run AOT-compiled JAX/Pallas HLO through PJRT via [`runtime`],
+//!   behind the `pjrt` cargo feature).
 //! * [`coordinator`] — the leader pipeline tying everything together.
 //!
 //! Offline-environment substitutes (see DESIGN.md §2): [`bench_harness`]

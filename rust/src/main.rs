@@ -7,13 +7,17 @@
 //! s2switch train    [--data data/dataset.csv] [--seeds 20] [--out data/adaboost.json]
 //! s2switch decide   --src N --tgt N --density F --delay N [--model data/adaboost.json]
 //! s2switch compile  --src N --tgt N --density F --delay N [--mode serial|parallel|ideal|classifier]
-//! s2switch simulate [--steps 200] [--pjrt] [--jobs N]   # demo 3-layer network
+//! s2switch simulate [--steps 200] [--batch S] [--pjrt] [--jobs N]
+//!                   [--record-csv PATH]      # demo 3-layer network
 //! ```
 //!
-//! `--jobs N` sets the compile-pipeline worker-thread count (0 = one
-//! thread per CPU) for dataset labeling and network compilation.
+//! `--jobs N` sets the worker-thread count (0 = one thread per CPU) for
+//! dataset labeling, network compilation, and batched simulation.
+//! `--batch S` runs S independent stimulus samples through the
+//! [`BatchRunner`](s2switch::sim::BatchRunner); every run ends with a
+//! throughput report (steps/s, synaptic events/s, issued MACs/s).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use s2switch::coordinator::{
     dataset_cached, dataset_cached_jobs, load_switching_system, train_and_save_adaboost,
     train_roster,
@@ -79,8 +83,10 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [fl
   train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
   decide    --src N --tgt N --density F --delay N --model PATH
   compile   --src N --tgt N --density F --delay N --mode MODE
-  simulate  --steps N --pjrt --jobs N     run the demo network end to end
-  (--jobs N: compile-pipeline worker threads, 0 = one per CPU)";
+  simulate  --steps N --batch S --pjrt --jobs N --record-csv PATH
+            run the demo network end to end (--batch S: S stimulus samples
+            through the BatchRunner; --record-csv: dump recorded spikes)
+  (--jobs N: worker threads for compiling and batching, 0 = one per CPU)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -278,25 +284,56 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         100.0 * placement.machine.mean_utilization()
     );
 
-    let mut sim = if args.has("pjrt") {
-        use std::cell::RefCell;
-        use std::rc::Rc;
-        let rt = Rc::new(RefCell::new(s2switch::runtime::PjrtRuntime::new(
-            s2switch::runtime::artifact_dir(),
-        )?));
-        NetworkSim::new(&net, layers, || {
-            Box::new(s2switch::runtime::PjrtMac::new(rt.clone()))
-        })?
-    } else {
-        NetworkSim::native(&net, layers)?
-    };
-
+    // Sample `s` draws its stimulus from a seed derived with a golden-ratio
+    // stride, so batch results are a pure function of the sample index.
     let sizes: Vec<usize> = net.populations.iter().map(|p| p.n_neurons).collect();
-    let t0 = std::time::Instant::now();
-    let mut rng = Rng::new(99);
-    let mut provider = move |p: s2switch::model::PopulationId, _t: u64| -> Vec<u32> {
-        (0..sizes[p.0] as u32).filter(|_| rng.chance(rate)).collect()
+    let stimulus_for = |sample: usize| {
+        let sizes = sizes.clone();
+        let mut rng = Rng::new(99u64.wrapping_add(sample as u64 * 0x9E37_79B9_7F4A_7C15));
+        move |p: s2switch::model::PopulationId, _t: u64| -> Vec<u32> {
+            (0..sizes[p.0] as u32).filter(|_| rng.chance(rate)).collect()
+        }
     };
+    let record_path = args.get("record-csv").or_else(|| args.get("record"));
+
+    let batch: usize = args.parse_or("batch", 0)?;
+    if batch > 0 {
+        ensure!(
+            !args.has("pjrt"),
+            "--batch runs on the native backend (the PJRT client is single-threaded)"
+        );
+        let runner = s2switch::sim::BatchRunner::new(&net, layers)?
+            .with_jobs(resolve_jobs(args)?);
+        let run = runner.run(batch, steps, stimulus_for);
+        for (i, rec) in run.recorders.iter().enumerate() {
+            println!(
+                "sample {i:>3}: {:>6} spikes in {:.2?}",
+                rec.total_spikes(),
+                std::time::Duration::from_nanos(run.sample_nanos[i])
+            );
+        }
+        println!(
+            "batch: {} samples × {} steps on {} worker(s) in {:.2?}",
+            run.n_samples(),
+            steps,
+            run.jobs,
+            std::time::Duration::from_nanos(run.wall_nanos),
+        );
+        print_throughput(run.steps_per_sec(), run.events_per_sec(), run.macs_per_sec());
+        if let Some(out) = record_path {
+            // One CSV per sample: PATH gains a `.sN` suffix before `.csv`.
+            for (i, rec) in run.recorders.iter().enumerate() {
+                let path = sample_csv_path(out, i);
+                rec.save_spikes_csv(&path)?;
+            }
+            println!("spikes exported to {out} (one file per sample, `.sN` suffix)");
+        }
+        return Ok(());
+    }
+
+    let mut sim = build_sim(args.has("pjrt"), &net, layers)?;
+    let t0 = std::time::Instant::now();
+    let mut provider = stimulus_for(0);
     sim.run(steps, &mut provider);
     let dt = t0.elapsed();
     println!(
@@ -309,14 +346,73 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             println!("  {}: {} spikes", pop.label, sim.recorder.spike_count(pop.id));
         }
     }
+    let secs = dt.as_secs_f64();
+    print_throughput(
+        steps as f64 / secs,
+        sim.total_events() as f64 / secs,
+        sim.total_macs() as f64 / secs,
+    );
     // NoC traffic estimate for the recorded activity.
     let noc = placement
         .estimate_traffic(&s2switch::switching::placement::spike_counts(&sim.recorder));
     println!("NoC estimate: {} multicast packets, {} inter-chip hops", noc.packets, noc.hops);
 
-    if let Some(out) = args.get("record") {
+    if let Some(out) = record_path {
         sim.recorder.save_spikes_csv(std::path::Path::new(out))?;
         println!("spikes exported to {out}");
     }
     Ok(())
+}
+
+/// The exit throughput report every `simulate` run prints.
+fn print_throughput(steps_s: f64, events_s: f64, macs_s: f64) {
+    println!(
+        "throughput: {:.0} steps/s | {:.2} Mevents/s | {:.2} MMAC/s (issued)",
+        steps_s,
+        events_s / 1e6,
+        macs_s / 1e6
+    );
+}
+
+/// `out.csv` + sample 3 → `out.s3.csv` (extensionless paths just append).
+fn sample_csv_path(out: &str, sample: usize) -> std::path::PathBuf {
+    let p = std::path::Path::new(out);
+    match (p.file_stem().and_then(|s| s.to_str()), p.extension().and_then(|e| e.to_str())) {
+        (Some(stem), Some(ext)) => p.with_file_name(format!("{stem}.s{sample}.{ext}")),
+        _ => std::path::PathBuf::from(format!("{out}.s{sample}")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn build_sim(
+    pjrt: bool,
+    net: &s2switch::model::Network,
+    layers: Vec<s2switch::switching::CompiledLayer>,
+) -> Result<NetworkSim> {
+    if pjrt {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let rt = Rc::new(RefCell::new(s2switch::runtime::PjrtRuntime::new(
+            s2switch::runtime::artifact_dir(),
+        )?));
+        NetworkSim::new(net, layers, || {
+            Box::new(s2switch::runtime::PjrtMac::new(rt.clone()))
+        })
+    } else {
+        NetworkSim::native(net, layers)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_sim(
+    pjrt: bool,
+    net: &s2switch::model::Network,
+    layers: Vec<s2switch::switching::CompiledLayer>,
+) -> Result<NetworkSim> {
+    ensure!(
+        !pjrt,
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `cargo build --features pjrt` (requires the vendored `xla` crate)"
+    );
+    NetworkSim::native(net, layers)
 }

@@ -10,7 +10,16 @@
 //! the runtime pads operands up to the bucket and truncates results. WDM
 //! chunk weights are uploaded once per chunk as device buffers and reused
 //! every timestep.
+//!
+//! **Feature gate**: the `xla` crate is not part of the offline vendored
+//! crate set, so the whole PJRT path sits behind the `pjrt` cargo feature
+//! (DESIGN.md §2). The default build runs everything on the native MAC
+//! backend; `--features pjrt` (plus the locally-vendored `xla` crate and
+//! `make artifacts`) enables this module, the `--pjrt` CLI flag, and the
+//! PJRT integration tests.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::{artifact_dir, matvec_bucket, PjrtMac, PjrtRuntime, MATVEC_BUCKETS};

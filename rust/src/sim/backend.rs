@@ -5,15 +5,42 @@
 //! PJRT. Both operate on integer-valued f32 (spike counts and quantized
 //! weights), so results are exactly equal as long as values stay below 2²⁴
 //! — which the LIF regime guarantees by orders of magnitude.
+//!
+//! Backends write into caller-provided scratch ([`MacBackend::matvec_into`])
+//! so the steady-state inference loop performs zero heap allocations, and
+//! report the MAC operations they *actually issued* (sparsity-aware — silent
+//! lanes are skipped), which is what the throughput benches charge.
 
 /// A backend that can run the MAC-array matvec.
 pub trait MacBackend {
     /// `out[c] = Σ_r stacked[r] · weights[r · n_cols + c]`
     ///
     /// `stacked` has `n_rows` entries; `weights` is row-major
-    /// `n_rows × n_cols`.
+    /// `n_rows × n_cols`; `out` has `n_cols` entries and is fully
+    /// overwritten (the caller does not need to zero it).
+    ///
+    /// Returns the number of multiply-accumulate operations actually issued
+    /// — sparse backends skip all-zero input lanes, so this can be far below
+    /// `n_rows · n_cols`. Bucket/tile padding is excluded: only logical
+    /// `rows × cols` work is counted, keeping MACs/s comparable across
+    /// backends.
+    fn matvec_into(
+        &mut self,
+        out: &mut [f32],
+        stacked: &[f32],
+        weights: &[f32],
+        n_rows: usize,
+        n_cols: usize,
+    ) -> u64;
+
+    /// Allocating convenience wrapper around [`MacBackend::matvec_into`]
+    /// (tests and one-shot callers; the simulation hot path uses scratch).
     fn matvec(&mut self, stacked: &[f32], weights: &[f32], n_rows: usize, n_cols: usize)
-        -> Vec<f32>;
+        -> Vec<f32> {
+        let mut out = vec![0.0f32; n_cols];
+        self.matvec_into(&mut out, stacked, weights, n_rows, n_cols);
+        out
+    }
 
     /// Backend label for logs/benches.
     fn name(&self) -> &'static str;
@@ -24,16 +51,19 @@ pub trait MacBackend {
 pub struct NativeMac;
 
 impl MacBackend for NativeMac {
-    fn matvec(
+    fn matvec_into(
         &mut self,
+        out: &mut [f32],
         stacked: &[f32],
         weights: &[f32],
         n_rows: usize,
         n_cols: usize,
-    ) -> Vec<f32> {
+    ) -> u64 {
         assert_eq!(stacked.len(), n_rows);
         assert_eq!(weights.len(), n_rows * n_cols);
-        let mut out = vec![0.0f32; n_cols];
+        assert_eq!(out.len(), n_cols);
+        out.fill(0.0);
+        let mut issued = 0u64;
         for (r, &s) in stacked.iter().enumerate() {
             if s == 0.0 {
                 continue; // stacked input is sparse: skip silent lanes
@@ -42,8 +72,9 @@ impl MacBackend for NativeMac {
             for (o, &w) in out.iter_mut().zip(row) {
                 *o += s * w;
             }
+            issued += n_cols as u64;
         }
-        out
+        issued
     }
 
     fn name(&self) -> &'static str {
@@ -63,6 +94,27 @@ mod tests {
         let s = vec![1.0, 0.0, 2.0];
         let out = b.matvec(&s, &w, 3, 2);
         assert_eq!(out, vec![1.0 + 10.0, 2.0 + 12.0]);
+    }
+
+    #[test]
+    fn matvec_into_overwrites_dirty_scratch() {
+        let mut b = NativeMac;
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let s = vec![1.0, 0.0, 2.0];
+        let mut out = vec![f32::NAN; 2];
+        b.matvec_into(&mut out, &s, &w, 3, 2);
+        assert_eq!(out, vec![11.0, 14.0]);
+    }
+
+    #[test]
+    fn issued_macs_skip_silent_lanes() {
+        let mut b = NativeMac;
+        let mut out = vec![0.0f32; 2];
+        // 4 rows, 2 active → 2 × 2 cols issued, not 4 × 2.
+        let issued = b.matvec_into(&mut out, &[1.0, 0.0, 2.0, 0.0], &[1.0; 8], 4, 2);
+        assert_eq!(issued, 4);
+        let none = b.matvec_into(&mut out, &[0.0; 4], &[1.0; 8], 4, 2);
+        assert_eq!(none, 0);
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Multi-sample batched inference (DESIGN.md §Runtime-Perf).
+//!
+//! SNN serving workloads present many independent stimulus samples against
+//! one compiled network (the SpiNNaker2 system paper's batch-style
+//! many-sample evaluation). [`BatchRunner`] fans S samples out over scoped
+//! worker threads — the same work-stealing idiom as
+//! [`crate::switching::pipeline::fan_out`] — where each worker builds its
+//! own engine state **once** from the shared compiled layers and
+//! [`NetworkSim::reset`]s between samples, so per-sample cost is pure
+//! simulation, not reconstruction.
+//!
+//! Determinism: sample `i`'s stimulus comes from `make_provider(i)` and its
+//! simulation state is fully reset beforehand, so each recorder depends only
+//! on `i` — results are bit-identical at any `--jobs` count and identical to
+//! S sequential [`NetworkSim`] runs (tested below).
+
+use super::network::{NetworkSim, Recorder};
+use crate::model::{Network, PopulationId};
+use crate::switching::CompiledLayer;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// One batch execution's output: per-sample recorders plus throughput
+/// accounting (the quantities `BENCH_sim.json` records).
+#[derive(Clone, Debug)]
+pub struct BatchRun {
+    /// Per-sample recorders, in sample order.
+    pub recorders: Vec<Recorder>,
+    /// Per-sample wall-clock, nanoseconds, in sample order.
+    pub sample_nanos: Vec<u64>,
+    /// Whole-batch wall-clock, nanoseconds.
+    pub wall_nanos: u64,
+    /// Timesteps simulated per sample.
+    pub steps: u64,
+    /// Synaptic events processed across all samples (serial engines).
+    pub events: u64,
+    /// MAC operations actually issued across all samples (parallel engines).
+    pub macs: u64,
+    /// Worker threads used.
+    pub jobs: usize,
+}
+
+impl BatchRun {
+    pub fn n_samples(&self) -> usize {
+        self.recorders.len()
+    }
+
+    /// Timesteps simulated across the whole batch.
+    pub fn total_steps(&self) -> u64 {
+        self.steps * self.recorders.len() as u64
+    }
+
+    pub fn total_spikes(&self) -> usize {
+        self.recorders.iter().map(Recorder::total_spikes).sum()
+    }
+
+    fn wall_secs(&self) -> f64 {
+        (self.wall_nanos.max(1)) as f64 / 1e9
+    }
+
+    /// Aggregate timesteps per second over batch wall-clock.
+    pub fn steps_per_sec(&self) -> f64 {
+        self.total_steps() as f64 / self.wall_secs()
+    }
+
+    /// Aggregate synaptic events per second over batch wall-clock.
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_secs()
+    }
+
+    /// Aggregate issued MACs per second over batch wall-clock.
+    pub fn macs_per_sec(&self) -> f64 {
+        self.macs as f64 / self.wall_secs()
+    }
+}
+
+/// Fans independent stimulus samples over worker threads, each driving a
+/// privately-owned [`NetworkSim`] built once from shared compiled layers.
+///
+/// Workers run the native MAC backend (the PJRT client is single-threaded
+/// by construction; route PJRT comparisons through a lone [`NetworkSim`]).
+pub struct BatchRunner<'a> {
+    net: &'a Network,
+    layers: Vec<CompiledLayer>,
+    jobs: usize,
+}
+
+impl<'a> BatchRunner<'a> {
+    /// Validates the network/layers pairing up front (feed-forward shape,
+    /// one layer per projection, LIF targets) so workers can build sims
+    /// infallibly — structural checks only, no engine state materialized.
+    pub fn new(net: &'a Network, layers: Vec<CompiledLayer>) -> Result<Self> {
+        NetworkSim::validate(net, layers.len())?;
+        Ok(BatchRunner { net, layers, jobs: 0 })
+    }
+
+    /// Builder-style worker-thread count (0 = one per CPU; 1 = inline).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    /// Resolved worker count for `n_samples` items.
+    fn effective_jobs(&self, n_samples: usize) -> usize {
+        let jobs = if self.jobs == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            self.jobs
+        };
+        jobs.min(n_samples).max(1)
+    }
+
+    /// Run `n_samples` independent samples of `steps` timesteps each.
+    /// `make_provider(i)` yields sample `i`'s spike provider (must be a
+    /// pure function of `i` for jobs-invariant results).
+    pub fn run<P, F>(&self, n_samples: usize, steps: u64, make_provider: F) -> BatchRun
+    where
+        F: Fn(usize) -> P + Sync,
+        P: FnMut(PopulationId, u64) -> Vec<u32>,
+    {
+        let jobs = self.effective_jobs(n_samples);
+        let t0 = Instant::now();
+        let mut slots: Vec<Option<(Recorder, u64)>> = (0..n_samples).map(|_| None).collect();
+        let mut events = 0u64;
+        let mut macs = 0u64;
+
+        // One worker body: owns a sim, pulls sample indices, resets between
+        // samples, returns indexed recorders + its telemetry totals.
+        let worker = |next: &AtomicUsize| -> (Vec<(usize, Recorder, u64)>, u64, u64) {
+            let mut sim = NetworkSim::native(self.net, self.layers.clone())
+                .expect("validated in BatchRunner::new");
+            let mut local = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_samples {
+                    break;
+                }
+                sim.reset();
+                let mut provider = make_provider(i);
+                let s0 = Instant::now();
+                sim.run(steps, &mut provider);
+                local.push((
+                    i,
+                    std::mem::take(&mut sim.recorder),
+                    s0.elapsed().as_nanos() as u64,
+                ));
+            }
+            (local, sim.total_events(), sim.total_macs())
+        };
+
+        let next = AtomicUsize::new(0);
+        if jobs <= 1 {
+            let (local, ev, mc) = worker(&next);
+            events += ev;
+            macs += mc;
+            for (i, rec, ns) in local {
+                slots[i] = Some((rec, ns));
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..jobs)
+                    .map(|_| {
+                        let worker = &worker;
+                        let next = &next;
+                        scope.spawn(move || worker(next))
+                    })
+                    .collect();
+                for h in handles {
+                    match h.join() {
+                        Ok((local, ev, mc)) => {
+                            events += ev;
+                            macs += mc;
+                            for (i, rec, ns) in local {
+                                slots[i] = Some((rec, ns));
+                            }
+                        }
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    }
+                }
+            });
+        }
+
+        let mut recorders = Vec::with_capacity(n_samples);
+        let mut sample_nanos = Vec::with_capacity(n_samples);
+        for s in slots {
+            let (rec, ns) = s.expect("worker filled every sample slot");
+            recorders.push(rec);
+            sample_nanos.push(ns);
+        }
+        BatchRun {
+            recorders,
+            sample_nanos,
+            wall_nanos: t0.elapsed().as_nanos() as u64,
+            steps,
+            events,
+            macs,
+            jobs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::PeSpec;
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{LifParams, NetworkBuilder};
+    use crate::rng::Rng;
+    use crate::switching::{SwitchMode, SwitchingSystem};
+
+    fn demo_net() -> Network {
+        let mut b = NetworkBuilder::new(44);
+        let inp = b.spike_source("in", 60);
+        let hid = b.lif_population("hid", 40, LifParams::default());
+        let out = b.lif_population("out", 12, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 3, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.8),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.05,
+        );
+        b.build()
+    }
+
+    fn compiled(net: &Network) -> Vec<CompiledLayer> {
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        sys.compile_network(net).unwrap().0
+    }
+
+    fn provider_for(i: usize) -> impl FnMut(crate::model::PopulationId, u64) -> Vec<u32> {
+        let mut rng = Rng::new(1000 + i as u64);
+        move |_p, _t| (0..60u32).filter(|_| rng.chance(0.25)).collect()
+    }
+
+    #[test]
+    fn batch_output_is_jobs_invariant() {
+        let net = demo_net();
+        let layers = compiled(&net);
+        let a = BatchRunner::new(&net, layers.clone())
+            .unwrap()
+            .with_jobs(1)
+            .run(12, 40, provider_for);
+        let b = BatchRunner::new(&net, layers)
+            .unwrap()
+            .with_jobs(8)
+            .run(12, 40, provider_for);
+        assert_eq!(a.recorders, b.recorders, "recorders must not depend on jobs");
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.macs, b.macs);
+        assert!(a.total_spikes() > 0, "batch must produce activity");
+    }
+
+    #[test]
+    fn batch_matches_sequential_network_sim_runs() {
+        let net = demo_net();
+        let layers = compiled(&net);
+        let batch = BatchRunner::new(&net, layers.clone())
+            .unwrap()
+            .with_jobs(4)
+            .run(6, 50, provider_for);
+        for i in 0..6 {
+            let mut sim = NetworkSim::native(&net, layers.clone()).unwrap();
+            let mut provider = provider_for(i);
+            sim.run(50, &mut provider);
+            assert_eq!(
+                batch.recorders[i], sim.recorder,
+                "sample {i} must equal a standalone NetworkSim run"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_well_formed() {
+        let net = demo_net();
+        let run = BatchRunner::new(&net, compiled(&net)).unwrap().run(0, 10, provider_for);
+        assert_eq!(run.n_samples(), 0);
+        assert_eq!(run.total_steps(), 0);
+    }
+
+    #[test]
+    fn throughput_accounting_adds_up() {
+        let net = demo_net();
+        let run = BatchRunner::new(&net, compiled(&net))
+            .unwrap()
+            .with_jobs(2)
+            .run(4, 30, provider_for);
+        assert_eq!(run.n_samples(), 4);
+        assert_eq!(run.total_steps(), 120);
+        assert_eq!(run.sample_nanos.len(), 4);
+        assert!(run.steps_per_sec() > 0.0);
+        assert!(run.events > 0 || run.macs > 0, "some engine must report work");
+    }
+}

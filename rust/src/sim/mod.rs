@@ -5,13 +5,17 @@
 //!
 //! * [`serial_engine`] — event-based synaptic processing: spike → master
 //!   population table → address list → synaptic-matrix block → delay ring
-//!   buffer, per serial PE.
+//!   buffer, per serial PE (spikes dispatched through a precomputed
+//!   source→PE CSR index).
 //! * [`parallel_engine`] — dominant-PE preprocessing (reversed order /
 //!   input-merging tables → stacked input ring) + subordinate MAC-array
 //!   matmuls, optionally through the AOT-compiled JAX/Pallas HLO via PJRT
-//!   ([`crate::runtime`]).
+//!   ([`crate::runtime`], behind the `pjrt` feature).
 //! * [`network`] — whole-network simulation: population LIF state, spike
-//!   routing between layers, recording.
+//!   routing between layers, recording. Steady state allocates nothing;
+//!   [`NetworkSim::reset`] reuses one compiled sim across stimuli.
+//! * [`batch`] — [`BatchRunner`]: many independent stimulus samples fanned
+//!   over worker threads against shared compiled layers.
 //!
 //! **Numerical equivalence**: weights are integers (quantized u8 magnitudes,
 //! sign = synapse type) and both engines accumulate them exactly (i32 /
@@ -19,11 +23,13 @@
 //! bit-identical spike trains — property-tested in [`network`].
 
 pub mod backend;
+pub mod batch;
 pub mod network;
 pub mod parallel_engine;
 pub mod serial_engine;
 
 pub use backend::{MacBackend, NativeMac};
+pub use batch::{BatchRun, BatchRunner};
 pub use network::{NetworkSim, Recorder, SpikeProvider};
 pub use parallel_engine::ParallelLayerEngine;
 pub use serial_engine::SerialLayerEngine;

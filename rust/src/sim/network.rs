@@ -5,6 +5,14 @@
 //! engine consumes its source population's spikes from the *current* step
 //! (feed-forward networks only — recurrent edges would need a one-step
 //! delay relaxation, which the paper's per-layer evaluation never exercises).
+//!
+//! The stepping loop is allocation-free in steady state: engine indices are
+//! grouped by source population at construction (CSR-style, no per-step
+//! scan over all engines), input currents accumulate into fixed
+//! per-population buffers (zeroed after consumption, never reallocated),
+//! and per-population spike scratch is reused across steps. [`NetworkSim::reset`]
+//! rewinds everything to t=0 so one compiled simulator can serve many
+//! stimulus samples — the primitive [`super::batch::BatchRunner`] builds on.
 
 use super::backend::{MacBackend, NativeMac};
 use super::parallel_engine::ParallelLayerEngine;
@@ -32,16 +40,23 @@ enum LayerEngine {
 }
 
 impl LayerEngine {
-    fn step_currents(&mut self, spikes_in: &[u32]) -> Vec<f32> {
+    fn step_currents(&mut self, spikes_in: &[u32]) -> &[f32] {
         match self {
             LayerEngine::Serial(e) => e.step_currents(spikes_in),
             LayerEngine::Parallel(e) => e.step_currents(spikes_in),
         }
     }
+
+    fn reset(&mut self) {
+        match self {
+            LayerEngine::Serial(e) => e.reset(),
+            LayerEngine::Parallel(e) => e.reset(),
+        }
+    }
 }
 
 /// Recorded spikes (and optional voltages) per population.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Recorder {
     /// `spikes[pop] = [(t, neuron)]`.
     pub spikes: BTreeMap<usize, Vec<(u64, u32)>>,
@@ -80,9 +95,17 @@ impl Recorder {
 /// The network simulator.
 pub struct NetworkSim {
     topo: Vec<PopulationId>,
-    /// Engine + source population per projection, in projection order.
+    /// Engine + source/target population per projection, projection order.
     engines: Vec<(PopulationId, PopulationId, LayerEngine)>,
+    /// Engine indices grouped by source population id (CSR-style index
+    /// computed once; the step loop never scans engines it won't run).
+    engines_of_src: Vec<Vec<usize>>,
     pops: Vec<Option<PopState>>,
+    /// Fixed per-population input-current accumulators (zeroed after
+    /// consumption each step, never reallocated).
+    currents: Vec<Vec<f32>>,
+    /// Per-population spike scratch for the current step.
+    spike_buf: Vec<Vec<u32>>,
     record_spikes: Vec<bool>,
     record_v: Vec<bool>,
     pub recorder: Recorder,
@@ -98,23 +121,10 @@ impl NetworkSim {
         layers: Vec<CompiledLayer>,
         mut backend_factory: impl FnMut() -> Box<dyn MacBackend>,
     ) -> Result<Self> {
-        ensure!(
-            layers.len() == net.projections.len(),
-            "need one compiled layer per projection"
-        );
-        // Feed-forward check: topological position of source < target.
+        Self::validate(net, layers.len())?;
         let topo = net.topo_order();
-        let pos: BTreeMap<usize, usize> =
-            topo.iter().enumerate().map(|(i, p)| (p.0, i)).collect();
-        for proj in &net.projections {
-            ensure!(
-                pos[&proj.source.0] < pos[&proj.target.0],
-                "NetworkSim supports feed-forward networks only (projection {} is not)",
-                proj.id.0
-            );
-        }
 
-        let engines = net
+        let engines: Vec<(PopulationId, PopulationId, LayerEngine)> = net
             .projections
             .iter()
             .zip(layers)
@@ -132,7 +142,12 @@ impl NetworkSim {
             })
             .collect();
 
-        let pops = net
+        let mut engines_of_src = vec![Vec::new(); net.populations.len()];
+        for (i, (src, _, _)) in engines.iter().enumerate() {
+            engines_of_src[src.0].push(i);
+        }
+
+        let pops: Vec<Option<PopState>> = net
             .populations
             .iter()
             .map(|p| {
@@ -147,12 +162,46 @@ impl NetworkSim {
         Ok(NetworkSim {
             topo,
             engines,
+            engines_of_src,
             pops,
+            currents: net.populations.iter().map(|p| vec![0.0; p.n_neurons]).collect(),
+            spike_buf: vec![Vec::new(); net.populations.len()],
             record_spikes: net.populations.iter().map(|p| p.record_spikes).collect(),
             record_v: net.populations.iter().map(|p| p.record_v).collect(),
             recorder: Recorder::default(),
             t: 0,
         })
+    }
+
+    /// The structural invariants simulation relies on, checked without
+    /// materializing any engine state (shared with [`super::batch::BatchRunner`],
+    /// whose workers then build sims infallibly): one compiled layer per
+    /// projection, feed-forward topology, and every projection target is a
+    /// LIF population (a projection into a spike source would accumulate
+    /// currents nothing ever consumes).
+    pub(crate) fn validate(net: &Network, n_layers: usize) -> Result<()> {
+        ensure!(
+            n_layers == net.projections.len(),
+            "need one compiled layer per projection"
+        );
+        // Feed-forward check: topological position of source < target.
+        let topo = net.topo_order();
+        let pos: BTreeMap<usize, usize> =
+            topo.iter().enumerate().map(|(i, p)| (p.0, i)).collect();
+        for proj in &net.projections {
+            ensure!(
+                pos[&proj.source.0] < pos[&proj.target.0],
+                "NetworkSim supports feed-forward networks only (projection {} is not)",
+                proj.id.0
+            );
+            ensure!(
+                net.population(proj.target).lif_params().is_some(),
+                "projection {} targets spike source '{}' — targets must be LIF populations",
+                proj.id.0,
+                net.population(proj.target).label
+            );
+        }
+        Ok(())
     }
 
     /// Default construction with the native MAC backend everywhere.
@@ -164,52 +213,92 @@ impl NetworkSim {
         self.t
     }
 
+    /// Rewind to t=0 with fresh membrane/ring state and an empty recorder,
+    /// keeping every compiled structure and buffer — the cheap path to run
+    /// another stimulus sample without recompiling. Engine telemetry
+    /// (`events`/`macs`) keeps accumulating across resets.
+    pub fn reset(&mut self) {
+        for (_, _, engine) in &mut self.engines {
+            engine.reset();
+        }
+        for state in self.pops.iter_mut().flatten() {
+            state.v.fill(state.params.v_init);
+            state.refrac.fill(0);
+        }
+        for c in &mut self.currents {
+            c.fill(0.0);
+        }
+        for s in &mut self.spike_buf {
+            s.clear();
+        }
+        self.recorder = Recorder::default();
+        self.t = 0;
+    }
+
+    /// Synaptic events processed by the serial engines (cumulative).
+    pub fn total_events(&self) -> u64 {
+        self.engines
+            .iter()
+            .map(|(_, _, e)| match e {
+                LayerEngine::Serial(s) => s.events,
+                LayerEngine::Parallel(_) => 0,
+            })
+            .sum()
+    }
+
+    /// MAC operations actually issued by the parallel engines (cumulative).
+    pub fn total_macs(&self) -> u64 {
+        self.engines
+            .iter()
+            .map(|(_, _, e)| match e {
+                LayerEngine::Serial(_) => 0,
+                LayerEngine::Parallel(p) => p.macs,
+            })
+            .sum()
+    }
+
     /// Advance one timestep. `provider` yields each spike-source
     /// population's firing neuron ids for this step.
-    pub fn step(&mut self, provider: &mut SpikeProvider) -> BTreeMap<usize, Vec<u32>> {
-        let mut spikes_now: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
-        let mut currents: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
-
-        for &pop in &self.topo.clone() {
+    pub fn step(&mut self, provider: &mut SpikeProvider) {
+        for i in 0..self.topo.len() {
+            let pop = self.topo[i];
+            let p = pop.0;
             // 1. Every engine whose source is an *earlier* population has
             //    already seen its spikes; engines sourced at `pop` step
             //    after `pop`'s own spikes exist. So: first compute this
             //    population's spikes, then run its outgoing engines.
-            let spikes = if let Some(state) = &mut self.pops[pop.0] {
-                let n = state.v.len();
-                let zero = vec![0.0f32; n];
-                let input = currents.get(&pop.0).unwrap_or(&zero);
-                let mut spikes = Vec::new();
-                lif_step_batch(&state.params, &mut state.v, input, &mut state.refrac, &mut spikes);
-                if self.record_v[pop.0] {
-                    self.recorder.v.entry(pop.0).or_default().push(state.v.clone());
+            if let Some(state) = &mut self.pops[p] {
+                lif_step_batch(
+                    &state.params,
+                    &mut state.v,
+                    &self.currents[p],
+                    &mut state.refrac,
+                    &mut self.spike_buf[p],
+                );
+                self.currents[p].fill(0.0);
+                if self.record_v[p] {
+                    self.recorder.v.entry(p).or_default().push(state.v.clone());
                 }
-                spikes
             } else {
-                provider(pop, self.t)
-            };
-            if self.record_spikes[pop.0] && !spikes.is_empty() {
-                let rec = self.recorder.spikes.entry(pop.0).or_default();
-                rec.extend(spikes.iter().map(|&n| (self.t, n)));
+                self.spike_buf[p] = provider(pop, self.t);
+            }
+            if self.record_spikes[p] && !self.spike_buf[p].is_empty() {
+                let rec = self.recorder.spikes.entry(p).or_default();
+                rec.extend(self.spike_buf[p].iter().map(|&n| (self.t, n)));
             }
 
-            // 2. Feed outgoing engines with this step's spikes, gathering
+            // 2. Feed outgoing engines with this step's spikes, accumulating
             //    the currents their targets owe *this* step.
-            for (src, tgt, engine) in &mut self.engines {
-                if *src != pop {
-                    continue;
-                }
-                let due = engine.step_currents(&spikes);
-                let acc = currents.entry(tgt.0).or_insert_with(|| vec![0.0; due.len()]);
-                for (a, d) in acc.iter_mut().zip(due) {
+            for &ei in &self.engines_of_src[p] {
+                let (_, tgt, engine) = &mut self.engines[ei];
+                let due = engine.step_currents(&self.spike_buf[p]);
+                for (a, &d) in self.currents[tgt.0].iter_mut().zip(due) {
                     *a += d;
                 }
             }
-            spikes_now.insert(pop.0, spikes);
         }
 
         self.t += 1;
-        spikes_now
     }
 
     /// Run `steps` timesteps.
@@ -248,7 +337,51 @@ mod tests {
         b.build()
     }
 
+    /// A 3-layer feed-forward net exercising two stacked projections.
+    fn three_layer_net(
+        seed: u64,
+        n_in: usize,
+        n_hid: usize,
+        n_out: usize,
+        d1: f64,
+        d2: f64,
+        delay1: u16,
+        delay2: u16,
+    ) -> Network {
+        let mut b = NetworkBuilder::new(seed);
+        let inp = b.spike_source("in", n_in);
+        let hid = b.lif_population(
+            "hid",
+            n_hid,
+            LifParams { alpha: 0.8, v_th: 1.0, ..Default::default() },
+        );
+        let out = b.lif_population(
+            "out",
+            n_out,
+            LifParams { alpha: 0.85, v_th: 1.0, ..Default::default() },
+        );
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(d1),
+            SynapseDraw { delay_range: delay1, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(d2),
+            SynapseDraw { delay_range: delay2, w_max: 100, ..Default::default() },
+            0.05,
+        );
+        b.build()
+    }
+
     fn run_with(net: &Network, mode: SwitchMode, steps: u64, stim_seed: u64) -> Vec<(u64, u32)> {
+        run_recording(net, mode, steps, stim_seed).spikes_of(PopulationId(1)).to_vec()
+    }
+
+    fn run_recording(net: &Network, mode: SwitchMode, steps: u64, stim_seed: u64) -> Recorder {
         let mut sys = SwitchingSystem::new(mode, PeSpec::default());
         let (layers, _) = sys.compile_network(net).unwrap();
         let mut sim = NetworkSim::native(net, layers).unwrap();
@@ -258,7 +391,7 @@ mod tests {
             (0..n_in as u32).filter(|_| rng.chance(0.2)).collect()
         };
         sim.run(steps, &mut provider);
-        sim.recorder.spikes_of(PopulationId(1)).to_vec()
+        sim.recorder
     }
 
     #[test]
@@ -302,6 +435,35 @@ mod tests {
     }
 
     #[test]
+    fn equivalence_property_across_three_layer_nets() {
+        // The refactored engines must stay bit-identical through *stacked*
+        // projections too: full recorders (both populations) compared
+        // across ForceSerial / ForceParallel / Ideal mixes.
+        Prop::new("serial ≡ parallel ≡ ideal, 3-layer", 8).check(
+            |g| {
+                (
+                    g.i64(1, 1 << 20) as u64,
+                    g.usize(20, 70),
+                    g.usize(10, 50),
+                    g.usize(5, 20),
+                    g.f64(0.2, 1.0),
+                    g.f64(0.3, 1.0),
+                    g.usize(1, 8) as u16,
+                    g.usize(1, 8) as u16,
+                    g.i64(1, 1 << 20) as u64,
+                )
+            },
+            |&(seed, n_in, n_hid, n_out, d1, d2, dl1, dl2, stim)| {
+                let net = three_layer_net(seed, n_in, n_hid, n_out, d1, d2, dl1, dl2);
+                let s = run_recording(&net, SwitchMode::ForceSerial, 40, stim);
+                let p = run_recording(&net, SwitchMode::ForceParallel, 40, stim);
+                let i = run_recording(&net, SwitchMode::Ideal, 40, stim);
+                s == p && s == i
+            },
+        );
+    }
+
+    #[test]
     fn three_layer_feedforward_runs() {
         let mut b = NetworkBuilder::new(3);
         let inp = b.spike_source("in", 40);
@@ -331,6 +493,28 @@ mod tests {
         sim.run(60, &mut provider);
         assert!(sim.recorder.spike_count(PopulationId(1)) > 0);
         assert!(sim.recorder.spike_count(PopulationId(2)) > 0, "activity must propagate");
+    }
+
+    #[test]
+    fn reset_reproduces_the_same_run() {
+        let net = three_layer_net(21, 50, 30, 10, 0.5, 0.8, 3, 2);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let run_once = |sim: &mut NetworkSim| -> Recorder {
+            let mut rng = Rng::new(77);
+            let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
+                (0..50u32).filter(|_| rng.chance(0.25)).collect()
+            };
+            sim.run(50, &mut provider);
+            std::mem::take(&mut sim.recorder)
+        };
+        let first = run_once(&mut sim);
+        assert!(first.total_spikes() > 0);
+        sim.reset();
+        assert_eq!(sim.timestep(), 0);
+        let second = run_once(&mut sim);
+        assert_eq!(first, second, "reset + rerun must be bit-identical");
     }
 
     #[test]
@@ -367,5 +551,20 @@ mod tests {
         // refrac 3 → at most one spike per 4 steps (≈10 in 40 steps).
         assert!(per_neuron <= 10.5, "refractory cap violated: {per_neuron}");
         assert!(per_neuron > 5.0, "should still fire regularly");
+    }
+
+    #[test]
+    fn telemetry_accumulates() {
+        let net = two_layer_net(8, 40, 30, 0.6, 3);
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let mut rng = Rng::new(3);
+        let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
+            (0..40u32).filter(|_| rng.chance(0.3)).collect()
+        };
+        sim.run(30, &mut provider);
+        assert!(sim.total_events() > 0, "serial layer must process events");
+        assert_eq!(sim.total_macs(), 0, "no parallel layers here");
     }
 }

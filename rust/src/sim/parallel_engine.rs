@@ -8,6 +8,13 @@
 //!    PE (column chunks are disjoint; row chunks add up);
 //! 3. this step's arriving spikes are pre-processed through the
 //!    reversed-order + input-merging tables into future stacked slots.
+//!
+//! Steady-state execution is allocation-free: subordinate results land in a
+//! persistent output scratch, currents in a persistent per-target buffer.
+//! A per-slot write counter lets fully silent stacked slots (no spike wrote
+//! into them) skip the MAC phase entirely, and per-chunk silent row spans
+//! skip individual subordinates — `macs` counts only the work the backend
+//! actually issued, so MACs/s telemetry is honest.
 
 use super::backend::MacBackend;
 use crate::paradigm::parallel::ParallelCompiled;
@@ -17,11 +24,19 @@ pub struct ParallelLayerEngine {
     compiled: ParallelCompiled,
     /// Stacked-input ring: `[slot][wdm row]`, spike counts as f32.
     ring: Vec<Vec<f32>>,
+    /// Writes into each ring slot since it was last cleared; 0 means the
+    /// slot is all-zero and the whole MAC phase can be skipped.
+    slot_writes: Vec<u32>,
     /// Per-chunk weights pre-converted to f32 for the backend.
     chunk_weights: Vec<Vec<f32>>,
+    /// Persistent per-target current scratch, rewritten every step.
+    currents: Vec<f32>,
+    /// Persistent subordinate-output scratch (sized to the widest chunk).
+    out_scratch: Vec<f32>,
     backend: Box<dyn MacBackend>,
     t: u64,
-    /// MAC multiply-accumulate operations issued (telemetry).
+    /// MAC multiply-accumulate operations actually issued by the backend
+    /// (telemetry; cumulative — survives [`ParallelLayerEngine::reset`]).
     pub macs: u64,
 }
 
@@ -29,15 +44,21 @@ impl ParallelLayerEngine {
     pub fn new(compiled: ParallelCompiled, backend: Box<dyn MacBackend>) -> Self {
         let d = compiled.wdm.delay_range as usize;
         let rows = compiled.wdm.n_rows();
-        let chunk_weights = compiled
+        let chunk_weights: Vec<Vec<f32>> = compiled
             .subordinates
             .iter()
             .map(|s| s.weights.iter().map(|&w| w as f32).collect())
             .collect();
+        let max_cols =
+            compiled.subordinates.iter().map(|s| s.n_cols()).max().unwrap_or(0);
+        let n_target = compiled.n_target;
         ParallelLayerEngine {
             compiled,
             ring: vec![vec![0.0; rows]; d],
+            slot_writes: vec![0; d],
             chunk_weights,
+            currents: vec![0.0; n_target],
+            out_scratch: vec![0.0; max_cols],
             backend,
             t: 0,
             macs: 0,
@@ -52,49 +73,77 @@ impl ParallelLayerEngine {
         self.backend.name()
     }
 
+    /// Clear all dynamic state (stacked rings, clock) so the engine can run
+    /// a fresh stimulus without recompiling. The `macs` telemetry keeps
+    /// accumulating across resets (batch accounting reads it at the end).
+    pub fn reset(&mut self) {
+        for slot in &mut self.ring {
+            slot.fill(0.0);
+        }
+        self.slot_writes.fill(0);
+        self.currents.fill(0.0);
+        self.t = 0;
+    }
+
     /// Advance one timestep (same contract as
-    /// [`super::serial_engine::SerialLayerEngine::step_currents`]).
-    pub fn step_currents(&mut self, spikes_in: &[u32]) -> Vec<f32> {
-        let d = self.compiled.wdm.delay_range as usize;
-        let t = self.t as usize;
+    /// [`super::serial_engine::SerialLayerEngine::step_currents`]; the
+    /// returned slice lives in engine-owned scratch, valid until the next
+    /// call).
+    pub fn step_currents(&mut self, spikes_in: &[u32]) -> &[f32] {
+        let ParallelLayerEngine {
+            ref compiled,
+            ref mut ring,
+            ref mut slot_writes,
+            ref chunk_weights,
+            ref mut currents,
+            ref mut out_scratch,
+            ref mut backend,
+            ref mut macs,
+            t,
+        } = *self;
+        let d = compiled.wdm.delay_range as usize;
+        let t = t as usize;
         let slot = t % d;
-        let scale = self.compiled.weight_scale;
-        let mut currents = vec![0.0f32; self.compiled.n_target];
+        let scale = compiled.weight_scale;
+        currents.fill(0.0);
 
         // Phase 1: subordinate MAC matmuls over the due stacked slot.
-        {
-            let stacked = &self.ring[slot];
-            for (sub, weights) in self.compiled.subordinates.iter().zip(&self.chunk_weights) {
+        // A slot nothing wrote into since its last clear is identically
+        // zero — skip the whole phase (and the clear).
+        if slot_writes[slot] > 0 {
+            let stacked = &ring[slot];
+            for (sub, weights) in compiled.subordinates.iter().zip(chunk_weights) {
+                let lanes = &stacked[sub.row_lo..sub.row_hi];
+                if lanes.iter().all(|&s| s == 0.0) {
+                    continue; // this chunk's row span is silent this step
+                }
                 let rows = sub.n_rows();
                 let cols = sub.n_cols();
-                let out = self.backend.matvec(
-                    &stacked[sub.row_lo..sub.row_hi],
-                    weights,
-                    rows,
-                    cols,
-                );
-                self.macs += (rows * cols) as u64;
+                let out = &mut out_scratch[..cols];
+                *macs += backend.matvec_into(out, lanes, weights, rows, cols);
                 // Reduce into global targets via the WDM column map.
-                for (local, v) in out.into_iter().enumerate() {
+                for (local, &v) in out.iter().enumerate() {
                     if v != 0.0 {
-                        let target = self.compiled.wdm.cols[sub.col_lo + local];
+                        let target = compiled.wdm.cols[sub.col_lo + local];
                         currents[target as usize] += v * scale;
                     }
                 }
             }
+            ring[slot].fill(0.0);
+            slot_writes[slot] = 0;
         }
-        self.ring[slot].fill(0.0);
 
         // Phase 2: dominant-PE spike preprocessing into future slots.
         for &src in spikes_in {
-            for e in self.compiled.tables.entries_of(src) {
+            for e in compiled.tables.entries_of(src) {
                 let write_slot = (t + e.delay as usize) % d;
-                self.ring[write_slot][e.row as usize] += 1.0;
+                ring[write_slot][e.row as usize] += 1.0;
+                slot_writes[write_slot] += 1;
             }
         }
 
         self.t += 1;
-        currents
+        &self.currents
     }
 }
 
@@ -141,16 +190,16 @@ mod tests {
     #[test]
     fn delay_one_arrives_next_step() {
         let mut e = engine_for(vec![syn(0, 1, 10, 1, false)], 2, 3);
-        assert_eq!(e.step_currents(&[0]), vec![0.0, 0.0, 0.0]);
-        assert_eq!(e.step_currents(&[]), vec![0.0, 5.0, 0.0]);
-        assert_eq!(e.step_currents(&[]), vec![0.0, 0.0, 0.0]);
+        assert_eq!(e.step_currents(&[0]), [0.0, 0.0, 0.0]);
+        assert_eq!(e.step_currents(&[]), [0.0, 5.0, 0.0]);
+        assert_eq!(e.step_currents(&[]), [0.0, 0.0, 0.0]);
     }
 
     #[test]
     fn inhibition_is_negative() {
         let mut e = engine_for(vec![syn(0, 0, 6, 1, true)], 1, 1);
         e.step_currents(&[0]);
-        assert_eq!(e.step_currents(&[]), vec![-3.0]);
+        assert_eq!(e.step_currents(&[]), [-3.0]);
     }
 
     #[test]
@@ -170,9 +219,34 @@ mod tests {
     }
 
     #[test]
-    fn macs_are_counted() {
+    fn macs_count_only_issued_work() {
         let mut e = engine_for(vec![syn(0, 0, 1, 1, false)], 4, 4);
         e.step_currents(&[]);
-        assert!(e.macs > 0, "even empty steps run the MAC array");
+        assert_eq!(e.macs, 0, "a silent slot must not charge the MAC array");
+        e.step_currents(&[0]);
+        assert_eq!(e.macs, 0, "the spike lands one slot ahead");
+        e.step_currents(&[]);
+        assert!(e.macs > 0, "the populated slot issues real work");
+        let total_cells: u64 = e
+            .compiled
+            .subordinates
+            .iter()
+            .map(|s| (s.n_rows() * s.n_cols()) as u64)
+            .sum();
+        assert!(e.macs <= total_cells, "issued {} > WDM cells {total_cells}", e.macs);
+    }
+
+    #[test]
+    fn reset_replays_identically() {
+        let mut e = engine_for(vec![syn(0, 1, 10, 2, false), syn(1, 0, 6, 1, true)], 2, 3);
+        let run = |e: &mut ParallelLayerEngine| -> Vec<Vec<f32>> {
+            let stim: [&[u32]; 4] = [&[0, 1], &[], &[1], &[]];
+            stim.iter().map(|s| e.step_currents(s).to_vec()).collect()
+        };
+        let first = run(&mut e);
+        e.reset();
+        assert_eq!(e.timestep(), 0);
+        let second = run(&mut e);
+        assert_eq!(first, second, "reset must reproduce the run exactly");
     }
 }

@@ -10,6 +10,11 @@
 //! (Reading before writing makes a D-slot ring sufficient for delays up to
 //! D: a write at delay D lands in the slot just cleared, to be read exactly
 //! D steps later.)
+//!
+//! Steady-state execution is allocation-free: currents land in a persistent
+//! scratch buffer, and arriving spikes are routed through a precomputed
+//! source→PE dispatch table (CSR layout) so each spike touches only the PEs
+//! whose `source_slice` actually contains it — not every PE of the layer.
 
 use crate::model::SynapseType;
 use crate::paradigm::serial::SerialCompiled;
@@ -34,15 +39,21 @@ impl PeState {
 pub struct SerialLayerEngine {
     compiled: SerialCompiled,
     pes: Vec<PeState>,
-    n_target: usize,
+    /// CSR dispatch: `dispatch_pes[dispatch_off[s]..dispatch_off[s+1]]` are
+    /// the PE indices whose `source_slice` contains global source `s`.
+    dispatch_off: Vec<u32>,
+    dispatch_pes: Vec<u32>,
+    /// Persistent per-target current scratch, rewritten every step.
+    currents: Vec<f32>,
     t: u64,
-    /// Synaptic events processed (telemetry for the perf benches).
+    /// Synaptic events processed (telemetry for the perf benches;
+    /// cumulative — survives [`SerialLayerEngine::reset`]).
     pub events: u64,
 }
 
 impl SerialLayerEngine {
     pub fn new(compiled: SerialCompiled, n_target: usize) -> Self {
-        let pes = compiled
+        let pes: Vec<PeState> = compiled
             .pes
             .iter()
             .map(|p| {
@@ -55,22 +66,79 @@ impl SerialLayerEngine {
                 }
             })
             .collect();
-        SerialLayerEngine { compiled, pes, n_target, t: 0, events: 0 }
+
+        // Build the source→PE dispatch: source slices are contiguous per
+        // PE, so a counting pass + fill yields a compact CSR index.
+        let n_source = compiled
+            .pes
+            .iter()
+            .map(|p| p.source_slice.hi as usize)
+            .max()
+            .unwrap_or(0);
+        let mut counts = vec![0u32; n_source + 1];
+        for prog in &compiled.pes {
+            for s in prog.source_slice.lo..prog.source_slice.hi {
+                counts[s as usize + 1] += 1;
+            }
+        }
+        let mut dispatch_off = counts;
+        for i in 1..dispatch_off.len() {
+            dispatch_off[i] += dispatch_off[i - 1];
+        }
+        let mut dispatch_pes = vec![0u32; *dispatch_off.last().unwrap() as usize];
+        let mut cursor: Vec<u32> = dispatch_off[..n_source].to_vec();
+        for (pe_idx, prog) in compiled.pes.iter().enumerate() {
+            for s in prog.source_slice.lo..prog.source_slice.hi {
+                dispatch_pes[cursor[s as usize] as usize] = pe_idx as u32;
+                cursor[s as usize] += 1;
+            }
+        }
+
+        SerialLayerEngine {
+            compiled,
+            pes,
+            dispatch_off,
+            dispatch_pes,
+            currents: vec![0.0; n_target],
+            t: 0,
+            events: 0,
+        }
     }
 
     pub fn timestep(&self) -> u64 {
         self.t
     }
 
+    /// Clear all dynamic state (ring buffers, clock) so the engine can run
+    /// a fresh stimulus without recompiling. The `events` telemetry keeps
+    /// accumulating across resets (batch accounting reads it at the end).
+    pub fn reset(&mut self) {
+        for pe in &mut self.pes {
+            pe.ring.fill(0);
+        }
+        self.currents.fill(0.0);
+        self.t = 0;
+    }
+
     /// Advance one timestep: consume this step's ring slot into per-target
     /// currents, then process `spikes_in` (source-population neuron ids
-    /// firing *this* step) into future slots.
-    pub fn step_currents(&mut self, spikes_in: &[u32]) -> Vec<f32> {
-        let mut currents = vec![0.0f32; self.n_target];
-        let t = self.t as usize;
+    /// firing *this* step) into future slots. The returned slice lives in
+    /// engine-owned scratch and is valid until the next call.
+    pub fn step_currents(&mut self, spikes_in: &[u32]) -> &[f32] {
+        let SerialLayerEngine {
+            ref compiled,
+            ref mut pes,
+            ref dispatch_off,
+            ref dispatch_pes,
+            ref mut currents,
+            ref mut events,
+            t,
+        } = *self;
+        let t = t as usize;
+        currents.fill(0.0);
 
         // Phase 1: neural-input read-out (time-triggered).
-        for (prog, pe) in self.compiled.pes.iter().zip(&mut self.pes) {
+        for (prog, pe) in compiled.pes.iter().zip(pes.iter_mut()) {
             let slot = t % pe.delay_range;
             let scale = prog.weight_scale;
             for local in 0..pe.n_tgt {
@@ -85,25 +153,31 @@ impl SerialLayerEngine {
             }
         }
 
-        // Phase 2: event-based synaptic processing of this step's spikes.
+        // Phase 2: event-based synaptic processing of this step's spikes,
+        // dispatched only to the PEs that store rows for each source.
+        let n_source = dispatch_off.len() - 1;
         for &src in spikes_in {
-            for (prog, pe) in self.compiled.pes.iter().zip(&mut self.pes) {
-                if !prog.source_slice.contains(src) {
-                    continue;
-                }
+            if src as usize >= n_source {
+                continue;
+            }
+            let lo = dispatch_off[src as usize] as usize;
+            let hi = dispatch_off[src as usize + 1] as usize;
+            for &pe_idx in &dispatch_pes[lo..hi] {
+                let prog = &compiled.pes[pe_idx as usize];
+                let pe = &mut pes[pe_idx as usize];
                 let Some(slot_idx) = prog.mpt.lookup(src) else { continue };
                 let entry = prog.address_list.entries[slot_idx as usize];
                 for word in prog.matrix.block(entry) {
                     let write_slot = (t + word.delay() as usize) % pe.delay_range;
                     let j = pe.idx(write_slot, word.syn_type().index(), word.target() as usize);
                     pe.ring[j] += word.weight() as i32;
-                    self.events += 1;
+                    *events += 1;
                 }
             }
         }
 
         self.t += 1;
-        currents
+        &self.currents
     }
 }
 
@@ -142,12 +216,9 @@ mod tests {
     #[test]
     fn delay_one_arrives_next_step() {
         let mut e = engine_for(vec![syn(0, 1, 10, 1, false)], 2, 3);
-        let c0 = e.step_currents(&[0]); // spike at t=0
-        assert_eq!(c0, vec![0.0, 0.0, 0.0], "nothing due at t=0");
-        let c1 = e.step_currents(&[]);
-        assert_eq!(c1, vec![0.0, 5.0, 0.0], "weight 10 × scale 0.5 at t=1");
-        let c2 = e.step_currents(&[]);
-        assert_eq!(c2, vec![0.0, 0.0, 0.0], "one-shot delivery");
+        assert_eq!(e.step_currents(&[0]), [0.0, 0.0, 0.0], "nothing due at t=0");
+        assert_eq!(e.step_currents(&[]), [0.0, 5.0, 0.0], "weight 10 × scale 0.5 at t=1");
+        assert_eq!(e.step_currents(&[]), [0.0, 0.0, 0.0], "one-shot delivery");
     }
 
     #[test]
@@ -172,8 +243,7 @@ mod tests {
             engine_for(vec![syn(0, 0, 9, 2, false), syn(1, 0, 9, 2, true)], 2, 1);
         e.step_currents(&[0, 1]);
         e.step_currents(&[]);
-        let c = e.step_currents(&[]);
-        assert_eq!(c, vec![0.0], "equal E and I at the same slot cancel");
+        assert_eq!(e.step_currents(&[]), [0.0], "equal E and I at the same slot cancel");
     }
 
     #[test]
@@ -181,10 +251,8 @@ mod tests {
         let mut e = engine_for(vec![syn(0, 0, 3, 2, false)], 1, 1);
         e.step_currents(&[0]); // lands at t=2
         e.step_currents(&[0]); // lands at t=3
-        let c2 = e.step_currents(&[]);
-        assert_eq!(c2, vec![1.5]);
-        let c3 = e.step_currents(&[]);
-        assert_eq!(c3, vec![1.5]);
+        assert_eq!(e.step_currents(&[]), [1.5]);
+        assert_eq!(e.step_currents(&[]), [1.5]);
     }
 
     #[test]
@@ -198,12 +266,33 @@ mod tests {
         let mut e = engine_for(syns.clone(), 300, 280);
         let all: Vec<u32> = (0..300).collect();
         e.step_currents(&all);
-        let c = e.step_currents(&[]);
         let mut expect = vec![0.0f32; 280];
         for s in &syns {
             expect[s.target as usize] += 0.5;
         }
-        assert_eq!(c, expect);
+        assert_eq!(e.step_currents(&[]).to_vec(), expect);
         assert_eq!(e.events, 300);
+    }
+
+    #[test]
+    fn reset_replays_identically() {
+        let mut e = engine_for(vec![syn(0, 1, 10, 2, false), syn(1, 0, 6, 1, true)], 2, 3);
+        let run = |e: &mut SerialLayerEngine| -> Vec<Vec<f32>> {
+            let stim: [&[u32]; 4] = [&[0, 1], &[], &[1], &[]];
+            stim.iter().map(|s| e.step_currents(s).to_vec()).collect()
+        };
+        let first = run(&mut e);
+        e.reset();
+        assert_eq!(e.timestep(), 0);
+        let second = run(&mut e);
+        assert_eq!(first, second, "reset must reproduce the run exactly");
+    }
+
+    #[test]
+    fn out_of_range_spike_is_ignored() {
+        let mut e = engine_for(vec![syn(0, 0, 3, 1, false)], 1, 1);
+        e.step_currents(&[7]); // no PE stores rows for source 7
+        assert_eq!(e.step_currents(&[]), [0.0]);
+        assert_eq!(e.events, 0);
     }
 }
