@@ -113,6 +113,29 @@ impl MachineGraph {
         }
         Ok(())
     }
+
+    /// Place the graph group by group through a strategy-driven
+    /// [`Allocator`]: each `(name, vertex indices)` group — a layer's PE
+    /// group, or a population's source hosts — is placed transactionally
+    /// (all of it or none of it), so a failure names the offending group
+    /// and leaves no partially placed layer behind.
+    pub fn place_groups(
+        &mut self,
+        alloc: &mut crate::hardware::Allocator,
+        groups: &[(String, Vec<usize>)],
+    ) -> crate::Result<()> {
+        for (name, members) in groups {
+            let requests: Vec<(&str, usize)> = members
+                .iter()
+                .map(|&v| (self.vertices[v].label.as_str(), self.vertices[v].dtcm_bytes))
+                .collect();
+            let pes = alloc.place_group(name, &requests)?;
+            for (&v, pe) in members.iter().zip(pes) {
+                self.vertices[v].pe = Some(pe);
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +150,42 @@ mod tests {
         assert!(s.contains(10) && s.contains(19) && !s.contains(20));
         assert!(!s.is_empty());
         assert!(SliceRange { lo: 3, hi: 3 }.is_empty());
+    }
+
+    #[test]
+    fn place_groups_assigns_and_diagnoses() {
+        use crate::hardware::{Allocator, ChipSpec, MachineSpec, PlacementStrategy};
+        let mut g = MachineGraph::default();
+        let a = g.add_vertex(
+            PopulationId(0),
+            SliceRange { lo: 0, hi: 10 },
+            VertexRole::Source,
+            100,
+            "src".into(),
+        );
+        let b = g.add_vertex(
+            PopulationId(1),
+            SliceRange { lo: 0, hi: 10 },
+            VertexRole::Serial,
+            200,
+            "tgt".into(),
+        );
+        let groups = vec![("hosts".to_string(), vec![a]), ("layer0".to_string(), vec![b])];
+        let mut alloc = Allocator::new(MachineSpec::default(), PlacementStrategy::ChipPacked);
+        g.place_groups(&mut alloc, &groups).unwrap();
+        assert!(g.vertices.iter().all(|v| v.pe.is_some()));
+
+        // A machine too small for the second group names it in the error.
+        let tiny = MachineSpec {
+            chips_x: 1,
+            chips_y: 1,
+            chip: ChipSpec { pes_per_chip: 1, ..Default::default() },
+        };
+        let mut g2 = g.clone();
+        g2.vertices.iter_mut().for_each(|v| v.pe = None);
+        let mut alloc = Allocator::new(tiny, PlacementStrategy::Linear);
+        let err = g2.place_groups(&mut alloc, &groups).unwrap_err();
+        assert!(format!("{err:#}").contains("layer0"), "{err:#}");
     }
 
     #[test]

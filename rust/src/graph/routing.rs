@@ -6,6 +6,7 @@
 //! vertex's spikes out to every machine vertex that consumes them.
 
 use super::machine_graph::MachineGraph;
+use crate::hardware::noc::Noc;
 use crate::hardware::PeHandle;
 use std::collections::BTreeMap;
 
@@ -65,6 +66,23 @@ impl RoutingTable {
         self.entries.len()
     }
 
+    /// Sum of x-then-y multicast-tree inter-chip hops over every entry —
+    /// the static routing cost one packet per entry would incur. A
+    /// placement-quality metric: co-located placements score lower than
+    /// scattered ones on the same machine graph.
+    ///
+    /// Panics if the graph has unplaced vertices (like
+    /// [`RoutingTable::from_machine_graph`]).
+    pub fn total_tree_hops(&self, graph: &MachineGraph) -> u64 {
+        self.entries
+            .iter()
+            .map(|e| {
+                let src = graph.vertices[e.source_vertex].pe.expect("placed");
+                Noc::multicast_tree_hops(src, &e.destinations)
+            })
+            .sum()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -118,6 +136,47 @@ mod tests {
         g.place(&mut m).unwrap();
         let t = RoutingTable::from_machine_graph(&g);
         assert_eq!(t.route(0).unwrap().destinations.len(), 1);
+    }
+
+    #[test]
+    fn tree_hops_reflect_placement_spread() {
+        use crate::hardware::{Allocator, ChipSpec, MachineSpec, PlacementStrategy};
+        let build = |strategy: PlacementStrategy| {
+            let mut g = MachineGraph::default();
+            let s = g.add_vertex(
+                PopulationId(0),
+                SliceRange { lo: 0, hi: 8 },
+                VertexRole::Source,
+                10,
+                "s".into(),
+            );
+            let mut members = vec![s];
+            for i in 0..3 {
+                let v = g.add_vertex(
+                    PopulationId(1),
+                    SliceRange { lo: i, hi: i + 1 },
+                    VertexRole::Serial,
+                    10,
+                    format!("t{i}"),
+                );
+                g.add_edge(ProjectionId(0), s, v);
+                members.push(v);
+            }
+            let spec = MachineSpec {
+                chips_x: 4,
+                chips_y: 1,
+                chip: ChipSpec { pes_per_chip: 4, ..Default::default() },
+            };
+            let mut alloc = Allocator::new(spec, strategy);
+            let groups = vec![("g".to_string(), members)];
+            g.place_groups(&mut alloc, &groups).unwrap();
+            let t = RoutingTable::from_machine_graph(&g);
+            t.total_tree_hops(&g)
+        };
+        let packed = build(PlacementStrategy::ChipPacked);
+        let spread = build(PlacementStrategy::Balanced);
+        assert_eq!(packed, 0, "a co-located group needs no inter-chip links");
+        assert!(spread > 0, "a spread group must cross chips");
     }
 
     #[test]

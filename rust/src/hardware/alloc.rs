@@ -1,0 +1,346 @@
+//! Strategy-driven, transactional PE allocation over a [`Machine`].
+//!
+//! [`Machine`] is pure bookkeeping (which PE holds what); the [`Allocator`]
+//! layered on top decides *which* PE an allocation lands on:
+//!
+//! * [`PlacementStrategy::Linear`] — lowest free linear index (the seed
+//!   behavior: chip-major scan with a `next_free` low-water mark);
+//! * [`PlacementStrategy::ChipPacked`] — like Linear for single
+//!   allocations (the linear index order is already chip-major), but a
+//!   whole PE *group* ([`Allocator::place_group`]) is co-located on the
+//!   first chip that can hold all of it, minimizing inter-chip NoC hops
+//!   between a layer's dominant/subordinate PEs;
+//! * [`PlacementStrategy::Balanced`] — each allocation goes to the chip
+//!   with the most free PEs, DTCM-load-aware (equally-free chips with
+//!   less DTCM already loaded win), spreading load across the grid.
+//!
+//! All strategies are deterministic: identical request sequences on
+//! identical machines produce bit-identical [`PeHandle`] sequences.
+//!
+//! Transactions ([`Allocator::begin`] / [`Allocator::commit`] /
+//! [`Allocator::rollback`]) make group placement atomic: a layer's whole
+//! PE group is placed or the machine is left untouched — no partially
+//! placed layers on failure (the capacity-feasibility stage in
+//! `switching::admission` makes such failures diagnosable up front).
+
+use super::machine::{Machine, PeHandle};
+use super::spec::MachineSpec;
+use anyhow::{bail, Context, Result};
+
+/// Deterministic PE-placement strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlacementStrategy {
+    /// Lowest free linear index (seed behavior).
+    Linear,
+    /// Co-locate each group on one chip when possible; otherwise Linear.
+    ChipPacked,
+    /// Spread across chips: most free PEs, then least DTCM loaded.
+    Balanced,
+}
+
+impl PlacementStrategy {
+    /// Every strategy, in documentation order (bench sweeps iterate this).
+    pub const ALL: [PlacementStrategy; 3] =
+        [PlacementStrategy::Linear, PlacementStrategy::ChipPacked, PlacementStrategy::Balanced];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementStrategy::Linear => "linear",
+            PlacementStrategy::ChipPacked => "chip-packed",
+            PlacementStrategy::Balanced => "balanced",
+        }
+    }
+
+    /// Parse a CLI spelling (`linear` | `chip-packed` | `balanced`).
+    pub fn parse(s: &str) -> Result<PlacementStrategy> {
+        match s {
+            "linear" => Ok(PlacementStrategy::Linear),
+            "chip-packed" => Ok(PlacementStrategy::ChipPacked),
+            "balanced" => Ok(PlacementStrategy::Balanced),
+            other => bail!("unknown placement strategy '{other}' (linear|chip-packed|balanced)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A machine plus a placement strategy and an optional open transaction.
+#[derive(Clone, Debug)]
+pub struct Allocator {
+    machine: Machine,
+    strategy: PlacementStrategy,
+    /// Journal of the open transaction's allocations (None = autocommit).
+    journal: Option<Vec<PeHandle>>,
+}
+
+impl Allocator {
+    pub fn new(spec: MachineSpec, strategy: PlacementStrategy) -> Self {
+        Allocator::from_machine(Machine::new(spec), strategy)
+    }
+
+    /// Wrap an existing (possibly partially allocated) machine.
+    pub fn from_machine(machine: Machine, strategy: PlacementStrategy) -> Self {
+        Allocator { machine, strategy, journal: None }
+    }
+
+    pub fn strategy(&self) -> PlacementStrategy {
+        self.strategy
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    /// Unwrap the machine (any open transaction is committed implicitly).
+    pub fn into_machine(self) -> Machine {
+        self.machine
+    }
+
+    /// Allocate one PE under the strategy, charging `dtcm_bytes`.
+    pub fn allocate(&mut self, label: &str, dtcm_bytes: usize) -> Result<PeHandle> {
+        let idx = match self.strategy {
+            // Single allocations: chip-packed *is* linear (the linear index
+            // order is chip-major); groups differ — see `place_group`.
+            PlacementStrategy::Linear | PlacementStrategy::ChipPacked => {
+                self.machine.first_free_index()
+            }
+            PlacementStrategy::Balanced => self.pick_balanced(),
+        };
+        let Some(idx) = idx else {
+            bail!("machine full: all {} PEs allocated", self.machine.total_pes());
+        };
+        self.alloc_index(idx, label, dtcm_bytes)
+    }
+
+    /// The most-spare chip, then its lowest free core. Ordering: most free
+    /// PEs first, then the least DTCM already loaded (so equally-free chips
+    /// with lighter memory load win), then the lowest chip index.
+    fn pick_balanced(&self) -> Option<usize> {
+        use std::cmp::Reverse;
+        (0..self.machine.n_chips())
+            .filter(|&c| self.machine.chip_free_pes(c) > 0)
+            .max_by_key(|&c| {
+                (
+                    self.machine.chip_free_pes(c),
+                    Reverse(self.machine.chip_dtcm_used(c)),
+                    Reverse(c),
+                )
+            })
+            .and_then(|c| self.machine.first_free_in_chip(c))
+    }
+
+    fn alloc_index(&mut self, idx: usize, label: &str, dtcm_bytes: usize) -> Result<PeHandle> {
+        let pe = self.machine.allocate_index(idx, label, dtcm_bytes)?;
+        if let Some(journal) = self.journal.as_mut() {
+            journal.push(pe);
+        }
+        Ok(pe)
+    }
+
+    /// Release a PE back to the pool. (Frees inside an open transaction are
+    /// not journaled — rollback only undoes *allocations*.)
+    pub fn free(&mut self, pe: PeHandle) {
+        self.machine.free(pe);
+    }
+
+    /// Open a transaction; every allocation until [`Allocator::commit`] or
+    /// [`Allocator::rollback`] is journaled. Transactions do not nest.
+    pub fn begin(&mut self) {
+        assert!(self.journal.is_none(), "allocator transactions do not nest");
+        self.journal = Some(Vec::new());
+    }
+
+    /// Close the open transaction, keeping its allocations; returns them.
+    pub fn commit(&mut self) -> Vec<PeHandle> {
+        self.journal.take().unwrap_or_default()
+    }
+
+    /// Undo every allocation of the open transaction (reverse order), so
+    /// the machine is exactly as it was at [`Allocator::begin`].
+    pub fn rollback(&mut self) {
+        if let Some(journal) = self.journal.take() {
+            for pe in journal.into_iter().rev() {
+                self.machine.free(pe);
+            }
+        }
+    }
+
+    /// Place a whole PE group — `(label, dtcm_bytes)` members —
+    /// transactionally: all members are placed or the machine is left
+    /// untouched. `ChipPacked` first looks for one chip that can hold the
+    /// entire group; the other strategies (and the spill fallback) place
+    /// member by member.
+    pub fn place_group(&mut self, group: &str, members: &[(&str, usize)]) -> Result<Vec<PeHandle>> {
+        self.begin();
+        match self.try_place_group(members) {
+            Ok(pes) => {
+                self.commit();
+                Ok(pes)
+            }
+            Err(e) => {
+                self.rollback();
+                Err(e).with_context(|| {
+                    format!("placing group '{group}' ({} PEs)", members.len())
+                })
+            }
+        }
+    }
+
+    fn try_place_group(&mut self, members: &[(&str, usize)]) -> Result<Vec<PeHandle>> {
+        if self.strategy == PlacementStrategy::ChipPacked {
+            let home = (0..self.machine.n_chips())
+                .find(|&c| self.machine.chip_free_pes(c) >= members.len());
+            if let Some(chip) = home {
+                return members
+                    .iter()
+                    .map(|&(label, dtcm)| {
+                        let idx = self
+                            .machine
+                            .first_free_in_chip(chip)
+                            .expect("chip had room for the whole group");
+                        self.alloc_index(idx, label, dtcm)
+                    })
+                    .collect();
+            }
+            // No chip fits the whole group: spill in linear (chip-major)
+            // order like the other strategies.
+        }
+        members.iter().map(|&(label, dtcm)| self.allocate(label, dtcm)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::ChipSpec;
+
+    fn grid(chips_x: usize, chips_y: usize, pes_per_chip: usize) -> MachineSpec {
+        MachineSpec {
+            chips_x,
+            chips_y,
+            chip: ChipSpec { pes_per_chip, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in PlacementStrategy::ALL {
+            assert_eq!(PlacementStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(PlacementStrategy::parse("zigzag").is_err());
+    }
+
+    #[test]
+    fn linear_free_realloc_reuses_lowest_index() {
+        let mut a = Allocator::new(grid(1, 1, 8), PlacementStrategy::Linear);
+        let pes: Vec<_> = (0..4).map(|i| a.allocate(&format!("{i}"), 100).unwrap()).collect();
+        a.free(pes[0]);
+        a.free(pes[2]);
+        // The low-water mark rewinds: the next allocation takes core 0,
+        // then core 2, before advancing past core 3.
+        assert_eq!(a.allocate("r0", 50).unwrap(), pes[0]);
+        assert_eq!(a.allocate("r2", 50).unwrap(), pes[2]);
+        assert_eq!(a.allocate("r4", 50).unwrap().core, 4);
+    }
+
+    #[test]
+    fn rollback_leaves_machine_untouched() {
+        let mut a = Allocator::new(grid(2, 1, 4), PlacementStrategy::Linear);
+        a.allocate("keep", 500).unwrap();
+        let (count, dtcm) = (a.machine().allocated_count(), a.machine().total_dtcm_used());
+        a.begin();
+        a.allocate("t0", 100).unwrap();
+        a.allocate("t1", 200).unwrap();
+        a.rollback();
+        assert_eq!(a.machine().allocated_count(), count);
+        assert_eq!(a.machine().total_dtcm_used(), dtcm);
+        // And the freed indices are reused first, as if never taken.
+        assert_eq!(a.allocate("next", 100).unwrap().core, 1);
+    }
+
+    #[test]
+    fn commit_keeps_transaction_allocations() {
+        let mut a = Allocator::new(grid(1, 1, 4), PlacementStrategy::Linear);
+        a.begin();
+        a.allocate("t0", 100).unwrap();
+        a.allocate("t1", 100).unwrap();
+        let committed = a.commit();
+        assert_eq!(committed.len(), 2);
+        assert_eq!(a.machine().allocated_count(), 2);
+    }
+
+    #[test]
+    fn failed_group_rolls_back_entirely() {
+        let mut a = Allocator::new(grid(1, 1, 2), PlacementStrategy::Linear);
+        a.allocate("pre", 100).unwrap();
+        let err = a.place_group("big", &[("m0", 100), ("m1", 100)]).unwrap_err();
+        assert!(format!("{err:#}").contains("placing group 'big'"), "{err:#}");
+        assert_eq!(a.machine().allocated_count(), 1, "partial placement must roll back");
+    }
+
+    #[test]
+    fn chip_packed_colocates_groups() {
+        // Chip 0 has 2 free PEs left; a 3-PE group must move to chip 1
+        // whole under ChipPacked, while Linear splits it across the seam.
+        let run = |strategy: PlacementStrategy| {
+            let mut a = Allocator::new(grid(2, 1, 4), strategy);
+            a.allocate("pre0", 100).unwrap();
+            a.allocate("pre1", 100).unwrap();
+            a.place_group("g", &[("g0", 10), ("g1", 10), ("g2", 10)]).unwrap()
+        };
+        let packed = run(PlacementStrategy::ChipPacked);
+        assert!(packed.iter().all(|pe| pe.chip_x == 1), "group co-located: {packed:?}");
+        let linear = run(PlacementStrategy::Linear);
+        assert_eq!(linear.iter().filter(|pe| pe.chip_x == 0).count(), 2);
+        assert_eq!(linear.iter().filter(|pe| pe.chip_x == 1).count(), 1);
+    }
+
+    #[test]
+    fn chip_packed_spills_when_no_chip_fits() {
+        let mut a = Allocator::new(grid(2, 1, 2), PlacementStrategy::ChipPacked);
+        let pes = a.place_group("wide", &[("a", 1), ("b", 1), ("c", 1)]).unwrap();
+        assert_eq!(pes.len(), 3);
+        assert_eq!(a.machine().chips_used(), 2, "3 PEs cannot fit a 2-PE chip");
+    }
+
+    #[test]
+    fn balanced_spreads_across_chips() {
+        let mut a = Allocator::new(grid(2, 1, 4), PlacementStrategy::Balanced);
+        let pes = a.place_group("g", &[("a", 1), ("b", 1), ("c", 1), ("d", 1)]).unwrap();
+        let on0 = pes.iter().filter(|pe| pe.chip_x == 0).count();
+        assert_eq!(on0, 2, "balanced must alternate chips: {pes:?}");
+        // Headroom ties go to the lowest chip index → chip 0 first.
+        assert_eq!((pes[0].chip_x, pes[0].core), (0, 0));
+        assert_eq!((pes[1].chip_x, pes[1].core), (1, 0));
+    }
+
+    #[test]
+    fn identical_inputs_give_bit_identical_placements() {
+        for strategy in PlacementStrategy::ALL {
+            let run = || {
+                let mut a = Allocator::new(grid(2, 2, 3), strategy);
+                let mut got = Vec::new();
+                got.extend(a.place_group("g0", &[("a", 10), ("b", 20)]).unwrap());
+                let lone = a.allocate("c", 30).unwrap();
+                got.push(lone);
+                a.free(lone);
+                got.extend(a.place_group("g1", &[("d", 40), ("e", 50), ("f", 60)]).unwrap());
+                got.push(a.allocate("g", 70).unwrap());
+                got
+            };
+            assert_eq!(run(), run(), "strategy {strategy} must be deterministic");
+        }
+    }
+
+    #[test]
+    fn oversized_member_fails_cleanly() {
+        let mut a = Allocator::new(grid(1, 1, 4), PlacementStrategy::Balanced);
+        let budget = a.machine().spec().chip.pe.dtcm_bytes;
+        assert!(a.place_group("g", &[("ok", 100), ("huge", budget + 1)]).is_err());
+        assert_eq!(a.machine().allocated_count(), 0);
+    }
+}

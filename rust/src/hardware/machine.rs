@@ -77,12 +77,6 @@ impl Machine {
     /// (total minus the OS reserve — the reserve is accounted inside the
     /// cost models, so `dtcm_bytes` here must already include it).
     pub fn allocate(&mut self, label: &str, dtcm_bytes: usize) -> Result<PeHandle> {
-        if dtcm_bytes > self.spec.chip.pe.dtcm_bytes {
-            bail!(
-                "allocation '{label}' needs {dtcm_bytes} B DTCM > per-PE budget {} B",
-                self.spec.chip.pe.dtcm_bytes
-            );
-        }
         // next_free is a low-water mark; scan forward from it.
         while self.next_free < self.pes.len() && self.pes[self.next_free].allocated {
             self.next_free += 1;
@@ -90,10 +84,40 @@ impl Machine {
         if self.next_free >= self.pes.len() {
             bail!("machine full: all {} PEs allocated", self.pes.len());
         }
-        let idx = self.next_free;
+        self.allocate_index(self.next_free, label, dtcm_bytes)
+    }
+
+    /// Allocate one *specific* PE by linear index (the [`super::alloc::Allocator`]
+    /// strategies pick the index). Fails if the PE is taken or the request
+    /// exceeds the per-PE DTCM budget.
+    pub(crate) fn allocate_index(
+        &mut self,
+        idx: usize,
+        label: &str,
+        dtcm_bytes: usize,
+    ) -> Result<PeHandle> {
+        if dtcm_bytes > self.spec.chip.pe.dtcm_bytes {
+            bail!(
+                "allocation '{label}' needs {dtcm_bytes} B DTCM > per-PE budget {} B",
+                self.spec.chip.pe.dtcm_bytes
+            );
+        }
+        if self.pes[idx].allocated {
+            bail!("PE {} already allocated (to '{}')", self.handle(idx), self.pes[idx].label);
+        }
         self.pes[idx] =
             PeState { allocated: true, dtcm_used: dtcm_bytes, label: label.to_string() };
+        // Keep the low-water mark amortized: filling the lowest free slot
+        // advances it, so strategy-driven scans stay O(N) overall.
+        if idx == self.next_free {
+            self.next_free += 1;
+        }
         Ok(self.handle(idx))
+    }
+
+    /// Lowest free linear index, if any (pure scan from the low-water mark).
+    pub(crate) fn first_free_index(&self) -> Option<usize> {
+        (self.next_free..self.pes.len()).find(|&i| !self.pes[i].allocated)
     }
 
     /// Release a PE back to the pool.
@@ -106,6 +130,55 @@ impl Machine {
     /// Number of allocated PEs.
     pub fn allocated_count(&self) -> usize {
         self.pes.iter().filter(|p| p.allocated).count()
+    }
+
+    /// Total PEs on the machine.
+    pub fn total_pes(&self) -> usize {
+        self.pes.len()
+    }
+
+    /// PEs still free on the machine.
+    pub fn free_pes(&self) -> usize {
+        self.pes.len() - self.allocated_count()
+    }
+
+    /// Chips on the machine (row-major linear chip index space).
+    pub fn n_chips(&self) -> usize {
+        self.spec.chips()
+    }
+
+    fn chip_range(&self, chip: usize) -> std::ops::Range<usize> {
+        let per_chip = self.spec.chip.pes_per_chip;
+        chip * per_chip..(chip + 1) * per_chip
+    }
+
+    /// Free PEs on one chip.
+    pub fn chip_free_pes(&self, chip: usize) -> usize {
+        self.chip_range(chip).filter(|&i| !self.pes[i].allocated).count()
+    }
+
+    /// Lowest free linear index on one chip, if any.
+    pub(crate) fn first_free_in_chip(&self, chip: usize) -> Option<usize> {
+        self.chip_range(chip).find(|&i| !self.pes[i].allocated)
+    }
+
+    /// DTCM bytes in use on one chip.
+    pub fn chip_dtcm_used(&self, chip: usize) -> usize {
+        self.chip_range(chip).map(|i| self.pes[i].dtcm_used).sum()
+    }
+
+    /// DTCM bytes still *allocatable* on one chip: every free PE accepts up
+    /// to the per-PE budget (allocated PEs host exactly one vertex, so their
+    /// slack is not allocatable). A capacity-reporting helper.
+    pub fn chip_dtcm_headroom(&self, chip: usize) -> usize {
+        self.chip_free_pes(chip) * self.spec.chip.pe.dtcm_bytes
+    }
+
+    /// Chips hosting at least one allocation.
+    pub fn chips_used(&self) -> usize {
+        (0..self.n_chips())
+            .filter(|&c| self.chip_range(c).any(|i| self.pes[i].allocated))
+            .count()
     }
 
     /// Total DTCM bytes in use across allocated PEs.
@@ -193,5 +266,40 @@ mod tests {
         assert_eq!(m.mean_utilization(), 0.0);
         m.allocate("half", 48 * 1024).unwrap();
         assert!((m.mean_utilization() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn chip_queries_track_occupancy() {
+        let spec = MachineSpec {
+            chips_x: 2,
+            chips_y: 1,
+            chip: crate::hardware::ChipSpec { pes_per_chip: 4, ..Default::default() },
+        };
+        let mut m = Machine::new(spec);
+        assert_eq!(m.n_chips(), 2);
+        assert_eq!(m.total_pes(), 8);
+        assert_eq!(m.free_pes(), 8);
+        assert_eq!(m.chips_used(), 0);
+        m.allocate("a", 1000).unwrap();
+        m.allocate("b", 2000).unwrap();
+        assert_eq!(m.chip_free_pes(0), 2);
+        assert_eq!(m.chip_free_pes(1), 4);
+        assert_eq!(m.chip_dtcm_used(0), 3000);
+        assert_eq!(m.chip_dtcm_used(1), 0);
+        assert_eq!(m.chip_dtcm_headroom(0), 2 * m.spec().chip.pe.dtcm_bytes);
+        assert_eq!(m.chips_used(), 1);
+        assert_eq!(m.first_free_in_chip(0), Some(2));
+        assert_eq!(m.first_free_in_chip(1), Some(4));
+    }
+
+    #[test]
+    fn allocate_index_rejects_taken_pe() {
+        let mut m = Machine::single_chip();
+        m.allocate_index(3, "x", 100).unwrap();
+        assert!(m.allocate_index(3, "y", 100).is_err());
+        // The low-water scan skips the hole-punched allocation.
+        let a = m.allocate("z", 100).unwrap();
+        assert_eq!(a.core, 0);
+        assert_eq!(m.first_free_index(), Some(1));
     }
 }

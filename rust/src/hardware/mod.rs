@@ -10,11 +10,15 @@
 //! Submodules:
 //! * [`spec`] — static hardware constants and per-component descriptions.
 //! * [`machine`] — a machine instance with PE allocation bookkeeping.
+//! * [`alloc`] — strategy-driven, transactional allocation over a machine
+//!   (linear / chip-packed / balanced placement).
 //! * [`noc`] — a hop-count/latency NoC model with multicast routing.
 
+pub mod alloc;
 pub mod machine;
 pub mod noc;
 pub mod spec;
 
+pub use alloc::{Allocator, PlacementStrategy};
 pub use machine::{Machine, PeHandle};
 pub use spec::{ChipSpec, MacArraySpec, MachineSpec, PeSpec};

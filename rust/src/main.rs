@@ -7,7 +7,9 @@
 //! s2switch train    [--data data/dataset.csv] [--seeds 20] [--out data/adaboost.json]
 //! s2switch decide   --src N --tgt N --density F --delay N [--model data/adaboost.json]
 //! s2switch compile  --src N --tgt N --density F --delay N [--mode serial|parallel|ideal|classifier]
+//!                   [--machine WxH|light-board] [--strategy linear|chip-packed|balanced]
 //! s2switch simulate [--steps 200] [--batch S] [--pjrt] [--jobs N]
+//!                   [--machine WxH|light-board] [--strategy S]
 //!                   [--record-csv PATH]      # demo 3-layer network
 //! ```
 //!
@@ -16,6 +18,10 @@
 //! `--batch S` runs S independent stimulus samples through the
 //! [`BatchRunner`](s2switch::sim::BatchRunner); every run ends with a
 //! throughput report (steps/s, synaptic events/s, issued MACs/s).
+//! `--machine WxH` sizes the chip grid (`light-board` = the 8×6 48-chip
+//! SpiNNaker2 light board); `--strategy` picks the PE placement strategy.
+//! Compile/simulate runs end with a placement utilization + NoC hop
+//! summary sourced from the real [`Placement`](s2switch::switching::Placement).
 
 use anyhow::{bail, ensure, Context, Result};
 use s2switch::coordinator::{
@@ -83,10 +89,14 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [fl
   train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
   decide    --src N --tgt N --density F --delay N --model PATH
   compile   --src N --tgt N --density F --delay N --mode MODE
+            --machine WxH|light-board --strategy linear|chip-packed|balanced
   simulate  --steps N --batch S --pjrt --jobs N --record-csv PATH
+            --machine WxH|light-board --strategy S
             run the demo network end to end (--batch S: S stimulus samples
             through the BatchRunner; --record-csv: dump recorded spikes)
-  (--jobs N: worker threads for compiling and batching, 0 = one per CPU)";
+  (--jobs N: worker threads for compiling and batching, 0 = one per CPU;
+   --machine WxH: chip grid, light-board = 8x6; compile/simulate print a
+   placement utilization + NoC hop summary on exit)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -152,6 +162,60 @@ fn resolve_jobs(args: &Args) -> Result<usize> {
     args.parse_or("jobs", 0)
 }
 
+/// `--machine WxH` (chip grid) or `--machine light-board` (the 8×6 48-chip
+/// SpiNNaker2 light board). Absent → the single-chip default.
+fn parse_machine(args: &Args) -> Result<s2switch::hardware::MachineSpec> {
+    use s2switch::hardware::MachineSpec;
+    match args.get("machine") {
+        None => Ok(MachineSpec::default()),
+        Some("light-board") => Ok(MachineSpec::board()),
+        Some(s) => {
+            let (w, h) = s
+                .split_once('x')
+                .with_context(|| format!("--machine {s}: expected WxH or light-board"))?;
+            let chips_x: usize = w.parse().with_context(|| format!("--machine {s}"))?;
+            let chips_y: usize = h.parse().with_context(|| format!("--machine {s}"))?;
+            ensure!(chips_x > 0 && chips_y > 0, "--machine {s}: grid must be non-empty");
+            Ok(MachineSpec { chips_x, chips_y, ..Default::default() })
+        }
+    }
+}
+
+/// `--strategy linear|chip-packed|balanced` (default: chip-packed — the
+/// hop-minimizing group placer).
+fn parse_strategy(args: &Args) -> Result<s2switch::hardware::PlacementStrategy> {
+    match args.get("strategy") {
+        None => Ok(s2switch::hardware::PlacementStrategy::ChipPacked),
+        Some(s) => s2switch::hardware::PlacementStrategy::parse(s),
+    }
+}
+
+/// The placement utilization/hop summary every compile/simulate run prints
+/// on exit (ISSUE: sourced from the real `Placement`, not estimates).
+fn print_placement_summary(adm: &s2switch::switching::NetworkAdmission) {
+    let p = &adm.placement;
+    let spec = p.machine.spec();
+    println!(
+        "placement [{}]: {} PEs on {}/{} chips ({}x{} machine), {} B DTCM placed, \
+         mean utilization {:.1}%",
+        p.strategy,
+        p.n_pes(),
+        p.chips_used(),
+        spec.chips(),
+        spec.chips_x,
+        spec.chips_y,
+        p.placed_dtcm(),
+        100.0 * p.machine.mean_utilization()
+    );
+    println!(
+        "routing: {} multicast entries, {} static inter-chip tree hops, \
+         {} capacity override(s)",
+        p.routing.len(),
+        p.static_tree_hops(),
+        adm.capacity_overrides()
+    );
+}
+
 fn layer_flags(args: &Args) -> Result<LayerCharacter> {
     Ok(LayerCharacter::new(
         args.parse_or("src", 255usize)?,
@@ -167,7 +231,7 @@ fn cmd_decide(args: &Args) -> Result<()> {
     let sys = load_switching_system(&model, PeSpec::default())
         .context("train a model first: s2switch train")?;
     let verdict = sys
-        .prejudge(&ch)
+        .prejudge(&ch)?
         .expect("a loaded classifier system always prejudges");
     println!(
         "layer (src={}, tgt={}, density={:.2}, delay={}) → {}",
@@ -192,29 +256,33 @@ fn cmd_compile(args: &Args) -> Result<()> {
         SwitchingSystem::new(mode, PeSpec::default())
     };
     sys.set_jobs(resolve_jobs(args)?);
-    // Realize the layer.
-    let mut rng = Rng::new(args.parse_or("seed", 1u64)?);
-    let synapses = Connector::FixedProbability(ch.density).build(
-        ch.n_source,
-        ch.n_target,
+    let mspec = parse_machine(args)?;
+    let strategy = parse_strategy(args)?;
+    // Realize the layer as a one-projection network (source → target) so
+    // the capacity-aware admission path can place it for real.
+    let mut b = NetworkBuilder::new(args.parse_or("seed", 1u64)?);
+    let src = b.spike_source("src", ch.n_source);
+    let tgt = b.lif_population("tgt", ch.n_target, LifParams::default());
+    b.project(
+        src,
+        tgt,
+        Connector::FixedProbability(ch.density),
         SynapseDraw { delay_range: ch.delay_range, w_max: 127, ..Default::default() },
-        &mut rng,
+        0.01,
     );
-    let proj = s2switch::model::Projection {
-        id: s2switch::model::ProjectionId(0),
-        source: s2switch::model::PopulationId(0),
-        target: s2switch::model::PopulationId(1),
-        synapses,
-        weight_scale: 0.01,
-    };
-    let layer = sys.compile_layer(&proj, ch.n_source, ch.n_target, LifParams::default())?;
+    let net = b.build();
+    let adm = sys.admit_network(&net, mspec, strategy)?;
+    let layer = &adm.layers[0];
+    let d = adm.decisions[0];
     println!(
-        "compiled under {}: {} PEs, {} B DTCM total ({} compiles run)",
+        "compiled under {}{}: {} PEs, {} B DTCM total ({} compiles run)",
         layer.paradigm(),
+        if d.overridden { " (capacity override)" } else { "" },
         layer.n_pes(),
         layer.total_dtcm(),
         sys.stats.total_compiles()
     );
+    print_placement_summary(&adm);
     Ok(())
 }
 
@@ -252,37 +320,29 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
     sys.set_jobs(resolve_jobs(args)?);
-    let run = sys.compile_network_report(&net)?;
-    let layers = run.layers;
-    for (i, l) in layers.iter().enumerate() {
+    // Capacity-aware admission: prejudge → feasibility check → compile →
+    // place + route on the requested machine (Fig. 2's tail).
+    let adm = sys.admit_network(&net, parse_machine(args)?, parse_strategy(args)?)?;
+    for (i, l) in adm.layers.iter().enumerate() {
         println!(
-            "layer {i}: {} ({} PEs, compiled in {:.2?})",
+            "layer {i}: {}{} ({} PEs, compiled in {:.2?})",
             l.paradigm(),
+            if adm.decisions[i].overridden { " [capacity override]" } else { "" },
             l.n_pes(),
-            std::time::Duration::from_nanos(run.layer_nanos[i])
+            std::time::Duration::from_nanos(adm.layer_nanos[i])
         );
     }
     println!(
         "compiled {} layers on {} worker(s) in {:.2?} ({} compiles, {} cache hits)",
-        layers.len(),
+        adm.layers.len(),
         sys.jobs(),
-        std::time::Duration::from_nanos(run.wall_nanos),
-        run.stats.total_compiles(),
-        run.stats.cache_hits
+        std::time::Duration::from_nanos(adm.wall_nanos),
+        adm.stats.total_compiles(),
+        adm.stats.cache_hits
     );
-
-    // Place + route on the machine (Fig. 2's tail) and report.
-    let placement = s2switch::switching::Placement::new(
-        &net,
-        &layers,
-        s2switch::hardware::MachineSpec::default(),
-    )?;
-    println!(
-        "placed on {} PEs ({} routing entries, mean DTCM utilization {:.1}%)",
-        placement.n_pes(),
-        placement.routing.len(),
-        100.0 * placement.machine.mean_utilization()
-    );
+    print_placement_summary(&adm);
+    let layers = adm.layers;
+    let placement = adm.placement;
 
     // Sample `s` draws its stimulus from a seed derived with a golden-ratio
     // stride, so batch results are a pure function of the sample index.

@@ -68,6 +68,14 @@ impl Paradigm {
             Paradigm::Parallel => "parallel",
         }
     }
+
+    /// The other paradigm — the capacity-feasibility fallback partner.
+    pub fn other(self) -> Paradigm {
+        match self {
+            Paradigm::Serial => Paradigm::Parallel,
+            Paradigm::Parallel => Paradigm::Serial,
+        }
+    }
 }
 
 impl std::fmt::Display for Paradigm {
@@ -117,19 +125,27 @@ impl CompiledLayer {
     /// *after* compiling both and labeler decisions made *before* compiling
     /// anything feed identical numbers into [`CostEstimate`] comparisons.
     pub fn cost_estimate(&self, pe: &PeSpec) -> CostEstimate {
-        let source_hosting_pes = match self {
-            CompiledLayer::Serial(c) => {
-                c.character.n_source.div_ceil(pe.serial_neuron_cap)
-            }
-            CompiledLayer::Parallel(_) => 0,
+        let (source_hosting_pes, source_hosting_dtcm) = match self {
+            CompiledLayer::Serial(c) => source_hosting_cost(c.character.n_source, pe),
+            CompiledLayer::Parallel(_) => (0, 0),
         };
         CostEstimate {
             paradigm: self.paradigm(),
             layer_pes: self.n_pes(),
             source_hosting_pes,
             dtcm_bytes: self.total_dtcm(),
+            source_hosting_dtcm,
         }
     }
+}
+
+/// PEs and DTCM bytes needed to *host* a serial layer's source population:
+/// `ceil(n_source/255)` PEs, each carrying one 32-bit word per hosted
+/// neuron plus the OS reserve (the same accounting
+/// `switching::Placement` materializes for source-host vertices).
+fn source_hosting_cost(n_source: usize, pe: &PeSpec) -> (usize, usize) {
+    let hosts = n_source.div_ceil(pe.serial_neuron_cap);
+    (hosts, 4 * n_source + pe.os_reserve_bytes * hosts)
 }
 
 /// Shape-only cost of compiling one layer under one paradigm.
@@ -149,12 +165,22 @@ pub struct CostEstimate {
     pub source_hosting_pes: usize,
     /// Cost-model DTCM bytes across the layer's PEs.
     pub dtcm_bytes: usize,
+    /// DTCM bytes the source-hosting PEs would load (0 for parallel — the
+    /// dominant absorbs source handling). Together with `dtcm_bytes` this
+    /// is the whole-machine footprint the capacity-feasibility stage
+    /// charges against remaining headroom.
+    pub source_hosting_dtcm: usize,
 }
 
 impl CostEstimate {
     /// The PE count the switching decision compares.
     pub fn total_pes(&self) -> usize {
         self.layer_pes + self.source_hosting_pes
+    }
+
+    /// Whole-machine DTCM footprint: layer PEs plus source hosting.
+    pub fn total_dtcm(&self) -> usize {
+        self.dtcm_bytes + self.source_hosting_dtcm
     }
 }
 
@@ -226,11 +252,13 @@ impl ParadigmCompiler for SerialCompiler {
     fn estimate(&self, job: &LayerJob<'_>, pe: &PeSpec) -> Result<CostEstimate> {
         let layout = serial_layout(&job.character, pe)
             .context("layer does not fit the machine under the serial paradigm")?;
+        let (source_hosting_pes, source_hosting_dtcm) = source_hosting_cost(job.n_source, pe);
         Ok(CostEstimate {
             paradigm: Paradigm::Serial,
             layer_pes: layout.n_pes(),
-            source_hosting_pes: job.n_source.div_ceil(pe.serial_neuron_cap),
+            source_hosting_pes,
             dtcm_bytes: layout.total_dtcm(),
+            source_hosting_dtcm,
         })
     }
 
@@ -287,6 +315,7 @@ impl ParadigmCompiler for ParallelCompiler {
             layer_pes: 1 + plan.n_subordinates(),
             source_hosting_pes: 0,
             dtcm_bytes,
+            source_hosting_dtcm: 0,
         })
     }
 
@@ -366,7 +395,11 @@ mod tests {
         let job = LayerJob::new(&p, 300, 100, LifParams::default());
         let s = SerialCompiler.estimate(&job, &pe).unwrap();
         assert_eq!(s.source_hosting_pes, 2, "300 sources need 2 hosting PEs");
+        // DTCM tier: one word per hosted neuron plus the OS reserve per host.
+        assert_eq!(s.source_hosting_dtcm, 4 * 300 + 2 * pe.os_reserve_bytes);
+        assert_eq!(s.total_dtcm(), s.dtcm_bytes + s.source_hosting_dtcm);
         let par = ParallelCompiler::new(WdmConfig::default()).estimate(&job, &pe).unwrap();
         assert_eq!(par.source_hosting_pes, 0, "parallel absorbs source handling");
+        assert_eq!(par.source_hosting_dtcm, 0);
     }
 }

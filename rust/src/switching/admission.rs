@@ -1,0 +1,384 @@
+//! Capacity-aware network admission: the feasibility stage between the
+//! switching *decision* and the machine *placement*.
+//!
+//! The paper's Table I claim — switching "utilizes less memory and
+//! processors on the multi-core neuromorphic hardware backend" — is only
+//! meaningful against a machine with finite capacity. This module makes
+//! the decision path resource-aware: after prejudging each layer
+//! ([`super::SwitchPolicy::prejudge`]), the winner's shape-only estimate
+//! (PE count *and* DTCM footprint, source hosting included) is checked
+//! against the machine's **remaining** headroom. A winner that does not
+//! fit falls back to the other paradigm (recorded in
+//! [`super::CompileStats::capacity_overrides`] and per layer in
+//! [`LayerDecision::overridden`]); if neither paradigm fits, admission
+//! fails up front with a per-layer diagnostic — never a mid-placement
+//! `bail!` after half the machine graph is already allocated.
+//!
+//! Because the estimate tier and the materialize tier report identical PE
+//! counts by construction (DESIGN.md §1), a plan that passes feasibility
+//! is guaranteed to place: the whole-network PE charge — layer PEs plus
+//! source hosting counted once per population — is exactly what
+//! [`super::Placement`] allocates.
+
+use super::pipeline::{CompileJob, CompilePipeline};
+use super::placement::Placement;
+use super::policy::SwitchPolicy;
+use super::{network_jobs, CompileStats, CompiledLayer, SwitchingSystem};
+use crate::hardware::{MachineSpec, PlacementStrategy};
+use crate::model::Network;
+use crate::paradigm::Paradigm;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+
+/// One layer's capacity-checked paradigm decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerDecision {
+    /// Layer (projection) index.
+    pub layer: usize,
+    /// What the policy prejudged (`None` = Ideal mode, no prejudgment —
+    /// the cheaper estimate was taken as the winner).
+    pub prejudged: Option<Paradigm>,
+    /// The paradigm admitted after the feasibility check.
+    pub chosen: Paradigm,
+    /// True when `chosen` is the fallback because the winner did not fit
+    /// the remaining headroom.
+    pub overridden: bool,
+    /// PEs this layer charges against the machine (incremental: source
+    /// hosting is counted only the first time a population is hosted).
+    pub est_pes: usize,
+    /// DTCM bytes this layer charges against the machine (same increment).
+    pub est_dtcm: usize,
+}
+
+/// A fully admitted network: capacity-checked decisions, materialized
+/// layers, and a valid placement + routing on the target machine.
+pub struct NetworkAdmission {
+    pub decisions: Vec<LayerDecision>,
+    pub layers: Vec<CompiledLayer>,
+    pub placement: Placement,
+    /// Pipeline stats snapshot after this admission.
+    pub stats: CompileStats,
+    /// Per-layer compile wall-clock (job order), from the pipeline run.
+    pub layer_nanos: Vec<u64>,
+    pub wall_nanos: u64,
+}
+
+impl NetworkAdmission {
+    /// Layers whose prejudged paradigm was overridden by capacity.
+    pub fn capacity_overrides(&self) -> usize {
+        self.decisions.iter().filter(|d| d.overridden).count()
+    }
+}
+
+/// Remaining machine headroom the feasibility stage charges against.
+#[derive(Clone, Copy, Debug)]
+struct Headroom {
+    free_pes: usize,
+    free_dtcm: usize,
+}
+
+impl Headroom {
+    fn of(spec: &MachineSpec) -> Headroom {
+        Headroom {
+            free_pes: spec.total_pes(),
+            free_dtcm: spec.total_pes() * spec.chip.pe.dtcm_bytes,
+        }
+    }
+
+    // With today's cost models the PE dimension always binds first (every
+    // estimate satisfies dtcm <= pes × per-PE budget, which both compilers
+    // enforce), so the DTCM dimension is future-proofing for cost models
+    // that charge shared/chip-level memory — kept because the feasibility
+    // contract is "PE count and DTCM footprint".
+    fn admits(&self, pes: usize, dtcm: usize) -> bool {
+        pes <= self.free_pes && dtcm <= self.free_dtcm
+    }
+
+    fn charge(&mut self, pes: usize, dtcm: usize) {
+        self.free_pes -= pes;
+        self.free_dtcm -= dtcm;
+    }
+}
+
+/// Plan capacity-feasible paradigm decisions for every layer, in
+/// projection order. Pure planning: estimates only, nothing materialized.
+pub(super) fn plan_decisions(
+    policy: &SwitchPolicy,
+    pipeline: &CompilePipeline,
+    net: &Network,
+    jobs: &[CompileJob],
+    spec: &MachineSpec,
+) -> Result<Vec<LayerDecision>> {
+    let mut headroom = Headroom::of(spec);
+    // Source populations whose hosting PEs are already charged.
+    let mut hosted: BTreeSet<usize> = BTreeSet::new();
+    let mut decisions = Vec::with_capacity(jobs.len());
+
+    for (i, job) in jobs.iter().enumerate() {
+        let proj = &net.projections[i];
+        let src_is_source = net.population(proj.source).is_source();
+        let prejudged = policy.prejudge(&job.character)?;
+        let candidates = match prejudged {
+            Some(p) => [p, p.other()],
+            None => {
+                // Ideal: the cheaper estimate is the winner, the other the
+                // fallback — same ranking as compile-both-pick-cheaper. If
+                // one paradigm is uncompilable for this layer, the candidate
+                // loop below skips it with a note.
+                match (
+                    pipeline.estimate(Paradigm::Serial, job),
+                    pipeline.estimate(Paradigm::Parallel, job),
+                ) {
+                    (Ok(s), Ok(p)) => {
+                        let w = SwitchPolicy::decide(&s, &p);
+                        [w, w.other()]
+                    }
+                    _ => [Paradigm::Serial, Paradigm::Parallel],
+                }
+            }
+        };
+
+        let mut admitted = None;
+        let mut notes: Vec<String> = Vec::new();
+        // True once an earlier candidate was rejected *by capacity* (an
+        // uncompilable candidate is not a capacity override).
+        let mut capacity_rejected = false;
+        for &cand in candidates.iter() {
+            let est = match pipeline.estimate(cand, job) {
+                Ok(est) => est,
+                Err(e) => {
+                    notes.push(format!("{cand} uncompilable ({e:#})"));
+                    continue;
+                }
+            };
+            // Source hosting is charged once per population, and only when
+            // a *spike source* is consumed serially (placement creates host
+            // vertices for exactly that case).
+            let hosts_new = est.paradigm == Paradigm::Serial
+                && src_is_source
+                && !hosted.contains(&proj.source.0);
+            let pes = est.layer_pes + if hosts_new { est.source_hosting_pes } else { 0 };
+            let dtcm = est.dtcm_bytes + if hosts_new { est.source_hosting_dtcm } else { 0 };
+            if headroom.admits(pes, dtcm) {
+                headroom.charge(pes, dtcm);
+                if hosts_new {
+                    hosted.insert(proj.source.0);
+                }
+                decisions.push(LayerDecision {
+                    layer: i,
+                    prejudged,
+                    chosen: cand,
+                    overridden: capacity_rejected,
+                    est_pes: pes,
+                    est_dtcm: dtcm,
+                });
+                admitted = Some(cand);
+                break;
+            }
+            capacity_rejected = true;
+            notes.push(format!("{cand} needs {pes} PEs / {dtcm} B DTCM"));
+        }
+        if admitted.is_none() {
+            bail!(
+                "admission failed at layer {i} (projection {}): {}; \
+                 {} of {} PEs and {} B DTCM remain on the {}x{}-chip machine",
+                proj.id.0,
+                notes.join(", "),
+                headroom.free_pes,
+                spec.total_pes(),
+                headroom.free_dtcm,
+                spec.chips_x,
+                spec.chips_y
+            );
+        }
+    }
+    Ok(decisions)
+}
+
+impl SwitchingSystem {
+    /// Capacity-aware whole-network admission (DESIGN.md
+    /// §Placement/Resource-Model): plan per-layer paradigms with the
+    /// feasibility fallback, materialize the winners through the pipeline,
+    /// and place + route on a machine of `spec` under `strategy`. Either
+    /// returns a valid, fully placed admission or fails with a per-layer
+    /// diagnostic before anything is placed.
+    pub fn admit_network(
+        &mut self,
+        net: &Network,
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+    ) -> Result<NetworkAdmission> {
+        let jobs = network_jobs(net);
+        let decisions = plan_decisions(&self.policy, &self.pipeline, net, &jobs, &spec)
+            .context("capacity-feasibility planning")?;
+        let overrides = decisions.iter().filter(|d| d.overridden).count();
+        if overrides > 0 {
+            self.pipeline.note_capacity_overrides(overrides);
+        }
+        let forced: Vec<Option<Paradigm>> = decisions.iter().map(|d| Some(d.chosen)).collect();
+        let run = self.pipeline.run_decided(&forced, &jobs)?;
+        self.stats = run.stats;
+        let placement = Placement::with_strategy(net, &run.layers, spec, strategy)
+            .context("placing an admitted network (feasibility accepted it)")?;
+        Ok(NetworkAdmission {
+            decisions,
+            layers: run.layers,
+            placement,
+            stats: run.stats,
+            layer_nanos: run.layer_nanos,
+            wall_nanos: run.wall_nanos,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::{ChipSpec, PeSpec};
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{LifParams, NetworkBuilder};
+    use crate::paradigm::parallel::WdmConfig;
+    use crate::switching::{network_pe_count, SwitchMode};
+
+    /// A dense delay-1 single-layer net — the corner where parallel needs
+    /// far fewer PEs than serial.
+    fn dense_net() -> Network {
+        let mut b = NetworkBuilder::new(7);
+        let inp = b.spike_source("in", 255);
+        let out = b.lif_population("out", 255, LifParams::default());
+        b.project(
+            inp,
+            out,
+            Connector::FixedProbability(1.0),
+            SynapseDraw { delay_range: 1, w_max: 100, ..Default::default() },
+            0.01,
+        );
+        b.build()
+    }
+
+    /// Estimated whole-network PE totals (serial, parallel) for a net.
+    fn paradigm_totals(net: &Network) -> (usize, usize) {
+        let pipeline = CompilePipeline::new(PeSpec::default(), WdmConfig::default());
+        let jobs = network_jobs(net);
+        let mut totals = (0usize, 0usize);
+        let mut hosted = false;
+        for (job, proj) in jobs.iter().zip(&net.projections) {
+            let (s, p) = pipeline.estimate_pair(job).unwrap();
+            let src = net.population(proj.source).is_source();
+            let hosts = if src && !hosted { s.source_hosting_pes } else { 0 };
+            if src {
+                hosted = true;
+            }
+            totals.0 += s.layer_pes + hosts;
+            totals.1 += p.layer_pes;
+        }
+        totals
+    }
+
+    fn machine(chips_x: usize, chips_y: usize, pes_per_chip: usize) -> MachineSpec {
+        MachineSpec {
+            chips_x,
+            chips_y,
+            chip: ChipSpec { pes_per_chip, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn paradigm_other_flips() {
+        assert_eq!(Paradigm::Serial.other(), Paradigm::Parallel);
+        assert_eq!(Paradigm::Parallel.other(), Paradigm::Serial);
+    }
+
+    #[test]
+    fn capacity_override_falls_back_to_the_fitting_paradigm() {
+        let net = dense_net();
+        let (serial_total, parallel_total) = paradigm_totals(&net);
+        assert!(
+            parallel_total < serial_total,
+            "dense delay-1 must favor parallel ({parallel_total} vs {serial_total})"
+        );
+        // A machine sized exactly for the parallel plan: the ForceSerial
+        // prejudgment cannot fit and must be overridden.
+        let spec = machine(1, 1, parallel_total);
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let adm = sys.admit_network(&net, spec, PlacementStrategy::Linear).unwrap();
+        assert_eq!(adm.capacity_overrides(), 1);
+        assert_eq!(adm.stats.capacity_overrides, 1);
+        let d = adm.decisions[0];
+        assert_eq!(d.prejudged, Some(Paradigm::Serial));
+        assert_eq!(d.chosen, Paradigm::Parallel);
+        assert!(d.overridden);
+        assert_eq!(adm.layers[0].paradigm(), Paradigm::Parallel);
+        assert_eq!(adm.placement.n_pes(), parallel_total);
+    }
+
+    #[test]
+    fn admission_without_pressure_matches_plain_compilation() {
+        let net = dense_net();
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let adm = sys
+            .admit_network(&net, MachineSpec::default(), PlacementStrategy::ChipPacked)
+            .unwrap();
+        assert_eq!(adm.capacity_overrides(), 0);
+        assert_eq!(adm.stats.capacity_overrides, 0);
+        let mut plain = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = plain.compile_network(&net).unwrap();
+        for (a, b) in adm.layers.iter().zip(&layers) {
+            assert_eq!(a.paradigm(), b.paradigm());
+            assert_eq!(a.n_pes(), b.n_pes());
+        }
+        // Feasibility charged exactly what placement allocated.
+        let planned: usize = adm.decisions.iter().map(|d| d.est_pes).sum();
+        assert_eq!(planned, adm.placement.n_pes());
+        assert_eq!(
+            adm.placement.n_pes(),
+            network_pe_count(&net, &adm.layers, &PeSpec::default())
+        );
+    }
+
+    #[test]
+    fn infeasible_network_fails_with_a_layer_diagnostic() {
+        let net = dense_net();
+        let (_, parallel_total) = paradigm_totals(&net);
+        // Smaller than even the cheaper paradigm: nothing can be admitted.
+        let spec = machine(1, 1, parallel_total - 1);
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let err = sys
+            .admit_network(&net, spec, PlacementStrategy::Linear)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("admission failed at layer 0"), "{msg}");
+        assert!(msg.contains("PEs"), "{msg}");
+    }
+
+    #[test]
+    fn classifier_without_model_is_surfaced_not_panicked() {
+        let net = dense_net();
+        let mut sys = SwitchingSystem::new(SwitchMode::Classifier, PeSpec::default());
+        let err = sys
+            .admit_network(&net, MachineSpec::default(), PlacementStrategy::Linear)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("trained classifier"), "{err:#}");
+    }
+
+    #[test]
+    fn hosting_is_charged_once_per_source_population() {
+        // Two serial layers fanning out of one source population: the
+        // hosting PEs must be charged on the first, not both.
+        let mut b = NetworkBuilder::new(13);
+        let inp = b.spike_source("in", 300);
+        let h1 = b.lif_population("h1", 60, LifParams::default());
+        let h2 = b.lif_population("h2", 60, LifParams::default());
+        let draw = SynapseDraw { delay_range: 8, w_max: 100, ..Default::default() };
+        b.project(inp, h1, Connector::FixedProbability(0.1), draw, 0.01);
+        b.project(inp, h2, Connector::FixedProbability(0.1), draw, 0.01);
+        let net = b.build();
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let adm = sys
+            .admit_network(&net, MachineSpec::default(), PlacementStrategy::Linear)
+            .unwrap();
+        let planned: usize = adm.decisions.iter().map(|d| d.est_pes).sum();
+        assert_eq!(planned, adm.placement.n_pes(), "plan must equal placed reality");
+        assert!(adm.decisions[0].est_pes > adm.decisions[1].est_pes);
+    }
+}

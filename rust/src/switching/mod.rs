@@ -19,14 +19,16 @@
 //! compilers behind [`crate::paradigm::ParadigmCompiler`]. `SwitchingSystem`
 //! is the thin stateful front the CLI, benches and examples drive.
 
+pub mod admission;
 pub mod pipeline;
 pub mod placement;
 pub mod policy;
 
 pub use crate::paradigm::CompiledLayer;
+pub use admission::{LayerDecision, NetworkAdmission};
 pub use pipeline::{CompileJob, CompilePipeline, PipelineRun};
 pub use placement::Placement;
-pub use policy::SwitchPolicy;
+pub use policy::{SwitchError, SwitchPolicy};
 
 use crate::classifier::{AdaBoost, Classifier};
 use crate::dataset::Dataset;
@@ -62,6 +64,10 @@ pub struct CompileStats {
     /// Peak bytes of *discarded* compilation results (the "RAM crisis on
     /// the host PC" term: Ideal mode materializes both and throws one away).
     pub discarded_dtcm: usize,
+    /// Layers whose prejudged paradigm was overridden by the
+    /// capacity-feasibility stage because it did not fit the machine's
+    /// remaining headroom ([`admission`]).
+    pub capacity_overrides: usize,
 }
 
 impl CompileStats {
@@ -85,9 +91,10 @@ pub struct SwitchingSystem {
 }
 
 impl SwitchingSystem {
-    /// A system in the given mode without a classifier (panics if asked to
-    /// prejudge in `SwitchMode::Classifier`). Use
-    /// [`SwitchingSystem::with_classifier`] for the deployed configuration.
+    /// A system in the given mode without a classifier (prejudging in
+    /// `SwitchMode::Classifier` yields [`SwitchError::MissingClassifier`]).
+    /// Use [`SwitchingSystem::with_classifier`] for the deployed
+    /// configuration.
     pub fn new(mode: SwitchMode, pe: PeSpec) -> Self {
         Self::from_policy(SwitchPolicy::forced(mode), pe)
     }
@@ -139,9 +146,11 @@ impl SwitchingSystem {
     }
 
     /// Predict the paradigm for a layer character *without compiling* —
-    /// the fast decision that replaces double compilation. `None` means
-    /// the mode (Ideal) has no prejudgment and compiles both.
-    pub fn prejudge(&self, ch: &LayerCharacter) -> Option<Paradigm> {
+    /// the fast decision that replaces double compilation. `Ok(None)` means
+    /// the mode (Ideal) has no prejudgment and compiles both;
+    /// [`SwitchError::MissingClassifier`] means Classifier mode has no
+    /// trained model.
+    pub fn prejudge(&self, ch: &LayerCharacter) -> Result<Option<Paradigm>, SwitchError> {
         self.policy.prejudge(ch)
     }
 
@@ -171,24 +180,26 @@ impl SwitchingSystem {
     /// Like [`SwitchingSystem::compile_network`] but returns the full
     /// pipeline report (stats snapshot + per-layer timing).
     pub fn compile_network_report(&mut self, net: &Network) -> Result<PipelineRun> {
-        let jobs: Vec<CompileJob> = net
-            .projections
-            .iter()
-            .map(|proj| {
-                let n_source = net.population(proj.source).n_neurons;
-                let n_target = net.population(proj.target).n_neurons;
-                let params = net
-                    .population(proj.target)
-                    .lif_params()
-                    .copied()
-                    .unwrap_or_default();
-                CompileJob::new(proj, n_source, n_target, params)
-            })
-            .collect();
+        let jobs = network_jobs(net);
         let run = self.pipeline.run(&self.policy, &jobs)?;
         self.stats = run.stats;
         Ok(run)
     }
+}
+
+/// One [`CompileJob`] per projection of a network, in projection order —
+/// the job list both [`SwitchingSystem::compile_network_report`] and the
+/// capacity-aware [`admission`] path feed the pipeline.
+pub fn network_jobs(net: &Network) -> Vec<CompileJob<'_>> {
+    net.projections
+        .iter()
+        .map(|proj| {
+            let n_source = net.population(proj.source).n_neurons;
+            let n_target = net.population(proj.target).n_neurons;
+            let params = net.population(proj.target).lif_params().copied().unwrap_or_default();
+            CompileJob::new(proj, n_source, n_target, params)
+        })
+        .collect()
 }
 
 /// Extra PEs needed to *host* spike-source populations.
@@ -271,7 +282,7 @@ mod tests {
     #[test]
     fn ideal_mode_has_no_prejudgment() {
         let sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
-        assert_eq!(sys.prejudge(&LayerCharacter::new(10, 10, 0.5, 1)), None);
+        assert_eq!(sys.prejudge(&LayerCharacter::new(10, 10, 0.5, 1)), Ok(None));
     }
 
     #[test]
@@ -359,9 +370,18 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "requires a trained classifier")]
-    fn classifier_mode_without_model_panics() {
-        let sys = SwitchingSystem::new(SwitchMode::Classifier, PeSpec::default());
-        sys.prejudge(&LayerCharacter::new(10, 10, 0.5, 1));
+    fn classifier_mode_without_model_errors() {
+        // Converted from a should_panic test: the missing model is now a
+        // typed error surfaced through the system (and the pipeline).
+        let mut sys = SwitchingSystem::new(SwitchMode::Classifier, PeSpec::default());
+        assert_eq!(
+            sys.prejudge(&LayerCharacter::new(10, 10, 0.5, 1)),
+            Err(SwitchError::MissingClassifier)
+        );
+        // Compiling through the pipeline surfaces the same error instead of
+        // panicking a worker thread.
+        let p = proj(50, 50, 0.5, 2, 77);
+        let err = sys.compile_layer(&p, 50, 50, LifParams::default()).unwrap_err();
+        assert!(err.to_string().contains("trained classifier"), "{err:#}");
     }
 }

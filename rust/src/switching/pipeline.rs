@@ -255,6 +255,7 @@ struct AtomicStats {
     parallel_estimates: AtomicUsize,
     cache_hits: AtomicUsize,
     discarded_dtcm: AtomicUsize,
+    capacity_overrides: AtomicUsize,
 }
 
 impl AtomicStats {
@@ -266,6 +267,7 @@ impl AtomicStats {
             parallel_estimates: self.parallel_estimates.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             discarded_dtcm: self.discarded_dtcm.load(Ordering::Relaxed),
+            capacity_overrides: self.capacity_overrides.load(Ordering::Relaxed),
         }
     }
 }
@@ -430,6 +432,20 @@ impl CompilePipeline {
         ))
     }
 
+    /// Shape-only estimate under **one** paradigm through the cache — the
+    /// capacity-feasibility stage's probe (it only estimates the fallback
+    /// paradigm when the prejudged winner does not fit).
+    pub fn estimate(&self, paradigm: Paradigm, job: &CompileJob) -> Result<CostEstimate> {
+        self.cached_estimate(paradigm, job)
+    }
+
+    /// Record capacity-forced paradigm overrides (the feasibility stage
+    /// fell back from the prejudged winner because it did not fit the
+    /// machine's remaining headroom).
+    pub fn note_capacity_overrides(&self, n: usize) {
+        self.stats.capacity_overrides.fetch_add(n, Ordering::Relaxed);
+    }
+
     fn run_one(&self, decision: Option<Paradigm>, job: &CompileJob) -> Result<CompiledLayer> {
         match decision {
             Some(paradigm) => {
@@ -491,12 +507,26 @@ impl CompilePipeline {
     /// pipeline's worker threads. Layers come back in job order; the first
     /// failing job's error is returned (after all jobs finish).
     pub fn run(&self, policy: &SwitchPolicy, jobs: &[CompileJob]) -> Result<PipelineRun> {
-        let t0 = Instant::now();
         // Prejudge on the caller thread: the classifier is cheap (µs) and
         // `dyn Classifier` is not required to be Sync.
-        let decisions: Vec<Option<Paradigm>> =
-            jobs.iter().map(|j| policy.prejudge(&j.character)).collect();
+        let decisions = jobs
+            .iter()
+            .map(|j| policy.prejudge(&j.character))
+            .collect::<Result<Vec<_>, _>>()?;
+        self.run_decided(&decisions, jobs)
+    }
 
+    /// Compile a batch of layers with the paradigm decisions already made
+    /// (`Some(p)` = compile exactly `p`; `None` = compile both, keep the
+    /// cheaper). The capacity-aware admission path plans its decisions —
+    /// feasibility fallbacks included — then materializes through here.
+    pub fn run_decided(
+        &self,
+        decisions: &[Option<Paradigm>],
+        jobs: &[CompileJob],
+    ) -> Result<PipelineRun> {
+        assert_eq!(decisions.len(), jobs.len(), "one decision per job");
+        let t0 = Instant::now();
         let results = fan_out(self.jobs, jobs.len(), |i| {
             let t = Instant::now();
             let layer = self.run_one(decisions[i], &jobs[i]);

@@ -11,7 +11,7 @@ use super::CompiledLayer;
 use crate::graph::machine_graph::{MachineGraph, SliceRange, VertexRole};
 use crate::graph::routing::RoutingTable;
 use crate::hardware::noc::{Noc, NocConfig};
-use crate::hardware::{Machine, MachineSpec};
+use crate::hardware::{Allocator, Machine, MachineSpec, PlacementStrategy};
 use crate::model::Network;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -24,13 +24,31 @@ pub struct Placement {
     /// Vertices that *emit* each population's spikes (source hosts for
     /// spike sources; neuron-updating vertices for LIF populations).
     pub emitters: BTreeMap<usize, Vec<usize>>,
+    /// The strategy the PEs were allocated under.
+    pub strategy: PlacementStrategy,
 }
 
 impl Placement {
-    /// Build, place and route a compiled network on a fresh machine.
+    /// Build, place and route a compiled network on a fresh machine with
+    /// the seed's linear allocation order.
     pub fn new(net: &Network, layers: &[CompiledLayer], spec: MachineSpec) -> Result<Placement> {
+        Placement::with_strategy(net, layers, spec, PlacementStrategy::Linear)
+    }
+
+    /// Build, place and route under an explicit [`PlacementStrategy`].
+    /// Every layer's PE group (and every source population's host group)
+    /// is placed transactionally: on failure the error names the group and
+    /// the machine holds no partial layer.
+    pub fn with_strategy(
+        net: &Network,
+        layers: &[CompiledLayer],
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+    ) -> Result<Placement> {
         let mut graph = MachineGraph::default();
         let mut emitters: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        // Placement groups: `(name, vertex ids)`, placed atomically each.
+        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
         let pe_spec = spec.chip.pe;
 
         // 1. Source-hosting vertices for spike sources with serial consumers.
@@ -63,6 +81,7 @@ impl Placement {
                 ));
                 lo = hi;
             }
+            groups.push((format!("hosts:{}", pop.label), vs.clone()));
             emitters.insert(pop.id.0, vs);
         }
 
@@ -114,6 +133,7 @@ impl Placement {
                     }
                 }
             }
+            groups.push((format!("layer:proj{}", proj.id.0), vs.clone()));
             layer_vertices.push(vs);
         }
 
@@ -136,12 +156,13 @@ impl Placement {
             }
         }
 
-        // 4. Place and route.
-        let mut machine = Machine::new(spec);
-        graph.place(&mut machine).context("placing machine graph")?;
+        // 4. Place (group-transactionally, under the strategy) and route.
+        let mut alloc = Allocator::new(spec, strategy);
+        graph.place_groups(&mut alloc, &groups).context("placing machine graph")?;
+        let machine = alloc.into_machine();
         let routing = RoutingTable::from_machine_graph(&graph);
 
-        Ok(Placement { graph, machine, routing, emitters })
+        Ok(Placement { graph, machine, routing, emitters, strategy })
     }
 
     /// Estimate NoC traffic for observed per-population spike counts:
@@ -155,11 +176,11 @@ impl Placement {
             for &v in emitters {
                 let Some(entry) = self.routing.route(v as u32) else { continue };
                 let src = self.graph.vertices[v].pe.expect("placed");
-                // Spikes distribute across this population's emitters.
+                // Spikes distribute across this population's emitters; each
+                // spike is one multicast packet along the entry's x-then-y
+                // tree, charged in bulk.
                 let share = count / emitters.len().max(1) as u64;
-                for _ in 0..share {
-                    noc.multicast(src, &entry.destinations);
-                }
+                noc.multicast_scaled(src, &entry.destinations, share);
             }
         }
         noc
@@ -168,6 +189,23 @@ impl Placement {
     /// Total PEs used (matches `switching::network_pe_count`).
     pub fn n_pes(&self) -> usize {
         self.machine.allocated_count()
+    }
+
+    /// DTCM bytes actually loaded across placed PEs — the "placed reality"
+    /// number the Table I bench reports next to the cost-model estimate.
+    pub fn placed_dtcm(&self) -> usize {
+        self.machine.total_dtcm_used()
+    }
+
+    /// Chips hosting at least one PE of this placement.
+    pub fn chips_used(&self) -> usize {
+        self.machine.chips_used()
+    }
+
+    /// Static inter-chip routing cost: one x-then-y multicast tree per
+    /// routing entry (see [`RoutingTable::total_tree_hops`]).
+    pub fn static_tree_hops(&self) -> u64 {
+        self.routing.total_tree_hops(&self.graph)
     }
 }
 
@@ -271,6 +309,69 @@ mod tests {
             chips_y: 1,
             chip: crate::hardware::ChipSpec { pes_per_chip: 2, ..Default::default() },
         };
-        assert!(Placement::new(&net, &layers, tiny).is_err());
+        let err = Placement::new(&net, &layers, tiny).unwrap_err();
+        // The transactional group placer names the group that failed.
+        assert!(format!("{err:#}").contains("placing group"), "{err:#}");
+    }
+
+    #[test]
+    fn strategies_place_identically_sized_but_differently_shaped() {
+        use crate::hardware::PlacementStrategy;
+        let (net, layers) = compiled(SwitchMode::Ideal);
+        // Small chips force a multi-chip spread so strategies can differ.
+        let spec = MachineSpec {
+            chips_x: 4,
+            chips_y: 1,
+            chip: crate::hardware::ChipSpec { pes_per_chip: 3, ..Default::default() },
+        };
+        let mut results = Vec::new();
+        for strategy in PlacementStrategy::ALL {
+            let p = Placement::with_strategy(&net, &layers, spec, strategy).unwrap();
+            assert_eq!(
+                p.n_pes(),
+                crate::switching::network_pe_count(&net, &layers, &PeSpec::default()),
+                "strategy {strategy} must place every vertex"
+            );
+            assert_eq!(p.strategy, strategy);
+            // Determinism: re-placing yields bit-identical PE assignments.
+            let again = Placement::with_strategy(&net, &layers, spec, strategy).unwrap();
+            let pes = |pl: &Placement| {
+                pl.graph.vertices.iter().map(|v| v.pe.unwrap()).collect::<Vec<_>>()
+            };
+            assert_eq!(pes(&p), pes(&again), "strategy {strategy} must be deterministic");
+            results.push((strategy, p.placed_dtcm(), p.chips_used(), p.static_tree_hops()));
+        }
+        // Placed DTCM is strategy-invariant (same vertices, different PEs).
+        assert!(results.windows(2).all(|w| w[0].1 == w[1].1));
+        // Balanced spreads over at least as many chips as chip-packed.
+        let by = |s: PlacementStrategy| {
+            results.iter().find(|r| r.0 == s).copied().unwrap()
+        };
+        assert!(by(PlacementStrategy::Balanced).2 >= by(PlacementStrategy::ChipPacked).2);
+    }
+
+    #[test]
+    fn traffic_estimate_charges_tree_hops_on_spread_placements() {
+        use crate::hardware::PlacementStrategy;
+        let (net, layers) = compiled(SwitchMode::ForceSerial);
+        let spec = MachineSpec {
+            chips_x: 4,
+            chips_y: 2,
+            chip: crate::hardware::ChipSpec { pes_per_chip: 2, ..Default::default() },
+        };
+        let mut counts = BTreeMap::new();
+        counts.insert(0usize, 40u64);
+        counts.insert(1usize, 40u64);
+        let hops_under = |strategy| {
+            let p = Placement::with_strategy(&net, &layers, spec, strategy).unwrap();
+            p.estimate_traffic(&counts).hops
+        };
+        // Balanced scatters emitters and receivers across chips; packed
+        // placements keep more traffic on-chip.
+        assert!(
+            hops_under(PlacementStrategy::Balanced)
+                >= hops_under(PlacementStrategy::ChipPacked),
+            "spread placements cannot beat packed ones on hop count"
+        );
     }
 }

@@ -16,6 +16,28 @@ use crate::classifier::Classifier;
 use crate::model::LayerCharacter;
 use crate::paradigm::{CostEstimate, Paradigm};
 
+/// Typed switching-decision errors, surfaced (never panicked) through
+/// [`super::SwitchingSystem`] and the compile pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchError {
+    /// [`SwitchMode::Classifier`] was asked to prejudge without a trained
+    /// model — construct the policy with [`SwitchPolicy::with_classifier`].
+    MissingClassifier,
+}
+
+impl std::fmt::Display for SwitchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwitchError::MissingClassifier => f.write_str(
+                "Classifier mode requires a trained classifier \
+                 (build the policy with SwitchPolicy::with_classifier)",
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SwitchError {}
+
 /// The per-layer paradigm decision: a mode plus (for
 /// [`SwitchMode::Classifier`]) the trained prejudger.
 pub struct SwitchPolicy {
@@ -24,8 +46,9 @@ pub struct SwitchPolicy {
 }
 
 impl SwitchPolicy {
-    /// A policy that needs no model (panics on prejudging if `mode` is
-    /// [`SwitchMode::Classifier`] — use [`SwitchPolicy::with_classifier`]).
+    /// A policy that needs no model (prejudging in [`SwitchMode::Classifier`]
+    /// yields [`SwitchError::MissingClassifier`] — use
+    /// [`SwitchPolicy::with_classifier`] for the deployed configuration).
     pub fn forced(mode: SwitchMode) -> Self {
         SwitchPolicy { mode, classifier: None }
     }
@@ -55,21 +78,20 @@ impl SwitchPolicy {
     }
 
     /// Predict the paradigm for a layer character *without compiling*.
-    /// `None` means the mode has no pre-compile judgment (Ideal compiles
-    /// both paradigms and decides afterwards).
-    pub fn prejudge(&self, ch: &LayerCharacter) -> Option<Paradigm> {
-        match self.mode {
+    /// `Ok(None)` means the mode has no pre-compile judgment (Ideal compiles
+    /// both paradigms and decides afterwards);
+    /// [`SwitchError::MissingClassifier`] means Classifier mode has no
+    /// trained model to consult.
+    pub fn prejudge(&self, ch: &LayerCharacter) -> Result<Option<Paradigm>, SwitchError> {
+        Ok(match self.mode {
             SwitchMode::ForceSerial => Some(Paradigm::Serial),
             SwitchMode::ForceParallel => Some(Paradigm::Parallel),
             SwitchMode::Ideal => None,
             SwitchMode::Classifier => {
-                let c = self
-                    .classifier
-                    .as_ref()
-                    .expect("Classifier mode requires a trained classifier");
+                let c = self.classifier.as_ref().ok_or(SwitchError::MissingClassifier)?;
                 Some(Paradigm::from_label(c.predict(&ch.features())))
             }
-        }
+        })
     }
 }
 
@@ -100,12 +122,14 @@ mod tests {
             layer_pes: 3,
             source_hosting_pes: 2,
             dtcm_bytes: 0,
+            source_hosting_dtcm: 0,
         };
         let parallel = CostEstimate {
             paradigm: Paradigm::Parallel,
             layer_pes: 4,
             source_hosting_pes: 0,
             dtcm_bytes: 0,
+            source_hosting_dtcm: 0,
         };
         // 4 < 3 + 2: hosting flips the decision to parallel.
         assert_eq!(SwitchPolicy::decide(&serial, &parallel), Paradigm::Parallel);
@@ -116,12 +140,23 @@ mod tests {
         let ch = LayerCharacter::new(10, 10, 0.5, 1);
         assert_eq!(
             SwitchPolicy::forced(SwitchMode::ForceSerial).prejudge(&ch),
-            Some(Paradigm::Serial)
+            Ok(Some(Paradigm::Serial))
         );
         assert_eq!(
             SwitchPolicy::forced(SwitchMode::ForceParallel).prejudge(&ch),
-            Some(Paradigm::Parallel)
+            Ok(Some(Paradigm::Parallel))
         );
-        assert_eq!(SwitchPolicy::forced(SwitchMode::Ideal).prejudge(&ch), None);
+        assert_eq!(SwitchPolicy::forced(SwitchMode::Ideal).prejudge(&ch), Ok(None));
+    }
+
+    #[test]
+    fn classifier_mode_without_model_is_a_typed_error() {
+        let ch = LayerCharacter::new(10, 10, 0.5, 1);
+        assert_eq!(
+            SwitchPolicy::forced(SwitchMode::Classifier).prejudge(&ch),
+            Err(SwitchError::MissingClassifier)
+        );
+        let msg = SwitchError::MissingClassifier.to_string();
+        assert!(msg.contains("trained classifier"), "{msg}");
     }
 }
