@@ -38,24 +38,22 @@ fn build_net() -> Network {
 }
 
 /// Synthetic DVS-like stimulus: a moving bump of activity over the 2048
-/// input neurons plus background noise (deterministic per sample seed).
-fn stimulus(t: u64, rng: &mut Rng) -> Vec<u32> {
+/// input neurons plus background noise (deterministic per sample seed),
+/// filled into the caller-owned buffer — steady state allocates nothing.
+fn stimulus(t: u64, rng: &mut Rng, out: &mut Vec<u32>) {
     let center = ((t as f64 * 13.7) as usize) % N_INPUT;
-    let mut spikes: Vec<u32> = (0..N_INPUT as u32)
-        .filter(|&i| {
-            let dist = (i as i64 - center as i64).unsigned_abs() as usize;
-            let dist = dist.min(N_INPUT - dist);
-            let p = if dist < 100 { 0.25 } else { 0.01 };
-            rng.chance(p)
-        })
-        .collect();
-    spikes.dedup();
-    spikes
+    out.extend((0..N_INPUT as u32).filter(|&i| {
+        let dist = (i as i64 - center as i64).unsigned_abs() as usize;
+        let dist = dist.min(N_INPUT - dist);
+        let p = if dist < 100 { 0.25 } else { 0.01 };
+        rng.chance(p)
+    }));
+    out.dedup();
 }
 
-fn provider_for(sample: usize) -> impl FnMut(PopulationId, u64) -> Vec<u32> {
+fn provider_for(sample: usize) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
     let mut rng = Rng::new(424242 + sample as u64);
-    move |_p: PopulationId, t: u64| stimulus(t, &mut rng)
+    move |_p: PopulationId, t: u64, out: &mut Vec<u32>| stimulus(t, &mut rng, out)
 }
 
 fn main() -> anyhow::Result<()> {

@@ -83,8 +83,8 @@ fn main() -> anyhow::Result<()> {
     let (layers, _) = deployed.compile_network(&net)?;
     let provider_for = |sample: usize| {
         let mut rng = Rng::new(31_000 + sample as u64);
-        move |_p: PopulationId, _t: u64| -> Vec<u32> {
-            (0..2048u32).filter(|_| rng.chance(0.05)).collect()
+        move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..2048u32).filter(|_| rng.chance(0.05)));
         }
     };
     println!("\nbatched inference: {SAMPLES} samples × {STEPS} steps on the switching compile");

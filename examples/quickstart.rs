@@ -70,8 +70,8 @@ fn main() -> anyhow::Result<()> {
     println!("③ simulating 100 timesteps…");
     let mut sim = NetworkSim::native(&net, layers)?;
     let mut rng = Rng::new(123);
-    let mut provider = move |_pop: PopulationId, _t: u64| -> Vec<u32> {
-        (0..300u32).filter(|_| rng.chance(0.1)).collect()
+    let mut provider = move |_pop: PopulationId, _t: u64, out: &mut Vec<u32>| {
+        out.extend((0..300u32).filter(|_| rng.chance(0.1)));
     };
     sim.run(100, &mut provider);
     println!(

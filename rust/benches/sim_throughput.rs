@@ -4,9 +4,15 @@
 //! * per-layer-shape steps/s, synaptic events/s (serial) and issued MACs/s
 //!   (parallel) across the sweep envelope;
 //! * end-to-end steps/s on the demo 3-layer network (the CLI's `simulate`
-//!   network) — the single-thread number the ≥2× refactor target tracks;
+//!   network) at the default 15% stimulus **and at 10%** — the single-thread
+//!   number the ≥2× sparsity-gating target tracks;
+//! * the **firing-rate sweep** (1%–50%): serial vs parallel steps/s on one
+//!   representative layer per rate — the measured sparsity crossover the
+//!   paper's paradigm choice hinges on;
 //! * batch scaling: S samples fanned over 1/2/4/8 `BatchRunner` workers,
-//!   asserting recorders are bit-identical at every worker count.
+//!   asserting recorders are bit-identical at every worker count;
+//! * intra-sample wave parallelism: `NetworkSim::run_jobs` at 1/2/4 threads
+//!   on a wide 3-layer network, asserting bit-identical recorders.
 //!
 //! Writes the machine-readable baseline to `BENCH_sim.json` (override with
 //! `S2SWITCH_BENCH_OUT`), the way compile_time writes `BENCH_compile.json`.
@@ -34,6 +40,9 @@ const BATCH_STEPS: u64 = 200;
 /// from `WARMUP` so the two cannot drift apart.
 const WARMUP: usize = 1;
 const MEASURE: usize = 5;
+/// The firing-rate sweep (≈1%–50%) whose serial/parallel crossover the
+/// switch policy's runtime tier models.
+const RATES: [f64; 6] = [0.01, 0.02, 0.05, 0.1, 0.2, 0.5];
 
 /// The CLI's `simulate` demo network (200-120-20, mixed-density).
 fn demo_network() -> Network {
@@ -56,6 +65,69 @@ fn demo_network() -> Network {
         0.02,
     );
     b.build()
+}
+
+/// A *wide* 3-layer demo (input → 4 hidden populations → output): same-wave
+/// layers give `NetworkSim::run_jobs` real intra-sample parallelism.
+fn wide_network() -> Network {
+    let mut b = NetworkBuilder::new(13);
+    let inp = b.spike_source("input", 256);
+    let hidden: Vec<_> = (0..4)
+        .map(|i| b.lif_population(&format!("hidden{i}"), 160, LifParams::default()))
+        .collect();
+    let out = b.lif_population("output", 32, LifParams::default());
+    for &h in &hidden {
+        b.project(
+            inp,
+            h,
+            Connector::FixedProbability(0.4),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.012,
+        );
+        b.project(
+            h,
+            out,
+            Connector::FixedProbability(0.8),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+    }
+    b.build()
+}
+
+/// Bernoulli stimulus provider for population 0, deterministic per seed.
+fn bernoulli_provider(
+    n: u32,
+    rate: f64,
+    seed: u64,
+) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+        out.extend((0..n).filter(|_| rng.chance(rate)));
+    }
+}
+
+/// Measure one e2e configuration; returns (p50 steps/s, events/s, MACs/s,
+/// p50 ns) over `bench` iterations of `STEPS` steps.
+fn measure_e2e(
+    bench: &Bench,
+    sim: &mut NetworkSim,
+    rate: f64,
+    label: &str,
+) -> (f64, f64, f64, f64) {
+    let ev0 = sim.total_events();
+    let mac0 = sim.total_macs();
+    let stats = bench.run(label, || {
+        sim.reset();
+        let mut provider = bernoulli_provider(200, rate, 99);
+        sim.run(STEPS as u64, &mut provider);
+        sim.recorder.total_spikes()
+    });
+    let steps_s = STEPS as f64 / (stats.p50_ns / 1e9);
+    let iters = (stats.iters + WARMUP) as f64;
+    let events_s = (sim.total_events() - ev0) as f64 / iters / (stats.mean_ns / 1e9);
+    let macs_s = (sim.total_macs() - mac0) as f64 / iters / (stats.mean_ns / 1e9);
+    (steps_s, events_s, macs_s, stats.p50_ns)
 }
 
 fn main() {
@@ -106,40 +178,83 @@ fn main() {
     }
     rep.finish();
 
-    // ---- Part 2: end-to-end single-thread throughput ---------------------
+    // ---- Part 2: firing-rate sweep (the sparsity crossover) --------------
+    // One representative mid-sweep layer, both paradigms, rates 1%–50%.
+    let (src, tgt, d, dl) = (255usize, 255usize, 0.5f64, 8u16);
+    let mut rng = Rng::new(9100);
+    let proj = realize_layer(src, tgt, d, dl, &mut rng);
+    let sc = compile_serial(&proj, src, tgt, LifParams::default(), &pe).unwrap();
+    let mut serial_eng = SerialLayerEngine::new(sc, tgt);
+    let pc = compile_parallel(&proj, src, tgt, LifParams::default(), &pe, WdmConfig::default())
+        .unwrap();
+    let mut parallel_eng = ParallelLayerEngine::new(pc, Box::new(NativeMac));
+
+    let mut rep = Report::new(
+        "Firing-rate sweep — 255×255 d=0.5 delay=8, steps/s per paradigm",
+        &["rate", "serial steps/s", "parallel steps/s", "serial/parallel", "events/step"],
+    );
+    let mut sweep_rows: Vec<(f64, f64, f64, u64, u64)> = Vec::new();
+    for (ri, &rate) in RATES.iter().enumerate() {
+        let mut srng = Rng::new(9500 + ri as u64);
+        let stim: Vec<Vec<u32>> = (0..STEPS)
+            .map(|_| (0..src as u32).filter(|_| srng.chance(rate)).collect())
+            .collect();
+
+        serial_eng.reset();
+        let ev0 = serial_eng.events;
+        let t0 = Instant::now();
+        for s in &stim {
+            std::hint::black_box(serial_eng.step_currents(s));
+        }
+        let dt_s = t0.elapsed().as_secs_f64();
+        let events = serial_eng.events - ev0;
+
+        parallel_eng.reset();
+        let mac0 = parallel_eng.macs;
+        let t0 = Instant::now();
+        for s in &stim {
+            std::hint::black_box(parallel_eng.step_currents(s));
+        }
+        let dt_p = t0.elapsed().as_secs_f64();
+        let macs = parallel_eng.macs - mac0;
+
+        let (s_sps, p_sps) = (STEPS as f64 / dt_s, STEPS as f64 / dt_p);
+        rep.row(vec![
+            format!("{rate:.2}"),
+            format!("{s_sps:.0}"),
+            format!("{p_sps:.0}"),
+            format!("{:.2}×", s_sps / p_sps),
+            format!("{:.0}", events as f64 / STEPS as f64),
+        ]);
+        sweep_rows.push((rate, s_sps, p_sps, events, macs));
+    }
+    rep.finish();
+
+    // ---- Part 3: end-to-end single-thread throughput ---------------------
     let net = demo_network();
     let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
     let (layers, _) = sys.compile_network(&net).unwrap();
 
     // One persistent sim, reset between iterations — the steady-state loop.
     let mut sim = NetworkSim::native(&net, layers.clone()).unwrap();
-    let e2e = bench.run("e2e 3-layer network, 200 steps (ideal compile)", || {
-        sim.reset();
-        let mut rng = Rng::new(99);
-        let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
-            (0..200u32).filter(|_| rng.chance(0.15)).collect()
-        };
-        sim.run(STEPS as u64, &mut provider);
-        sim.recorder.total_spikes()
-    });
-    let e2e_steps_s = STEPS as f64 / (e2e.p50_ns / 1e9);
-    // Cumulative telemetry over warmup + measured iterations.
-    let iters = (e2e.iters + WARMUP) as f64;
-    let events_s = sim.total_events() as f64 / iters / (e2e.mean_ns / 1e9);
-    let macs_s = sim.total_macs() as f64 / iters / (e2e.mean_ns / 1e9);
+    let (e2e_steps_s, events_s, macs_s, e2e_p50) =
+        measure_e2e(&bench, &mut sim, 0.15, "e2e 3-layer network, 200 steps (ideal compile)");
     println!(
-        "e2e single-thread: {e2e_steps_s:.0} steps/s | {:.2} Mevents/s | {:.2} MMAC/s (issued)",
+        "e2e single-thread @15%: {e2e_steps_s:.0} steps/s | {:.2} Mevents/s | {:.2} MMAC/s",
         events_s / 1e6,
         macs_s / 1e6
     );
+    // The sparsity-gating acceptance point: ≤10% stimulus, single thread.
+    let (lo_steps_s, lo_events_s, lo_macs_s, lo_p50) =
+        measure_e2e(&bench, &mut sim, 0.10, "e2e 3-layer network, 200 steps (10% rate)");
+    println!(
+        "e2e single-thread @10%: {lo_steps_s:.0} steps/s | {:.2} Mevents/s | {:.2} MMAC/s",
+        lo_events_s / 1e6,
+        lo_macs_s / 1e6
+    );
 
-    // ---- Part 3: batch scaling over workers ------------------------------
-    let provider_for = |sample: usize| {
-        let mut rng = Rng::new(4200 + sample as u64);
-        move |_p: PopulationId, _t: u64| -> Vec<u32> {
-            (0..200u32).filter(|_| rng.chance(0.15)).collect()
-        }
-    };
+    // ---- Part 4: batch scaling over workers ------------------------------
+    let provider_for = |sample: usize| bernoulli_provider(200, 0.15, 4200 + sample as u64);
     let mut rep = Report::new(
         "BatchRunner scaling — 32 samples × 200 steps, demo 3-layer network",
         &["jobs", "wall-clock ms", "steps/s", "speedup", "identical"],
@@ -172,26 +287,87 @@ fn main() {
     }
     rep.finish();
 
-    // ---- Machine-readable baseline ---------------------------------------
+    // ---- Part 5: intra-sample wave parallelism ---------------------------
+    let wide = wide_network();
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (wide_layers, _) = sys.compile_network(&wide).unwrap();
+    let mut rep = Report::new(
+        "Intra-sample wave parallelism — wide 3-layer (256→4×160→32), 200 steps",
+        &["jobs", "wall-clock ms", "steps/s", "speedup", "identical"],
+    );
+    let mut intra_base: Option<(f64, s2switch::sim::Recorder)> = None;
+    let mut intra_rows: Vec<(usize, u64, f64, f64, bool)> = Vec::new();
+    for jobs in [1usize, 2, 4] {
+        let mut sim = NetworkSim::native(&wide, wide_layers.clone()).unwrap();
+        // Warmup + best-of-MEASURE wall-clock, one persistent sim.
+        let mut best_ns = u64::MAX;
+        for _ in 0..(WARMUP + MEASURE) {
+            sim.reset();
+            let mut provider = bernoulli_provider(256, 0.15, 31);
+            let t0 = Instant::now();
+            sim.run_jobs(STEPS as u64, &mut provider, jobs);
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as u64);
+        }
+        let wall_s = best_ns as f64 / 1e9;
+        let (base_wall, identical) = match &intra_base {
+            None => {
+                intra_base = Some((wall_s, sim.recorder.clone()));
+                (wall_s, true)
+            }
+            Some((b, rec)) => (*b, *rec == sim.recorder),
+        };
+        let speedup = base_wall / wall_s;
+        assert!(identical, "run_jobs output must be jobs-invariant (jobs={jobs})");
+        rep.row(vec![
+            jobs.to_string(),
+            format!("{:.1}", wall_s * 1e3),
+            format!("{:.0}", STEPS as f64 / wall_s),
+            format!("{speedup:.2}×"),
+            identical.to_string(),
+        ]);
+        intra_rows.push((jobs, best_ns, STEPS as f64 / wall_s, speedup, identical));
+    }
+    rep.finish();
+
+    // ---- Machine-readable baseline (BENCH_sim.json v2) -------------------
     let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into());
-    let batch_json: Vec<String> = batch_rows
+    let jobs_rows = |rows: &[(usize, u64, f64, f64, bool)]| -> String {
+        rows.iter()
+            .map(|(jobs, wall_ns, steps_s, speedup, ident)| {
+                format!(
+                    "      {{ \"jobs\": {jobs}, \"wall_ns\": {wall_ns}, \"steps_per_s\": {steps_s:.1}, \"speedup\": {speedup:.4}, \"identical\": {ident} }}"
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n")
+    };
+    let sweep_json: Vec<String> = sweep_rows
         .iter()
-        .map(|(jobs, wall_ns, steps_s, speedup, ident)| {
+        .map(|(rate, s_sps, p_sps, events, macs)| {
             format!(
-                "    {{ \"jobs\": {jobs}, \"wall_ns\": {wall_ns}, \"steps_per_s\": {steps_s:.1}, \"speedup\": {speedup:.4}, \"identical\": {ident} }}"
+                "      {{ \"rate\": {rate}, \"serial_steps_per_s\": {s_sps:.1}, \"parallel_steps_per_s\": {p_sps:.1}, \"serial_events\": {events}, \"parallel_issued_macs\": {macs} }}"
             )
         })
         .collect();
     let json = format!(
-        "{{\n  \"bench\": \"sim_throughput\",\n  \"e2e\": {{\n    \"network\": \"demo 200-120-20\",\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"batch\": {{\n    \"samples\": {},\n    \"steps_per_sample\": {},\n    \"runs\": [\n{}\n    ]\n  }}\n}}\n",
+        "{{\n  \"bench\": \"sim_throughput\",\n  \"schema_version\": 2,\n  \"e2e\": {{\n    \"network\": \"demo 200-120-20\",\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"e2e_low_rate\": {{\n    \"network\": \"demo 200-120-20\",\n    \"rate\": 0.10,\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"rate_sweep\": {{\n    \"layer\": \"255x255 d=0.5 delay=8\",\n    \"steps\": {},\n    \"points\": [\n{}\n    ]\n  }},\n  \"batch\": {{\n    \"samples\": {},\n    \"steps_per_sample\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n  \"intra\": {{\n    \"network\": \"wide 256-4x160-32\",\n    \"steps\": {},\n    \"runs\": [\n{}\n    ]\n  }}\n}}\n",
         STEPS,
-        e2e.p50_ns,
+        e2e_p50,
         e2e_steps_s,
         events_s,
         macs_s,
+        STEPS,
+        lo_p50,
+        lo_steps_s,
+        lo_events_s,
+        lo_macs_s,
+        STEPS,
+        sweep_json.join(",\n"),
         BATCH_SAMPLES,
         BATCH_STEPS,
-        batch_json.join(",\n"),
+        jobs_rows(&batch_rows),
+        STEPS,
+        jobs_rows(&intra_rows),
     );
     match std::fs::write(&out, &json) {
         Ok(()) => println!("baseline written to {out}"),

@@ -1,0 +1,137 @@
+//! Runtime activity cost model — per-timestep *work* estimates as a
+//! function of the observed (or assumed) source firing rate.
+//!
+//! Table I prices what a paradigm *stores*; this module prices what it
+//! *does* per timestep, closing the loop between execution telemetry
+//! ([`crate::sim::LayerActivity`] reports observed rates) and the
+//! serial-vs-parallel decision:
+//!
+//! * **serial** — event-driven: work scales with the synaptic events that
+//!   actually arrive, `rate × n_source × n_target × density` accumulates
+//!   per step (one ring-buffer update each);
+//! * **parallel** — time-driven: once any stacked lane is populated the MAC
+//!   array sweeps the whole weight-delay map, costing
+//!   `ceil(rows/4) × ceil(cols/16)` array issues (DESIGN.md §Perf)
+//!   regardless of how sparse the step was; only fully silent steps are
+//!   free (the engines gate those — `slot_writes` counters on both sides).
+//!
+//! The crossover between the two curves is exactly the sparsity crossover
+//! the paper's paradigm choice hinges on: sparse activity favors serial,
+//! dense activity amortizes the MAC array. Units are "PE work items per
+//! timestep" (one synaptic event ≈ one MAC-array issue ≈ one inner-loop
+//! iteration); a first-order model, reported as a *relative* signal only —
+//! see [`crate::paradigm::CostEstimate::step_cost`] and
+//! [`crate::switching::SwitchPolicy::decide_with_rate`].
+
+use crate::model::LayerCharacter;
+use crate::paradigm::Paradigm;
+
+/// MAC-array geometry the issue count is quantized to (4×16, §Perf).
+pub const MAC_ARRAY_ROWS: f64 = 4.0;
+pub const MAC_ARRAY_COLS: f64 = 16.0;
+
+/// Expected synaptic events per timestep under the serial paradigm: each
+/// source spike touches its fan-out once (`rate` = spikes per source neuron
+/// per timestep, clamped to [0, 1]).
+pub fn serial_events_per_step(ch: &LayerCharacter, rate: f64) -> f64 {
+    rate.clamp(0.0, 1.0) * ch.n_source as f64 * ch.n_target as f64 * ch.density
+}
+
+/// Expected occupied weight-delay-map rows: a `(source, delay)` lane exists
+/// iff at least one of the source's `n_target` potential synapses drew that
+/// delay (delays uniform over `1..=delay_range`, presence `density`).
+pub fn wdm_occupied_rows(ch: &LayerCharacter) -> f64 {
+    let lanes = ch.n_source as f64 * ch.delay_range as f64;
+    let p_lane = 1.0 - (1.0 - ch.density / ch.delay_range as f64).powi(ch.n_target as i32);
+    lanes * p_lane
+}
+
+/// Expected MAC-array issues per timestep under the parallel paradigm: the
+/// full `rows × cols` sweep on every step with ≥1 due lane, zero on silent
+/// steps (which the engine's slot gating skips).
+pub fn parallel_mac_issues_per_step(ch: &LayerCharacter, rate: f64) -> f64 {
+    let rate = rate.clamp(0.0, 1.0);
+    if rate == 0.0 {
+        return 0.0;
+    }
+    let issues = (wdm_occupied_rows(ch) / MAC_ARRAY_ROWS).ceil()
+        * (ch.n_target as f64 / MAC_ARRAY_COLS).ceil();
+    // P(step is non-silent) = P(any source fired this step).
+    let p_active = 1.0 - (1.0 - rate).powi(ch.n_source as i32);
+    issues * p_active
+}
+
+/// Per-step work of `paradigm` on this layer at the given firing rate.
+pub fn step_cost(paradigm: Paradigm, ch: &LayerCharacter, rate: f64) -> f64 {
+    match paradigm {
+        Paradigm::Serial => serial_events_per_step(ch, rate),
+        Paradigm::Parallel => parallel_mac_issues_per_step(ch, rate),
+    }
+}
+
+/// The paradigm with less per-step work at this firing rate (ties to
+/// serial, mirroring [`crate::switching::SwitchPolicy::cheaper`]).
+pub fn runtime_preferred(ch: &LayerCharacter, rate: f64) -> Paradigm {
+    if parallel_mac_issues_per_step(ch, rate) < serial_events_per_step(ch, rate) {
+        Paradigm::Parallel
+    } else {
+        Paradigm::Serial
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_work_is_linear_in_rate_parallel_saturates() {
+        let ch = LayerCharacter::new(255, 255, 1.0, 1);
+        let s1 = serial_events_per_step(&ch, 0.1);
+        let s2 = serial_events_per_step(&ch, 0.2);
+        assert!((s2 - 2.0 * s1).abs() < 1e-9, "serial work is linear in rate");
+        let p_lo = parallel_mac_issues_per_step(&ch, 0.1);
+        let p_hi = parallel_mac_issues_per_step(&ch, 0.9);
+        assert!(p_hi / p_lo < 1.01, "parallel work saturates once steps are non-silent");
+    }
+
+    #[test]
+    fn silent_layers_cost_nothing() {
+        let ch = LayerCharacter::new(500, 500, 0.5, 8);
+        assert_eq!(serial_events_per_step(&ch, 0.0), 0.0);
+        assert_eq!(parallel_mac_issues_per_step(&ch, 0.0), 0.0);
+    }
+
+    #[test]
+    fn sparsity_crossover_matches_the_paper_poles() {
+        // Dense delay-1 at high rate → the MAC array amortizes (parallel);
+        // the same layer at ≲1% activity → event-driven serial wins; a
+        // sparse delay-16 layer stays serial even at high rates.
+        let dense = LayerCharacter::new(255, 255, 1.0, 1);
+        assert_eq!(runtime_preferred(&dense, 0.5), Paradigm::Parallel);
+        assert_eq!(runtime_preferred(&dense, 0.005), Paradigm::Serial);
+        let sparse = LayerCharacter::new(255, 255, 0.1, 16);
+        assert_eq!(runtime_preferred(&sparse, 0.5), Paradigm::Serial);
+    }
+
+    #[test]
+    fn occupied_rows_bounded_by_lanes_and_synapses() {
+        for (ns, nt, d, dl) in [(100, 100, 0.3, 4), (255, 255, 1.0, 1), (2048, 20, 0.03, 16)] {
+            let ch = LayerCharacter::new(ns, nt, d, dl);
+            let rows = wdm_occupied_rows(&ch);
+            assert!(rows >= 0.0);
+            assert!(rows <= (ns * dl as usize) as f64 + 1e-9, "rows exceed lane count");
+            // Can't occupy more rows than there are expected synapses.
+            assert!(rows <= ch.expected_synapses() + 1e-9, "rows exceed synapses");
+        }
+    }
+
+    #[test]
+    fn step_cost_dispatches_by_paradigm() {
+        let ch = LayerCharacter::new(200, 100, 0.5, 2);
+        assert_eq!(step_cost(Paradigm::Serial, &ch, 0.2), serial_events_per_step(&ch, 0.2));
+        assert_eq!(
+            step_cost(Paradigm::Parallel, &ch, 0.2),
+            parallel_mac_issues_per_step(&ch, 0.2)
+        );
+    }
+}

@@ -9,10 +9,18 @@
 //!
 //! Transcription decisions for Table I's two garbled rows are documented in
 //! DESIGN.md §6.
+//!
+//! [`activity`] complements the storage model with a per-timestep *work*
+//! model driven by the observed firing rate — the runtime half of the
+//! serial-vs-parallel comparison (DESIGN.md §Runtime-Perf).
 
+pub mod activity;
 pub mod parallel;
 pub mod serial;
 
+pub use activity::{
+    parallel_mac_issues_per_step, runtime_preferred, serial_events_per_step,
+};
 pub use parallel::{DominantCost, SubordinateFixedCost};
 pub use serial::{SerialCost, SerialLayout};
 

@@ -23,7 +23,9 @@
 //!   [`switching::SwitchPolicy`] decision and the threaded, cache-aware
 //!   [`switching::CompilePipeline`] execution engine.
 //! * [`sim`] — a functional SpiNNaker2 simulator executing compiled layers
-//!   under either paradigm with zero steady-state allocations, plus
+//!   under either paradigm with zero steady-state allocations,
+//!   sparsity-gated readout, a vectorizable chunked LIF kernel and
+//!   intra-sample wave parallelism ([`sim::NetworkSim::run_jobs`]), plus
 //!   [`sim::BatchRunner`] for multi-sample batched inference (the parallel
 //!   path can run AOT-compiled JAX/Pallas HLO through PJRT via [`runtime`],
 //!   behind the `pjrt` cargo feature).

@@ -9,15 +9,24 @@
 //! s2switch compile  --src N --tgt N --density F --delay N [--mode serial|parallel|ideal|classifier]
 //!                   [--machine WxH|light-board] [--strategy linear|chip-packed|balanced]
 //! s2switch simulate [--steps 200] [--batch S] [--pjrt] [--jobs N]
+//!                   [--intra-jobs N] [--profile]
 //!                   [--machine WxH|light-board] [--strategy S]
 //!                   [--record-csv PATH]      # demo 3-layer network
 //! ```
 //!
 //! `--jobs N` sets the worker-thread count (0 = one thread per CPU) for
-//! dataset labeling, network compilation, and batched simulation.
-//! `--batch S` runs S independent stimulus samples through the
+//! dataset labeling, network compilation, batched simulation, and — when
+//! the network has same-wave layers — intra-sample layer parallelism
+//! ([`NetworkSim::run_jobs`]). `--intra-jobs N` sets the per-sample thread
+//! count inside a `--batch` run (default 1). `--profile` prints a
+//! per-phase wall-clock breakdown (ring readout / spike dispatch / LIF /
+//! recording) from the engine telemetry on single-sample runs (provider
+//! time is excluded — it belongs to the stimulus, not the simulator). `--batch S` runs S independent
+//! stimulus samples through the
 //! [`BatchRunner`](s2switch::sim::BatchRunner); every run ends with a
-//! throughput report (steps/s, synaptic events/s, issued MACs/s).
+//! throughput report (steps/s, synaptic events/s, issued MACs/s) and a
+//! per-layer observed-activity table feeding the runtime-informed
+//! paradigm check.
 //! `--machine WxH` sizes the chip grid (`light-board` = the 8×6 48-chip
 //! SpiNNaker2 light board); `--strategy` picks the PE placement strategy.
 //! Compile/simulate runs end with a placement utilization + NoC hop
@@ -90,11 +99,14 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [fl
   decide    --src N --tgt N --density F --delay N --model PATH
   compile   --src N --tgt N --density F --delay N --mode MODE
             --machine WxH|light-board --strategy linear|chip-packed|balanced
-  simulate  --steps N --batch S --pjrt --jobs N --record-csv PATH
-            --machine WxH|light-board --strategy S
+  simulate  --steps N --batch S --pjrt --jobs N --intra-jobs N --profile
+            --record-csv PATH --machine WxH|light-board --strategy S
             run the demo network end to end (--batch S: S stimulus samples
-            through the BatchRunner; --record-csv: dump recorded spikes)
-  (--jobs N: worker threads for compiling and batching, 0 = one per CPU;
+            through the BatchRunner; --intra-jobs N: per-sample layer
+            parallelism; --profile: per-phase wall-clock breakdown;
+            --record-csv: dump recorded spikes)
+  (--jobs N: worker threads for compiling, batching and same-wave layer
+   stepping, 0 = one per CPU;
    --machine WxH: chip grid, light-board = 8x6; compile/simulate print a
    placement utilization + NoC hop summary on exit)";
 
@@ -344,14 +356,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let layers = adm.layers;
     let placement = adm.placement;
 
+    // The layer characters feed the runtime-informed activity report after
+    // the run (layers themselves move into the sim).
+    let characters: Vec<s2switch::model::LayerCharacter> =
+        layers.iter().map(|l| *l.character()).collect();
+
     // Sample `s` draws its stimulus from a seed derived with a golden-ratio
     // stride, so batch results are a pure function of the sample index.
     let sizes: Vec<usize> = net.populations.iter().map(|p| p.n_neurons).collect();
     let stimulus_for = |sample: usize| {
         let sizes = sizes.clone();
         let mut rng = Rng::new(99u64.wrapping_add(sample as u64 * 0x9E37_79B9_7F4A_7C15));
-        move |p: s2switch::model::PopulationId, _t: u64| -> Vec<u32> {
-            (0..sizes[p.0] as u32).filter(|_| rng.chance(rate)).collect()
+        move |p: s2switch::model::PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..sizes[p.0] as u32).filter(|_| rng.chance(rate)));
         }
     };
     let record_path = args.get("record-csv").or_else(|| args.get("record"));
@@ -362,8 +379,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             !args.has("pjrt"),
             "--batch runs on the native backend (the PJRT client is single-threaded)"
         );
+        ensure!(
+            !args.has("profile"),
+            "--profile applies to single-sample runs (batch workers own their sims); \
+             drop --batch to get the phase breakdown"
+        );
         let runner = s2switch::sim::BatchRunner::new(&net, layers)?
-            .with_jobs(resolve_jobs(args)?);
+            .with_jobs(resolve_jobs(args)?)
+            .with_intra_jobs(args.parse_or("intra-jobs", 1)?);
         let run = runner.run(batch, steps, stimulus_for);
         for (i, rec) in run.recorders.iter().enumerate() {
             println!(
@@ -392,9 +415,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
 
     let mut sim = build_sim(args.has("pjrt"), &net, layers)?;
+    if args.has("profile") {
+        sim.set_profile(true);
+    }
     let t0 = std::time::Instant::now();
     let mut provider = stimulus_for(0);
-    sim.run(steps, &mut provider);
+    // PJRT backends are single-threaded by construction; everything else
+    // may exploit same-wave layer parallelism.
+    if args.has("pjrt") {
+        sim.run(steps, &mut provider);
+    } else {
+        sim.run_jobs(steps, &mut provider, resolve_jobs(args)?);
+    }
     let dt = t0.elapsed();
     println!(
         "simulated {steps} steps in {:.2?} ({:.0} steps/s)",
@@ -412,6 +444,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         sim.total_events() as f64 / secs,
         sim.total_macs() as f64 / secs,
     );
+    print_activity_report(&sim, &characters);
+    if args.has("profile") {
+        print_phase_profile(&sim.phase_profile());
+    }
     // NoC traffic estimate for the recorded activity.
     let noc = placement
         .estimate_traffic(&s2switch::switching::placement::spike_counts(&sim.recorder));
@@ -422,6 +458,42 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("spikes exported to {out}");
     }
     Ok(())
+}
+
+/// Per-layer observed activity + the runtime-informed paradigm check: the
+/// telemetry loop from execution back into the cost model
+/// (`costmodel::activity`).
+fn print_activity_report(sim: &NetworkSim, characters: &[s2switch::model::LayerCharacter]) {
+    println!("observed activity (runtime-informed cost model):");
+    for a in sim.layer_activity() {
+        let ch = &characters[a.proj];
+        let rate = a.firing_rate();
+        let preferred = s2switch::costmodel::activity::runtime_preferred(ch, rate);
+        let agrees = if preferred == a.paradigm { "✓" } else { "≠" };
+        println!(
+            "  layer {}: rate {rate:.3} | {} events, {} issued MACs | compiled {} \
+             | runtime model prefers {preferred} {agrees}",
+            a.proj, a.events, a.macs, a.paradigm
+        );
+    }
+}
+
+/// The `--profile` per-phase breakdown (engine phases are CPU time summed
+/// across engines and, under `--jobs`, across worker threads).
+fn print_phase_profile(p: &s2switch::sim::PhaseProfile) {
+    let total = p.total_nanos().max(1) as f64;
+    let row = |name: &str, ns: u64| {
+        println!(
+            "  {name:<14} {:>9.2} ms  ({:>4.1}%)",
+            ns as f64 / 1e6,
+            100.0 * ns as f64 / total
+        );
+    };
+    println!("phase breakdown (cumulative CPU time):");
+    row("ring readout", p.readout_nanos);
+    row("spike dispatch", p.dispatch_nanos);
+    row("LIF update", p.lif_nanos);
+    row("recording", p.record_nanos);
 }
 
 /// The exit throughput report every `simulate` run prints.

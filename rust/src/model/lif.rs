@@ -101,6 +101,87 @@ pub fn lif_step_batch(
     }
 }
 
+/// Chunk width of [`lif_step_chunked`]: the spike mask is collected per
+/// 16-neuron window, so the inner loop carries no `Vec::push` branch and
+/// stays auto-vectorizable.
+pub const LIF_CHUNK: usize = 16;
+
+/// The production LIF kernel: chunked, branch-free in the arithmetic, and
+/// bit-identical to the [`lif_step`] oracle (property-tested below).
+///
+/// Two paths:
+/// * `t_refrac == 0` (the common sweep configuration) — the refractory
+///   state is provably all-zero, so the kernel is a pure
+///   multiply-add/compare/select loop over `v`/`input`;
+/// * `t_refrac > 0` — refractory gating folded in with selects on
+///   already-computed values (no early exits), so both paths present the
+///   compiler a straight-line loop body.
+///
+/// Spike indices are collected from a per-chunk bitmask after each window,
+/// keeping the unpredictable `push` out of the arithmetic loop.
+pub fn lif_step_chunked(
+    p: &LifParams,
+    v: &mut [f32],
+    input: &[f32],
+    refrac: &mut [u32],
+    spikes_out: &mut Vec<u32>,
+) {
+    assert_eq!(v.len(), input.len());
+    assert_eq!(v.len(), refrac.len());
+    spikes_out.clear();
+    let mut base = 0usize;
+    if p.t_refrac == 0 {
+        // With t_refrac == 0 the oracle can never set a nonzero counter, so
+        // a consistent state has refrac ≡ 0 and the gate can be dropped.
+        debug_assert!(
+            refrac.iter().all(|&r| r == 0),
+            "t_refrac == 0 implies no neuron is refractory"
+        );
+        for (vs, is) in v.chunks_mut(LIF_CHUNK).zip(input.chunks(LIF_CHUNK)) {
+            let mut mask = 0u32;
+            for (j, (vj, &ij)) in vs.iter_mut().zip(is).enumerate() {
+                let v_new = ij + p.alpha * *vj + p.i_offset;
+                let fired = (v_new >= p.v_th) as u32;
+                *vj = v_new - fired as f32 * p.v_th;
+                mask |= fired << j;
+            }
+            push_spike_mask(spikes_out, base, mask);
+            base += LIF_CHUNK;
+        }
+    } else {
+        for ((vs, is), rs) in v
+            .chunks_mut(LIF_CHUNK)
+            .zip(input.chunks(LIF_CHUNK))
+            .zip(refrac.chunks_mut(LIF_CHUNK))
+        {
+            let mut mask = 0u32;
+            for (j, ((vj, &ij), rj)) in vs.iter_mut().zip(is).zip(rs.iter_mut()).enumerate() {
+                let r = *rj;
+                let active = r == 0;
+                let v_new = ij + p.alpha * *vj + p.i_offset;
+                let fired = active & (v_new >= p.v_th);
+                let vf = v_new - fired as u32 as f32 * p.v_th;
+                *vj = if active { vf } else { p.v_rest };
+                *rj = if active { fired as u32 * p.t_refrac } else { r - 1 };
+                mask |= (fired as u32) << j;
+            }
+            push_spike_mask(spikes_out, base, mask);
+            base += LIF_CHUNK;
+        }
+    }
+}
+
+/// Append the set bits of `mask` (chunk-local neuron indices offset by
+/// `base`) as spike ids, lowest index first.
+#[inline]
+fn push_spike_mask(spikes_out: &mut Vec<u32>, base: usize, mut mask: u32) {
+    while mask != 0 {
+        let b = mask.trailing_zeros();
+        spikes_out.push((base + b as usize) as u32);
+        mask &= mask - 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +232,62 @@ mod tests {
             let (vs, sp, _) = lif_step(&p, v0[i], input[i], 0);
             assert_eq!(v[i], vs);
             assert_eq!(spikes.contains(&(i as u32)), sp);
+        }
+    }
+
+    /// Run both kernels over the same evolving state for `steps` steps and
+    /// demand bit-identical trajectories (voltages, counters, spike ids).
+    fn chunked_matches_oracle(p: &LifParams, n: usize, steps: usize, seed: u64) -> bool {
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut v_a = vec![p.v_init; n];
+        let mut v_b = v_a.clone();
+        let mut r_a = vec![0u32; n];
+        let mut r_b = r_a.clone();
+        let (mut s_a, mut s_b) = (Vec::new(), Vec::new());
+        for _ in 0..steps {
+            let input: Vec<f32> =
+                (0..n).map(|_| (rng.range_f64(-0.4, 1.2)) as f32).collect();
+            lif_step_batch(p, &mut v_a, &input, &mut r_a, &mut s_a);
+            lif_step_chunked(p, &mut v_b, &input, &mut r_b, &mut s_b);
+            if v_a != v_b || r_a != r_b || s_a != s_b {
+                return false;
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn chunked_kernel_is_bit_identical_to_oracle() {
+        use crate::prop::Prop;
+        Prop::new("lif_step_chunked ≡ lif_step", 60).check(
+            |g| {
+                let p = LifParams {
+                    alpha: g.f64(0.5, 1.0) as f32,
+                    v_th: g.f64(0.5, 1.5) as f32,
+                    v_rest: g.f64(-0.2, 0.2) as f32,
+                    t_refrac: g.usize(0, 4) as u32,
+                    i_offset: g.f64(-0.1, 0.3) as f32,
+                    v_init: g.f64(-0.5, 0.5) as f32,
+                    ..Default::default()
+                };
+                // Sizes straddling the chunk width, incl. 0 and non-multiples.
+                (p, g.usize(0, 3 * LIF_CHUNK + 5), g.i64(1, 1 << 20) as u64)
+            },
+            |&(p, n, seed)| chunked_matches_oracle(&p, n, 12, seed),
+        );
+    }
+
+    #[test]
+    fn chunked_kernel_handles_refractory_and_offset() {
+        let p = LifParams { t_refrac: 3, i_offset: 0.25, alpha: 0.95, ..Default::default() };
+        assert!(chunked_matches_oracle(&p, 100, 40, 7));
+    }
+
+    #[test]
+    fn chunked_fast_path_matches_on_chunk_boundaries() {
+        let p = LifParams::default();
+        for n in [0, 1, LIF_CHUNK - 1, LIF_CHUNK, LIF_CHUNK + 1, 4 * LIF_CHUNK] {
+            assert!(chunked_matches_oracle(&p, n, 10, 42 + n as u64), "n={n}");
         }
     }
 

@@ -182,6 +182,17 @@ impl CostEstimate {
     pub fn total_dtcm(&self) -> usize {
         self.dtcm_bytes + self.source_hosting_dtcm
     }
+
+    /// The runtime-informed tier: this paradigm's per-timestep work on a
+    /// layer at the given source firing rate (observed via
+    /// [`crate::sim::LayerActivity::firing_rate`] or assumed), in the
+    /// [`crate::costmodel::activity`] model's work-item units. Storage
+    /// ([`CostEstimate::total_pes`]) stays the primary decision axis; this
+    /// closes the telemetry loop for rate-dependent comparisons
+    /// ([`crate::switching::SwitchPolicy::decide_with_rate`]).
+    pub fn step_cost(&self, ch: &LayerCharacter, rate: f64) -> f64 {
+        crate::costmodel::activity::step_cost(self.paradigm, ch, rate)
+    }
 }
 
 /// One layer's compile input: the realized projection plus the population

@@ -11,6 +11,18 @@
 //! report the MAC operations they *actually issued* (sparsity-aware — silent
 //! lanes are skipped), which is what the throughput benches charge.
 
+/// The boxed backend slot a [`crate::sim::ParallelLayerEngine`] owns.
+///
+/// Default builds require `Send` so whole engines can cross into
+/// [`crate::sim::NetworkSim::run_jobs`]'s scoped worker threads. The
+/// `pjrt` feature relaxes the bound — its client is `Rc`-based and
+/// single-threaded by construction — and in exchange that configuration
+/// steps networks sequentially (`run_jobs` falls back to `run`).
+#[cfg(not(feature = "pjrt"))]
+pub type BackendBox = Box<dyn MacBackend + Send>;
+#[cfg(feature = "pjrt")]
+pub type BackendBox = Box<dyn MacBackend>;
+
 /// A backend that can run the MAC-array matvec.
 pub trait MacBackend {
     /// `out[c] = Σ_r stacked[r] · weights[r · n_cols + c]`

@@ -84,6 +84,7 @@ pub struct BatchRunner<'a> {
     net: &'a Network,
     layers: Vec<CompiledLayer>,
     jobs: usize,
+    intra_jobs: usize,
 }
 
 impl<'a> BatchRunner<'a> {
@@ -92,12 +93,24 @@ impl<'a> BatchRunner<'a> {
     /// infallibly — structural checks only, no engine state materialized.
     pub fn new(net: &'a Network, layers: Vec<CompiledLayer>) -> Result<Self> {
         NetworkSim::validate(net, layers.len())?;
-        Ok(BatchRunner { net, layers, jobs: 0 })
+        Ok(BatchRunner { net, layers, jobs: 0, intra_jobs: 1 })
     }
 
     /// Builder-style worker-thread count (0 = one per CPU; 1 = inline).
     pub fn with_jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs;
+        self
+    }
+
+    /// Intra-sample layer-parallel threads *per batch worker*
+    /// ([`NetworkSim::run_jobs`]; default 1 = sequential stepping; 0 is
+    /// clamped to 1 — auto-expansion to one-per-CPU *inside every batch
+    /// worker* would oversubscribe quadratically). Results are
+    /// jobs-invariant on both axes, so any `(jobs, intra_jobs)`
+    /// combination yields bit-identical recorders; keep
+    /// `jobs × intra_jobs ≲ CPUs`.
+    pub fn with_intra_jobs(mut self, intra_jobs: usize) -> Self {
+        self.intra_jobs = intra_jobs.max(1);
         self
     }
 
@@ -117,7 +130,7 @@ impl<'a> BatchRunner<'a> {
     pub fn run<P, F>(&self, n_samples: usize, steps: u64, make_provider: F) -> BatchRun
     where
         F: Fn(usize) -> P + Sync,
-        P: FnMut(PopulationId, u64) -> Vec<u32>,
+        P: FnMut(PopulationId, u64, &mut Vec<u32>),
     {
         let jobs = self.effective_jobs(n_samples);
         let t0 = Instant::now();
@@ -139,7 +152,7 @@ impl<'a> BatchRunner<'a> {
                 sim.reset();
                 let mut provider = make_provider(i);
                 let s0 = Instant::now();
-                sim.run(steps, &mut provider);
+                sim.run_jobs(steps, &mut provider, self.intra_jobs);
                 local.push((
                     i,
                     std::mem::take(&mut sim.recorder),
@@ -236,9 +249,11 @@ mod tests {
         sys.compile_network(net).unwrap().0
     }
 
-    fn provider_for(i: usize) -> impl FnMut(crate::model::PopulationId, u64) -> Vec<u32> {
+    fn provider_for(i: usize) -> impl FnMut(crate::model::PopulationId, u64, &mut Vec<u32>) {
         let mut rng = Rng::new(1000 + i as u64);
-        move |_p, _t| (0..60u32).filter(|_| rng.chance(0.25)).collect()
+        move |_p, _t, out: &mut Vec<u32>| {
+            out.extend((0..60u32).filter(|_| rng.chance(0.25)));
+        }
     }
 
     #[test]
@@ -276,6 +291,46 @@ mod tests {
                 "sample {i} must equal a standalone NetworkSim run"
             );
         }
+    }
+
+    #[test]
+    fn intra_sample_jobs_compose_without_changing_results() {
+        // Wide net so NetworkSim::run_jobs actually engages: cross-sample
+        // and intra-sample parallelism must compose bit-identically.
+        let mut b = NetworkBuilder::new(77);
+        let inp = b.spike_source("in", 60);
+        let hids: Vec<_> =
+            (0..3).map(|i| b.lif_population(&format!("h{i}"), 25, LifParams::default())).collect();
+        let out = b.lif_population("out", 8, LifParams::default());
+        for &h in &hids {
+            b.project(
+                inp,
+                h,
+                Connector::FixedProbability(0.5),
+                SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+                0.03,
+            );
+            b.project(
+                h,
+                out,
+                Connector::FixedProbability(0.8),
+                SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+                0.04,
+            );
+        }
+        let net = b.build();
+        let layers = compiled(&net);
+        let plain = BatchRunner::new(&net, layers.clone())
+            .unwrap()
+            .with_jobs(1)
+            .run(6, 40, provider_for);
+        let composed = BatchRunner::new(&net, layers)
+            .unwrap()
+            .with_jobs(2)
+            .with_intra_jobs(3)
+            .run(6, 40, provider_for);
+        assert_eq!(plain.recorders, composed.recorders);
+        assert!(plain.total_spikes() > 0);
     }
 
     #[test]

@@ -6,16 +6,21 @@
 //! * [`serial_engine`] — event-based synaptic processing: spike → master
 //!   population table → address list → synaptic-matrix block → delay ring
 //!   buffer, per serial PE (spikes dispatched through a precomputed
-//!   source→PE CSR index).
+//!   source→PE CSR index; ring readout sparsity-gated per (PE, slot) by
+//!   pending-write counters).
 //! * [`parallel_engine`] — dominant-PE preprocessing (reversed order /
 //!   input-merging tables → stacked input ring) + subordinate MAC-array
 //!   matmuls, optionally through the AOT-compiled JAX/Pallas HLO via PJRT
 //!   ([`crate::runtime`], behind the `pjrt` feature).
-//! * [`network`] — whole-network simulation: population LIF state, spike
-//!   routing between layers, recording. Steady state allocates nothing;
-//!   [`NetworkSim::reset`] reuses one compiled sim across stimuli.
+//! * [`network`] — whole-network simulation: wave-ordered population LIF
+//!   state (chunked vectorizable kernel), spike routing between layers,
+//!   flat-buffer recording, per-layer activity telemetry. Steady state
+//!   allocates nothing; [`NetworkSim::reset`] reuses one compiled sim
+//!   across stimuli, [`NetworkSim::run_jobs`] steps same-wave layers on
+//!   scoped worker threads with bit-identical recorders.
 //! * [`batch`] — [`BatchRunner`]: many independent stimulus samples fanned
-//!   over worker threads against shared compiled layers.
+//!   over worker threads against shared compiled layers (composable with
+//!   intra-sample layer parallelism via `with_intra_jobs`).
 //!
 //! **Numerical equivalence**: weights are integers (quantized u8 magnitudes,
 //! sign = synapse type) and both engines accumulate them exactly (i32 /
@@ -28,8 +33,10 @@ pub mod network;
 pub mod parallel_engine;
 pub mod serial_engine;
 
-pub use backend::{MacBackend, NativeMac};
+pub use backend::{BackendBox, MacBackend, NativeMac};
 pub use batch::{BatchRun, BatchRunner};
-pub use network::{NetworkSim, Recorder, SpikeProvider};
+pub use network::{
+    LayerActivity, NetworkSim, PhaseProfile, Recorder, SpikeProvider, VoltageTrace,
+};
 pub use parallel_engine::ParallelLayerEngine;
 pub use serial_engine::SerialLayerEngine;

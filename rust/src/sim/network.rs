@@ -1,30 +1,51 @@
 //! Whole-network simulation: population LIF state, layer engines, spike
 //! routing, recording.
 //!
-//! Populations are updated in topological order each timestep; a projection
-//! engine consumes its source population's spikes from the *current* step
+//! Populations are updated **wave by wave** each timestep: a population's
+//! topological wave is its longest-path depth from the sources, so every
+//! projection goes from an earlier wave into a strictly later one
 //! (feed-forward networks only — recurrent edges would need a one-step
-//! delay relaxation, which the paper's per-layer evaluation never exercises).
+//! delay relaxation, which the paper's per-layer evaluation never
+//! exercises). Within a wave, populations own disjoint membrane/current
+//! buffers and engines own disjoint compiled state, which is what makes
+//! [`NetworkSim::run_jobs`]'s intra-sample layer parallelism sound: engines
+//! of one wave step concurrently on scoped worker threads, their outputs
+//! are staged per engine, and the coordinator reduces them in fixed engine
+//! order — recorders are bit-identical at any jobs count.
 //!
-//! The stepping loop is allocation-free in steady state: engine indices are
-//! grouped by source population at construction (CSR-style, no per-step
-//! scan over all engines), input currents accumulate into fixed
+//! The stepping loop is allocation-free in steady state: engines are
+//! grouped by wave at construction, input currents accumulate into fixed
 //! per-population buffers (zeroed after consumption, never reallocated),
-//! and per-population spike scratch is reused across steps. [`NetworkSim::reset`]
-//! rewinds everything to t=0 so one compiled simulator can serve many
-//! stimulus samples — the primitive [`super::batch::BatchRunner`] builds on.
+//! per-population spike scratch is reused across steps, and the
+//! [`SpikeProvider`] fills a caller-owned buffer instead of returning a
+//! fresh `Vec`. [`NetworkSim::reset`] rewinds everything to t=0 so one
+//! compiled simulator can serve many stimulus samples — the primitive
+//! [`super::batch::BatchRunner`] builds on.
 
-use super::backend::{MacBackend, NativeMac};
+use super::backend::{BackendBox, NativeMac};
 use super::parallel_engine::ParallelLayerEngine;
 use super::serial_engine::SerialLayerEngine;
-use crate::model::lif::lif_step_batch;
+#[cfg(not(feature = "pjrt"))]
+use crate::costmodel::serial::balanced_split;
+use crate::model::lif::lif_step_chunked;
 use crate::model::{LifParams, Network, PopulationId};
+use crate::paradigm::Paradigm;
 use crate::switching::CompiledLayer;
 use anyhow::{ensure, Result};
 use std::collections::BTreeMap;
+#[cfg(not(feature = "pjrt"))]
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+#[cfg(not(feature = "pjrt"))]
+use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(not(feature = "pjrt"))]
+use std::sync::{Barrier, Mutex, RwLock};
+use std::time::Instant;
 
-/// Supplies source-population spikes per timestep.
-pub type SpikeProvider<'a> = dyn FnMut(PopulationId, u64) -> Vec<u32> + 'a;
+/// Supplies source-population spikes per timestep by filling the
+/// caller-owned buffer (handed over cleared) with firing neuron ids —
+/// steady state allocates nothing once the buffer has grown to its
+/// high-water mark.
+pub type SpikeProvider<'a> = dyn FnMut(PopulationId, u64, &mut Vec<u32>) + 'a;
 
 /// Per-population LIF state.
 struct PopState {
@@ -53,6 +74,61 @@ impl LayerEngine {
             LayerEngine::Parallel(e) => e.reset(),
         }
     }
+
+    fn set_profile(&mut self, on: bool) {
+        match self {
+            LayerEngine::Serial(e) => e.set_profile(on),
+            LayerEngine::Parallel(e) => e.set_profile(on),
+        }
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        match self {
+            LayerEngine::Serial(_) => Paradigm::Serial,
+            LayerEngine::Parallel(_) => Paradigm::Parallel,
+        }
+    }
+
+    /// (steps, spikes_in, events, macs) cumulative telemetry.
+    fn telemetry(&self) -> (u64, u64, u64, u64) {
+        match self {
+            LayerEngine::Serial(e) => (e.steps, e.spikes_in, e.events, 0),
+            LayerEngine::Parallel(e) => (e.steps, e.spikes_in, 0, e.macs),
+        }
+    }
+
+    /// (readout, dispatch) nanos accumulated while profiling.
+    fn phase_nanos(&self) -> (u64, u64) {
+        match self {
+            LayerEngine::Serial(e) => (e.readout_nanos, e.dispatch_nanos),
+            LayerEngine::Parallel(e) => (e.readout_nanos, e.dispatch_nanos),
+        }
+    }
+}
+
+/// Flat voltage trace for one recorded population: a `(steps × neurons)`
+/// row-major buffer appended to once per step — no per-step `Vec` clone.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VoltageTrace {
+    /// Neurons per recorded step (row width).
+    pub n_neurons: usize,
+    /// Row-major `steps × n_neurons` samples.
+    pub data: Vec<f32>,
+}
+
+impl VoltageTrace {
+    pub fn n_steps(&self) -> usize {
+        if self.n_neurons == 0 {
+            0
+        } else {
+            self.data.len() / self.n_neurons
+        }
+    }
+
+    /// The recorded membrane row of timestep `t`.
+    pub fn step(&self, t: usize) -> &[f32] {
+        &self.data[t * self.n_neurons..(t + 1) * self.n_neurons]
+    }
 }
 
 /// Recorded spikes (and optional voltages) per population.
@@ -60,13 +136,36 @@ impl LayerEngine {
 pub struct Recorder {
     /// `spikes[pop] = [(t, neuron)]`.
     pub spikes: BTreeMap<usize, Vec<(u64, u32)>>,
-    /// `v[pop] = [per-step snapshot]` for populations with `record_v`.
-    pub v: BTreeMap<usize, Vec<Vec<f32>>>,
+    /// `v[pop]` = flat voltage trace for populations with `record_v`.
+    pub v: BTreeMap<usize, VoltageTrace>,
 }
 
 impl Recorder {
     pub fn spikes_of(&self, pop: PopulationId) -> &[(u64, u32)] {
         self.spikes.get(&pop.0).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// The flat voltage trace of a recorded population, if any.
+    pub fn v_of(&self, pop: PopulationId) -> Option<&VoltageTrace> {
+        self.v.get(&pop.0)
+    }
+
+    /// Append one membrane row for `pop` (fixing the row width on first use).
+    fn record_v_step(&mut self, pop: usize, v: &[f32]) {
+        let trace = self.v.entry(pop).or_default();
+        if trace.n_neurons == 0 {
+            trace.n_neurons = v.len();
+        }
+        trace.data.extend_from_slice(v);
+    }
+
+    /// Pre-size `pop`'s voltage trace for `steps` more rows of `n` neurons.
+    fn reserve_v(&mut self, pop: usize, n: usize, steps: usize) {
+        let trace = self.v.entry(pop).or_default();
+        if trace.n_neurons == 0 {
+            trace.n_neurons = n;
+        }
+        trace.data.reserve(n * steps);
     }
 
     /// Export all recorded spikes as CSV (`population,timestep,neuron`).
@@ -92,14 +191,82 @@ impl Recorder {
     }
 }
 
+/// Per-layer observed runtime activity (cumulative engine telemetry in
+/// projection order) — the runtime-informed firing-rate input
+/// [`crate::costmodel::activity`] and [`crate::paradigm::CostEstimate::step_cost`]
+/// consume.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerActivity {
+    /// Projection index in the network (reporting order).
+    pub proj: usize,
+    pub source: PopulationId,
+    pub target: PopulationId,
+    pub paradigm: Paradigm,
+    /// Source-population size (the firing-rate denominator).
+    pub n_source: usize,
+    /// Timesteps this engine has executed (cumulative across resets).
+    pub steps: u64,
+    /// Incoming spikes the engine has seen (cumulative).
+    pub spikes_in: u64,
+    /// Synaptic events processed (serial engines; cumulative).
+    pub events: u64,
+    /// MAC operations actually issued (parallel engines; cumulative).
+    pub macs: u64,
+}
+
+impl LayerActivity {
+    /// Observed source firing rate: spikes per source neuron per timestep.
+    pub fn firing_rate(&self) -> f64 {
+        let denom = (self.steps as f64) * (self.n_source as f64);
+        if denom == 0.0 {
+            0.0
+        } else {
+            self.spikes_in as f64 / denom
+        }
+    }
+}
+
+/// Cumulative per-phase wall-clock of a profiled run
+/// ([`NetworkSim::set_profile`]); engine phases are summed across engines,
+/// so under [`NetworkSim::run_jobs`] they are CPU time, not elapsed time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseProfile {
+    /// Ring/stacked-slot readout (serial Phase 1 / parallel MAC consume).
+    pub readout_nanos: u64,
+    /// Spike dispatch into future slots (both engines' Phase 2).
+    pub dispatch_nanos: u64,
+    /// LIF membrane updates.
+    pub lif_nanos: u64,
+    /// Spike/voltage recording.
+    pub record_nanos: u64,
+}
+
+impl PhaseProfile {
+    pub fn total_nanos(&self) -> u64 {
+        self.readout_nanos + self.dispatch_nanos + self.lif_nanos + self.record_nanos
+    }
+}
+
+/// One engine with its routing metadata, stored in wave-grouped order.
+struct EngineSlot {
+    /// Original projection index (telemetry is reported in this order).
+    proj: usize,
+    src: PopulationId,
+    tgt: PopulationId,
+    n_source: usize,
+    engine: LayerEngine,
+}
+
 /// The network simulator.
 pub struct NetworkSim {
-    topo: Vec<PopulationId>,
-    /// Engine + source/target population per projection, projection order.
-    engines: Vec<(PopulationId, PopulationId, LayerEngine)>,
-    /// Engine indices grouped by source population id (CSR-style index
-    /// computed once; the step loop never scans engines it won't run).
-    engines_of_src: Vec<Vec<usize>>,
+    /// Engines grouped by topological wave of their source population
+    /// (contiguous ranges per [`NetworkSim::wave_bounds`]).
+    engines: Vec<EngineSlot>,
+    /// `wave_bounds[w]` = engine range `[lo, hi)` whose sources sit in
+    /// wave `w`.
+    wave_bounds: Vec<(usize, usize)>,
+    /// Population indices per topological wave (longest-path depth).
+    pops_of_wave: Vec<Vec<usize>>,
     pops: Vec<Option<PopState>>,
     /// Fixed per-population input-current accumulators (zeroed after
     /// consumption each step, never reallocated).
@@ -109,6 +276,9 @@ pub struct NetworkSim {
     record_spikes: Vec<bool>,
     record_v: Vec<bool>,
     pub recorder: Recorder,
+    profile: bool,
+    lif_nanos: u64,
+    record_nanos: u64,
     t: u64,
 }
 
@@ -119,16 +289,34 @@ impl NetworkSim {
     pub fn new(
         net: &Network,
         layers: Vec<CompiledLayer>,
-        mut backend_factory: impl FnMut() -> Box<dyn MacBackend>,
+        mut backend_factory: impl FnMut() -> BackendBox,
     ) -> Result<Self> {
         Self::validate(net, layers.len())?;
-        let topo = net.topo_order();
 
-        let engines: Vec<(PopulationId, PopulationId, LayerEngine)> = net
+        // Longest-path depth per population ("wave"): sources sit at 0 and
+        // every projection crosses into a strictly deeper wave (guaranteed
+        // by the feed-forward check in `validate`).
+        let topo = net.topo_order();
+        let mut depth = vec![0usize; net.populations.len()];
+        for &pid in &topo {
+            for proj in &net.projections {
+                if proj.target == pid {
+                    depth[pid.0] = depth[pid.0].max(depth[proj.source.0] + 1);
+                }
+            }
+        }
+        let n_waves = depth.iter().max().map_or(1, |&d| d + 1);
+        let mut pops_of_wave = vec![Vec::new(); n_waves];
+        for &pid in &topo {
+            pops_of_wave[depth[pid.0]].push(pid.0);
+        }
+
+        let mut engines: Vec<EngineSlot> = net
             .projections
             .iter()
             .zip(layers)
-            .map(|(proj, layer)| {
+            .enumerate()
+            .map(|(proj_idx, (proj, layer))| {
                 let engine = match layer {
                     CompiledLayer::Serial(c) => {
                         let n_tgt = net.population(proj.target).n_neurons;
@@ -138,14 +326,28 @@ impl NetworkSim {
                         LayerEngine::Parallel(ParallelLayerEngine::new(c, backend_factory()))
                     }
                 };
-                (proj.source, proj.target, engine)
+                EngineSlot {
+                    proj: proj_idx,
+                    src: proj.source,
+                    tgt: proj.target,
+                    n_source: net.population(proj.source).n_neurons,
+                    engine,
+                }
             })
             .collect();
-
-        let mut engines_of_src = vec![Vec::new(); net.populations.len()];
-        for (i, (src, _, _)) in engines.iter().enumerate() {
-            engines_of_src[src.0].push(i);
+        // Group engines by source wave; the sort is stable, so engines of
+        // one wave keep projection order (the deterministic reduce order).
+        engines.sort_by_key(|s| depth[s.src.0]);
+        let mut wave_bounds = vec![(0usize, 0usize); n_waves];
+        let mut cursor = 0usize;
+        for (w, bounds) in wave_bounds.iter_mut().enumerate() {
+            let lo = cursor;
+            while cursor < engines.len() && depth[engines[cursor].src.0] == w {
+                cursor += 1;
+            }
+            *bounds = (lo, cursor);
         }
+        debug_assert_eq!(cursor, engines.len());
 
         let pops: Vec<Option<PopState>> = net
             .populations
@@ -160,15 +362,18 @@ impl NetworkSim {
             .collect();
 
         Ok(NetworkSim {
-            topo,
             engines,
-            engines_of_src,
+            wave_bounds,
+            pops_of_wave,
             pops,
             currents: net.populations.iter().map(|p| vec![0.0; p.n_neurons]).collect(),
             spike_buf: vec![Vec::new(); net.populations.len()],
             record_spikes: net.populations.iter().map(|p| p.record_spikes).collect(),
             record_v: net.populations.iter().map(|p| p.record_v).collect(),
             recorder: Recorder::default(),
+            profile: false,
+            lif_nanos: 0,
+            record_nanos: 0,
             t: 0,
         })
     }
@@ -213,13 +418,24 @@ impl NetworkSim {
         self.t
     }
 
+    /// Enable per-phase wall-clock accumulation on the sim and every engine
+    /// (read back via [`NetworkSim::phase_profile`]); off by default so the
+    /// hot path carries no timer syscalls.
+    pub fn set_profile(&mut self, on: bool) {
+        self.profile = on;
+        for slot in &mut self.engines {
+            slot.engine.set_profile(on);
+        }
+    }
+
     /// Rewind to t=0 with fresh membrane/ring state and an empty recorder,
     /// keeping every compiled structure and buffer — the cheap path to run
     /// another stimulus sample without recompiling. Engine telemetry
-    /// (`events`/`macs`) keeps accumulating across resets.
+    /// (`events`/`macs`/activity counters/profiling nanos) keeps
+    /// accumulating across resets.
     pub fn reset(&mut self) {
-        for (_, _, engine) in &mut self.engines {
-            engine.reset();
+        for slot in &mut self.engines {
+            slot.engine.reset();
         }
         for state in self.pops.iter_mut().flatten() {
             state.v.fill(state.params.v_init);
@@ -237,62 +453,134 @@ impl NetworkSim {
 
     /// Synaptic events processed by the serial engines (cumulative).
     pub fn total_events(&self) -> u64 {
-        self.engines
-            .iter()
-            .map(|(_, _, e)| match e {
-                LayerEngine::Serial(s) => s.events,
-                LayerEngine::Parallel(_) => 0,
-            })
-            .sum()
+        self.engines.iter().map(|s| s.engine.telemetry().2).sum()
     }
 
     /// MAC operations actually issued by the parallel engines (cumulative).
     pub fn total_macs(&self) -> u64 {
-        self.engines
-            .iter()
-            .map(|(_, _, e)| match e {
-                LayerEngine::Serial(_) => 0,
-                LayerEngine::Parallel(p) => p.macs,
-            })
-            .sum()
+        self.engines.iter().map(|s| s.engine.telemetry().3).sum()
     }
 
-    /// Advance one timestep. `provider` yields each spike-source
-    /// population's firing neuron ids for this step.
-    pub fn step(&mut self, provider: &mut SpikeProvider) {
-        for i in 0..self.topo.len() {
-            let pop = self.topo[i];
-            let p = pop.0;
-            // 1. Every engine whose source is an *earlier* population has
-            //    already seen its spikes; engines sourced at `pop` step
-            //    after `pop`'s own spikes exist. So: first compute this
-            //    population's spikes, then run its outgoing engines.
-            if let Some(state) = &mut self.pops[p] {
-                lif_step_batch(
-                    &state.params,
-                    &mut state.v,
-                    &self.currents[p],
-                    &mut state.refrac,
-                    &mut self.spike_buf[p],
-                );
-                self.currents[p].fill(0.0);
-                if self.record_v[p] {
-                    self.recorder.v.entry(p).or_default().push(state.v.clone());
+    /// Per-layer observed activity (cumulative engine telemetry), in
+    /// projection order.
+    pub fn layer_activity(&self) -> Vec<LayerActivity> {
+        let mut out: Vec<LayerActivity> = self
+            .engines
+            .iter()
+            .map(|s| {
+                let (steps, spikes_in, events, macs) = s.engine.telemetry();
+                LayerActivity {
+                    proj: s.proj,
+                    source: s.src,
+                    target: s.tgt,
+                    paradigm: s.engine.paradigm(),
+                    n_source: s.n_source,
+                    steps,
+                    spikes_in,
+                    events,
+                    macs,
                 }
-            } else {
-                self.spike_buf[p] = provider(pop, self.t);
+            })
+            .collect();
+        out.sort_by_key(|a| a.proj);
+        out
+    }
+
+    /// Cumulative phase breakdown of profiled runs (zeros unless
+    /// [`NetworkSim::set_profile`] was enabled).
+    pub fn phase_profile(&self) -> PhaseProfile {
+        let mut p = PhaseProfile {
+            lif_nanos: self.lif_nanos,
+            record_nanos: self.record_nanos,
+            ..Default::default()
+        };
+        for slot in &self.engines {
+            let (r, d) = slot.engine.phase_nanos();
+            p.readout_nanos += r;
+            p.dispatch_nanos += d;
+        }
+        p
+    }
+
+    /// Pre-size voltage traces for `steps` more recorded rows.
+    fn reserve_recording(&mut self, steps: u64) {
+        for (p, state) in self.pops.iter().enumerate() {
+            if self.record_v[p] {
+                if let Some(state) = state {
+                    self.recorder.reserve_v(p, state.v.len(), steps as usize);
+                }
             }
-            if self.record_spikes[p] && !self.spike_buf[p].is_empty() {
-                let rec = self.recorder.spikes.entry(p).or_default();
-                rec.extend(self.spike_buf[p].iter().map(|&n| (self.t, n)));
+        }
+    }
+
+    /// Advance one timestep. `provider` fills each spike-source
+    /// population's firing neuron ids for this step into a reused buffer.
+    pub fn step(&mut self, provider: &mut SpikeProvider) {
+        let NetworkSim {
+            ref mut engines,
+            ref wave_bounds,
+            ref pops_of_wave,
+            ref mut pops,
+            ref mut currents,
+            ref mut spike_buf,
+            ref record_spikes,
+            ref record_v,
+            ref mut recorder,
+            profile,
+            ref mut lif_nanos,
+            ref mut record_nanos,
+            t,
+            ..
+        } = *self;
+
+        for (w, &(lo, hi)) in wave_bounds.iter().enumerate() {
+            // Phase A: this wave's populations produce their spikes — their
+            // input currents are complete (all inbound engines ran in
+            // earlier waves). Only the LIF branch is charged to the LIF
+            // phase timer; provider (stimulus-generation) time is the
+            // caller's, not the simulator's.
+            for &p in &pops_of_wave[w] {
+                let buf = &mut spike_buf[p];
+                if let Some(state) = &mut pops[p] {
+                    let t0 = profile.then(Instant::now);
+                    lif_step_chunked(
+                        &state.params,
+                        &mut state.v,
+                        &currents[p],
+                        &mut state.refrac,
+                        buf,
+                    );
+                    currents[p].fill(0.0);
+                    if let Some(t0) = t0 {
+                        *lif_nanos += t0.elapsed().as_nanos() as u64;
+                    }
+                } else {
+                    buf.clear();
+                    provider(PopulationId(p), t, buf);
+                }
             }
 
-            // 2. Feed outgoing engines with this step's spikes, accumulating
-            //    the currents their targets owe *this* step.
-            for &ei in &self.engines_of_src[p] {
-                let (_, tgt, engine) = &mut self.engines[ei];
-                let due = engine.step_currents(&self.spike_buf[p]);
-                for (a, &d) in self.currents[tgt.0].iter_mut().zip(due) {
+            let t0 = profile.then(Instant::now);
+            for &p in &pops_of_wave[w] {
+                if record_v[p] {
+                    if let Some(state) = &pops[p] {
+                        recorder.record_v_step(p, &state.v);
+                    }
+                }
+                if record_spikes[p] && !spike_buf[p].is_empty() {
+                    let rec = recorder.spikes.entry(p).or_default();
+                    rec.extend(spike_buf[p].iter().map(|&n| (t, n)));
+                }
+            }
+            if let Some(t0) = t0 {
+                *record_nanos += t0.elapsed().as_nanos() as u64;
+            }
+
+            // Phase B: engines sourced in this wave accumulate the currents
+            // their (strictly deeper) targets owe.
+            for slot in &mut engines[lo..hi] {
+                let due = slot.engine.step_currents(&spike_buf[slot.src.0]);
+                for (a, &d) in currents[slot.tgt.0].iter_mut().zip(due) {
                     *a += d;
                 }
             }
@@ -301,10 +589,226 @@ impl NetworkSim {
         self.t += 1;
     }
 
-    /// Run `steps` timesteps.
+    /// Run `steps` timesteps single-threaded.
     pub fn run(&mut self, steps: u64, provider: &mut SpikeProvider) {
+        self.reserve_recording(steps);
         for _ in 0..steps {
             self.step(provider);
+        }
+    }
+
+    /// Widest wave (engines): the intra-sample parallelism available.
+    pub fn max_wave_width(&self) -> usize {
+        self.wave_bounds.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0)
+    }
+
+    /// Run `steps` timesteps with intra-sample layer parallelism: engines
+    /// of one topological wave step concurrently on `jobs` scoped worker
+    /// threads (0 = one per CPU; ≤1 or a chain-shaped network falls back to
+    /// [`NetworkSim::run`], as does the whole `pjrt` build configuration —
+    /// its `Rc`-based backends are single-threaded by construction).
+    ///
+    /// Determinism: workers only advance engines they exclusively own and
+    /// write each engine's currents into a per-engine staging buffer; the
+    /// coordinator runs LIF/providers/recording sequentially and reduces
+    /// staged outputs in fixed engine order. Worker scheduling therefore
+    /// never reaches the results — recorders are bit-identical at any jobs
+    /// count (and to a sequential run), which composes with
+    /// [`super::batch::BatchRunner`]'s cross-sample fan-out.
+    pub fn run_jobs(&mut self, steps: u64, provider: &mut SpikeProvider, jobs: usize) {
+        let jobs = if jobs == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            jobs
+        };
+        let jobs = jobs.min(self.max_wave_width());
+        if jobs <= 1 || steps == 0 {
+            self.run(steps, provider);
+            return;
+        }
+        self.run_waves_parallel(steps, provider, jobs);
+    }
+
+    /// `pjrt` builds hold non-`Send` backends, so engines cannot cross into
+    /// worker threads — step sequentially instead.
+    #[cfg(feature = "pjrt")]
+    fn run_waves_parallel(&mut self, steps: u64, provider: &mut SpikeProvider, _jobs: usize) {
+        self.run(steps, provider);
+    }
+
+    /// The barrier-synchronized fork-join body behind [`NetworkSim::run_jobs`]
+    /// (`jobs ≥ 2`, some wave has ≥2 engines).
+    #[cfg(not(feature = "pjrt"))]
+    fn run_waves_parallel(&mut self, steps: u64, provider: &mut SpikeProvider, jobs: usize) {
+        self.reserve_recording(steps);
+
+        // Per-engine staging buffers (sized to each target population) and
+        // the spike buffers re-homed into reader-writer cells for the
+        // scope's duration: the coordinator writes them in Phase A, workers
+        // read them in Phase B — the barrier schedule keeps the two phases
+        // disjoint, the locks make that sharing safe Rust.
+        let staged: Vec<Mutex<Vec<f32>>> = self
+            .engines
+            .iter()
+            .map(|s| Mutex::new(vec![0.0f32; self.currents[s.tgt.0].len()]))
+            .collect();
+        let engine_tgts: Vec<usize> = self.engines.iter().map(|s| s.tgt.0).collect();
+        let spike_cells: Vec<RwLock<Vec<u32>>> = self
+            .spike_buf
+            .iter_mut()
+            .map(|b| RwLock::new(std::mem::take(b)))
+            .collect();
+
+        let NetworkSim {
+            ref mut engines,
+            ref wave_bounds,
+            ref pops_of_wave,
+            ref mut pops,
+            ref mut currents,
+            ref record_spikes,
+            ref record_v,
+            ref mut recorder,
+            profile,
+            ref mut lif_nanos,
+            ref mut record_nanos,
+            ref mut t,
+            ..
+        } = *self;
+
+        // Partition every wave's engine range into `jobs` chunks; worker k
+        // owns chunk k of every wave (possibly empty), so all parties run
+        // the same barrier schedule: steps × waves × 2 waits each.
+        let mut per_worker: Vec<Vec<(usize, &mut [EngineSlot])>> = Vec::new();
+        per_worker.resize_with(jobs, Vec::new);
+        {
+            let mut rest: &mut [EngineSlot] = engines;
+            let mut consumed = 0usize;
+            for &(lo, hi) in wave_bounds {
+                debug_assert_eq!(consumed, lo);
+                for (k, &sz) in balanced_split(hi - lo, jobs).iter().enumerate() {
+                    let tmp = std::mem::take(&mut rest);
+                    let (chunk, r) = tmp.split_at_mut(sz);
+                    per_worker[k].push((consumed, chunk));
+                    consumed += sz;
+                    rest = r;
+                }
+            }
+        }
+
+        // Panic containment: a panicking provider or engine must not strand
+        // the other parties on a barrier they will never all reach. Every
+        // work region is wrapped in `catch_unwind`; the first payload is
+        // stashed, `abort` silences all later regions, every party still
+        // runs its complete barrier schedule, and the panic resumes on the
+        // caller thread after the scope joins (the sim's dynamic state is
+        // then unspecified — `reset()` or drop it).
+        let abort = AtomicBool::new(false);
+        let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let trap = |r: std::thread::Result<()>| {
+            if let Err(payload) = r {
+                abort.store(true, Ordering::SeqCst);
+                panic_payload.lock().unwrap().get_or_insert(payload);
+            }
+        };
+
+        let barrier = Barrier::new(jobs + 1);
+        std::thread::scope(|scope| {
+            for chunks in per_worker {
+                let barrier = &barrier;
+                let staged = &staged;
+                let spike_cells = &spike_cells;
+                let abort = &abort;
+                let trap = &trap;
+                scope.spawn(move || {
+                    let mut chunks = chunks;
+                    for _ in 0..steps {
+                        for (base, chunk) in chunks.iter_mut() {
+                            barrier.wait();
+                            if !abort.load(Ordering::SeqCst) {
+                                trap(catch_unwind(AssertUnwindSafe(|| {
+                                    for (off, slot) in chunk.iter_mut().enumerate() {
+                                        let spikes = spike_cells[slot.src.0].read().unwrap();
+                                        let due = slot.engine.step_currents(&spikes);
+                                        staged[*base + off].lock().unwrap().copy_from_slice(due);
+                                    }
+                                })));
+                            }
+                            barrier.wait();
+                        }
+                    }
+                });
+            }
+
+            // Coordinator (this thread): sequential LIF + recording, then
+            // the deterministic reduce of each wave's staged outputs.
+            for _ in 0..steps {
+                for (w, &(lo, hi)) in wave_bounds.iter().enumerate() {
+                    if !abort.load(Ordering::SeqCst) {
+                        trap(catch_unwind(AssertUnwindSafe(|| {
+                            for &p in &pops_of_wave[w] {
+                                let mut buf = spike_cells[p].write().unwrap();
+                                if let Some(state) = &mut pops[p] {
+                                    let t0 = profile.then(Instant::now);
+                                    lif_step_chunked(
+                                        &state.params,
+                                        &mut state.v,
+                                        &currents[p],
+                                        &mut state.refrac,
+                                        &mut buf,
+                                    );
+                                    currents[p].fill(0.0);
+                                    if let Some(t0) = t0 {
+                                        *lif_nanos += t0.elapsed().as_nanos() as u64;
+                                    }
+                                } else {
+                                    buf.clear();
+                                    provider(PopulationId(p), *t, &mut buf);
+                                }
+                            }
+
+                            let t0 = profile.then(Instant::now);
+                            for &p in &pops_of_wave[w] {
+                                if record_v[p] {
+                                    if let Some(state) = &pops[p] {
+                                        recorder.record_v_step(p, &state.v);
+                                    }
+                                }
+                                let buf = spike_cells[p].read().unwrap();
+                                if record_spikes[p] && !buf.is_empty() {
+                                    let rec = recorder.spikes.entry(p).or_default();
+                                    rec.extend(buf.iter().map(|&n| (*t, n)));
+                                }
+                            }
+                            if let Some(t0) = t0 {
+                                *record_nanos += t0.elapsed().as_nanos() as u64;
+                            }
+                        })));
+                    }
+
+                    barrier.wait(); // release workers onto wave w's engines
+                    barrier.wait(); // wave w's engine outputs are staged
+                    if !abort.load(Ordering::SeqCst) {
+                        for ei in lo..hi {
+                            let due = staged[ei].lock().unwrap();
+                            let tgt = currents[engine_tgts[ei]].iter_mut();
+                            for (a, &d) in tgt.zip(due.iter()) {
+                                *a += d;
+                            }
+                        }
+                    }
+                }
+                *t += 1;
+            }
+        });
+
+        // Re-home the spike buffers for subsequent sequential stepping. A
+        // contained panic may have poisoned a cell (writer unwound mid-hold)
+        // — take the data anyway; the original payload resumes below.
+        for (b, cell) in self.spike_buf.iter_mut().zip(spike_cells) {
+            *b = cell.into_inner().unwrap_or_else(|e| e.into_inner());
+        }
+        if let Some(payload) = panic_payload.lock().unwrap().take() {
+            resume_unwind(payload);
         }
     }
 }
@@ -314,7 +818,7 @@ mod tests {
     use super::*;
     use crate::hardware::PeSpec;
     use crate::model::connector::{Connector, SynapseDraw};
-    use crate::model::NetworkBuilder;
+    use crate::model::{NetworkBuilder, SynapseType};
     use crate::prop::Prop;
     use crate::rng::Rng;
     use crate::switching::{SwitchMode, SwitchingSystem};
@@ -338,6 +842,7 @@ mod tests {
     }
 
     /// A 3-layer feed-forward net exercising two stacked projections.
+    #[allow(clippy::too_many_arguments)]
     fn three_layer_net(
         seed: u64,
         n_in: usize,
@@ -377,20 +882,88 @@ mod tests {
         b.build()
     }
 
+    /// A *wide* 3-layer net: input → k parallel hidden populations → out,
+    /// with LIF dynamics exercising refractory periods and bias currents.
+    /// Inhibitory-dominant when `inhibitory` is set: every excitatory
+    /// pathway gains a stronger inhibitory sibling projection.
+    fn wide_net(seed: u64, k: usize, inhibitory: bool, t_refrac: u32, i_offset: f32) -> Network {
+        let mut b = NetworkBuilder::new(seed);
+        let inp = b.spike_source("in", 60);
+        let params = LifParams {
+            alpha: 0.85,
+            v_th: 1.0,
+            t_refrac,
+            i_offset,
+            ..Default::default()
+        };
+        let hidden: Vec<_> =
+            (0..k).map(|i| b.lif_population(&format!("hid{i}"), 30, params)).collect();
+        let out = b.lif_population("out", 10, params);
+        for &h in &hidden {
+            b.project(
+                inp,
+                h,
+                Connector::FixedProbability(0.5),
+                SynapseDraw { delay_range: 3, w_max: 100, ..Default::default() },
+                0.03,
+            );
+            if inhibitory {
+                b.project(
+                    inp,
+                    h,
+                    Connector::FixedProbability(0.5),
+                    SynapseDraw {
+                        delay_range: 2,
+                        w_max: 120,
+                        syn_type: SynapseType::Inhibitory,
+                        ..Default::default()
+                    },
+                    0.03,
+                );
+            }
+            b.project(
+                h,
+                out,
+                Connector::FixedProbability(0.8),
+                SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+                0.04,
+            );
+        }
+        b.build()
+    }
+
     fn run_with(net: &Network, mode: SwitchMode, steps: u64, stim_seed: u64) -> Vec<(u64, u32)> {
         run_recording(net, mode, steps, stim_seed).spikes_of(PopulationId(1)).to_vec()
     }
 
+    fn provider_with(
+        n_in: usize,
+        rate: f64,
+        stim_seed: u64,
+    ) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+        let mut rng = Rng::new(stim_seed);
+        move |_pop: PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..n_in as u32).filter(|_| rng.chance(rate)));
+        }
+    }
+
     fn run_recording(net: &Network, mode: SwitchMode, steps: u64, stim_seed: u64) -> Recorder {
+        run_recording_jobs(net, mode, steps, stim_seed, 1)
+    }
+
+    fn run_recording_jobs(
+        net: &Network,
+        mode: SwitchMode,
+        steps: u64,
+        stim_seed: u64,
+        jobs: usize,
+    ) -> Recorder {
         let mut sys = SwitchingSystem::new(mode, PeSpec::default());
         let (layers, _) = sys.compile_network(net).unwrap();
         let mut sim = NetworkSim::native(net, layers).unwrap();
         let n_in = net.populations[0].n_neurons;
-        let mut rng = Rng::new(stim_seed);
-        let mut provider = move |_pop: PopulationId, _t: u64| -> Vec<u32> {
-            (0..n_in as u32).filter(|_| rng.chance(0.2)).collect()
-        };
-        sim.run(steps, &mut provider);
+        let mut provider = provider_with(n_in, 0.2, stim_seed);
+        sim.run_jobs(steps, &mut provider, jobs);
         sim.recorder
     }
 
@@ -464,6 +1037,79 @@ mod tests {
     }
 
     #[test]
+    fn equivalence_property_with_refractory_offset_and_inhibition() {
+        // Sparsity gating and wave parallelism must not skip state they owe:
+        // refractory periods, bias currents, and inhibitory-dominant
+        // pathways all produce identical recorders across paradigms *and*
+        // across jobs counts.
+        Prop::new("gated engines ≡ reference under rich dynamics", 6).check(
+            |g| {
+                (
+                    g.i64(1, 1 << 20) as u64,
+                    g.usize(1, 3),
+                    g.bool(0.5),
+                    g.usize(0, 3) as u32,
+                    g.f64(0.0, 0.25) as f32,
+                    g.i64(1, 1 << 20) as u64,
+                )
+            },
+            |&(seed, k, inhibitory, t_refrac, i_offset, stim)| {
+                let net = wide_net(seed, k, inhibitory, t_refrac, i_offset);
+                let s = run_recording(&net, SwitchMode::ForceSerial, 40, stim);
+                let p = run_recording(&net, SwitchMode::ForceParallel, 40, stim);
+                let i = run_recording(&net, SwitchMode::Ideal, 40, stim);
+                let s4 = run_recording_jobs(&net, SwitchMode::ForceSerial, 40, stim, 4);
+                let p4 = run_recording_jobs(&net, SwitchMode::ForceParallel, 40, stim, 4);
+                s == p && s == i && s == s4 && p == p4
+            },
+        );
+    }
+
+    #[test]
+    fn wave_parallel_run_is_jobs_invariant() {
+        // Wide network (parallel branches in each wave): every jobs count
+        // must produce the sequential recorder bit for bit.
+        let net = wide_net(91, 4, true, 2, 0.1);
+        let base = run_recording_jobs(&net, SwitchMode::Ideal, 60, 17, 1);
+        assert!(base.total_spikes() > 0, "stimulated wide net must fire");
+        for jobs in [2, 3, 4, 8] {
+            let r = run_recording_jobs(&net, SwitchMode::Ideal, 60, 17, jobs);
+            assert_eq!(base, r, "jobs={jobs} must be bit-identical");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "stimulus boom")]
+    fn panicking_provider_propagates_instead_of_deadlocking() {
+        // A panic inside the coordinator's provider must resume on the
+        // caller, not strand workers on the barrier.
+        let net = wide_net(12, 3, false, 0, 0.0);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let mut provider = |_p: PopulationId, t: u64, out: &mut Vec<u32>| {
+            assert!(t < 3, "stimulus boom");
+            out.extend([0u32, 1, 2]);
+        };
+        sim.run_jobs(10, &mut provider, 4);
+    }
+
+    #[test]
+    fn run_jobs_falls_back_on_chain_networks_and_resumes_sequentially() {
+        // A chain has wave width 1 → run_jobs must silently run inline and
+        // leave the sim usable for further sequential stepping.
+        let net = three_layer_net(21, 40, 30, 10, 0.5, 0.8, 3, 2);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        assert_eq!(sim.max_wave_width(), 1);
+        let mut provider = provider_with(40, 0.25, 5);
+        sim.run_jobs(30, &mut provider, 8);
+        sim.run(10, &mut provider);
+        assert_eq!(sim.timestep(), 40);
+    }
+
+    #[test]
     fn three_layer_feedforward_runs() {
         let mut b = NetworkBuilder::new(3);
         let inp = b.spike_source("in", 40);
@@ -487,9 +1133,7 @@ mod tests {
         let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
         let (layers, _) = sys.compile_network(&net).unwrap();
         let mut sim = NetworkSim::native(&net, layers).unwrap();
-        let mut rng = Rng::new(5);
-        let mut provider =
-            move |_p: PopulationId, _t: u64| (0..40u32).filter(|_| rng.chance(0.3)).collect();
+        let mut provider = provider_with(40, 0.3, 5);
         sim.run(60, &mut provider);
         assert!(sim.recorder.spike_count(PopulationId(1)) > 0);
         assert!(sim.recorder.spike_count(PopulationId(2)) > 0, "activity must propagate");
@@ -502,10 +1146,7 @@ mod tests {
         let (layers, _) = sys.compile_network(&net).unwrap();
         let mut sim = NetworkSim::native(&net, layers).unwrap();
         let run_once = |sim: &mut NetworkSim| -> Recorder {
-            let mut rng = Rng::new(77);
-            let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
-                (0..50u32).filter(|_| rng.chance(0.25)).collect()
-            };
+            let mut provider = provider_with(50, 0.25, 77);
             sim.run(50, &mut provider);
             std::mem::take(&mut sim.recorder)
         };
@@ -539,13 +1180,20 @@ mod tests {
             5,
             LifParams { t_refrac: 3, alpha: 1.0, ..Default::default() },
         );
-        b.project(inp, hid, Connector::AllToAll, SynapseDraw { delay_range: 1, w_max: 127, ..Default::default() }, 1.0);
+        b.project(
+            inp,
+            hid,
+            Connector::AllToAll,
+            SynapseDraw { delay_range: 1, w_max: 127, ..Default::default() },
+            1.0,
+        );
         let net = b.build();
         let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
         let (layers, _) = sys.compile_network(&net).unwrap();
         let mut sim = NetworkSim::native(&net, layers).unwrap();
         // Constant max stimulation.
-        let mut provider = move |_p: PopulationId, _t: u64| (0..10u32).collect::<Vec<_>>();
+        let mut provider =
+            |_p: PopulationId, _t: u64, out: &mut Vec<u32>| out.extend(0..10u32);
         sim.run(40, &mut provider);
         let per_neuron = sim.recorder.spike_count(PopulationId(1)) as f64 / 5.0;
         // refrac 3 → at most one spike per 4 steps (≈10 in 40 steps).
@@ -559,12 +1207,74 @@ mod tests {
         let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
         let (layers, _) = sys.compile_network(&net).unwrap();
         let mut sim = NetworkSim::native(&net, layers).unwrap();
-        let mut rng = Rng::new(3);
-        let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
-            (0..40u32).filter(|_| rng.chance(0.3)).collect()
-        };
+        let mut provider = provider_with(40, 0.3, 3);
         sim.run(30, &mut provider);
         assert!(sim.total_events() > 0, "serial layer must process events");
         assert_eq!(sim.total_macs(), 0, "no parallel layers here");
+    }
+
+    #[test]
+    fn layer_activity_reports_observed_rates_in_projection_order() {
+        let net = three_layer_net(33, 50, 30, 10, 0.5, 0.8, 3, 2);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let rate = 0.25;
+        let mut provider = provider_with(50, rate, 123);
+        sim.run(80, &mut provider);
+        let acts = sim.layer_activity();
+        assert_eq!(acts.len(), 2);
+        assert_eq!(acts[0].proj, 0);
+        assert_eq!(acts[1].proj, 1);
+        assert_eq!(acts[0].source, PopulationId(0));
+        assert_eq!(acts[1].source, PopulationId(1));
+        assert_eq!(acts[0].steps, 80);
+        // Layer 0 sees the Bernoulli(rate) stimulus — the observed rate must
+        // sit near it; layer 1 sees the (lower) hidden-layer rate.
+        let r0 = acts[0].firing_rate();
+        assert!((r0 - rate).abs() < 0.05, "observed input rate {r0} vs stimulus {rate}");
+        assert!(acts[1].firing_rate() >= 0.0);
+        assert!(acts[0].spikes_in > 0);
+    }
+
+    #[test]
+    fn voltage_recording_is_flat_and_complete() {
+        let mut b = NetworkBuilder::new(10);
+        let inp = b.spike_source("in", 20);
+        let hid = b.lif_population("hid", 7, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        let mut net = b.build();
+        net.populations[1].record_v = true;
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let mut provider = provider_with(20, 0.3, 9);
+        sim.run(25, &mut provider);
+        let trace = sim.recorder.v_of(PopulationId(1)).expect("voltage recorded");
+        assert_eq!(trace.n_neurons, 7);
+        assert_eq!(trace.n_steps(), 25);
+        assert_eq!(trace.data.len(), 25 * 7);
+        assert_eq!(trace.step(24).len(), 7);
+    }
+
+    #[test]
+    fn profiled_run_attributes_time_to_phases() {
+        let net = two_layer_net(12, 60, 40, 0.5, 4);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        assert_eq!(sim.phase_profile(), PhaseProfile::default(), "off by default");
+        sim.set_profile(true);
+        let mut provider = provider_with(60, 0.3, 2);
+        sim.run(40, &mut provider);
+        let prof = sim.phase_profile();
+        assert!(prof.lif_nanos > 0, "LIF time must be attributed");
+        assert!(prof.total_nanos() > 0);
     }
 }

@@ -16,8 +16,9 @@
 //! skip individual subordinates — `macs` counts only the work the backend
 //! actually issued, so MACs/s telemetry is honest.
 
-use super::backend::MacBackend;
+use super::backend::BackendBox;
 use crate::paradigm::parallel::ParallelCompiled;
+use std::time::Instant;
 
 /// Executes one parallel-compiled layer.
 pub struct ParallelLayerEngine {
@@ -33,15 +34,28 @@ pub struct ParallelLayerEngine {
     currents: Vec<f32>,
     /// Persistent subordinate-output scratch (sized to the widest chunk).
     out_scratch: Vec<f32>,
-    backend: Box<dyn MacBackend>,
+    backend: BackendBox,
     t: u64,
     /// MAC multiply-accumulate operations actually issued by the backend
     /// (telemetry; cumulative — survives [`ParallelLayerEngine::reset`]).
     pub macs: u64,
+    /// Incoming spikes seen (cumulative; with [`ParallelLayerEngine::steps`]
+    /// this is the observed-firing-rate telemetry the runtime-informed cost
+    /// model consumes).
+    pub spikes_in: u64,
+    /// Timesteps executed (cumulative — survives reset, like `macs`).
+    pub steps: u64,
+    /// Phase-1 (MAC consume + reduce) wall-clock, accumulated only while
+    /// profiling.
+    pub readout_nanos: u64,
+    /// Phase-2 (spike preprocessing) wall-clock, accumulated only while
+    /// profiling.
+    pub dispatch_nanos: u64,
+    profile: bool,
 }
 
 impl ParallelLayerEngine {
-    pub fn new(compiled: ParallelCompiled, backend: Box<dyn MacBackend>) -> Self {
+    pub fn new(compiled: ParallelCompiled, backend: BackendBox) -> Self {
         let d = compiled.wdm.delay_range as usize;
         let rows = compiled.wdm.n_rows();
         let chunk_weights: Vec<Vec<f32>> = compiled
@@ -62,11 +76,23 @@ impl ParallelLayerEngine {
             backend,
             t: 0,
             macs: 0,
+            spikes_in: 0,
+            steps: 0,
+            readout_nanos: 0,
+            dispatch_nanos: 0,
+            profile: false,
         }
     }
 
     pub fn timestep(&self) -> u64 {
         self.t
+    }
+
+    /// Enable per-phase wall-clock accumulation (`readout_nanos` /
+    /// `dispatch_nanos`); off by default so the hot path carries no timer
+    /// syscalls.
+    pub fn set_profile(&mut self, on: bool) {
+        self.profile = on;
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -99,13 +125,18 @@ impl ParallelLayerEngine {
             ref mut out_scratch,
             ref mut backend,
             ref mut macs,
+            ref mut readout_nanos,
+            ref mut dispatch_nanos,
+            profile,
             t,
+            ..
         } = *self;
         let d = compiled.wdm.delay_range as usize;
         let t = t as usize;
         let slot = t % d;
         let scale = compiled.weight_scale;
         currents.fill(0.0);
+        let t0 = profile.then(Instant::now);
 
         // Phase 1: subordinate MAC matmuls over the due stacked slot.
         // A slot nothing wrote into since its last clear is identically
@@ -132,8 +163,12 @@ impl ParallelLayerEngine {
             ring[slot].fill(0.0);
             slot_writes[slot] = 0;
         }
+        if let Some(t0) = t0 {
+            *readout_nanos += t0.elapsed().as_nanos() as u64;
+        }
 
         // Phase 2: dominant-PE spike preprocessing into future slots.
+        let t0 = profile.then(Instant::now);
         for &src in spikes_in {
             for e in compiled.tables.entries_of(src) {
                 let write_slot = (t + e.delay as usize) % d;
@@ -141,7 +176,12 @@ impl ParallelLayerEngine {
                 slot_writes[write_slot] += 1;
             }
         }
+        if let Some(t0) = t0 {
+            *dispatch_nanos += t0.elapsed().as_nanos() as u64;
+        }
 
+        self.spikes_in += spikes_in.len() as u64;
+        self.steps += 1;
         self.t += 1;
         &self.currents
     }

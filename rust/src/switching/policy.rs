@@ -77,6 +77,23 @@ impl SwitchPolicy {
         Self::cheaper(serial.total_pes(), parallel.total_pes())
     }
 
+    /// The runtime-informed comparison: storage (PE count) stays primary,
+    /// but a storage *tie* is broken by per-timestep work at the observed
+    /// firing rate ([`crate::costmodel::activity`]) instead of defaulting
+    /// to serial — the telemetry loop from
+    /// [`crate::sim::LayerActivity::firing_rate`] back into the decision.
+    pub fn decide_with_rate(
+        serial: &CostEstimate,
+        parallel: &CostEstimate,
+        ch: &LayerCharacter,
+        rate: f64,
+    ) -> Paradigm {
+        if serial.total_pes() != parallel.total_pes() {
+            return Self::decide(serial, parallel);
+        }
+        crate::costmodel::activity::runtime_preferred(ch, rate)
+    }
+
     /// Predict the paradigm for a layer character *without compiling*.
     /// `Ok(None)` means the mode has no pre-compile judgment (Ideal compiles
     /// both paradigms and decides afterwards);
@@ -133,6 +150,34 @@ mod tests {
         };
         // 4 < 3 + 2: hosting flips the decision to parallel.
         assert_eq!(SwitchPolicy::decide(&serial, &parallel), Paradigm::Parallel);
+    }
+
+    #[test]
+    fn rate_breaks_storage_ties_but_never_overrides_storage() {
+        let est = |paradigm, pes| CostEstimate {
+            paradigm,
+            layer_pes: pes,
+            source_hosting_pes: 0,
+            dtcm_bytes: 0,
+            source_hosting_dtcm: 0,
+        };
+        let dense = LayerCharacter::new(255, 255, 1.0, 1);
+        // Storage differs → rate is irrelevant.
+        assert_eq!(
+            SwitchPolicy::decide_with_rate(
+                &est(Paradigm::Serial, 2),
+                &est(Paradigm::Parallel, 5),
+                &dense,
+                0.9,
+            ),
+            Paradigm::Serial
+        );
+        // Storage tie → the observed rate decides: dense+busy favors the
+        // MAC array, near-silence favors event-driven serial.
+        let s = est(Paradigm::Serial, 3);
+        let p = est(Paradigm::Parallel, 3);
+        assert_eq!(SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.5), Paradigm::Parallel);
+        assert_eq!(SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.001), Paradigm::Serial);
     }
 
     #[test]

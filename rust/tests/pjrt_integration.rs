@@ -107,8 +107,8 @@ fn full_network_identical_under_pjrt_and_native() {
             NetworkSim::native(&net, layers).unwrap()
         };
         let mut rng = Rng::new(77);
-        let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
-            (0..60u32).filter(|_| rng.chance(0.25)).collect()
+        let mut provider = move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..60u32).filter(|_| rng.chance(0.25)));
         };
         sim.run(50, &mut provider);
         sim.recorder.spikes_of(PopulationId(1)).to_vec()

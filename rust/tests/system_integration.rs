@@ -150,8 +150,8 @@ fn compiled_network_simulates_under_all_modes() {
         let (layers, _) = sys.compile_network(&net).unwrap();
         let mut sim = NetworkSim::native(&net, layers).unwrap();
         let mut rng = Rng::new(31);
-        let mut provider = move |_p: PopulationId, _t: u64| -> Vec<u32> {
-            (0..80u32).filter(|_| rng.chance(0.2)).collect()
+        let mut provider = move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..80u32).filter(|_| rng.chance(0.2)));
         };
         sim.run(60, &mut provider);
         results.push(sim.recorder.spikes_of(PopulationId(2)).to_vec());

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Validate a regenerated BENCH_*.json baseline.
+
+The committed baselines are schema placeholders whose measured fields are
+null (the authoring environment has no Rust toolchain); the *-baseline CI
+jobs regenerate them by running the bench binaries. Before this check, a
+bench that silently failed to measure (or a schema drift that left the
+placeholder untouched) would upload a null-filled artifact that passes CI.
+
+Usage:
+    check_bench_json.py FILE REQUIRED_KEY [REQUIRED_KEY ...]
+
+Fails (exit 1) if:
+  * FILE is missing or not valid JSON;
+  * any REQUIRED_KEY is absent at the top level;
+  * any value anywhere in the document is null;
+  * the placeholder marker key "status" is still present (the bench binary
+    never writes it, so its survival means the file was not regenerated).
+"""
+
+import json
+import sys
+
+
+def find_nulls(node, path="$"):
+    """Yield JSON paths of every null value under node."""
+    if node is None:
+        yield path
+    elif isinstance(node, dict):
+        for key, value in node.items():
+            yield from find_nulls(value, f"{path}.{key}")
+    elif isinstance(node, list):
+        for i, value in enumerate(node):
+            yield from find_nulls(value, f"{path}[{i}]")
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(f"usage: {argv[0]} FILE REQUIRED_KEY [REQUIRED_KEY ...]", file=sys.stderr)
+        return 2
+    path, required = argv[1], argv[2:]
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"FAIL {path}: unreadable or invalid JSON: {exc}", file=sys.stderr)
+        return 1
+
+    errors = []
+    if "status" in doc:
+        errors.append(
+            "placeholder marker 'status' still present — the bench did not regenerate this file"
+        )
+    for key in required:
+        if key not in doc:
+            errors.append(f"required key '{key}' missing")
+    errors.extend(f"null value at {p}" for p in find_nulls(doc))
+
+    if errors:
+        print(f"FAIL {path}:", file=sys.stderr)
+        for err in errors:
+            print(f"  - {err}", file=sys.stderr)
+        return 1
+    print(f"OK {path}: keys {required} present, no null fields")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
