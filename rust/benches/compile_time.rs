@@ -12,8 +12,12 @@
 //! (wasted) compilation results. Part 2 compiles the 640-layer medium
 //! sweep grid as one network through `SwitchingSystem::compile_network`
 //! sequentially (`--jobs 1`) and fanned out over all CPUs, asserting
-//! layer-for-layer identical results, and writes the machine-readable
-//! baseline to `BENCH_compile.json` (override with `S2SWITCH_BENCH_OUT`).
+//! layer-for-layer identical results. Part 3 measures the persistent
+//! artifact store (compile-once, serve-many): cold-compiling the same
+//! 640-layer grid into an empty store vs booting it entirely from
+//! artifacts (zero materializing compiles), reporting the achieved
+//! speedup. The machine-readable baseline goes to `BENCH_compile.json`
+//! (override with `S2SWITCH_BENCH_OUT`).
 //!
 //! ```bash
 //! cargo bench --bench compile_time
@@ -160,10 +164,63 @@ fn main() {
         if speedup > 1.0 && identical { "scaling reproduced ✓" } else { "NOT reproduced ✗" }
     );
 
+    // ---- Part 3: persistent artifact store (compile-once, serve-many) --
+    let store_dir =
+        std::env::temp_dir().join(format!("s2a-bench-{}", std::process::id()));
+    std::fs::remove_dir_all(&store_dir).ok();
+    println!(
+        "\ncold-compiling the {}-layer grid into an empty artifact store…",
+        run_seq.layers.len()
+    );
+    let mut cold = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    cold.set_jobs(n_jobs);
+    cold.set_artifact_dir(&store_dir).unwrap();
+    let t0 = Instant::now();
+    let run_cold = cold.compile_network_report(&net).unwrap();
+    let t_cold = t0.elapsed();
+
+    let mut warm = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    warm.set_jobs(n_jobs);
+    warm.set_artifact_dir(&store_dir).unwrap();
+    let t0 = Instant::now();
+    let run_warm = warm.compile_network_report(&net).unwrap();
+    let t_warm = t0.elapsed();
+    std::fs::remove_dir_all(&store_dir).ok();
+
+    let zero_compiles = warm.stats.total_compiles() == 0;
+    let lossless = run_cold.layers == run_warm.layers;
+    let artifact_speedup = t_cold.as_secs_f64() / t_warm.as_secs_f64();
+    let mut rep = Report::new(
+        "Artifact store — cold compile vs warm artifact load, 640-layer grid",
+        &["tier", "wall-clock", "paradigm compiles", "disk hits"],
+    );
+    rep.row(vec![
+        "cold (compile + save)".into(),
+        human_ns(t_cold.as_nanos() as f64),
+        cold.stats.total_compiles().to_string(),
+        cold.stats.disk_hits.to_string(),
+    ]);
+    rep.row(vec![
+        "warm (artifact load)".into(),
+        human_ns(t_warm.as_nanos() as f64),
+        warm.stats.total_compiles().to_string(),
+        warm.stats.disk_hits.to_string(),
+    ]);
+    rep.finish();
+    println!(
+        "artifact boot: {artifact_speedup:.2}× vs cold compile, zero compiles: \
+         {zero_compiles}, lossless: {lossless} → {}",
+        if artifact_speedup > 1.0 && zero_compiles && lossless {
+            "compile-once serve-many reproduced ✓"
+        } else {
+            "NOT reproduced ✗"
+        }
+    );
+
     // ---- Machine-readable baseline -------------------------------------
     let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_compile.json".into());
     let json = format!(
-        "{{\n  \"bench\": \"compile_time\",\n  \"probe_layers\": {},\n  \"policy_wall_ns\": {{\n    \"serial_only\": {},\n    \"parallel_only\": {},\n    \"ideal\": {},\n    \"classifier\": {}\n  }},\n  \"classifier_speedup_vs_ideal\": {:.4},\n  \"pipeline\": {{\n    \"grid_layers\": {},\n    \"jobs\": {},\n    \"sequential_ns\": {},\n    \"parallel_ns\": {},\n    \"speedup\": {:.4},\n    \"deterministic\": {},\n    \"paradigm_compiles\": {},\n    \"cache_hits\": {}\n  }}\n}}\n",
+        "{{\n  \"bench\": \"compile_time\",\n  \"probe_layers\": {},\n  \"policy_wall_ns\": {{\n    \"serial_only\": {},\n    \"parallel_only\": {},\n    \"ideal\": {},\n    \"classifier\": {}\n  }},\n  \"classifier_speedup_vs_ideal\": {:.4},\n  \"pipeline\": {{\n    \"grid_layers\": {},\n    \"jobs\": {},\n    \"sequential_ns\": {},\n    \"parallel_ns\": {},\n    \"speedup\": {:.4},\n    \"deterministic\": {},\n    \"paradigm_compiles\": {},\n    \"cache_hits\": {}\n  }},\n  \"artifact\": {{\n    \"grid_layers\": {},\n    \"cold_compile_ns\": {},\n    \"artifact_load_ns\": {},\n    \"speedup\": {:.4},\n    \"warm_paradigm_compiles\": {},\n    \"warm_disk_hits\": {},\n    \"lossless\": {}\n  }}\n}}\n",
         probes.len(),
         times["serial only"].as_nanos(),
         times["parallel only"].as_nanos(),
@@ -178,6 +235,13 @@ fn main() {
         identical,
         par.stats.total_compiles(),
         par.stats.cache_hits,
+        run_warm.layers.len(),
+        t_cold.as_nanos(),
+        t_warm.as_nanos(),
+        artifact_speedup,
+        warm.stats.total_compiles(),
+        warm.stats.disk_hits,
+        lossless,
     );
     match std::fs::write(&out, &json) {
         Ok(()) => println!("baseline written to {out}"),

@@ -1,0 +1,782 @@
+//! Hand-rolled little-endian binary codec for compiled artifacts.
+//!
+//! No serde / bincode in the offline crate set, so the wire format is
+//! explicit: every number is little-endian, every variable-length field is
+//! preceded by a `u64` element count, and enums travel as one tag byte.
+//! Because the compiled structures were flattened into contiguous buffers
+//! (flat `weights`, span-indexed tables), encoding is a linear walk and
+//! decoding is a bulk `from_le_bytes` sweep — no pointer chasing, no
+//! per-element allocation beyond the target `Vec`s themselves.
+//!
+//! Container layout (see DESIGN.md §Artifact-Format):
+//!
+//! ```text
+//! header  (24 B): magic u32 | version u32 | n_sections u32 | reserved u32
+//!                 | payload_len u64
+//! section (20 B + body): tag u32 | body_len u64 | fnv1a64(body) u64 | body
+//! ```
+//!
+//! The decoder rejects — with a typed [`ArtifactError`], never a panic —
+//! wrong magic, unsupported versions, any length that runs past the buffer
+//! (truncation), and any section whose checksum does not match its body.
+
+use super::ArtifactError;
+use crate::costmodel::parallel::DominantCost;
+use crate::costmodel::serial::SerialCost;
+use crate::graph::machine_graph::SliceRange;
+use crate::hardware::MacArraySpec;
+use crate::model::{LayerCharacter, LifParams};
+use crate::paradigm::parallel::compiler::SubordinateProgram;
+use crate::paradigm::parallel::splitting::{Chunk, SplitPlan};
+use crate::paradigm::parallel::structures::MergeEntry;
+use crate::paradigm::parallel::{DominantTables, ParallelCompiled, Wdm, WdmConfig};
+use crate::paradigm::serial::{
+    AddressEntry, AddressList, MasterPopulationTable, SerialCompiled, SerialPeProgram,
+    SynapticMatrix, SynapticWord,
+};
+use crate::paradigm::{CompiledLayer, CostEstimate, Paradigm};
+
+/// `"S2AF"` as a little-endian u32 — the first four bytes of every artifact.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"S2AF");
+/// Bump on ANY wire-format change: readers reject other versions, which
+/// demotes every existing on-disk artifact to a cache miss (recompile +
+/// overwrite) instead of a misparse.
+pub const VERSION: u32 = 1;
+
+/// Section tags.
+pub const SEC_LAYER: u32 = 1;
+pub const SEC_ESTIMATE: u32 = 2;
+pub const SEC_DECISIONS: u32 = 3;
+
+const HEADER_BYTES: usize = 24;
+const SECTION_HEADER_BYTES: usize = 20;
+
+/// FNV-1a over a byte slice — the per-section checksum.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------- encoder
+
+/// Little-endian append-only byte sink.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn bulk_u32(&mut self, vs: &[u32]) {
+        self.usize(vs.len());
+        self.buf.reserve(4 * vs.len());
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn bulk_i16(&mut self, vs: &[i16]) {
+        self.usize(vs.len());
+        self.buf.reserve(2 * vs.len());
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------- decoder
+
+/// Bounds-checked little-endian reader; every overrun is a typed
+/// [`ArtifactError::Truncated`] carrying the field being read.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], ArtifactError> {
+        let end = self.pos.checked_add(n).ok_or(ArtifactError::Truncated {
+            what,
+            need: u64::MAX,
+            have: self.buf.len() as u64,
+        })?;
+        if end > self.buf.len() {
+            return Err(ArtifactError::Truncated {
+                what,
+                need: end as u64,
+                have: self.buf.len() as u64,
+            });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, ArtifactError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, ArtifactError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, ArtifactError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, ArtifactError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self, what: &'static str) -> Result<usize, ArtifactError> {
+        Ok(self.u64(what)? as usize)
+    }
+
+    /// An element count that will drive an allocation: length-checked
+    /// against the remaining bytes so a corrupt count cannot trigger a
+    /// multi-gigabyte `Vec::with_capacity`.
+    fn count(&mut self, elem_bytes: usize, what: &'static str) -> Result<usize, ArtifactError> {
+        let n = self.usize(what)?;
+        let need = n.checked_mul(elem_bytes).unwrap_or(usize::MAX);
+        if self.pos.saturating_add(need) > self.buf.len() {
+            return Err(ArtifactError::Truncated {
+                what,
+                need: (self.pos as u64).saturating_add(need as u64),
+                have: self.buf.len() as u64,
+            });
+        }
+        Ok(n)
+    }
+
+    fn f32(&mut self, what: &'static str) -> Result<f32, ArtifactError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    fn f64(&mut self, what: &'static str) -> Result<f64, ArtifactError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn bulk_u32(&mut self, what: &'static str) -> Result<Vec<u32>, ArtifactError> {
+        let n = self.count(4, what)?;
+        let raw = self.take(4 * n, what)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn bulk_i16(&mut self, what: &'static str) -> Result<Vec<i16>, ArtifactError> {
+        let n = self.count(2, what)?;
+        let raw = self.take(2 * n, what)?;
+        Ok(raw.chunks_exact(2).map(|c| i16::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ----------------------------------------------------------- container
+
+/// Frame `sections` into a checksummed artifact byte stream.
+pub fn write_container(sections: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    let payload_len: usize =
+        sections.iter().map(|(_, b)| SECTION_HEADER_BYTES + b.len()).sum();
+    let mut e = Enc::default();
+    e.u32(MAGIC);
+    e.u32(VERSION);
+    e.u32(sections.len() as u32);
+    e.u32(0); // reserved
+    e.usize(payload_len);
+    for (tag, body) in sections {
+        e.u32(*tag);
+        e.usize(body.len());
+        e.u64(fnv1a64(body));
+        e.buf.extend_from_slice(body);
+    }
+    e.buf
+}
+
+/// Parse + validate a container: magic, version, declared payload length,
+/// per-section bounds and checksums. Returns `(tag, body)` pairs borrowing
+/// from `bytes`.
+pub fn read_container(bytes: &[u8]) -> Result<Vec<(u32, &[u8])>, ArtifactError> {
+    let mut d = Dec::new(bytes);
+    let magic = d.u32("header magic")?;
+    if magic != MAGIC {
+        return Err(ArtifactError::BadMagic { found: magic });
+    }
+    let version = d.u32("header version")?;
+    if version != VERSION {
+        return Err(ArtifactError::BadVersion { found: version, supported: VERSION });
+    }
+    let n_sections = d.u32("header section count")?;
+    let _reserved = d.u32("header reserved")?;
+    let payload_len = d.u64("header payload length")?;
+    let have = (bytes.len() - HEADER_BYTES) as u64;
+    if payload_len != have {
+        return Err(ArtifactError::Truncated {
+            what: "container payload",
+            need: HEADER_BYTES as u64 + payload_len,
+            have: bytes.len() as u64,
+        });
+    }
+    // Bound the allocation by what the payload could actually hold (each
+    // section needs at least its 20 B header): a corrupt n_sections must
+    // fail as Truncated below, not abort in the allocator.
+    let max_sections = payload_len as usize / SECTION_HEADER_BYTES;
+    if n_sections as usize > max_sections {
+        return Err(ArtifactError::Truncated {
+            what: "section headers",
+            need: n_sections as u64 * SECTION_HEADER_BYTES as u64,
+            have: payload_len,
+        });
+    }
+    let mut sections = Vec::with_capacity(n_sections as usize);
+    for _ in 0..n_sections {
+        let tag = d.u32("section tag")?;
+        let len = d.usize("section length")?;
+        let stored = d.u64("section checksum")?;
+        let body = d.take(len, "section body")?;
+        let computed = fnv1a64(body);
+        if computed != stored {
+            return Err(ArtifactError::ChecksumMismatch { section: tag, stored, computed });
+        }
+        sections.push((tag, body));
+    }
+    if !d.done() {
+        return Err(ArtifactError::Malformed {
+            what: "container",
+            detail: "trailing bytes after the last declared section".into(),
+        });
+    }
+    Ok(sections)
+}
+
+// ------------------------------------------------------- leaf structures
+
+fn put_character(e: &mut Enc, ch: &LayerCharacter) {
+    e.usize(ch.n_source);
+    e.usize(ch.n_target);
+    e.f64(ch.density);
+    e.u16(ch.delay_range);
+}
+
+fn get_character(d: &mut Dec) -> Result<LayerCharacter, ArtifactError> {
+    Ok(LayerCharacter {
+        n_source: d.usize("character n_source")?,
+        n_target: d.usize("character n_target")?,
+        density: d.f64("character density")?,
+        delay_range: d.u16("character delay_range")?,
+    })
+}
+
+fn put_params(e: &mut Enc, p: &LifParams) {
+    e.f32(p.alpha);
+    e.f32(p.v_th);
+    e.f32(p.v_rest);
+    e.u32(p.t_refrac);
+    e.f32(p.i_offset);
+    e.f32(p.v_init);
+    e.f32(p.w_exc_scale);
+    e.f32(p.w_inh_scale);
+}
+
+fn get_params(d: &mut Dec) -> Result<LifParams, ArtifactError> {
+    Ok(LifParams {
+        alpha: d.f32("lif alpha")?,
+        v_th: d.f32("lif v_th")?,
+        v_rest: d.f32("lif v_rest")?,
+        t_refrac: d.u32("lif t_refrac")?,
+        i_offset: d.f32("lif i_offset")?,
+        v_init: d.f32("lif v_init")?,
+        w_exc_scale: d.f32("lif w_exc_scale")?,
+        w_inh_scale: d.f32("lif w_inh_scale")?,
+    })
+}
+
+fn put_slice_range(e: &mut Enc, s: &SliceRange) {
+    e.u32(s.lo);
+    e.u32(s.hi);
+}
+
+fn get_slice_range(d: &mut Dec) -> Result<SliceRange, ArtifactError> {
+    Ok(SliceRange { lo: d.u32("slice lo")?, hi: d.u32("slice hi")? })
+}
+
+fn put_paradigm(e: &mut Enc, p: Paradigm) {
+    e.u8(p.label() as u8);
+}
+
+fn get_paradigm(d: &mut Dec) -> Result<Paradigm, ArtifactError> {
+    match d.u8("paradigm tag")? {
+        0 => Ok(Paradigm::Serial),
+        1 => Ok(Paradigm::Parallel),
+        t => Err(ArtifactError::Malformed {
+            what: "paradigm tag",
+            detail: format!("unknown value {t}"),
+        }),
+    }
+}
+
+// ------------------------------------------------------- serial paradigm
+
+fn put_serial_cost(e: &mut Enc, c: &SerialCost) {
+    for v in [
+        c.input_spike_buffer,
+        c.dma_buffer,
+        c.master_population_table,
+        c.address_list,
+        c.synaptic_matrix,
+        c.synaptic_input_buffer,
+        c.neuron_synapse_model,
+        c.output_recording,
+        c.stack_heap,
+        c.hw_mgmt_os,
+    ] {
+        e.usize(v);
+    }
+}
+
+fn get_serial_cost(d: &mut Dec) -> Result<SerialCost, ArtifactError> {
+    Ok(SerialCost {
+        input_spike_buffer: d.usize("serial cost")?,
+        dma_buffer: d.usize("serial cost")?,
+        master_population_table: d.usize("serial cost")?,
+        address_list: d.usize("serial cost")?,
+        synaptic_matrix: d.usize("serial cost")?,
+        synaptic_input_buffer: d.usize("serial cost")?,
+        neuron_synapse_model: d.usize("serial cost")?,
+        output_recording: d.usize("serial cost")?,
+        stack_heap: d.usize("serial cost")?,
+        hw_mgmt_os: d.usize("serial cost")?,
+    })
+}
+
+fn put_serial_pe(e: &mut Enc, pe: &SerialPeProgram) {
+    put_slice_range(e, &pe.target_slice);
+    put_slice_range(e, &pe.source_slice);
+    e.usize(pe.mpt.entries.len());
+    for &(lo, hi, base) in &pe.mpt.entries {
+        e.u32(lo);
+        e.u32(hi);
+        e.u32(base);
+    }
+    e.usize(pe.address_list.entries.len());
+    for entry in &pe.address_list.entries {
+        e.u32(entry.first_word);
+        e.u32(entry.row_length);
+    }
+    // Packed synaptic words are already a flat u32 array: bulk copy.
+    e.usize(pe.matrix.words.len());
+    e.buf.reserve(4 * pe.matrix.words.len());
+    for w in &pe.matrix.words {
+        e.buf.extend_from_slice(&w.0.to_le_bytes());
+    }
+    e.u16(pe.delay_range);
+    put_params(e, &pe.params);
+    e.f32(pe.weight_scale);
+    put_serial_cost(e, &pe.cost);
+}
+
+fn get_serial_pe(d: &mut Dec) -> Result<SerialPeProgram, ArtifactError> {
+    let target_slice = get_slice_range(d)?;
+    let source_slice = get_slice_range(d)?;
+    let n_mpt = d.count(12, "mpt entries")?;
+    let mut mpt = MasterPopulationTable::default();
+    mpt.entries.reserve_exact(n_mpt);
+    for _ in 0..n_mpt {
+        mpt.entries.push((d.u32("mpt lo")?, d.u32("mpt hi")?, d.u32("mpt base")?));
+    }
+    let n_al = d.count(8, "address list")?;
+    let mut address_list = AddressList::default();
+    address_list.entries.reserve_exact(n_al);
+    for _ in 0..n_al {
+        address_list.entries.push(AddressEntry {
+            first_word: d.u32("address first_word")?,
+            row_length: d.u32("address row_length")?,
+        });
+    }
+    let words = d.bulk_u32("synaptic matrix")?;
+    let matrix = SynapticMatrix { words: words.into_iter().map(SynapticWord).collect() };
+    Ok(SerialPeProgram {
+        target_slice,
+        source_slice,
+        mpt,
+        address_list,
+        matrix,
+        delay_range: d.u16("serial delay_range")?,
+        params: get_params(d)?,
+        weight_scale: d.f32("serial weight_scale")?,
+        cost: get_serial_cost(d)?,
+    })
+}
+
+fn put_serial(e: &mut Enc, c: &SerialCompiled) {
+    put_character(e, &c.character);
+    e.usize(c.n_target_chunks);
+    e.usize(c.n_source_vertex);
+    e.usize(c.pes.len());
+    for pe in &c.pes {
+        put_serial_pe(e, pe);
+    }
+}
+
+fn get_serial(d: &mut Dec) -> Result<SerialCompiled, ArtifactError> {
+    let character = get_character(d)?;
+    let n_target_chunks = d.usize("n_target_chunks")?;
+    let n_source_vertex = d.usize("n_source_vertex")?;
+    let n_pes = d.count(1, "serial PE count")?;
+    let mut pes = Vec::with_capacity(n_pes);
+    for _ in 0..n_pes {
+        pes.push(get_serial_pe(d)?);
+    }
+    Ok(SerialCompiled { pes, character, n_target_chunks, n_source_vertex })
+}
+
+// ----------------------------------------------------- parallel paradigm
+
+fn put_wdm_config(e: &mut Enc, c: &WdmConfig) {
+    let flags = (c.zero_row_elimination as u8)
+        | (c.zero_col_elimination as u8) << 1
+        | (c.delay_slot_merging as u8) << 2
+        | (c.quantize_8bit as u8) << 3;
+    e.u8(flags);
+    e.usize(c.mac.rows);
+    e.usize(c.mac.cols);
+    e.usize(c.mac.operand_bits);
+    e.usize(c.mac.output_bits);
+}
+
+fn get_wdm_config(d: &mut Dec) -> Result<WdmConfig, ArtifactError> {
+    let flags = d.u8("wdm flags")?;
+    Ok(WdmConfig {
+        zero_row_elimination: flags & 1 != 0,
+        zero_col_elimination: flags & 2 != 0,
+        delay_slot_merging: flags & 4 != 0,
+        quantize_8bit: flags & 8 != 0,
+        mac: MacArraySpec {
+            rows: d.usize("mac rows")?,
+            cols: d.usize("mac cols")?,
+            operand_bits: d.usize("mac operand_bits")?,
+            output_bits: d.usize("mac output_bits")?,
+        },
+    })
+}
+
+fn put_wdm(e: &mut Enc, w: &Wdm) {
+    // Row keys packed as (delay u16, source u32) pairs.
+    e.usize(w.rows.len());
+    e.buf.reserve(6 * w.rows.len());
+    for rk in &w.rows {
+        e.buf.extend_from_slice(&rk.delay.to_le_bytes());
+        e.buf.extend_from_slice(&rk.source.to_le_bytes());
+    }
+    e.bulk_u32(&w.cols);
+    e.bulk_i16(&w.weights);
+    put_wdm_config(e, &w.config);
+    e.u16(w.delay_range);
+}
+
+fn get_wdm(d: &mut Dec) -> Result<Wdm, ArtifactError> {
+    use crate::paradigm::parallel::wdm::RowKey;
+    let n_rows = d.count(6, "wdm rows")?;
+    let mut rows = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        rows.push(RowKey { delay: d.u16("row delay")?, source: d.u32("row source")? });
+    }
+    Ok(Wdm {
+        rows,
+        cols: d.bulk_u32("wdm cols")?,
+        weights: d.bulk_i16("wdm weights")?,
+        config: get_wdm_config(d)?,
+        delay_range: d.u16("wdm delay_range")?,
+    })
+}
+
+fn put_tables(e: &mut Enc, t: &DominantTables) {
+    e.usize(t.reversed_order.len());
+    e.buf.reserve(8 * t.reversed_order.len());
+    for &(lo, hi) in &t.reversed_order {
+        e.buf.extend_from_slice(&lo.to_le_bytes());
+        e.buf.extend_from_slice(&hi.to_le_bytes());
+    }
+    e.usize(t.merging.len());
+    e.buf.reserve(6 * t.merging.len());
+    for m in &t.merging {
+        e.buf.extend_from_slice(&m.delay.to_le_bytes());
+        e.buf.extend_from_slice(&m.row.to_le_bytes());
+    }
+}
+
+fn get_tables(d: &mut Dec) -> Result<DominantTables, ArtifactError> {
+    let n_ro = d.count(8, "reversed order")?;
+    let mut reversed_order = Vec::with_capacity(n_ro);
+    for _ in 0..n_ro {
+        reversed_order.push((d.u32("reversed lo")?, d.u32("reversed hi")?));
+    }
+    let n_merge = d.count(6, "merging table")?;
+    let mut merging = Vec::with_capacity(n_merge);
+    for _ in 0..n_merge {
+        merging.push(MergeEntry { delay: d.u16("merge delay")?, row: d.u32("merge row")? });
+    }
+    Ok(DominantTables { reversed_order, merging })
+}
+
+fn put_dominant_cost(e: &mut Enc, c: &DominantCost) {
+    for v in [
+        c.input_spike_buffer,
+        c.reversed_order,
+        c.input_merging_table,
+        c.stacked_input,
+        c.neuron_synapse_model,
+        c.output_recording,
+        c.stack_heap,
+        c.hw_mgmt_os,
+    ] {
+        e.usize(v);
+    }
+}
+
+fn get_dominant_cost(d: &mut Dec) -> Result<DominantCost, ArtifactError> {
+    Ok(DominantCost {
+        input_spike_buffer: d.usize("dominant cost")?,
+        reversed_order: d.usize("dominant cost")?,
+        input_merging_table: d.usize("dominant cost")?,
+        stacked_input: d.usize("dominant cost")?,
+        neuron_synapse_model: d.usize("dominant cost")?,
+        output_recording: d.usize("dominant cost")?,
+        stack_heap: d.usize("dominant cost")?,
+        hw_mgmt_os: d.usize("dominant cost")?,
+    })
+}
+
+fn put_parallel(e: &mut Enc, c: &ParallelCompiled) {
+    put_wdm(e, &c.wdm);
+    put_tables(e, &c.tables);
+    put_dominant_cost(e, &c.dominant_cost);
+    e.usize(c.subordinates.len());
+    for sub in &c.subordinates {
+        e.usize(sub.row_lo);
+        e.usize(sub.row_hi);
+        e.usize(sub.col_lo);
+        e.usize(sub.col_hi);
+        e.bulk_i16(&sub.weights);
+        e.usize(sub.dtcm_bytes);
+    }
+    e.usize(c.plan.row_parts);
+    e.usize(c.plan.col_parts);
+    e.usize(c.plan.chunks.len());
+    for ch in &c.plan.chunks {
+        e.usize(ch.row_lo);
+        e.usize(ch.row_hi);
+        e.usize(ch.col_lo);
+        e.usize(ch.col_hi);
+        e.usize(ch.dtcm_bytes);
+    }
+    put_character(e, &c.character);
+    put_params(e, &c.params);
+    e.f32(c.weight_scale);
+    e.usize(c.n_source);
+    e.usize(c.n_target);
+    e.usize(c.n_source_vertex);
+}
+
+fn get_parallel(d: &mut Dec) -> Result<ParallelCompiled, ArtifactError> {
+    let wdm = get_wdm(d)?;
+    let tables = get_tables(d)?;
+    let dominant_cost = get_dominant_cost(d)?;
+    let n_subs = d.count(1, "subordinate count")?;
+    let mut subordinates = Vec::with_capacity(n_subs);
+    for _ in 0..n_subs {
+        subordinates.push(SubordinateProgram {
+            row_lo: d.usize("sub row_lo")?,
+            row_hi: d.usize("sub row_hi")?,
+            col_lo: d.usize("sub col_lo")?,
+            col_hi: d.usize("sub col_hi")?,
+            weights: d.bulk_i16("sub weights")?,
+            dtcm_bytes: d.usize("sub dtcm_bytes")?,
+        });
+    }
+    let row_parts = d.usize("plan row_parts")?;
+    let col_parts = d.usize("plan col_parts")?;
+    let n_chunks = d.count(40, "plan chunks")?;
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for _ in 0..n_chunks {
+        chunks.push(Chunk {
+            row_lo: d.usize("chunk row_lo")?,
+            row_hi: d.usize("chunk row_hi")?,
+            col_lo: d.usize("chunk col_lo")?,
+            col_hi: d.usize("chunk col_hi")?,
+            dtcm_bytes: d.usize("chunk dtcm_bytes")?,
+        });
+    }
+    Ok(ParallelCompiled {
+        wdm,
+        tables,
+        dominant_cost,
+        subordinates,
+        plan: SplitPlan { row_parts, col_parts, chunks },
+        character: get_character(d)?,
+        params: get_params(d)?,
+        weight_scale: d.f32("parallel weight_scale")?,
+        n_source: d.usize("parallel n_source")?,
+        n_target: d.usize("parallel n_target")?,
+        n_source_vertex: d.usize("parallel n_source_vertex")?,
+    })
+}
+
+// -------------------------------------------------------- public bodies
+
+/// Encode one compiled layer into a `SEC_LAYER` section body.
+pub fn encode_layer(layer: &CompiledLayer) -> Vec<u8> {
+    let mut e = Enc::default();
+    match layer {
+        CompiledLayer::Serial(c) => {
+            put_paradigm(&mut e, Paradigm::Serial);
+            put_serial(&mut e, c);
+        }
+        CompiledLayer::Parallel(c) => {
+            put_paradigm(&mut e, Paradigm::Parallel);
+            put_parallel(&mut e, c);
+        }
+    }
+    e.buf
+}
+
+/// Decode a `SEC_LAYER` section body.
+pub fn decode_layer(body: &[u8]) -> Result<CompiledLayer, ArtifactError> {
+    let mut d = Dec::new(body);
+    let layer = match get_paradigm(&mut d)? {
+        Paradigm::Serial => CompiledLayer::Serial(get_serial(&mut d)?),
+        Paradigm::Parallel => CompiledLayer::Parallel(get_parallel(&mut d)?),
+    };
+    if !d.done() {
+        return Err(ArtifactError::Malformed {
+            what: "layer body",
+            detail: "trailing bytes after the decoded layer".into(),
+        });
+    }
+    Ok(layer)
+}
+
+/// Encode a cost estimate into a `SEC_ESTIMATE` section body.
+pub fn encode_estimate(est: &CostEstimate) -> Vec<u8> {
+    let mut e = Enc::default();
+    put_paradigm(&mut e, est.paradigm);
+    e.usize(est.layer_pes);
+    e.usize(est.source_hosting_pes);
+    e.usize(est.dtcm_bytes);
+    e.usize(est.source_hosting_dtcm);
+    e.buf
+}
+
+/// Decode a `SEC_ESTIMATE` section body.
+pub fn decode_estimate(body: &[u8]) -> Result<CostEstimate, ArtifactError> {
+    let mut d = Dec::new(body);
+    let est = CostEstimate {
+        paradigm: get_paradigm(&mut d)?,
+        layer_pes: d.usize("estimate layer_pes")?,
+        source_hosting_pes: d.usize("estimate source_hosting_pes")?,
+        dtcm_bytes: d.usize("estimate dtcm_bytes")?,
+        source_hosting_dtcm: d.usize("estimate source_hosting_dtcm")?,
+    };
+    if !d.done() {
+        return Err(ArtifactError::Malformed {
+            what: "estimate body",
+            detail: "trailing bytes after the decoded estimate".into(),
+        });
+    }
+    Ok(est)
+}
+
+/// One layer's saved paradigm decision inside a network artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SavedDecision {
+    /// What the policy prejudged (`None` = Ideal mode, decided by cost).
+    pub prejudged: Option<Paradigm>,
+    /// The paradigm the layer was actually compiled under.
+    pub chosen: Paradigm,
+    /// True when capacity feasibility overrode the prejudged winner.
+    pub overridden: bool,
+}
+
+/// Encode per-layer decisions into a `SEC_DECISIONS` section body.
+pub fn encode_decisions(decisions: &[SavedDecision]) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.usize(decisions.len());
+    for d in decisions {
+        e.u8(match d.prejudged {
+            None => 0,
+            Some(Paradigm::Serial) => 1,
+            Some(Paradigm::Parallel) => 2,
+        });
+        put_paradigm(&mut e, d.chosen);
+        e.u8(d.overridden as u8);
+    }
+    e.buf
+}
+
+/// Decode a `SEC_DECISIONS` section body.
+pub fn decode_decisions(body: &[u8]) -> Result<Vec<SavedDecision>, ArtifactError> {
+    let mut d = Dec::new(body);
+    let n = d.count(3, "decision count")?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let prejudged = match d.u8("decision prejudged")? {
+            0 => None,
+            1 => Some(Paradigm::Serial),
+            2 => Some(Paradigm::Parallel),
+            t => {
+                return Err(ArtifactError::Malformed {
+                    what: "decision prejudged",
+                    detail: format!("unknown value {t}"),
+                })
+            }
+        };
+        out.push(SavedDecision {
+            prejudged,
+            chosen: get_paradigm(&mut d)?,
+            overridden: d.u8("decision overridden")? != 0,
+        });
+    }
+    if !d.done() {
+        return Err(ArtifactError::Malformed {
+            what: "decisions body",
+            detail: "trailing bytes after the decoded decisions".into(),
+        });
+    }
+    Ok(out)
+}

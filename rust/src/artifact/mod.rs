@@ -1,0 +1,499 @@
+//! Persistent compiled-artifact store: compile once, serve many.
+//!
+//! The paper's fast-switching saving — prejudge the paradigm, compile only
+//! the winner — used to evaporate at every process restart because the
+//! [`crate::switching::CompilePipeline`] dedup cache was memory-only. This
+//! subsystem makes the saving durable: every materialized
+//! [`CompiledLayer`] (and shape-only [`CostEstimate`]) can be written to a
+//! **content-addressed store** keyed by the pipeline's cache-key hash, and
+//! a later process boots the same network straight from disk — zero
+//! materializing compiles (`simulate --artifact-dir` on a warm store).
+//!
+//! * [`codec`] — the versioned little-endian wire format (hand-rolled; no
+//!   new dependencies), with a magic/version/length-checked header and a
+//!   per-section FNV-1a checksum so truncated, corrupt, or
+//!   foreign-version files are rejected with a typed [`ArtifactError`]
+//!   instead of a panic or a misparse.
+//! * [`ArtifactStore`] — the on-disk store: one `<key>.s2a` file per
+//!   artifact, written atomically (temp file + rename) so concurrent
+//!   writers and crashed processes can never publish a torn file.
+//!
+//! Invalidation is structural: the store key is a hash over everything
+//! that determines a compile's output (layer character, connector
+//! seed/fingerprint, LIF params, `PeSpec`, `WdmConfig`, paradigm), so a
+//! changed config simply misses and compiles fresh, and a format change
+//! bumps [`codec::VERSION`], demoting every older file to a miss.
+
+pub mod codec;
+
+pub use codec::{SavedDecision, MAGIC, VERSION};
+
+use crate::paradigm::{CompiledLayer, CostEstimate};
+use std::fmt;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Typed artifact failure. Every decode path returns one of these —
+/// corrupt bytes are never allowed to panic the pipeline; the caller
+/// treats any error as a cache miss and recompiles.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Filesystem failure reading or writing the store.
+    Io(std::io::Error),
+    /// The file does not start with the `S2AF` magic.
+    BadMagic { found: u32 },
+    /// The file was written by a different codec version.
+    BadVersion { found: u32, supported: u32 },
+    /// A declared length runs past the available bytes.
+    Truncated { what: &'static str, need: u64, have: u64 },
+    /// A section body does not match its stored checksum.
+    ChecksumMismatch { section: u32, stored: u64, computed: u64 },
+    /// Structurally invalid content (bad enum tag, trailing bytes, …).
+    Malformed { what: &'static str, detail: String },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "artifact io error: {e}"),
+            ArtifactError::BadMagic { found } => {
+                write!(f, "bad artifact magic {found:#010x} (want {:#010x})", MAGIC)
+            }
+            ArtifactError::BadVersion { found, supported } => {
+                write!(f, "artifact version {found} unsupported (this build reads {supported})")
+            }
+            ArtifactError::Truncated { what, need, have } => {
+                write!(f, "artifact truncated at {what}: need {need} bytes, have {have}")
+            }
+            ArtifactError::ChecksumMismatch { section, stored, computed } => write!(
+                f,
+                "artifact section {section} checksum mismatch \
+                 (stored {stored:#018x}, computed {computed:#018x})"
+            ),
+            ArtifactError::Malformed { what, detail } => {
+                write!(f, "malformed artifact {what}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
+}
+
+/// A whole compiled network as one artifact: per-layer paradigm decisions,
+/// the materialized layers (projection order), and their cost estimates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkArtifact {
+    pub decisions: Vec<SavedDecision>,
+    pub layers: Vec<CompiledLayer>,
+    pub estimates: Vec<CostEstimate>,
+}
+
+/// The content-addressed on-disk store. One artifact per file,
+/// `<key as 16 hex digits>.s2a`, plus named whole-network artifacts
+/// (`<name>.net.s2a`).
+#[derive(Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore, ArtifactError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(ArtifactStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn key_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.s2a"))
+    }
+
+    fn net_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.net.s2a"))
+    }
+
+    /// Number of artifacts currently on disk (bench/telemetry helper).
+    pub fn len(&self) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter(|e| {
+                    e.as_ref()
+                        .ok()
+                        .and_then(|e| e.path().extension().map(|x| x == "s2a"))
+                        .unwrap_or(false)
+                })
+                .count()
+            })
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Atomically publish `bytes` at `path`: write a sibling temp file,
+    /// then rename over the target (rename is atomic on POSIX, so readers
+    /// see either the old complete file or the new complete file — never a
+    /// torn write). The temp name is unique per process *and* per call so
+    /// concurrent writers of the same key cannot interleave.
+    fn publish(&self, path: &Path, bytes: &[u8]) -> Result<(), ArtifactError> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+        }
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                std::fs::remove_file(&tmp).ok();
+                Err(e.into())
+            }
+        }
+    }
+
+    fn read(&self, path: &Path) -> Result<Option<Vec<u8>>, ArtifactError> {
+        match std::fs::read(path) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Persist one compiled layer under its cache-key hash.
+    pub fn save_layer(&self, key: u64, layer: &CompiledLayer) -> Result<(), ArtifactError> {
+        let body = codec::encode_layer(layer);
+        let bytes = codec::write_container(&[(codec::SEC_LAYER, body)]);
+        self.publish(&self.key_path(key), &bytes)
+    }
+
+    /// Load a compiled layer. `Ok(None)` = not in the store; `Err` = the
+    /// file exists but is truncated/corrupt/foreign (callers treat both as
+    /// a miss, the latter is additionally worth surfacing in telemetry).
+    pub fn load_layer(&self, key: u64) -> Result<Option<CompiledLayer>, ArtifactError> {
+        let Some(bytes) = self.read(&self.key_path(key))? else {
+            return Ok(None);
+        };
+        let sections = codec::read_container(&bytes)?;
+        match sections.as_slice() {
+            [(codec::SEC_LAYER, body)] => Ok(Some(codec::decode_layer(body)?)),
+            _ => Err(ArtifactError::Malformed {
+                what: "layer artifact",
+                detail: format!("expected one LAYER section, found {}", sections.len()),
+            }),
+        }
+    }
+
+    /// Persist one shape-only cost estimate under its cache-key hash.
+    pub fn save_estimate(&self, key: u64, est: &CostEstimate) -> Result<(), ArtifactError> {
+        let body = codec::encode_estimate(est);
+        let bytes = codec::write_container(&[(codec::SEC_ESTIMATE, body)]);
+        self.publish(&self.key_path(key), &bytes)
+    }
+
+    /// Load a cost estimate (same miss/corrupt contract as
+    /// [`ArtifactStore::load_layer`]).
+    pub fn load_estimate(&self, key: u64) -> Result<Option<CostEstimate>, ArtifactError> {
+        let Some(bytes) = self.read(&self.key_path(key))? else {
+            return Ok(None);
+        };
+        let sections = codec::read_container(&bytes)?;
+        match sections.as_slice() {
+            [(codec::SEC_ESTIMATE, body)] => Ok(Some(codec::decode_estimate(body)?)),
+            _ => Err(ArtifactError::Malformed {
+                what: "estimate artifact",
+                detail: format!("expected one ESTIMATE section, found {}", sections.len()),
+            }),
+        }
+    }
+
+    /// Persist a whole compiled network (decisions + layers + estimates)
+    /// under a caller-chosen name.
+    pub fn save_network(&self, name: &str, net: &NetworkArtifact) -> Result<(), ArtifactError> {
+        let mut sections = Vec::with_capacity(1 + 2 * net.layers.len());
+        sections.push((codec::SEC_DECISIONS, codec::encode_decisions(&net.decisions)));
+        for layer in &net.layers {
+            sections.push((codec::SEC_LAYER, codec::encode_layer(layer)));
+        }
+        for est in &net.estimates {
+            sections.push((codec::SEC_ESTIMATE, codec::encode_estimate(est)));
+        }
+        self.publish(&self.net_path(name), &codec::write_container(&sections))
+    }
+
+    /// Load a whole-network artifact saved by
+    /// [`ArtifactStore::save_network`].
+    pub fn load_network(&self, name: &str) -> Result<Option<NetworkArtifact>, ArtifactError> {
+        let Some(bytes) = self.read(&self.net_path(name))? else {
+            return Ok(None);
+        };
+        let sections = codec::read_container(&bytes)?;
+        let mut decisions = None;
+        let mut layers = Vec::new();
+        let mut estimates = Vec::new();
+        for (tag, body) in sections {
+            match tag {
+                codec::SEC_DECISIONS => decisions = Some(codec::decode_decisions(body)?),
+                codec::SEC_LAYER => layers.push(codec::decode_layer(body)?),
+                codec::SEC_ESTIMATE => estimates.push(codec::decode_estimate(body)?),
+                other => {
+                    return Err(ArtifactError::Malformed {
+                        what: "network artifact",
+                        detail: format!("unknown section tag {other}"),
+                    })
+                }
+            }
+        }
+        let decisions = decisions.ok_or_else(|| ArtifactError::Malformed {
+            what: "network artifact",
+            detail: "missing DECISIONS section".into(),
+        })?;
+        if decisions.len() != layers.len() || layers.len() != estimates.len() {
+            return Err(ArtifactError::Malformed {
+                what: "network artifact",
+                detail: format!(
+                    "section counts disagree: {} decisions, {} layers, {} estimates",
+                    decisions.len(),
+                    layers.len(),
+                    estimates.len()
+                ),
+            });
+        }
+        Ok(Some(NetworkArtifact { decisions, layers, estimates }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::realize_layer;
+    use crate::hardware::PeSpec;
+    use crate::model::LifParams;
+    use crate::paradigm::parallel::WdmConfig;
+    use crate::paradigm::{
+        LayerJob, ParadigmCompiler, Paradigm, ParallelCompiler, SerialCompiler,
+    };
+    use crate::prop::Prop;
+    use crate::rng::Rng;
+
+    fn compile_pair(
+        n_src: usize,
+        n_tgt: usize,
+        density: f64,
+        delay: u16,
+        seed: u64,
+    ) -> (CompiledLayer, CompiledLayer, CostEstimate, CostEstimate) {
+        let pe = PeSpec::default();
+        let mut rng = Rng::new(seed);
+        let proj = realize_layer(n_src, n_tgt, density, delay, &mut rng);
+        let job = LayerJob::new(&proj, n_src, n_tgt, LifParams::default());
+        let s = SerialCompiler.compile(&job, &pe).unwrap();
+        let p = ParallelCompiler::new(WdmConfig::default()).compile(&job, &pe).unwrap();
+        let se = SerialCompiler.estimate(&job, &pe).unwrap();
+        let pe_est = ParallelCompiler::new(WdmConfig::default()).estimate(&job, &pe).unwrap();
+        (s, p, se, pe_est)
+    }
+
+    fn tmp_store(tag: &str) -> ArtifactStore {
+        let dir = std::env::temp_dir().join(format!("s2a-test-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ArtifactStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn layer_roundtrip_is_lossless_for_randomized_layers() {
+        // The headline property: encode→decode is the identity on compiled
+        // layers of either paradigm, across the sweep envelope.
+        Prop::new("artifact layer roundtrip", 25).check(
+            |g| {
+                (
+                    g.usize(20, 300),
+                    g.usize(20, 300),
+                    g.f64(0.05, 1.0),
+                    g.usize(1, 16) as u16,
+                    g.i64(0, 1 << 30) as u64,
+                )
+            },
+            |&(ns, nt, d, dl, seed)| {
+                let (s, p, _, _) = compile_pair(ns, nt, d, dl, seed);
+                let s_back = codec::decode_layer(&codec::encode_layer(&s)).unwrap();
+                let p_back = codec::decode_layer(&codec::encode_layer(&p)).unwrap();
+                s_back == s && p_back == p
+            },
+        );
+    }
+
+    #[test]
+    fn estimate_roundtrip_is_lossless() {
+        Prop::new("artifact estimate roundtrip", 25).check(
+            |g| {
+                (
+                    g.usize(20, 300),
+                    g.usize(20, 300),
+                    g.f64(0.05, 1.0),
+                    g.usize(1, 16) as u16,
+                    g.i64(0, 1 << 30) as u64,
+                )
+            },
+            |&(ns, nt, d, dl, seed)| {
+                let (_, _, se, pe_est) = compile_pair(ns, nt, d, dl, seed);
+                codec::decode_estimate(&codec::encode_estimate(&se)).unwrap() == se
+                    && codec::decode_estimate(&codec::encode_estimate(&pe_est)).unwrap()
+                        == pe_est
+            },
+        );
+    }
+
+    #[test]
+    fn store_roundtrips_layers_and_estimates_through_disk() {
+        let store = tmp_store("rt");
+        let (s, p, se, pe_est) = compile_pair(120, 80, 0.4, 6, 42);
+        store.save_layer(1, &s).unwrap();
+        store.save_layer(2, &p).unwrap();
+        store.save_estimate(3, &se).unwrap();
+        store.save_estimate(4, &pe_est).unwrap();
+        assert_eq!(store.load_layer(1).unwrap().unwrap(), s);
+        assert_eq!(store.load_layer(2).unwrap().unwrap(), p);
+        assert_eq!(store.load_estimate(3).unwrap().unwrap(), se);
+        assert_eq!(store.load_estimate(4).unwrap().unwrap(), pe_est);
+        assert_eq!(store.len(), 4);
+        assert!(store.load_layer(99).unwrap().is_none(), "missing key is a clean miss");
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn network_artifact_roundtrips() {
+        let store = tmp_store("net");
+        let (s, p, se, pe_est) = compile_pair(100, 100, 0.5, 4, 7);
+        let art = NetworkArtifact {
+            decisions: vec![
+                SavedDecision {
+                    prejudged: Some(Paradigm::Serial),
+                    chosen: Paradigm::Serial,
+                    overridden: false,
+                },
+                SavedDecision { prejudged: None, chosen: Paradigm::Parallel, overridden: true },
+            ],
+            layers: vec![s, p],
+            estimates: vec![se, pe_est],
+        };
+        store.save_network("demo", &art).unwrap();
+        assert_eq!(store.load_network("demo").unwrap().unwrap(), art);
+        assert!(store.load_network("absent").unwrap().is_none());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    /// A valid single-layer artifact byte stream to corrupt in the
+    /// negative tests.
+    fn valid_bytes() -> Vec<u8> {
+        let (s, _, _, _) = compile_pair(60, 60, 0.3, 3, 9);
+        codec::write_container(&[(codec::SEC_LAYER, codec::encode_layer(&s))])
+    }
+
+    fn decode_all(bytes: &[u8]) -> Result<CompiledLayer, ArtifactError> {
+        let sections = codec::read_container(bytes)?;
+        codec::decode_layer(sections[0].1)
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_at_every_length() {
+        let bytes = valid_bytes();
+        // Every proper prefix must fail with a typed error — never panic,
+        // never succeed.
+        for cut in [0, 1, 3, 4, 8, 23, 24, 25, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode_all(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, ArtifactError::Truncated { .. }),
+                "cut at {cut}: expected Truncated, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut bytes = valid_bytes();
+        bytes[0] ^= 0xff;
+        match decode_all(&bytes).unwrap_err() {
+            ArtifactError::BadMagic { found } => assert_ne!(found, MAGIC),
+            other => panic!("expected BadMagic, got {other}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut bytes = valid_bytes();
+        bytes[4] = bytes[4].wrapping_add(1); // version field
+        match decode_all(&bytes).unwrap_err() {
+            ArtifactError::BadVersion { found, supported } => {
+                assert_ne!(found, supported);
+                assert_eq!(supported, VERSION);
+            }
+            other => panic!("expected BadVersion, got {other}"),
+        }
+    }
+
+    #[test]
+    fn checksum_corruption_is_rejected() {
+        let mut bytes = valid_bytes();
+        // Flip one byte in the section body (past the 24 B container
+        // header and the 20 B section header).
+        let idx = bytes.len() - 5;
+        bytes[idx] ^= 0x40;
+        match decode_all(&bytes).unwrap_err() {
+            ArtifactError::ChecksumMismatch { section, stored, computed } => {
+                assert_eq!(section, codec::SEC_LAYER);
+                assert_ne!(stored, computed);
+            }
+            other => panic!("expected ChecksumMismatch, got {other}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_store_file_surfaces_as_error_not_panic() {
+        let store = tmp_store("corrupt");
+        let (s, _, _, _) = compile_pair(50, 50, 0.5, 2, 11);
+        store.save_layer(7, &s).unwrap();
+        // Truncate the published file in place.
+        let path = store.dir().join(format!("{:016x}.s2a", 7u64));
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(matches!(
+            store.load_layer(7).unwrap_err(),
+            ArtifactError::Truncated { .. }
+        ));
+        // Garbage bytes are a BadMagic, not a panic.
+        std::fs::write(&path, b"not an artifact at all").unwrap();
+        assert!(matches!(store.load_layer(7).unwrap_err(), ArtifactError::BadMagic { .. }));
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn error_display_names_the_failure() {
+        let e = ArtifactError::BadVersion { found: 9, supported: VERSION };
+        assert!(e.to_string().contains("version 9"));
+        let e = ArtifactError::Truncated { what: "wdm rows", need: 100, have: 10 };
+        assert!(e.to_string().contains("wdm rows"));
+    }
+}

@@ -9,7 +9,7 @@
 //! [`train_roster`]) — see DESIGN.md §2.
 
 use crate::classifier::{accuracy, roster, train_test_split, AdaBoost, Classifier};
-use crate::dataset::{generate_grid_jobs, Dataset, SweepConfig};
+use crate::dataset::{generate_grid_opts, Dataset, SweepConfig};
 use crate::hardware::PeSpec;
 use crate::io::Json;
 use crate::paradigm::parallel::WdmConfig;
@@ -48,6 +48,18 @@ pub fn dataset_cached(path: &Path, cfg: &SweepConfig) -> Result<Dataset> {
 /// [`dataset_cached`] with an explicit labeling worker-thread count
 /// (0 = auto).
 pub fn dataset_cached_jobs(path: &Path, cfg: &SweepConfig, jobs: usize) -> Result<Dataset> {
+    dataset_cached_opts(path, cfg, jobs, None)
+}
+
+/// [`dataset_cached_jobs`] plus an optional persistent artifact store
+/// threaded into the labeling pipeline (`dataset --artifact-dir`): warm
+/// stores serve per-layer estimates from disk instead of re-running them.
+pub fn dataset_cached_opts(
+    path: &Path,
+    cfg: &SweepConfig,
+    jobs: usize,
+    artifact_dir: Option<&Path>,
+) -> Result<Dataset> {
     if path.exists() {
         let ds = Dataset::load_csv(path)?;
         if ds.len() == cfg.n_layers() {
@@ -61,7 +73,9 @@ pub fn dataset_cached_jobs(path: &Path, cfg: &SweepConfig, jobs: usize) -> Resul
         );
     }
     let t0 = Instant::now();
-    let ds = generate_grid_jobs(cfg, &PeSpec::default(), WdmConfig::default(), jobs);
+    let ds =
+        generate_grid_opts(cfg, &PeSpec::default(), WdmConfig::default(), jobs, artifact_dir)
+            .context("attaching the labeling artifact store")?;
     eprintln!("labeled {} layers in {:.2?}", ds.len(), t0.elapsed());
     ds.save_csv(path)?;
     Ok(ds)

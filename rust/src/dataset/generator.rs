@@ -290,14 +290,34 @@ pub fn generate_grid_jobs(
     config: WdmConfig,
     jobs: usize,
 ) -> Dataset {
+    generate_grid_opts(cfg, pe, config, jobs, None)
+        .expect("grid generation without an artifact store is infallible")
+}
+
+/// [`generate_grid_jobs`] plus an optional persistent artifact store: with
+/// `artifact_dir` set, every per-layer estimate is looked up on disk
+/// before running and written back after, so re-labeling the same sweep
+/// (or an overlapping one) in a later process skips the estimate work
+/// entirely (the CLI's `dataset --artifact-dir`). Fails only when the
+/// store directory cannot be created/opened.
+pub fn generate_grid_opts(
+    cfg: &SweepConfig,
+    pe: &PeSpec,
+    config: WdmConfig,
+    jobs: usize,
+    artifact_dir: Option<&Path>,
+) -> Result<Dataset> {
     let items = cfg.items();
-    let pipeline = CompilePipeline::new(*pe, config).with_jobs(jobs);
+    let mut pipeline = CompilePipeline::new(*pe, config).with_jobs(jobs);
+    if let Some(dir) = artifact_dir {
+        pipeline.set_artifact_dir(dir)?;
+    }
     let samples = fan_out(pipeline.jobs(), items.len(), |i| {
         let (src, tgt, d, dl, seed) = items[i];
         let mut rng = Rng::new(seed);
         let proj = realize_layer(src, tgt, d, dl, &mut rng);
         let character = LayerCharacter::new(src, tgt, d, dl);
-        let job = CompileJob::from_character(&proj, character, LifParams::default(), seed);
+        let job = CompileJob::from_character(&proj, character, LifParams::default());
         let (serial, parallel) = pipeline
             .estimate_pair(&job)
             .expect("sweep layer must be placeable under both paradigms");
@@ -307,7 +327,7 @@ pub fn generate_grid_jobs(
             parallel_pes: parallel.total_pes(),
         }
     });
-    Dataset { samples }
+    Ok(Dataset { samples })
 }
 
 #[cfg(test)]
@@ -362,6 +382,19 @@ mod tests {
                 label_layer(src, tgt, d, dl, &pe, WdmConfig::default(), &mut Rng::new(seed));
             assert_eq!(*sample, direct);
         }
+    }
+
+    #[test]
+    fn labeling_from_a_warm_artifact_store_matches_cold() {
+        let dir = std::env::temp_dir()
+            .join(format!("s2a-grid-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = SweepConfig::small();
+        let pe = PeSpec::default();
+        let cold = generate_grid_opts(&cfg, &pe, WdmConfig::default(), 1, Some(&dir)).unwrap();
+        let warm = generate_grid_opts(&cfg, &pe, WdmConfig::default(), 4, Some(&dir)).unwrap();
+        assert_eq!(cold.samples, warm.samples, "disk-served labels must be identical");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

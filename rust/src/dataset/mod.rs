@@ -14,6 +14,6 @@
 pub mod generator;
 
 pub use generator::{
-    generate_grid, generate_grid_jobs, label_layer, realize_layer, Dataset, Sample, SweepConfig,
-    CSV_COLUMNS,
+    generate_grid, generate_grid_jobs, generate_grid_opts, label_layer, realize_layer, Dataset,
+    Sample, SweepConfig, CSV_COLUMNS,
 };

@@ -29,11 +29,16 @@
 //!   [`sim::BatchRunner`] for multi-sample batched inference (the parallel
 //!   path can run AOT-compiled JAX/Pallas HLO through PJRT via [`runtime`],
 //!   behind the `pjrt` cargo feature).
+//! * [`artifact`] — the persistent compiled-artifact store: a versioned,
+//!   checksummed binary codec plus a content-addressed on-disk store that
+//!   turns the compile cache into a second, restart-surviving tier
+//!   (compile once, serve many; `--artifact-dir`).
 //! * [`coordinator`] — the leader pipeline tying everything together.
 //!
 //! Offline-environment substitutes (see DESIGN.md §2): [`bench_harness`]
 //! replaces criterion, [`prop`] replaces proptest, [`io`] replaces serde.
 
+pub mod artifact;
 pub mod bench_harness;
 pub mod classifier;
 pub mod coordinator;

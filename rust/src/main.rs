@@ -3,14 +3,16 @@
 //! Subcommands (hand-rolled parser; clap is not in the offline crate set):
 //!
 //! ```text
-//! s2switch dataset  [--out data/dataset.csv] [--small] [--jobs N]
+//! s2switch dataset  [--out data/dataset.csv] [--small] [--jobs N] [--artifact-dir PATH]
 //! s2switch train    [--data data/dataset.csv] [--seeds 20] [--out data/adaboost.json]
 //! s2switch decide   --src N --tgt N --density F --delay N [--model data/adaboost.json]
 //! s2switch compile  --src N --tgt N --density F --delay N [--mode serial|parallel|ideal|classifier]
 //!                   [--machine WxH|light-board] [--strategy linear|chip-packed|balanced]
+//!                   [--artifact-dir PATH]
 //! s2switch simulate [--steps 200] [--batch S] [--pjrt] [--jobs N]
 //!                   [--intra-jobs N] [--profile]
 //!                   [--machine WxH|light-board] [--strategy S]
+//!                   [--artifact-dir PATH]
 //!                   [--record-csv PATH]      # demo 3-layer network
 //! ```
 //!
@@ -31,10 +33,15 @@
 //! SpiNNaker2 light board); `--strategy` picks the PE placement strategy.
 //! Compile/simulate runs end with a placement utilization + NoC hop
 //! summary sourced from the real [`Placement`](s2switch::switching::Placement).
+//! `--artifact-dir PATH` attaches the persistent compiled-artifact store
+//! (compile-once, serve-many): compiles and estimates are looked up on
+//! disk before running and written back after, so a warm store boots the
+//! same network with **zero** materializing compiles — `dataset`
+//! relabeling, `compile`, and `simulate` all share it.
 
 use anyhow::{bail, ensure, Context, Result};
 use s2switch::coordinator::{
-    dataset_cached, dataset_cached_jobs, load_switching_system, train_and_save_adaboost,
+    dataset_cached, dataset_cached_opts, load_switching_system, train_and_save_adaboost,
     train_roster,
 };
 use s2switch::dataset::SweepConfig;
@@ -94,13 +101,16 @@ impl Args {
 }
 
 const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [flags]
-  dataset   --out PATH --small --jobs N   generate + label the sweep corpus
+  dataset   --out PATH --small --jobs N --artifact-dir PATH
+            generate + label the sweep corpus
   train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
   decide    --src N --tgt N --density F --delay N --model PATH
   compile   --src N --tgt N --density F --delay N --mode MODE
             --machine WxH|light-board --strategy linear|chip-packed|balanced
+            --artifact-dir PATH
   simulate  --steps N --batch S --pjrt --jobs N --intra-jobs N --profile
             --record-csv PATH --machine WxH|light-board --strategy S
+            --artifact-dir PATH
             run the demo network end to end (--batch S: S stimulus samples
             through the BatchRunner; --intra-jobs N: per-sample layer
             parallelism; --profile: per-phase wall-clock breakdown;
@@ -108,7 +118,10 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [fl
   (--jobs N: worker threads for compiling, batching and same-wave layer
    stepping, 0 = one per CPU;
    --machine WxH: chip grid, light-board = 8x6; compile/simulate print a
-   placement utilization + NoC hop summary on exit)";
+   placement utilization + NoC hop summary on exit;
+   --artifact-dir PATH: persistent compiled-artifact store — compiles and
+   estimates are served from disk when present and written back when not,
+   so a warm store boots with zero materializing compiles)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -131,7 +144,8 @@ fn cmd_dataset(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").unwrap_or("data/dataset.csv"));
     let cfg = if args.has("small") { SweepConfig::small() } else { SweepConfig::default() };
     let jobs: usize = args.parse_or("jobs", 0)?;
-    let ds = dataset_cached_jobs(&out, &cfg, jobs)?;
+    let artifact_dir = args.get("artifact-dir").map(PathBuf::from);
+    let ds = dataset_cached_opts(&out, &cfg, jobs, artifact_dir.as_deref())?;
     let parallel_wins = ds.samples.iter().filter(|s| s.parallel_pes < s.serial_pes).count();
     println!(
         "dataset: {} layers → {} ({} favor parallel, {} favor serial)",
@@ -172,6 +186,16 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// `--jobs N` (absent or 0 → one worker per CPU, resolved by the pipeline).
 fn resolve_jobs(args: &Args) -> Result<usize> {
     args.parse_or("jobs", 0)
+}
+
+/// `--artifact-dir PATH`: attach the persistent compiled-artifact store
+/// so compiles/estimates are served from disk when warm and written back
+/// when cold.
+fn attach_artifact_dir(args: &Args, sys: &mut SwitchingSystem) -> Result<()> {
+    if let Some(dir) = args.get("artifact-dir") {
+        sys.set_artifact_dir(std::path::Path::new(dir))?;
+    }
+    Ok(())
 }
 
 /// `--machine WxH` (chip grid) or `--machine light-board` (the 8×6 48-chip
@@ -268,6 +292,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
         SwitchingSystem::new(mode, PeSpec::default())
     };
     sys.set_jobs(resolve_jobs(args)?);
+    attach_artifact_dir(args, &mut sys)?;
     let mspec = parse_machine(args)?;
     let strategy = parse_strategy(args)?;
     // Realize the layer as a one-projection network (source → target) so
@@ -287,12 +312,13 @@ fn cmd_compile(args: &Args) -> Result<()> {
     let layer = &adm.layers[0];
     let d = adm.decisions[0];
     println!(
-        "compiled under {}{}: {} PEs, {} B DTCM total ({} compiles run)",
+        "compiled under {}{}: {} PEs, {} B DTCM total ({} compiles run, {} artifact hits)",
         layer.paradigm(),
         if d.overridden { " (capacity override)" } else { "" },
         layer.n_pes(),
         layer.total_dtcm(),
-        sys.stats.total_compiles()
+        sys.stats.total_compiles(),
+        sys.stats.disk_hits
     );
     print_placement_summary(&adm);
     Ok(())
@@ -332,6 +358,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
     sys.set_jobs(resolve_jobs(args)?);
+    attach_artifact_dir(args, &mut sys)?;
     // Capacity-aware admission: prejudge → feasibility check → compile →
     // place + route on the requested machine (Fig. 2's tail).
     let adm = sys.admit_network(&net, parse_machine(args)?, parse_strategy(args)?)?;
@@ -345,12 +372,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "compiled {} layers on {} worker(s) in {:.2?} ({} compiles, {} cache hits)",
+        "compiled {} layers on {} worker(s) in {:.2?} \
+         ({} compiles, {} cache hits, {} artifact hits)",
         adm.layers.len(),
         sys.jobs(),
         std::time::Duration::from_nanos(adm.wall_nanos),
         adm.stats.total_compiles(),
-        adm.stats.cache_hits
+        adm.stats.cache_hits,
+        adm.stats.disk_hits
     );
     print_placement_summary(&adm);
     let layers = adm.layers;

@@ -85,7 +85,7 @@ impl std::fmt::Display for Paradigm {
 }
 
 /// A compiled layer under whichever paradigm was selected.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum CompiledLayer {
     Serial(SerialCompiled),
     Parallel(ParallelCompiled),

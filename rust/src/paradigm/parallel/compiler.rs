@@ -9,7 +9,7 @@ use crate::model::{LayerCharacter, LifParams, Projection};
 use anyhow::{ensure, Context, Result};
 
 /// One subordinate PE's program: a WDM chunk destined for the MAC array.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SubordinateProgram {
     /// Row range [lo, hi) of the WDM this PE holds.
     pub row_lo: usize,
@@ -39,7 +39,7 @@ impl SubordinateProgram {
 }
 
 /// A fully compiled parallel layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ParallelCompiled {
     pub wdm: Wdm,
     pub tables: DominantTables,

@@ -28,7 +28,7 @@ pub struct Chunk {
 }
 
 /// The chosen split.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SplitPlan {
     pub row_parts: usize,
     pub col_parts: usize,

@@ -20,7 +20,7 @@ pub struct MergeEntry {
 }
 
 /// The dominant PE's preprocessing tables.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct DominantTables {
     /// Per source neuron: [start, end) span into `merging`.
     pub reversed_order: Vec<(u32, u32)>,
@@ -30,20 +30,42 @@ pub struct DominantTables {
 
 impl DominantTables {
     /// Derive the tables from a built WDM.
+    ///
+    /// Two-pass counting sort straight into the flat `merging` array (one
+    /// scratch allocation, no per-source buckets): pass 1 counts rows per
+    /// source and lays out the spans; pass 2 scatters each row into its
+    /// span. WDM rows are delay-major sorted ([`Wdm::rows`] is built in
+    /// lane order), so filling in row order lands every source's entries
+    /// already delay-sorted — no per-source sort needed.
     pub fn from_wdm(wdm: &Wdm, n_source: usize) -> Self {
-        // Bucket WDM rows by source.
-        let mut per_source: Vec<Vec<MergeEntry>> = vec![Vec::new(); n_source];
-        for (row, rk) in wdm.rows.iter().enumerate() {
-            per_source[rk.source as usize].push(MergeEntry { delay: rk.delay, row: row as u32 });
+        // Pass 1: count rows per source.
+        let mut cursor = vec![0u32; n_source];
+        for rk in &wdm.rows {
+            cursor[rk.source as usize] += 1;
         }
+        // Spans from the prefix sum; `cursor` becomes the per-source fill
+        // cursor (initialized to each span's start).
         let mut reversed_order = Vec::with_capacity(n_source);
-        let mut merging = Vec::with_capacity(wdm.n_rows());
-        for entries in &mut per_source {
-            entries.sort_by_key(|e| e.delay);
-            let start = merging.len() as u32;
-            merging.extend_from_slice(entries);
-            reversed_order.push((start, merging.len() as u32));
+        let mut acc = 0u32;
+        for c in cursor.iter_mut() {
+            reversed_order.push((acc, acc + *c));
+            let start = acc;
+            acc += *c;
+            *c = start;
         }
+        // Pass 2: scatter rows into their spans.
+        let mut merging = vec![MergeEntry { delay: 0, row: 0 }; wdm.n_rows()];
+        for (row, rk) in wdm.rows.iter().enumerate() {
+            let pos = &mut cursor[rk.source as usize];
+            merging[*pos as usize] = MergeEntry { delay: rk.delay, row: row as u32 };
+            *pos += 1;
+        }
+        debug_assert!(
+            reversed_order.iter().all(|&(lo, hi)| {
+                merging[lo as usize..hi as usize].windows(2).all(|w| w[0].delay <= w[1].delay)
+            }),
+            "WDM rows must be delay-major sorted"
+        );
         DominantTables { reversed_order, merging }
     }
 

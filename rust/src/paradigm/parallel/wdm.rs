@@ -24,7 +24,7 @@ use crate::hardware::MacArraySpec;
 use crate::model::{Projection, Synapse, SynapseType};
 
 /// Strategy toggles + MAC geometry.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WdmConfig {
     pub zero_row_elimination: bool,
     pub zero_col_elimination: bool,
@@ -77,7 +77,7 @@ pub struct RowKey {
 }
 
 /// The built weight-delay-map (logical, unpadded).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Wdm {
     pub rows: Vec<RowKey>,
     /// Kept target columns (projection-local target ids).

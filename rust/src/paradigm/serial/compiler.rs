@@ -16,7 +16,7 @@ use crate::model::{LayerCharacter, LifParams, Projection};
 use anyhow::{bail, Context, Result};
 
 /// One PE's compiled serial program.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SerialPeProgram {
     /// Target neurons simulated on this PE (projection-local indices).
     pub target_slice: SliceRange,
@@ -42,7 +42,7 @@ impl SerialPeProgram {
 }
 
 /// A fully compiled serial layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SerialCompiled {
     pub pes: Vec<SerialPeProgram>,
     pub character: LayerCharacter,

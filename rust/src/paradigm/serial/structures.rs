@@ -67,7 +67,7 @@ pub struct AddressEntry {
 }
 
 /// The address list: one entry per source neuron handled by this PE.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct AddressList {
     pub entries: Vec<AddressEntry>,
 }
@@ -82,7 +82,7 @@ impl AddressList {
 /// Master population table: maps a global source-neuron key to the
 /// (PE-local) address-list slot. One entry per source *vertex* (sub-
 /// population), each covering a contiguous global key range.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MasterPopulationTable {
     /// (key_lo, key_hi_exclusive, address_list_base) per source vertex.
     pub entries: Vec<(u32, u32, u32)>,
@@ -108,7 +108,7 @@ impl MasterPopulationTable {
 }
 
 /// The synaptic matrix: all blocks concatenated, indexed via [`AddressList`].
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SynapticMatrix {
     pub words: Vec<SynapticWord>,
 }
@@ -136,10 +136,11 @@ pub fn build_structures(
     synapses: &[Synapse],
     source_vertices: &[(u32, u32)],
 ) -> (MasterPopulationTable, AddressList, SynapticMatrix) {
-    // Group synapses by source neuron: one block per source.
     let n_sources: u32 = source_vertices.iter().map(|&(lo, hi)| hi - lo).sum();
-    let mut per_source: Vec<Vec<&Synapse>> = vec![Vec::new(); n_sources as usize];
     // Map global source id → dense address-list slot (vertex-major order).
+    // `source_vertices` has at most a couple of entries, so calling this
+    // twice per synapse (count pass + fill pass) is cheaper than buffering
+    // resolved slots.
     let slot_of = |global: u32| -> Option<u32> {
         let mut base = 0u32;
         for &(lo, hi) in source_vertices {
@@ -150,9 +151,34 @@ pub fn build_structures(
         }
         None
     };
+
+    // Two-pass counting sort into the flat synaptic matrix (one scratch
+    // allocation; no per-source `Vec<Vec<&Synapse>>` buckets). Pass 1
+    // counts each source's block; the prefix sum is the address list;
+    // pass 2 scatters packed words into their blocks. Within a block,
+    // synapses keep their input order (a stable scatter), exactly like
+    // the bucketed build did.
+    let mut cursor = vec![0u32; n_sources as usize];
     for syn in synapses {
         let slot = slot_of(syn.source).expect("synapse source outside declared vertices");
-        per_source[slot as usize].push(syn);
+        cursor[slot as usize] += 1;
+    }
+    let mut address_list = AddressList::default();
+    address_list.entries.reserve_exact(n_sources as usize);
+    let mut acc = 0u32;
+    for c in cursor.iter_mut() {
+        address_list.entries.push(AddressEntry { first_word: acc, row_length: *c });
+        let start = acc;
+        acc += *c;
+        *c = start; // `cursor` now holds each block's fill position
+    }
+    let mut matrix = SynapticMatrix { words: vec![SynapticWord(0); acc as usize] };
+    for syn in synapses {
+        let slot = slot_of(syn.source).expect("synapse source outside declared vertices");
+        let pos = &mut cursor[slot as usize];
+        matrix.words[*pos as usize] =
+            SynapticWord::pack(syn.weight, syn.delay, syn.syn_type, syn.target);
+        *pos += 1;
     }
 
     let mut mpt = MasterPopulationTable::default();
@@ -160,20 +186,6 @@ pub fn build_structures(
     for &(lo, hi) in source_vertices {
         mpt.entries.push((lo, hi, base));
         base += hi - lo;
-    }
-
-    let mut address_list = AddressList::default();
-    let mut matrix = SynapticMatrix::default();
-    for block in &per_source {
-        let first_word = matrix.words.len() as u32;
-        for syn in block {
-            matrix
-                .words
-                .push(SynapticWord::pack(syn.weight, syn.delay, syn.syn_type, syn.target));
-        }
-        address_list
-            .entries
-            .push(AddressEntry { first_word, row_length: block.len() as u32 });
     }
     (mpt, address_list, matrix)
 }

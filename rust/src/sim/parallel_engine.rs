@@ -23,13 +23,21 @@ use std::time::Instant;
 /// Executes one parallel-compiled layer.
 pub struct ParallelLayerEngine {
     compiled: ParallelCompiled,
-    /// Stacked-input ring: `[slot][wdm row]`, spike counts as f32.
-    ring: Vec<Vec<f32>>,
+    /// Stacked-input ring, one flat slot-major buffer: lane `(slot, row)`
+    /// lives at `slot * n_rows + row` (spike counts as f32). Flat instead
+    /// of `Vec<Vec<f32>>` so a step touches one contiguous span and the
+    /// whole ring is one allocation.
+    ring: Vec<f32>,
+    /// WDM row count — the ring's slot stride.
+    n_rows: usize,
     /// Writes into each ring slot since it was last cleared; 0 means the
     /// slot is all-zero and the whole MAC phase can be skipped.
     slot_writes: Vec<u32>,
-    /// Per-chunk weights pre-converted to f32 for the backend.
-    chunk_weights: Vec<Vec<f32>>,
+    /// All chunk weights pre-converted to f32 for the backend, packed
+    /// into one contiguous buffer; `chunk_spans[i]` is subordinate `i`'s
+    /// `(offset, len)` slice of it.
+    chunk_weights: Vec<f32>,
+    chunk_spans: Vec<(usize, usize)>,
     /// Persistent per-target current scratch, rewritten every step.
     currents: Vec<f32>,
     /// Persistent subordinate-output scratch (sized to the widest chunk).
@@ -58,19 +66,25 @@ impl ParallelLayerEngine {
     pub fn new(compiled: ParallelCompiled, backend: BackendBox) -> Self {
         let d = compiled.wdm.delay_range as usize;
         let rows = compiled.wdm.n_rows();
-        let chunk_weights: Vec<Vec<f32>> = compiled
-            .subordinates
-            .iter()
-            .map(|s| s.weights.iter().map(|&w| w as f32).collect())
-            .collect();
+        let total_weights: usize =
+            compiled.subordinates.iter().map(|s| s.weights.len()).sum();
+        let mut chunk_weights = Vec::with_capacity(total_weights);
+        let mut chunk_spans = Vec::with_capacity(compiled.subordinates.len());
+        for s in &compiled.subordinates {
+            let offset = chunk_weights.len();
+            chunk_weights.extend(s.weights.iter().map(|&w| w as f32));
+            chunk_spans.push((offset, s.weights.len()));
+        }
         let max_cols =
             compiled.subordinates.iter().map(|s| s.n_cols()).max().unwrap_or(0);
         let n_target = compiled.n_target;
         ParallelLayerEngine {
             compiled,
-            ring: vec![vec![0.0; rows]; d],
+            ring: vec![0.0; d * rows],
+            n_rows: rows,
             slot_writes: vec![0; d],
             chunk_weights,
+            chunk_spans,
             currents: vec![0.0; n_target],
             out_scratch: vec![0.0; max_cols],
             backend,
@@ -103,9 +117,7 @@ impl ParallelLayerEngine {
     /// a fresh stimulus without recompiling. The `macs` telemetry keeps
     /// accumulating across resets (batch accounting reads it at the end).
     pub fn reset(&mut self) {
-        for slot in &mut self.ring {
-            slot.fill(0.0);
-        }
+        self.ring.fill(0.0);
         self.slot_writes.fill(0);
         self.currents.fill(0.0);
         self.t = 0;
@@ -119,8 +131,10 @@ impl ParallelLayerEngine {
         let ParallelLayerEngine {
             ref compiled,
             ref mut ring,
+            n_rows,
             ref mut slot_writes,
             ref chunk_weights,
+            ref chunk_spans,
             ref mut currents,
             ref mut out_scratch,
             ref mut backend,
@@ -134,6 +148,7 @@ impl ParallelLayerEngine {
         let d = compiled.wdm.delay_range as usize;
         let t = t as usize;
         let slot = t % d;
+        let base = slot * n_rows;
         let scale = compiled.weight_scale;
         currents.fill(0.0);
         let t0 = profile.then(Instant::now);
@@ -142,14 +157,15 @@ impl ParallelLayerEngine {
         // A slot nothing wrote into since its last clear is identically
         // zero — skip the whole phase (and the clear).
         if slot_writes[slot] > 0 {
-            let stacked = &ring[slot];
-            for (sub, weights) in compiled.subordinates.iter().zip(chunk_weights) {
+            let stacked = &ring[base..base + n_rows];
+            for (sub, &(w_off, w_len)) in compiled.subordinates.iter().zip(chunk_spans) {
                 let lanes = &stacked[sub.row_lo..sub.row_hi];
                 if lanes.iter().all(|&s| s == 0.0) {
                     continue; // this chunk's row span is silent this step
                 }
                 let rows = sub.n_rows();
                 let cols = sub.n_cols();
+                let weights = &chunk_weights[w_off..w_off + w_len];
                 let out = &mut out_scratch[..cols];
                 *macs += backend.matvec_into(out, lanes, weights, rows, cols);
                 // Reduce into global targets via the WDM column map.
@@ -160,7 +176,7 @@ impl ParallelLayerEngine {
                     }
                 }
             }
-            ring[slot].fill(0.0);
+            ring[base..base + n_rows].fill(0.0);
             slot_writes[slot] = 0;
         }
         if let Some(t0) = t0 {
@@ -172,7 +188,7 @@ impl ParallelLayerEngine {
         for &src in spikes_in {
             for e in compiled.tables.entries_of(src) {
                 let write_slot = (t + e.delay as usize) % d;
-                ring[write_slot][e.row as usize] += 1.0;
+                ring[write_slot * n_rows + e.row as usize] += 1.0;
                 slot_writes[write_slot] += 1;
             }
         }

@@ -59,8 +59,14 @@ pub struct CompileStats {
     /// materializes per-PE programs).
     pub serial_estimates: usize,
     pub parallel_estimates: usize,
-    /// Jobs served from the compile cache instead of recompiling.
+    /// Jobs served from the in-memory compile cache instead of recompiling.
     pub cache_hits: usize,
+    /// Jobs served from the on-disk artifact store (`--artifact-dir`)
+    /// instead of recompiling — the *restart-surviving* saving, counted
+    /// separately from `cache_hits` so benches and
+    /// [`SwitchingSystem::compile_network_report`] attribute the win to
+    /// the right tier.
+    pub disk_hits: usize,
     /// Peak bytes of *discarded* compilation results (the "RAM crisis on
     /// the host PC" term: Ideal mode materializes both and throws one away).
     pub discarded_dtcm: usize,
@@ -143,6 +149,19 @@ impl SwitchingSystem {
 
     pub fn jobs(&self) -> usize {
         self.pipeline.jobs()
+    }
+
+    /// Attach a persistent artifact store (compile-once, serve-many): the
+    /// pipeline looks compiles up on disk before running them and writes
+    /// fresh results back, so a warm store boots a network with zero
+    /// materializing compiles (the CLI's `--artifact-dir`).
+    pub fn set_artifact_dir(&mut self, dir: &std::path::Path) -> Result<()> {
+        self.pipeline.set_artifact_dir(dir)
+    }
+
+    /// The attached artifact directory, if any.
+    pub fn artifact_dir(&self) -> Option<&std::path::Path> {
+        self.pipeline.artifact_dir()
     }
 
     /// Predict the paradigm for a layer character *without compiling* —

@@ -15,6 +15,13 @@
 //! * **accounting** — a thread-safe [`CompileStats`] (atomics) counts the
 //!   paradigm compilations that actually ran — the quantity fast switching
 //!   saves — plus per-layer wall-clock in [`PipelineRun::layer_nanos`].
+//! * **persistence** — with an artifact directory attached
+//!   ([`CompilePipeline::set_artifact_dir`]), the cache gains a second,
+//!   restart-surviving tier: memory `OnceLock` → on-disk
+//!   [`crate::artifact::ArtifactStore`] → compile. Disk hits are counted
+//!   separately (`CompileStats::disk_hits`) from memory `cache_hits`;
+//!   undecodable or foreign-version artifacts demote to a miss and are
+//!   overwritten by the fresh compile.
 //!
 //! Determinism: outputs and stats are independent of thread count and
 //! scheduling. Decisions are precomputed on the caller thread, results go
@@ -22,6 +29,7 @@
 
 use super::policy::SwitchPolicy;
 use super::CompileStats;
+use crate::artifact::ArtifactStore;
 use crate::hardware::PeSpec;
 use crate::model::{LayerCharacter, LifParams, Projection};
 use crate::paradigm::parallel::WdmConfig;
@@ -31,6 +39,7 @@ use crate::paradigm::{
 };
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
@@ -113,8 +122,10 @@ pub struct CompileJob<'a> {
     pub params: LifParams,
     /// The character the prejudger/estimator sees.
     pub character: LayerCharacter,
-    /// Cache identity of the synapse realization: the connector seed when
-    /// known, else a content fingerprint.
+    /// Cache identity of the synapse realization: a content fingerprint
+    /// of the realized projection ([`projection_fingerprint`]), so
+    /// persistent artifacts can never serve results for different
+    /// synapses under a recycled connector seed.
     pub seed: u64,
 }
 
@@ -137,13 +148,17 @@ impl<'a> CompileJob<'a> {
         }
     }
 
-    /// A job with a known (nominal) character and connector seed — the
-    /// dataset labeler's constructor; skips measuring the projection.
+    /// A job with a known (nominal) character — the dataset labeler's
+    /// constructor; skips *measuring* the projection but still fingerprints
+    /// its content for the cache identity. (The raw connector seed is NOT
+    /// a safe stand-in once artifacts persist across processes: a change
+    /// to the realization algorithm or RNG stream would leave the same
+    /// seed addressing stale on-disk results, with no version or checksum
+    /// mismatch to catch it.)
     pub fn from_character(
         proj: &'a Projection,
         character: LayerCharacter,
         params: LifParams,
-        seed: u64,
     ) -> Self {
         CompileJob {
             proj,
@@ -151,7 +166,7 @@ impl<'a> CompileJob<'a> {
             n_target: character.n_target,
             params,
             character,
-            seed,
+            seed: projection_fingerprint(proj),
         }
     }
 
@@ -179,6 +194,30 @@ struct CacheKey {
     params_bits: [u32; 8],
     pe_bits: u64,
     wdm_bits: u64,
+}
+
+impl CacheKey {
+    /// Stable content hash of the key — the artifact store's file name.
+    ///
+    /// Hand-rolled FNV over every field (NOT `std::hash::Hash`: the std
+    /// hasher is free to change across releases, and this value names
+    /// files that must survive process restarts and toolchain upgrades).
+    fn content_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        fold(&mut h, self.paradigm.label() as u64);
+        fold(&mut h, self.estimate_only as u64);
+        fold(&mut h, self.n_source as u64);
+        fold(&mut h, self.n_target as u64);
+        fold(&mut h, self.density_bits);
+        fold(&mut h, self.delay_range as u64);
+        fold(&mut h, self.seed);
+        for b in self.params_bits {
+            fold(&mut h, b as u64);
+        }
+        fold(&mut h, self.pe_bits);
+        fold(&mut h, self.wdm_bits);
+        h
+    }
 }
 
 fn fold(h: &mut u64, v: u64) {
@@ -254,6 +293,7 @@ struct AtomicStats {
     serial_estimates: AtomicUsize,
     parallel_estimates: AtomicUsize,
     cache_hits: AtomicUsize,
+    disk_hits: AtomicUsize,
     discarded_dtcm: AtomicUsize,
     capacity_overrides: AtomicUsize,
 }
@@ -266,6 +306,7 @@ impl AtomicStats {
             serial_estimates: self.serial_estimates.load(Ordering::Relaxed),
             parallel_estimates: self.parallel_estimates.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
             discarded_dtcm: self.discarded_dtcm.load(Ordering::Relaxed),
             capacity_overrides: self.capacity_overrides.load(Ordering::Relaxed),
         }
@@ -301,6 +342,8 @@ pub struct CompilePipeline {
     jobs: usize,
     cache: Mutex<CacheInner>,
     stats: AtomicStats,
+    /// Optional on-disk cache tier (compile-once, serve-many).
+    store: Option<ArtifactStore>,
 }
 
 impl CompilePipeline {
@@ -311,6 +354,7 @@ impl CompilePipeline {
             jobs: 1,
             cache: Mutex::new(CacheInner::default()),
             stats: AtomicStats::default(),
+            store: None,
         }
     }
 
@@ -318,6 +362,29 @@ impl CompilePipeline {
     pub fn with_jobs(mut self, jobs: usize) -> Self {
         self.set_jobs(jobs);
         self
+    }
+
+    /// Attach a persistent artifact store at `dir` (created if absent):
+    /// compiles and estimates are looked up on disk before running and
+    /// written back after, so a later process — or a later pipeline in
+    /// this one — boots the same layers with zero materializing compiles.
+    pub fn set_artifact_dir(&mut self, dir: &Path) -> Result<()> {
+        self.store = Some(
+            ArtifactStore::open(dir)
+                .map_err(|e| anyhow!("opening artifact store at {}: {e}", dir.display()))?,
+        );
+        Ok(())
+    }
+
+    /// Builder-style [`CompilePipeline::set_artifact_dir`].
+    pub fn with_artifact_dir(mut self, dir: &Path) -> Result<Self> {
+        self.set_artifact_dir(dir)?;
+        Ok(self)
+    }
+
+    /// The attached artifact directory, if any.
+    pub fn artifact_dir(&self) -> Option<&Path> {
+        self.store.as_ref().map(|s| s.dir())
     }
 
     /// Worker-thread count. `0` means auto (one worker per CPU) — the
@@ -361,29 +428,113 @@ impl CompilePipeline {
         }
     }
 
-    /// Compile one paradigm for one job through the cache. Returns the
-    /// (shared) layer and whether this call actually ran the compiler.
+    /// Disk-tier lookup for a compiled layer. A decodable artifact whose
+    /// paradigm and shape match the job is a hit (counted in
+    /// `disk_hits`); a missing file is a clean miss; a truncated/corrupt/
+    /// foreign-version file — or a content-hash collision serving some
+    /// *other* layer's artifact, caught by the paradigm/shape check — is
+    /// *also* a miss: the caller recompiles and atomically overwrites it.
+    fn artifact_load_layer(
+        &self,
+        hash: u64,
+        paradigm: Paradigm,
+        job: &CompileJob,
+    ) -> Option<Arc<CompiledLayer>> {
+        let store = self.store.as_ref()?;
+        let layer = match store.load_layer(hash) {
+            Ok(Some(layer)) => layer,
+            Ok(None) | Err(_) => return None,
+        };
+        let ch = layer.character();
+        if layer.paradigm() != paradigm
+            || ch.n_source != job.n_source
+            || ch.n_target != job.n_target
+        {
+            return None;
+        }
+        self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::new(layer))
+    }
+
+    /// Disk-tier lookup for a shape-only estimate (same contract as
+    /// [`CompilePipeline::artifact_load_layer`]): besides the paradigm
+    /// tag, the estimate must reproduce the closed-form source-hosting
+    /// charges of the requesting job — a mis-keyed or foreign file is a
+    /// miss, not this job's answer.
+    fn artifact_load_estimate(
+        &self,
+        hash: u64,
+        paradigm: Paradigm,
+        job: &CompileJob,
+    ) -> Option<CostEstimate> {
+        let store = self.store.as_ref()?;
+        let est = match store.load_estimate(hash) {
+            Ok(Some(est)) => est,
+            Ok(None) | Err(_) => return None,
+        };
+        let plausible = est.paradigm == paradigm
+            && match paradigm {
+                // Serial hosting costs are a closed form of the job's
+                // shape (mirrors `paradigm::source_hosting_cost`).
+                Paradigm::Serial => {
+                    let hosts = job.n_source.div_ceil(self.pe.serial_neuron_cap);
+                    est.layer_pes >= 1
+                        && est.source_hosting_pes == hosts
+                        && est.source_hosting_dtcm
+                            == 4 * job.n_source + self.pe.os_reserve_bytes * hosts
+                }
+                // Parallel: one dominant + at least one subordinate, no
+                // source hosting by construction.
+                Paradigm::Parallel => {
+                    est.layer_pes >= 2
+                        && est.source_hosting_pes == 0
+                        && est.source_hosting_dtcm == 0
+                }
+            };
+        if !plausible {
+            return None;
+        }
+        self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+        Some(est)
+    }
+
+    /// Compile one paradigm for one job through the cache tiers (memory →
+    /// disk artifact → compile). Returns the (shared) layer and whether
+    /// this call materialized it (from disk or the compiler) rather than
+    /// finding it in memory.
     fn cached_compile(
         &self,
         paradigm: Paradigm,
         job: &CompileJob,
     ) -> Result<(Arc<CompiledLayer>, bool)> {
+        let key = self.key(paradigm, false, job);
         let slot: CompileSlot = {
             let mut cache = self.cache.lock().expect("compile cache poisoned");
-            cache.compiles.entry(self.key(paradigm, false, job)).or_default().clone()
+            cache.compiles.entry(key).or_default().clone()
         };
         let mut fresh = false;
         let res = slot.get_or_init(|| {
             fresh = true;
+            let hash = key.content_hash();
+            if let Some(layer) = self.artifact_load_layer(hash, paradigm, job) {
+                return Ok(layer);
+            }
             let counter = match paradigm {
                 Paradigm::Serial => &self.stats.serial_compiles,
                 Paradigm::Parallel => &self.stats.parallel_compiles,
             };
             counter.fetch_add(1, Ordering::Relaxed);
-            self.compiler(paradigm)
+            let layer = self
+                .compiler(paradigm)
                 .compile(&job.layer_job(), &self.pe)
                 .map(Arc::new)
-                .map_err(|e| format!("{e:#}"))
+                .map_err(|e| format!("{e:#}"))?;
+            if let Some(store) = &self.store {
+                // Best effort: a failed write leaves the store cold, not
+                // the compile wrong.
+                store.save_layer(hash, &layer).ok();
+            }
+            Ok(layer)
         });
         if !fresh {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -394,24 +545,34 @@ impl CompilePipeline {
         }
     }
 
-    /// Estimate one paradigm for one job through the cache (shape-only —
-    /// the dataset labeler's path).
+    /// Estimate one paradigm for one job through the cache tiers
+    /// (shape-only — the dataset labeler's path).
     fn cached_estimate(&self, paradigm: Paradigm, job: &CompileJob) -> Result<CostEstimate> {
+        let key = self.key(paradigm, true, job);
         let slot: EstimateSlot = {
             let mut cache = self.cache.lock().expect("compile cache poisoned");
-            cache.estimates.entry(self.key(paradigm, true, job)).or_default().clone()
+            cache.estimates.entry(key).or_default().clone()
         };
         let mut fresh = false;
         let res = slot.get_or_init(|| {
             fresh = true;
+            let hash = key.content_hash();
+            if let Some(est) = self.artifact_load_estimate(hash, paradigm, job) {
+                return Ok(est);
+            }
             let counter = match paradigm {
                 Paradigm::Serial => &self.stats.serial_estimates,
                 Paradigm::Parallel => &self.stats.parallel_estimates,
             };
             counter.fetch_add(1, Ordering::Relaxed);
-            self.compiler(paradigm)
+            let est = self
+                .compiler(paradigm)
                 .estimate(&job.layer_job(), &self.pe)
-                .map_err(|e| format!("{e:#}"))
+                .map_err(|e| format!("{e:#}"))?;
+            if let Some(store) = &self.store {
+                store.save_estimate(hash, &est).ok();
+            }
+            Ok(est)
         });
         if !fresh {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -685,6 +846,128 @@ mod tests {
             assert_eq!(got, (0..100).map(|i| i * i).collect::<Vec<_>>());
         }
         assert!(fan_out(4, 0, |i| i).is_empty());
+    }
+
+    fn tmp_artifact_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("s2a-pipe-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn warm_artifact_store_serves_compiles_from_disk() {
+        let dir = tmp_artifact_dir("warm");
+        let projs = probe_projs();
+        let jobs: Vec<CompileJob> = projs
+            .iter()
+            .map(|(ns, nt, p)| CompileJob::new(p, *ns, *nt, LifParams::default()))
+            .collect();
+        let policy = SwitchPolicy::forced(SwitchMode::Ideal);
+
+        // Cold: compiles run and every unique result is persisted.
+        let cold = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        let run_cold = cold.run(&policy, &jobs).unwrap();
+        assert_eq!(run_cold.stats.total_compiles(), 10, "5 unique layers × both paradigms");
+        assert_eq!(run_cold.stats.disk_hits, 0, "an empty store cannot hit");
+
+        // Warm: a *fresh* pipeline (fresh memory cache) over the same
+        // store materializes every layer from disk — zero compiles, and
+        // bit-identical results.
+        let warm = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        let run_warm = warm.run(&policy, &jobs).unwrap();
+        assert_eq!(run_warm.stats.total_compiles(), 0, "warm store must not compile");
+        assert_eq!(run_warm.stats.disk_hits, 10, "both paradigms of 5 unique layers");
+        assert_eq!(run_warm.layers, run_cold.layers, "disk tier must be lossless");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_or_stale_artifacts_recompile_and_heal() {
+        let dir = tmp_artifact_dir("heal");
+        let mut rng = Rng::new(31);
+        let proj = realize_layer(140, 140, 0.5, 4, &mut rng);
+        let job = CompileJob::new(&proj, 140, 140, LifParams::default());
+        let policy = SwitchPolicy::forced(SwitchMode::ForceSerial);
+
+        let cold = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        let run_cold = cold.run(&policy, &[job]).unwrap();
+        assert_eq!(run_cold.stats.serial_compiles, 1);
+
+        // Corrupt every artifact on disk (truncate to half).
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            let bytes = std::fs::read(&path).unwrap();
+            std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        }
+
+        // A fresh pipeline treats the corrupt file as a miss, recompiles,
+        // and atomically overwrites it.
+        let healing = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        let run_heal = healing.run(&policy, &[job]).unwrap();
+        assert_eq!(run_heal.stats.serial_compiles, 1, "corrupt artifact must recompile");
+        assert_eq!(run_heal.stats.disk_hits, 0);
+        assert_eq!(run_heal.layers, run_cold.layers);
+
+        // …after which the store is healthy again.
+        let warm = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        let run_warm = warm.run(&policy, &[job]).unwrap();
+        assert_eq!(run_warm.stats.total_compiles(), 0);
+        assert_eq!(run_warm.stats.disk_hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn estimates_persist_to_the_artifact_store_too() {
+        let dir = tmp_artifact_dir("est");
+        let mut rng = Rng::new(17);
+        let proj = realize_layer(150, 150, 0.4, 6, &mut rng);
+        let job = CompileJob::new(&proj, 150, 150, LifParams::default());
+
+        let cold = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        let (s1, p1) = cold.estimate_pair(&job).unwrap();
+        assert_eq!(cold.stats().total_estimates(), 2);
+
+        let warm = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        let (s2, p2) = warm.estimate_pair(&job).unwrap();
+        assert_eq!((s1, p1), (s2, p2));
+        let stats = warm.stats();
+        assert_eq!(stats.total_estimates(), 0, "warm estimates come from disk");
+        assert_eq!(stats.disk_hits, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn artifact_keys_separate_paradigms_estimates_and_configs() {
+        // Distinct cache keys must map to distinct store files: compile
+        // and estimate both paradigms of one job, then check 4 files.
+        let dir = tmp_artifact_dir("keys");
+        let mut rng = Rng::new(23);
+        let proj = realize_layer(90, 90, 0.5, 3, &mut rng);
+        let job = CompileJob::new(&proj, 90, 90, LifParams::default());
+        let pipeline = CompilePipeline::new(PeSpec::default(), WdmConfig::default())
+            .with_artifact_dir(&dir)
+            .unwrap();
+        pipeline.cached_compile(Paradigm::Serial, &job).unwrap();
+        pipeline.cached_compile(Paradigm::Parallel, &job).unwrap();
+        pipeline.estimate_pair(&job).unwrap();
+        let store = crate::artifact::ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 4, "serial/parallel × compile/estimate");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

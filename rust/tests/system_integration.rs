@@ -260,6 +260,87 @@ fn oversized_network_admits_on_multichip_via_spill_and_fallback() {
 }
 
 #[test]
+fn warm_artifact_store_boots_the_network_without_compiling() {
+    // ISSUE 5 acceptance: `simulate --artifact-dir` on a warm store runs
+    // zero materializing compiles and produces byte-identical behavior.
+    // This is the library-level equivalent of the CI artifact-roundtrip
+    // job: cold admission populates the store, a fresh system (a process
+    // restart, as far as the pipeline can tell) boots entirely from disk.
+    use s2switch::hardware::{MachineSpec, PlacementStrategy};
+
+    let build = || {
+        let mut b = NetworkBuilder::new(41);
+        let inp = b.spike_source("in", 120);
+        let hid = b.lif_population("hid", 90, LifParams::default());
+        let out = b.lif_population("out", 20, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.4),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.9),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.03,
+        );
+        b.build()
+    };
+    let dir = std::env::temp_dir().join(format!("s2a-sysint-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let pe = PeSpec::default();
+
+    let simulate = |layers: Vec<s2switch::switching::CompiledLayer>| {
+        let net = build();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let mut rng = Rng::new(77);
+        let mut provider = move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..120u32).filter(|_| rng.chance(0.15)));
+        };
+        sim.run(80, &mut provider);
+        (
+            sim.recorder.spikes_of(PopulationId(1)).to_vec(),
+            sim.recorder.spikes_of(PopulationId(2)).to_vec(),
+        )
+    };
+
+    // Cold: admission compiles and populates the store.
+    let net = build();
+    let mut cold = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    cold.set_artifact_dir(&dir).unwrap();
+    let adm_cold = cold
+        .admit_network(&net, MachineSpec::default(), PlacementStrategy::ChipPacked)
+        .unwrap();
+    assert!(cold.stats.total_compiles() > 0, "cold boot must compile");
+    assert_eq!(cold.stats.disk_hits, 0);
+
+    // Warm: a fresh system over the same store materializes nothing.
+    let net = build();
+    let mut warm = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    warm.set_artifact_dir(&dir).unwrap();
+    let adm_warm = warm
+        .admit_network(&net, MachineSpec::default(), PlacementStrategy::ChipPacked)
+        .unwrap();
+    assert_eq!(
+        warm.stats.total_compiles(),
+        0,
+        "warm store must run zero materializing compiles (paradigm_compiles == 0)"
+    );
+    assert!(warm.stats.disk_hits > 0, "the win must be attributed to the disk tier");
+    assert_eq!(adm_warm.layers, adm_cold.layers, "artifact boot must be lossless");
+
+    // And the simulated behavior is identical spike for spike.
+    let cold_spikes = simulate(adm_cold.layers);
+    let warm_spikes = simulate(adm_warm.layers);
+    assert_eq!(cold_spikes, warm_spikes, "recorders must match exactly");
+    assert!(!cold_spikes.1.is_empty(), "the probe network must actually spike");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn pipeline_jobs_do_not_change_sweep_labels_or_network_compiles() {
     // End-to-end determinism of the threaded compile pipeline: the labeled
     // corpus and a compiled network must be identical at any worker count.

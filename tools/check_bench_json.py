@@ -10,9 +10,12 @@ placeholder untouched) would upload a null-filled artifact that passes CI.
 Usage:
     check_bench_json.py FILE REQUIRED_KEY [REQUIRED_KEY ...]
 
+REQUIRED_KEY may be a dotted path (e.g. "artifact.speedup") to require a
+key nested inside objects, not just at the top level.
+
 Fails (exit 1) if:
   * FILE is missing or not valid JSON;
-  * any REQUIRED_KEY is absent at the top level;
+  * any REQUIRED_KEY (dotted path) is absent;
   * any value anywhere in the document is null;
   * the placeholder marker key "status" is still present (the bench binary
     never writes it, so its survival means the file was not regenerated).
@@ -34,6 +37,16 @@ def find_nulls(node, path="$"):
             yield from find_nulls(value, f"{path}[{i}]")
 
 
+def has_path(doc, dotted):
+    """True iff the dotted key path resolves through nested objects."""
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return False
+        node = node[part]
+    return True
+
+
 def main(argv):
     if len(argv) < 3:
         print(f"usage: {argv[0]} FILE REQUIRED_KEY [REQUIRED_KEY ...]", file=sys.stderr)
@@ -52,7 +65,7 @@ def main(argv):
             "placeholder marker 'status' still present — the bench did not regenerate this file"
         )
     for key in required:
-        if key not in doc:
+        if not has_path(doc, key):
             errors.append(f"required key '{key}' missing")
     errors.extend(f"null value at {p}" for p in find_nulls(doc))
 
