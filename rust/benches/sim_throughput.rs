@@ -12,7 +12,13 @@
 //! * batch scaling: S samples fanned over 1/2/4/8 `BatchRunner` workers,
 //!   asserting recorders are bit-identical at every worker count;
 //! * intra-sample wave parallelism: `NetworkSim::run_jobs` at 1/2/4 threads
-//!   on a wide 3-layer network, asserting bit-identical recorders.
+//!   on a wide 3-layer network, asserting bit-identical recorders;
+//! * kernel variants: the dispatched LIF / matvec kernels (simd under
+//!   `--features simd`, scalar otherwise) vs the always-available scalar
+//!   fallbacks, asserting bit-identical outputs;
+//! * the calibrated-decision sweep: `calibrate::measure()` on this host,
+//!   then the abstract work-item model vs the measured-constant model at
+//!   every sweep rate.
 //!
 //! Writes the machine-readable baseline to `BENCH_sim.json` (override with
 //! `S2SWITCH_BENCH_OUT`), the way compile_time writes `BENCH_compile.json`.
@@ -22,14 +28,20 @@
 //! ```
 
 use s2switch::bench_harness::{Bench, Report};
+use s2switch::costmodel::activity::{runtime_preferred, runtime_preferred_calibrated};
+use s2switch::costmodel::DEFAULT_HYSTERESIS_MARGIN;
 use s2switch::dataset::realize_layer;
 use s2switch::hardware::PeSpec;
 use s2switch::model::connector::{Connector, SynapseDraw};
-use s2switch::model::{LifParams, Network, NetworkBuilder, PopulationId};
+use s2switch::model::lif::{kernel_variant, lif_step_chunked, lif_step_chunked_scalar};
+use s2switch::model::{LayerCharacter, LifParams, Network, NetworkBuilder, PopulationId};
 use s2switch::paradigm::parallel::{compile_parallel, WdmConfig};
 use s2switch::paradigm::serial::compile_serial;
 use s2switch::rng::Rng;
-use s2switch::sim::{BatchRunner, NativeMac, NetworkSim, ParallelLayerEngine, SerialLayerEngine};
+use s2switch::sim::backend::matvec_into_scalar;
+use s2switch::sim::{
+    BatchRunner, MacBackend, NativeMac, NetworkSim, ParallelLayerEngine, SerialLayerEngine,
+};
 use s2switch::switching::{SwitchMode, SwitchingSystem};
 use std::time::Instant;
 
@@ -329,7 +341,145 @@ fn main() {
     }
     rep.finish();
 
-    // ---- Machine-readable baseline (BENCH_sim.json v2) -------------------
+    // ---- Part 6: kernel variants (dispatched vs scalar fallback) ---------
+    // The dispatched kernels are what the engines actually call — simd under
+    // `--features simd`, the scalar fallback otherwise. Outputs must be
+    // bit-identical either way; only the wall clock may differ.
+    let kr_n = 4096usize;
+    let params = LifParams::default();
+    let mut krng = Rng::new(9900);
+    let lif_input: Vec<f32> = (0..kr_n).map(|_| krng.range_i64(-2, 4) as f32 * 0.25).collect();
+    let lif_identical = {
+        let mut v_a = vec![params.v_init; kr_n];
+        let mut v_b = v_a.clone();
+        let mut r_a = vec![0u32; kr_n];
+        let mut r_b = r_a.clone();
+        let (mut s_a, mut s_b) = (Vec::new(), Vec::new());
+        let mut same = true;
+        for _ in 0..64 {
+            s_a.clear();
+            s_b.clear();
+            lif_step_chunked(&params, &mut v_a, &lif_input, &mut r_a, &mut s_a);
+            lif_step_chunked_scalar(&params, &mut v_b, &lif_input, &mut r_b, &mut s_b);
+            same &= s_a == s_b
+                && r_a == r_b
+                && v_a.iter().zip(&v_b).all(|(a, b)| a.to_bits() == b.to_bits());
+        }
+        same
+    };
+    assert!(lif_identical, "dispatched LIF kernel must be bit-identical to scalar");
+
+    let time_lif = |scalar: bool| -> f64 {
+        let mut v = vec![params.v_init; kr_n];
+        let mut refrac = vec![0u32; kr_n];
+        let mut spikes = Vec::new();
+        let mut best = f64::MAX;
+        for _ in 0..(WARMUP + MEASURE) {
+            let t0 = Instant::now();
+            for _ in 0..STEPS {
+                if scalar {
+                    lif_step_chunked_scalar(&params, &mut v, &lif_input, &mut refrac, &mut spikes);
+                } else {
+                    lif_step_chunked(&params, &mut v, &lif_input, &mut refrac, &mut spikes);
+                }
+                std::hint::black_box(&spikes);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        (STEPS * kr_n) as f64 / best
+    };
+    let lif_dispatched_nsps = time_lif(false);
+    let lif_scalar_nsps = time_lif(true);
+
+    let (mr, mc) = (512usize, 255usize);
+    let mweights: Vec<f32> = (0..mr * mc).map(|_| krng.range_i64(-8, 8) as f32).collect();
+    let mstacked: Vec<f32> = (0..mr)
+        .map(|_| if krng.chance(0.5) { krng.range_i64(1, 4) as f32 } else { 0.0 })
+        .collect();
+    let mut native = NativeMac;
+    let mut out_a = vec![0.0f32; mc];
+    let mut out_b = vec![0.0f32; mc];
+    let issued_a = native.matvec_into(&mut out_a, &mstacked, &mweights, mr, mc);
+    let issued_b = matvec_into_scalar(&mut out_b, &mstacked, &mweights, mr, mc);
+    let matvec_identical = issued_a == issued_b
+        && out_a.iter().zip(&out_b).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(matvec_identical, "dispatched matvec must be bit-identical to scalar");
+
+    let mut time_matvec = |scalar: bool| -> f64 {
+        let mut out = vec![0.0f32; mc];
+        let mut best = f64::MAX;
+        for _ in 0..(WARMUP + MEASURE) {
+            let t0 = Instant::now();
+            for _ in 0..STEPS {
+                let issued = if scalar {
+                    matvec_into_scalar(&mut out, &mstacked, &mweights, mr, mc)
+                } else {
+                    native.matvec_into(&mut out, &mstacked, &mweights, mr, mc)
+                };
+                std::hint::black_box((&out, issued));
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        (issued_a * STEPS as u64) as f64 / best
+    };
+    let matvec_dispatched_macs = time_matvec(false);
+    let matvec_scalar_macs = time_matvec(true);
+
+    let mut rep = Report::new(
+        "Kernel variants — dispatched vs scalar fallback (bit-identical outputs)",
+        &["kernel", "variant", "dispatched", "scalar", "speedup", "identical"],
+    );
+    rep.row(vec![
+        format!("LIF {kr_n}n (Mneuron-steps/s)"),
+        kernel_variant().to_string(),
+        format!("{:.2}", lif_dispatched_nsps / 1e6),
+        format!("{:.2}", lif_scalar_nsps / 1e6),
+        format!("{:.2}×", lif_dispatched_nsps / lif_scalar_nsps),
+        lif_identical.to_string(),
+    ]);
+    rep.row(vec![
+        format!("matvec {mr}×{mc} (MMAC/s)"),
+        native.kernel_variant().to_string(),
+        format!("{:.2}", matvec_dispatched_macs / 1e6),
+        format!("{:.2}", matvec_scalar_macs / 1e6),
+        format!("{:.2}×", matvec_dispatched_macs / matvec_scalar_macs),
+        matvec_identical.to_string(),
+    ]);
+    rep.finish();
+
+    // ---- Part 7: calibrated-decision sweep -------------------------------
+    // Measure this host's real constants, then compare the abstract
+    // work-item tie-break against the calibrated one at every sweep rate.
+    let cal = s2switch::calibrate::measure();
+    println!(
+        "calibration ({}): {:.2} Mevents/s serial | {:.2} MMAC/s parallel | \
+         {:.2} Mneuron-steps/s LIF",
+        cal.kernel_variant,
+        cal.serial_events_per_sec / 1e6,
+        cal.parallel_macs_per_sec / 1e6,
+        cal.lif_neuron_steps_per_sec / 1e6
+    );
+    let ch = LayerCharacter::new(src, tgt, d, dl);
+    let mut rep = Report::new(
+        "Calibrated paradigm decisions — 255×255 d=0.5 delay=8 tie-break",
+        &["rate", "work-item model", "calibrated", "agree"],
+    );
+    let mut decision_rows: Vec<(f64, String, String, bool)> = Vec::new();
+    for &rate in &RATES {
+        let model = runtime_preferred(&ch, rate);
+        let measured = runtime_preferred_calibrated(&ch, rate, &cal, DEFAULT_HYSTERESIS_MARGIN);
+        let agree = model == measured;
+        rep.row(vec![
+            format!("{rate:.2}"),
+            model.to_string(),
+            measured.to_string(),
+            if agree { "✓".into() } else { "≠".into() },
+        ]);
+        decision_rows.push((rate, model.to_string(), measured.to_string(), agree));
+    }
+    rep.finish();
+
+    // ---- Machine-readable baseline (BENCH_sim.json v3) -------------------
     let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into());
     let jobs_rows = |rows: &[(usize, u64, f64, f64, bool)]| -> String {
         rows.iter()
@@ -349,8 +499,31 @@ fn main() {
             )
         })
         .collect();
+    let decisions_json: Vec<String> = decision_rows
+        .iter()
+        .map(|(rate, model, measured, agree)| {
+            format!(
+                "      {{ \"rate\": {rate}, \"model\": \"{model}\", \"calibrated\": \"{measured}\", \"agree\": {agree} }}"
+            )
+        })
+        .collect();
+    let kernels_json = format!(
+        "  \"kernels\": {{\n    \"lif\": {{\n      \"variant\": \"{}\",\n      \"neurons\": {kr_n},\n      \"dispatched_neuron_steps_per_s\": {lif_dispatched_nsps:.1},\n      \"scalar_neuron_steps_per_s\": {lif_scalar_nsps:.1},\n      \"speedup\": {:.4},\n      \"identical\": {lif_identical}\n    }},\n    \"matvec\": {{\n      \"variant\": \"{}\",\n      \"shape\": \"{mr}x{mc}\",\n      \"dispatched_macs_per_s\": {matvec_dispatched_macs:.1},\n      \"scalar_macs_per_s\": {matvec_scalar_macs:.1},\n      \"speedup\": {:.4},\n      \"identical\": {matvec_identical}\n    }}\n  }}",
+        kernel_variant(),
+        lif_dispatched_nsps / lif_scalar_nsps,
+        native.kernel_variant(),
+        matvec_dispatched_macs / matvec_scalar_macs,
+    );
+    let calibrated_json = format!(
+        "  \"calibrated\": {{\n    \"constants\": {{\n      \"kernel_variant\": \"{}\",\n      \"serial_events_per_sec\": {:.1},\n      \"parallel_macs_per_sec\": {:.1},\n      \"lif_neuron_steps_per_sec\": {:.1}\n    }},\n    \"hysteresis_margin\": {DEFAULT_HYSTERESIS_MARGIN},\n    \"decisions\": [\n{}\n    ]\n  }}",
+        cal.kernel_variant,
+        cal.serial_events_per_sec,
+        cal.parallel_macs_per_sec,
+        cal.lif_neuron_steps_per_sec,
+        decisions_json.join(",\n"),
+    );
     let json = format!(
-        "{{\n  \"bench\": \"sim_throughput\",\n  \"schema_version\": 2,\n  \"e2e\": {{\n    \"network\": \"demo 200-120-20\",\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"e2e_low_rate\": {{\n    \"network\": \"demo 200-120-20\",\n    \"rate\": 0.10,\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"rate_sweep\": {{\n    \"layer\": \"255x255 d=0.5 delay=8\",\n    \"steps\": {},\n    \"points\": [\n{}\n    ]\n  }},\n  \"batch\": {{\n    \"samples\": {},\n    \"steps_per_sample\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n  \"intra\": {{\n    \"network\": \"wide 256-4x160-32\",\n    \"steps\": {},\n    \"runs\": [\n{}\n    ]\n  }}\n}}\n",
+        "{{\n  \"bench\": \"sim_throughput\",\n  \"schema_version\": 3,\n  \"e2e\": {{\n    \"network\": \"demo 200-120-20\",\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"e2e_low_rate\": {{\n    \"network\": \"demo 200-120-20\",\n    \"rate\": 0.10,\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"rate_sweep\": {{\n    \"layer\": \"255x255 d=0.5 delay=8\",\n    \"steps\": {},\n    \"points\": [\n{}\n    ]\n  }},\n  \"batch\": {{\n    \"samples\": {},\n    \"steps_per_sample\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n  \"intra\": {{\n    \"network\": \"wide 256-4x160-32\",\n    \"steps\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n{},\n{}\n}}\n",
         STEPS,
         e2e_p50,
         e2e_steps_s,
@@ -368,6 +541,8 @@ fn main() {
         jobs_rows(&batch_rows),
         STEPS,
         jobs_rows(&intra_rows),
+        kernels_json,
+        calibrated_json,
     );
     match std::fs::write(&out, &json) {
         Ok(()) => println!("baseline written to {out}"),

@@ -1,0 +1,275 @@
+//! Host calibration: measure what this machine's kernels actually retire.
+//!
+//! [`crate::costmodel::activity`] prices paradigms in abstract work items
+//! (synaptic events, MAC-array issues) and historically assumed they cost
+//! the same — a fiction the explicit-SIMD kernels make untenable, since the
+//! MAC path speeds up far more than event dispatch does. `s2switch
+//! calibrate` closes the loop: it micro-benchmarks the *real* engines on a
+//! reference layer (the same 255 × 255, density 0.5, delay 8 workload the
+//! throughput benches sweep), measures
+//!
+//! * serial synaptic **events/s** (event-driven dispatch + ring readout),
+//! * parallel scalar **MACs/s** (stacked-slot matvec on the active
+//!   [`MacBackend`](crate::sim::MacBackend) kernel), and
+//! * LIF **neuron-steps/s** (the chunked membrane kernel, for context),
+//!
+//! and persists them as [`CalibrationConstants`] in `calibration.json` next
+//! to the artifact store. `simulate` auto-loads the file and threads the
+//! constants into
+//! [`runtime_preferred_calibrated`](crate::costmodel::activity::runtime_preferred_calibrated)
+//! and [`SwitchPolicy::decide_with_rate`](crate::switching::SwitchPolicy),
+//! so paradigm decisions track measured hardware instead of the static
+//! one-event-per-MAC assumption. The constants record which kernel variant
+//! (`scalar` / `simd`) produced them; a build-feature mismatch at load time
+//! is reported so stale constants are visible.
+
+use crate::costmodel::activity::CalibrationConstants;
+use crate::dataset::realize_layer;
+use crate::hardware::PeSpec;
+use crate::io::json::Json;
+use crate::model::lif::{kernel_variant, lif_step_chunked, LifParams};
+use crate::paradigm::parallel::{compile_parallel, WdmConfig};
+use crate::paradigm::serial::compile_serial;
+use crate::rng::Rng;
+use crate::sim::{NativeMac, ParallelLayerEngine, SerialLayerEngine, SpikeWords};
+use anyhow::{anyhow, Context};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// File name the constants persist under, next to the artifact store.
+pub const CALIBRATION_FILE: &str = "calibration.json";
+
+/// Schema version written to (and required from) the constants file.
+pub const CALIBRATION_SCHEMA: u32 = 1;
+
+/// The reference workload every measurement runs on: the throughput
+/// benches' 255 × 255 sweep layer at density 0.5, delay range 8, with a
+/// 20% Bernoulli stimulus — active enough that neither engine's sparsity
+/// gating short-circuits the work being priced.
+const CAL_N: usize = 255;
+const CAL_DENSITY: f64 = 0.5;
+const CAL_DELAY: u16 = 8;
+const CAL_RATE: f64 = 0.2;
+const CAL_SEED: u64 = 0x5ca1e;
+
+/// Steps per measurement repetition (plus one warmup repetition); three
+/// repetitions are taken and the fastest kept, damping scheduler noise the
+/// way min-of-N bench harnesses do.
+const CAL_STEPS: usize = 120;
+const CAL_REPS: usize = 3;
+
+fn stimulus(rng: &mut Rng) -> Vec<u32> {
+    (0..CAL_N as u32).filter(|_| rng.chance(CAL_RATE)).collect()
+}
+
+/// Micro-benchmark the host's kernels and return the measured constants.
+/// Takes a few hundred milliseconds; pure CPU, no filesystem access.
+pub fn measure() -> CalibrationConstants {
+    let mut rng = Rng::new(CAL_SEED);
+    let proj = realize_layer(CAL_N, CAL_N, CAL_DENSITY, CAL_DELAY, &mut rng);
+    let pe = PeSpec::default();
+
+    // Pre-draw the stimulus (packed once per step, like NetworkSim does)
+    // so provider randomness is outside the timed region.
+    let stim: Vec<SpikeWords> = (0..CAL_STEPS)
+        .map(|_| {
+            let mut w = SpikeWords::new(CAL_N);
+            w.fill_from_ids(&stimulus(&mut rng));
+            w
+        })
+        .collect();
+
+    // Serial events/s.
+    let compiled = compile_serial(&proj, CAL_N, CAL_N, LifParams::default(), &pe)
+        .expect("calibration layer must compile serially");
+    let mut serial = SerialLayerEngine::new(compiled, CAL_N);
+    let mut serial_rate = 0.0f64;
+    for rep in 0..=CAL_REPS {
+        let events0 = serial.events;
+        let t0 = Instant::now();
+        for words in &stim {
+            serial.step_currents_words(words);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        if rep > 0 {
+            // rep 0 is warmup
+            serial_rate = serial_rate.max((serial.events - events0) as f64 / secs.max(1e-9));
+        }
+    }
+
+    // Parallel MACs/s.
+    let compiled = compile_parallel(
+        &proj,
+        CAL_N,
+        CAL_N,
+        LifParams::default(),
+        &pe,
+        WdmConfig::default(),
+    )
+    .expect("calibration layer must compile in parallel");
+    let mut parallel = ParallelLayerEngine::new(compiled, Box::new(NativeMac));
+    let mut parallel_rate = 0.0f64;
+    for rep in 0..=CAL_REPS {
+        let macs0 = parallel.macs;
+        let t0 = Instant::now();
+        for words in &stim {
+            parallel.step_currents_words(words);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        if rep > 0 {
+            parallel_rate = parallel_rate.max((parallel.macs - macs0) as f64 / secs.max(1e-9));
+        }
+    }
+
+    // LIF neuron-steps/s on a population sized like the reference layer.
+    let params = LifParams::default();
+    let mut v = vec![params.v_init; CAL_N];
+    let mut refrac = vec![0u32; CAL_N];
+    let input: Vec<f32> = (0..CAL_N).map(|_| rng.range_f64(0.0, 0.6) as f32).collect();
+    let mut spikes = Vec::new();
+    let mut lif_rate = 0.0f64;
+    for rep in 0..=CAL_REPS {
+        let t0 = Instant::now();
+        for _ in 0..CAL_STEPS {
+            lif_step_chunked(&params, &mut v, &input, &mut refrac, &mut spikes);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        if rep > 0 {
+            lif_rate = lif_rate.max((CAL_STEPS * CAL_N) as f64 / secs.max(1e-9));
+        }
+    }
+
+    CalibrationConstants {
+        serial_events_per_sec: serial_rate,
+        parallel_macs_per_sec: parallel_rate,
+        lif_neuron_steps_per_sec: lif_rate,
+        kernel_variant: kernel_variant().to_string(),
+    }
+}
+
+/// `dir/calibration.json` — where [`save`] writes and
+/// [`load_from_dir`] looks.
+pub fn path_in(dir: &Path) -> PathBuf {
+    dir.join(CALIBRATION_FILE)
+}
+
+/// Persist constants as JSON (creates `path`'s parent directory if needed).
+pub fn save(path: &Path, c: &CalibrationConstants) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let json = Json::obj(vec![
+        ("schema_version", Json::Num(CALIBRATION_SCHEMA as f64)),
+        ("kernel_variant", Json::Str(c.kernel_variant.clone())),
+        ("serial_events_per_sec", Json::Num(c.serial_events_per_sec)),
+        ("parallel_macs_per_sec", Json::Num(c.parallel_macs_per_sec)),
+        ("lif_neuron_steps_per_sec", Json::Num(c.lif_neuron_steps_per_sec)),
+    ]);
+    std::fs::write(path, json.to_string_compact() + "\n")
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Load constants from a file written by [`save`].
+pub fn load(path: &Path) -> crate::Result<CalibrationConstants> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let json = Json::parse(&text)
+        .map_err(|e| anyhow!("{}: invalid calibration JSON: {e}", path.display()))?;
+    let version = json
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("{}: missing schema_version", path.display()))?;
+    if version as u32 != CALIBRATION_SCHEMA {
+        return Err(anyhow!(
+            "{}: calibration schema {version} unsupported (want {CALIBRATION_SCHEMA}) — re-run `s2switch calibrate`",
+            path.display()
+        ));
+    }
+    let num = |key: &str| {
+        json.get(key)
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite() && *x > 0.0)
+            .ok_or_else(|| anyhow!("{}: missing or non-positive {key}", path.display()))
+    };
+    Ok(CalibrationConstants {
+        serial_events_per_sec: num("serial_events_per_sec")?,
+        parallel_macs_per_sec: num("parallel_macs_per_sec")?,
+        lif_neuron_steps_per_sec: num("lif_neuron_steps_per_sec")?,
+        kernel_variant: json
+            .get("kernel_variant")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string(),
+    })
+}
+
+/// Best-effort load from an artifact directory: `None` when no constants
+/// file exists there (the caller falls back to the abstract work-item
+/// model); a *corrupt* file is an error the caller should surface rather
+/// than silently decide without.
+pub fn load_from_dir(dir: &Path) -> crate::Result<Option<CalibrationConstants>> {
+    let path = path_in(dir);
+    if !path.exists() {
+        return Ok(None);
+    }
+    load(&path).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_positive_rates_on_the_active_kernel() {
+        let c = measure();
+        assert!(c.serial_events_per_sec > 0.0);
+        assert!(c.parallel_macs_per_sec > 0.0);
+        assert!(c.lif_neuron_steps_per_sec > 0.0);
+        assert_eq!(c.kernel_variant, kernel_variant());
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let dir = std::env::temp_dir().join("s2switch_cal_roundtrip");
+        let path = path_in(&dir);
+        let c = CalibrationConstants {
+            serial_events_per_sec: 1.5e8,
+            parallel_macs_per_sec: 9.25e9,
+            lif_neuron_steps_per_sec: 4.0e8,
+            kernel_variant: "scalar".to_string(),
+        };
+        save(&path, &c).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_bad_schema() {
+        let dir = std::env::temp_dir().join("s2switch_cal_reject");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = path_in(&dir);
+        std::fs::write(&path, "not json").unwrap();
+        assert!(load(&path).is_err());
+        assert!(load_from_dir(&dir).is_err(), "corrupt file must not be silently skipped");
+        std::fs::write(&path, r#"{"schema_version":99}"#).unwrap();
+        assert!(load(&path).unwrap_err().to_string().contains("schema"));
+        std::fs::write(
+            &path,
+            r#"{"schema_version":1,"kernel_variant":"scalar","serial_events_per_sec":0,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
+        )
+        .unwrap();
+        assert!(load(&path).is_err(), "non-positive rates are invalid");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_loads_as_none() {
+        let dir = std::env::temp_dir().join("s2switch_cal_missing_definitely_absent");
+        assert!(load_from_dir(&dir).unwrap().is_none());
+    }
+}

@@ -69,10 +69,87 @@ pub fn step_cost(paradigm: Paradigm, ch: &LayerCharacter, rate: f64) -> f64 {
     }
 }
 
-/// The paradigm with less per-step work at this firing rate (ties to
-/// serial, mirroring [`crate::switching::SwitchPolicy::cheaper`]).
+/// Default hysteresis margin for [`runtime_preferred`]: parallel must beat
+/// serial by this relative fraction before the preference flips away from
+/// the serial default. A strict `<` flipped paradigms on epsilon-sized cost
+/// differences, which is exactly the instability a runtime re-switcher
+/// (ROADMAP item 4) cannot afford — every flip costs a reconfiguration.
+pub const DEFAULT_HYSTERESIS_MARGIN: f64 = 0.05;
+
+/// The paradigm with less per-step work at this firing rate, with the
+/// default hysteresis margin (ties and near-ties go to serial, mirroring
+/// [`crate::switching::SwitchPolicy::cheaper`]).
 pub fn runtime_preferred(ch: &LayerCharacter, rate: f64) -> Paradigm {
-    if parallel_mac_issues_per_step(ch, rate) < serial_events_per_step(ch, rate) {
+    runtime_preferred_with_margin(ch, rate, DEFAULT_HYSTERESIS_MARGIN)
+}
+
+/// [`runtime_preferred`] with an explicit relative margin: parallel is
+/// preferred only when `parallel < serial · (1 − margin)`. `margin = 0.0`
+/// recovers the historical strict-`<` behavior.
+pub fn runtime_preferred_with_margin(
+    ch: &LayerCharacter,
+    rate: f64,
+    margin: f64,
+) -> Paradigm {
+    let serial = serial_events_per_step(ch, rate);
+    let parallel = parallel_mac_issues_per_step(ch, rate);
+    if parallel < serial * (1.0 - margin) {
+        Paradigm::Parallel
+    } else {
+        Paradigm::Serial
+    }
+}
+
+/// Measured per-second throughput constants produced by `s2switch
+/// calibrate` ([`crate::calibrate`]): how many work items of each kind this
+/// host actually retires per second, per kernel variant. They convert the
+/// abstract work-item costs above into seconds, so the runtime preference
+/// can track real hardware instead of assuming one synaptic event ≈ one
+/// MAC-array issue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationConstants {
+    /// Synaptic events the serial engine processes per second.
+    pub serial_events_per_sec: f64,
+    /// Scalar multiply-accumulates the MAC backend issues per second.
+    pub parallel_macs_per_sec: f64,
+    /// LIF neuron-steps per second (context for profiling output; not part
+    /// of the paradigm decision, which prices only projection work).
+    pub lif_neuron_steps_per_sec: f64,
+    /// Which kernel the constants were measured on (`"scalar"`, `"simd"`).
+    pub kernel_variant: String,
+}
+
+impl CalibrationConstants {
+    /// Measured seconds per step under the serial paradigm.
+    pub fn serial_step_seconds(&self, ch: &LayerCharacter, rate: f64) -> f64 {
+        serial_events_per_step(ch, rate) / self.serial_events_per_sec.max(1.0)
+    }
+
+    /// Measured seconds per step under the parallel paradigm. Work items
+    /// are 4×16 array issues; the backend constant counts scalar MACs, so
+    /// issues convert at [`MACS_PER_ISSUE`].
+    pub fn parallel_step_seconds(&self, ch: &LayerCharacter, rate: f64) -> f64 {
+        parallel_mac_issues_per_step(ch, rate) * MACS_PER_ISSUE
+            / self.parallel_macs_per_sec.max(1.0)
+    }
+}
+
+/// Scalar MACs per 4×16 array issue.
+pub const MACS_PER_ISSUE: f64 = MAC_ARRAY_ROWS * MAC_ARRAY_COLS;
+
+/// [`runtime_preferred_with_margin`] on *measured seconds* instead of
+/// abstract work items: the calibrated decision `s2switch calibrate`
+/// unlocks. Parallel is preferred only when its measured step time beats
+/// serial's by the relative margin.
+pub fn runtime_preferred_calibrated(
+    ch: &LayerCharacter,
+    rate: f64,
+    cal: &CalibrationConstants,
+    margin: f64,
+) -> Paradigm {
+    let serial = cal.serial_step_seconds(ch, rate);
+    let parallel = cal.parallel_step_seconds(ch, rate);
+    if parallel < serial * (1.0 - margin) {
         Paradigm::Parallel
     } else {
         Paradigm::Serial
@@ -132,6 +209,76 @@ mod tests {
         assert_eq!(
             step_cost(Paradigm::Parallel, &ch, 0.2),
             parallel_mac_issues_per_step(&ch, 0.2)
+        );
+    }
+
+    #[test]
+    fn hysteresis_margin_keeps_near_ties_serial() {
+        // Find a rate where parallel wins by under 10%: margin 0.0 flips to
+        // parallel, a 15% margin holds serial, and the clear-win pole stays
+        // parallel under any reasonable margin.
+        let dense = LayerCharacter::new(255, 255, 1.0, 1);
+        let serial = serial_events_per_step(&dense, 0.5);
+        let parallel = parallel_mac_issues_per_step(&dense, 0.5);
+        assert!(parallel < serial * 0.5, "dense@0.5 is a clear parallel win");
+        assert_eq!(
+            runtime_preferred_with_margin(&dense, 0.5, DEFAULT_HYSTERESIS_MARGIN),
+            Paradigm::Parallel
+        );
+        // A synthetic near-tie: pick the rate where serial work equals
+        // parallel work × 1.05 (serial linear in rate ⇒ solvable directly).
+        let p = parallel_mac_issues_per_step(&dense, 1.0);
+        let near_tie_rate = p * 1.05 / (dense.n_source as f64 * dense.n_target as f64);
+        let s = serial_events_per_step(&dense, near_tie_rate);
+        let pp = parallel_mac_issues_per_step(&dense, near_tie_rate);
+        assert!(pp < s, "parallel nominally cheaper at the near-tie rate");
+        assert_eq!(
+            runtime_preferred_with_margin(&dense, near_tie_rate, 0.0),
+            Paradigm::Parallel,
+            "zero margin recovers strict-< behavior"
+        );
+        assert_eq!(
+            runtime_preferred_with_margin(&dense, near_tie_rate, 0.15),
+            Paradigm::Serial,
+            "a 15% margin must hold the serial default on a <5% win"
+        );
+    }
+
+    #[test]
+    fn calibration_constants_flip_the_preference() {
+        let ch = LayerCharacter::new(255, 255, 1.0, 1);
+        // With balanced constants (1 event ≈ 64 MACs per issue, measured at
+        // equal per-second throughput per item) the calibrated decision
+        // mirrors the abstract one at the dense pole.
+        let balanced = CalibrationConstants {
+            serial_events_per_sec: 1e8,
+            parallel_macs_per_sec: 64.0 * 1e8,
+            lif_neuron_steps_per_sec: 1e9,
+            kernel_variant: "scalar".into(),
+        };
+        assert_eq!(
+            runtime_preferred_calibrated(&ch, 0.5, &balanced, DEFAULT_HYSTERESIS_MARGIN),
+            Paradigm::Parallel
+        );
+        // A host whose MAC path measures 1000× slower must flip the same
+        // layer to serial — the whole point of calibration.
+        let slow_mac = CalibrationConstants {
+            parallel_macs_per_sec: 64.0 * 1e5,
+            ..balanced.clone()
+        };
+        assert_eq!(
+            runtime_preferred_calibrated(&ch, 0.5, &slow_mac, DEFAULT_HYSTERESIS_MARGIN),
+            Paradigm::Serial
+        );
+        // And a host whose serial path is the slow one prefers parallel
+        // even at the sparse pole.
+        let slow_serial = CalibrationConstants {
+            serial_events_per_sec: 1e3,
+            ..balanced
+        };
+        assert_eq!(
+            runtime_preferred_calibrated(&ch, 0.005, &slow_serial, DEFAULT_HYSTERESIS_MARGIN),
+            Paradigm::Parallel
         );
     }
 }

@@ -19,7 +19,9 @@ pub mod parallel;
 pub mod serial;
 
 pub use activity::{
-    parallel_mac_issues_per_step, runtime_preferred, serial_events_per_step,
+    parallel_mac_issues_per_step, runtime_preferred, runtime_preferred_calibrated,
+    runtime_preferred_with_margin, serial_events_per_step, CalibrationConstants,
+    DEFAULT_HYSTERESIS_MARGIN,
 };
 pub use parallel::{DominantCost, SubordinateFixedCost};
 pub use serial::{SerialCost, SerialLayout};

@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # s2switch — Fast-Switching Serial/Parallel SNN Compilation for SpiNNaker2
 //!
 //! Reproduction of *"Fast Switching Serial and Parallel Paradigms of SNN
@@ -33,6 +34,11 @@
 //!   checksummed binary codec plus a content-addressed on-disk store that
 //!   turns the compile cache into a second, restart-surviving tier
 //!   (compile once, serve many; `--artifact-dir`).
+//! * [`calibrate`] — host calibration: micro-benchmarks measuring the real
+//!   serial events/s and parallel MACs/s (per kernel variant — scalar or
+//!   `std::simd` behind the `simd` feature), persisted as JSON next to the
+//!   artifact store and threaded into [`costmodel::activity`]'s
+//!   runtime-preference decision (`s2switch calibrate`).
 //! * [`coordinator`] — the leader pipeline tying everything together.
 //!
 //! Offline-environment substitutes (see DESIGN.md §2): [`bench_harness`]
@@ -40,6 +46,7 @@
 
 pub mod artifact;
 pub mod bench_harness;
+pub mod calibrate;
 pub mod classifier;
 pub mod coordinator;
 pub mod costmodel;

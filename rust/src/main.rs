@@ -14,6 +14,7 @@
 //!                   [--machine WxH|light-board] [--strategy S]
 //!                   [--artifact-dir PATH]
 //!                   [--record-csv PATH]      # demo 3-layer network
+//! s2switch calibrate [--artifact-dir PATH] [--out FILE]
 //! ```
 //!
 //! `--jobs N` sets the worker-thread count (0 = one thread per CPU) for
@@ -38,6 +39,12 @@
 //! disk before running and written back after, so a warm store boots the
 //! same network with **zero** materializing compiles — `dataset`
 //! relabeling, `compile`, and `simulate` all share it.
+//! `calibrate` micro-benchmarks this host's real kernels (serial events/s,
+//! parallel MACs/s, LIF neuron-steps/s) and persists the constants as
+//! `calibration.json` next to the artifact store; a later `simulate
+//! --artifact-dir` auto-loads them so the runtime-informed paradigm check
+//! prices the tie-break in measured step seconds instead of abstract work
+//! items.
 
 use anyhow::{bail, ensure, Context, Result};
 use s2switch::coordinator::{
@@ -100,7 +107,7 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [flags]
+const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|calibrate> [flags]
   dataset   --out PATH --small --jobs N --artifact-dir PATH
             generate + label the sweep corpus
   train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
@@ -113,8 +120,14 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate> [fl
             --artifact-dir PATH
             run the demo network end to end (--batch S: S stimulus samples
             through the BatchRunner; --intra-jobs N: per-sample layer
-            parallelism; --profile: per-phase wall-clock breakdown;
+            parallelism; --profile: per-phase wall-clock breakdown plus the
+            kernel variants and calibration constants in play;
             --record-csv: dump recorded spikes)
+  calibrate --artifact-dir PATH --out FILE
+            micro-benchmark this host's kernels (serial events/s, parallel
+            MACs/s, LIF neuron-steps/s) and persist the constants as
+            calibration.json next to the artifact store; simulate
+            auto-loads them for the runtime-informed paradigm check
   (--jobs N: worker threads for compiling, batching and same-wave layer
    stepping, 0 = one per CPU;
    --machine WxH: chip grid, light-board = 8x6; compile/simulate print a
@@ -136,6 +149,7 @@ fn main() -> Result<()> {
         "decide" => cmd_decide(&args),
         "compile" => cmd_compile(&args),
         "simulate" => cmd_simulate(&args),
+        "calibrate" => cmd_calibrate(&args),
         other => bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
 }
@@ -324,6 +338,34 @@ fn cmd_compile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `s2switch calibrate`: micro-benchmark the host's real kernels and
+/// persist the measured constants where `simulate` will find them
+/// (`--out FILE` wins; otherwise `<--artifact-dir>/calibration.json`,
+/// defaulting the directory to `data`).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let out = match args.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => s2switch::calibrate::path_in(std::path::Path::new(
+            args.get("artifact-dir").unwrap_or("data"),
+        )),
+    };
+    println!(
+        "calibrating host kernels (LIF kernel: {})…",
+        s2switch::model::lif::kernel_variant()
+    );
+    let c = s2switch::calibrate::measure();
+    s2switch::calibrate::save(&out, &c)?;
+    println!(
+        "measured: {:.2} Mevents/s serial | {:.2} MMAC/s parallel | \
+         {:.2} Mneuron-steps/s LIF",
+        c.serial_events_per_sec / 1e6,
+        c.parallel_macs_per_sec / 1e6,
+        c.lif_neuron_steps_per_sec / 1e6
+    );
+    println!("constants → {}", out.display());
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let steps: u64 = args.parse_or("steps", 200)?;
     // --config FILE loads a JSON network description; otherwise a built-in
@@ -359,6 +401,23 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
     sys.set_jobs(resolve_jobs(args)?);
     attach_artifact_dir(args, &mut sys)?;
+    // Host calibration constants live next to the artifact store; when
+    // present they re-price the runtime-informed paradigm check in measured
+    // step seconds (run `s2switch calibrate` to produce them).
+    let calibration = match args.get("artifact-dir") {
+        Some(dir) => s2switch::calibrate::load_from_dir(std::path::Path::new(dir))?,
+        None => None,
+    };
+    if let Some(c) = &calibration {
+        let built = s2switch::model::lif::kernel_variant();
+        if c.kernel_variant != built {
+            println!(
+                "warning: calibration constants were measured on the `{}` kernel \
+                 but this binary runs `{built}` — re-run `s2switch calibrate`",
+                c.kernel_variant
+            );
+        }
+    }
     // Capacity-aware admission: prejudge → feasibility check → compile →
     // place + route on the requested machine (Fig. 2's tail).
     let adm = sys.admit_network(&net, parse_machine(args)?, parse_strategy(args)?)?;
@@ -473,9 +532,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         sim.total_events() as f64 / secs,
         sim.total_macs() as f64 / secs,
     );
-    print_activity_report(&sim, &characters);
+    print_activity_report(&sim, &characters, calibration.as_ref());
     if args.has("profile") {
         print_phase_profile(&sim.phase_profile());
+        print_kernel_report(&sim, calibration.as_ref());
     }
     // NoC traffic estimate for the recorded activity.
     let noc = placement
@@ -492,12 +552,27 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// Per-layer observed activity + the runtime-informed paradigm check: the
 /// telemetry loop from execution back into the cost model
 /// (`costmodel::activity`).
-fn print_activity_report(sim: &NetworkSim, characters: &[s2switch::model::LayerCharacter]) {
-    println!("observed activity (runtime-informed cost model):");
+fn print_activity_report(
+    sim: &NetworkSim,
+    characters: &[s2switch::model::LayerCharacter],
+    cal: Option<&s2switch::costmodel::CalibrationConstants>,
+) {
+    match cal {
+        Some(_) => println!("observed activity (runtime-informed cost model, calibrated):"),
+        None => println!("observed activity (runtime-informed cost model):"),
+    }
     for a in sim.layer_activity() {
         let ch = &characters[a.proj];
         let rate = a.firing_rate();
-        let preferred = s2switch::costmodel::activity::runtime_preferred(ch, rate);
+        let preferred = match cal {
+            Some(c) => s2switch::costmodel::activity::runtime_preferred_calibrated(
+                ch,
+                rate,
+                c,
+                s2switch::costmodel::DEFAULT_HYSTERESIS_MARGIN,
+            ),
+            None => s2switch::costmodel::activity::runtime_preferred(ch, rate),
+        };
         let agrees = if preferred == a.paradigm { "✓" } else { "≠" };
         println!(
             "  layer {}: rate {rate:.3} | {} events, {} issued MACs | compiled {} \
@@ -523,6 +598,37 @@ fn print_phase_profile(p: &s2switch::sim::PhaseProfile) {
     row("spike dispatch", p.dispatch_nanos);
     row("LIF update", p.lif_nanos);
     row("recording", p.record_nanos);
+}
+
+/// The `--profile` kernel report: which LIF / MAC-backend kernel variants
+/// actually ran (simd vs scalar, pjrt-aot under `--pjrt`) and the
+/// calibration constants the activity report priced the tie-break with.
+fn print_kernel_report(sim: &NetworkSim, cal: Option<&s2switch::costmodel::CalibrationConstants>) {
+    let backends = sim.backend_kernel_variants();
+    let backend_list = if backends.is_empty() {
+        "none (all layers serial)".to_string()
+    } else {
+        backends.join(", ")
+    };
+    println!(
+        "kernels: LIF `{}` | MAC backend [{}]",
+        s2switch::model::lif::kernel_variant(),
+        backend_list
+    );
+    match cal {
+        Some(c) => println!(
+            "calibration ({} kernel): {:.2} Mevents/s serial | {:.2} MMAC/s parallel | \
+             {:.2} Mneuron-steps/s LIF",
+            c.kernel_variant,
+            c.serial_events_per_sec / 1e6,
+            c.parallel_macs_per_sec / 1e6,
+            c.lif_neuron_steps_per_sec / 1e6
+        ),
+        None => println!(
+            "calibration: none loaded (run `s2switch calibrate --artifact-dir PATH` \
+             and pass the same --artifact-dir here)"
+        ),
+    }
 }
 
 /// The exit throughput report every `simulate` run prints.

@@ -102,12 +102,43 @@ pub fn lif_step_batch(
 }
 
 /// Chunk width of [`lif_step_chunked`]: the spike mask is collected per
-/// 16-neuron window, so the inner loop carries no `Vec::push` branch and
-/// stays auto-vectorizable.
+/// 16-neuron window, so the inner loop carries no `Vec::push` branch — and
+/// the window is exactly one `f32x16` vector for the explicit-SIMD kernel.
 pub const LIF_CHUNK: usize = 16;
 
-/// The production LIF kernel: chunked, branch-free in the arithmetic, and
-/// bit-identical to the [`lif_step`] oracle (property-tested below).
+/// Which kernel implementation [`lif_step_chunked`] (and the native MAC
+/// backend) dispatches to in this build: `"simd"` under the `simd` cargo
+/// feature (`std::simd`, 16-lane f32), `"scalar"` otherwise.
+pub fn kernel_variant() -> &'static str {
+    if cfg!(feature = "simd") {
+        "simd"
+    } else {
+        "scalar"
+    }
+}
+
+/// The production LIF kernel: dispatches to the explicit-SIMD
+/// implementation under the `simd` feature, the scalar chunked kernel
+/// otherwise. Both are bit-identical to the [`lif_step`] oracle
+/// (property-tested below) — the dispatch never changes results, only
+/// instructions.
+#[inline]
+pub fn lif_step_chunked(
+    p: &LifParams,
+    v: &mut [f32],
+    input: &[f32],
+    refrac: &mut [u32],
+    spikes_out: &mut Vec<u32>,
+) {
+    #[cfg(feature = "simd")]
+    lif_step_chunked_simd(p, v, input, refrac, spikes_out);
+    #[cfg(not(feature = "simd"))]
+    lif_step_chunked_scalar(p, v, input, refrac, spikes_out);
+}
+
+/// The always-compiled scalar chunked kernel — the fallback every build
+/// carries (and the equivalence oracle for the SIMD kernel): chunked,
+/// branch-free in the arithmetic, auto-vectorizable.
 ///
 /// Two paths:
 /// * `t_refrac == 0` (the common sweep configuration) — the refractory
@@ -119,7 +150,7 @@ pub const LIF_CHUNK: usize = 16;
 ///
 /// Spike indices are collected from a per-chunk bitmask after each window,
 /// keeping the unpredictable `push` out of the arithmetic loop.
-pub fn lif_step_chunked(
+pub fn lif_step_chunked_scalar(
     p: &LifParams,
     v: &mut [f32],
     input: &[f32],
@@ -168,6 +199,108 @@ pub fn lif_step_chunked(
             push_spike_mask(spikes_out, base, mask);
             base += LIF_CHUNK;
         }
+    }
+}
+
+/// The explicit-SIMD LIF kernel (`std::simd`, one `f32x16` vector per
+/// [`LIF_CHUNK`] window; `simd` feature only).
+///
+/// **Bit-identity contract** with [`lif_step_chunked_scalar`] (and hence the
+/// [`lif_step`] oracle), property-tested below:
+/// * the membrane update keeps the scalar association
+///   `(input + alpha·v) + i_offset` — separate multiply then adds, never a
+///   fused multiply-add (`std::simd` lane ops are strict IEEE-754 and do
+///   not contract);
+/// * the subtractive reset subtracts a selected `{v_th, 0.0}` per lane,
+///   exactly the scalar `v_new − fired·v_th` (and `x − 0.0 == x` for every
+///   f32, including −0.0);
+/// * spike masks come from [`std::simd::Mask::to_bitmask`], whose lane→bit
+///   order matches the scalar `fired << j` accumulation.
+///
+/// Slice tails shorter than a full vector run the scalar window body.
+#[cfg(feature = "simd")]
+pub fn lif_step_chunked_simd(
+    p: &LifParams,
+    v: &mut [f32],
+    input: &[f32],
+    refrac: &mut [u32],
+    spikes_out: &mut Vec<u32>,
+) {
+    use std::simd::prelude::*;
+
+    assert_eq!(v.len(), input.len());
+    assert_eq!(v.len(), refrac.len());
+    spikes_out.clear();
+    let alpha = f32x16::splat(p.alpha);
+    let i_offset = f32x16::splat(p.i_offset);
+    let v_th = f32x16::splat(p.v_th);
+    let zero = f32x16::splat(0.0);
+    let n_full = (v.len() / LIF_CHUNK) * LIF_CHUNK;
+    let mut base = 0usize;
+    if p.t_refrac == 0 {
+        debug_assert!(
+            refrac.iter().all(|&r| r == 0),
+            "t_refrac == 0 implies no neuron is refractory"
+        );
+        while base < n_full {
+            let vs = &mut v[base..base + LIF_CHUNK];
+            let vv = f32x16::from_slice(vs);
+            let iv = f32x16::from_slice(&input[base..base + LIF_CHUNK]);
+            let v_new = iv + alpha * vv + i_offset;
+            let fired = v_new.simd_ge(v_th);
+            (v_new - fired.select(v_th, zero)).copy_to_slice(vs);
+            push_spike_mask(spikes_out, base, fired.to_bitmask() as u32);
+            base += LIF_CHUNK;
+        }
+        // Tail: the scalar window body on the final partial chunk.
+        let mut mask = 0u32;
+        for (j, (vj, &ij)) in v[n_full..].iter_mut().zip(&input[n_full..]).enumerate() {
+            let v_new = ij + p.alpha * *vj + p.i_offset;
+            let fired = (v_new >= p.v_th) as u32;
+            *vj = v_new - fired as f32 * p.v_th;
+            mask |= fired << j;
+        }
+        push_spike_mask(spikes_out, base, mask);
+    } else {
+        let v_rest = f32x16::splat(p.v_rest);
+        let t_refrac = u32x16::splat(p.t_refrac);
+        let zero_u = u32x16::splat(0);
+        let one_u = u32x16::splat(1);
+        while base < n_full {
+            let vs = &mut v[base..base + LIF_CHUNK];
+            let rs = &mut refrac[base..base + LIF_CHUNK];
+            let rv = u32x16::from_slice(rs);
+            let active = rv.simd_eq(zero_u);
+            let vv = f32x16::from_slice(vs);
+            let iv = f32x16::from_slice(&input[base..base + LIF_CHUNK]);
+            let v_new = iv + alpha * vv + i_offset;
+            let fired = active & v_new.simd_ge(v_th);
+            let vf = v_new - fired.select(v_th, zero);
+            active.select(vf, v_rest).copy_to_slice(vs);
+            // Inactive lanes count down (the wrapping r−1 on r==0 lanes is
+            // discarded by the select, exactly like the scalar branch).
+            let r_next = active.select(fired.select(t_refrac, zero_u), rv - one_u);
+            r_next.copy_to_slice(rs);
+            push_spike_mask(spikes_out, base, fired.to_bitmask() as u32);
+            base += LIF_CHUNK;
+        }
+        let mut mask = 0u32;
+        for (j, ((vj, &ij), rj)) in v[n_full..]
+            .iter_mut()
+            .zip(&input[n_full..])
+            .zip(refrac[n_full..].iter_mut())
+            .enumerate()
+        {
+            let r = *rj;
+            let active = r == 0;
+            let v_new = ij + p.alpha * *vj + p.i_offset;
+            let fired = active & (v_new >= p.v_th);
+            let vf = v_new - fired as u32 as f32 * p.v_th;
+            *vj = if active { vf } else { p.v_rest };
+            *rj = if active { fired as u32 * p.t_refrac } else { r - 1 };
+            mask |= (fired as u32) << j;
+        }
+        push_spike_mask(spikes_out, base, mask);
     }
 }
 
@@ -235,21 +368,29 @@ mod tests {
         }
     }
 
-    /// Run both kernels over the same evolving state for `steps` steps and
-    /// demand bit-identical trajectories (voltages, counters, spike ids).
+    /// Run the oracle, the scalar chunked kernel, and the dispatched kernel
+    /// (the SIMD implementation under `--features simd`) over the same
+    /// evolving state for `steps` steps and demand bit-identical
+    /// trajectories (voltages, counters, spike ids) from all three.
     fn chunked_matches_oracle(p: &LifParams, n: usize, steps: usize, seed: u64) -> bool {
         let mut rng = crate::rng::Rng::new(seed);
         let mut v_a = vec![p.v_init; n];
         let mut v_b = v_a.clone();
+        let mut v_c = v_a.clone();
         let mut r_a = vec![0u32; n];
         let mut r_b = r_a.clone();
-        let (mut s_a, mut s_b) = (Vec::new(), Vec::new());
+        let mut r_c = r_a.clone();
+        let (mut s_a, mut s_b, mut s_c) = (Vec::new(), Vec::new(), Vec::new());
         for _ in 0..steps {
             let input: Vec<f32> =
                 (0..n).map(|_| (rng.range_f64(-0.4, 1.2)) as f32).collect();
             lif_step_batch(p, &mut v_a, &input, &mut r_a, &mut s_a);
-            lif_step_chunked(p, &mut v_b, &input, &mut r_b, &mut s_b);
+            lif_step_chunked_scalar(p, &mut v_b, &input, &mut r_b, &mut s_b);
+            lif_step_chunked(p, &mut v_c, &input, &mut r_c, &mut s_c);
             if v_a != v_b || r_a != r_b || s_a != s_b {
+                return false;
+            }
+            if v_a != v_c || r_a != r_c || s_a != s_c {
                 return false;
             }
         }
@@ -289,6 +430,53 @@ mod tests {
         for n in [0, 1, LIF_CHUNK - 1, LIF_CHUNK, LIF_CHUNK + 1, 4 * LIF_CHUNK] {
             assert!(chunked_matches_oracle(&p, n, 10, 42 + n as u64), "n={n}");
         }
+    }
+
+    #[test]
+    fn kernel_variant_matches_build_features() {
+        let expect = if cfg!(feature = "simd") { "simd" } else { "scalar" };
+        assert_eq!(kernel_variant(), expect);
+    }
+
+    /// Direct scalar-vs-SIMD equivalence (not through the dispatcher):
+    /// random parameters, sizes straddling the vector width, refractory
+    /// periods on and off.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_kernel_is_bit_identical_to_scalar() {
+        use crate::prop::Prop;
+        Prop::new("lif_step_chunked_simd ≡ scalar", 60).check(
+            |g| {
+                let p = LifParams {
+                    alpha: g.f64(0.5, 1.0) as f32,
+                    v_th: g.f64(0.5, 1.5) as f32,
+                    v_rest: g.f64(-0.2, 0.2) as f32,
+                    t_refrac: g.usize(0, 4) as u32,
+                    i_offset: g.f64(-0.1, 0.3) as f32,
+                    v_init: g.f64(-0.5, 0.5) as f32,
+                    ..Default::default()
+                };
+                (p, g.usize(0, 3 * LIF_CHUNK + 5), g.i64(1, 1 << 20) as u64)
+            },
+            |&(p, n, seed)| {
+                let mut rng = crate::rng::Rng::new(seed);
+                let mut v_s = vec![p.v_init; n];
+                let mut v_v = v_s.clone();
+                let mut r_s = vec![0u32; n];
+                let mut r_v = r_s.clone();
+                let (mut s_s, mut s_v) = (Vec::new(), Vec::new());
+                for _ in 0..12 {
+                    let input: Vec<f32> =
+                        (0..n).map(|_| (rng.range_f64(-0.4, 1.2)) as f32).collect();
+                    lif_step_chunked_scalar(&p, &mut v_s, &input, &mut r_s, &mut s_s);
+                    lif_step_chunked_simd(&p, &mut v_v, &input, &mut r_v, &mut s_v);
+                    if v_s != v_v || r_s != r_v || s_s != s_v {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 
     #[test]

@@ -183,6 +183,13 @@ impl MacBackend for PjrtMac {
     fn name(&self) -> &'static str {
         "pjrt"
     }
+
+    /// The MAC inner loop is the AOT-compiled JAX/Pallas HLO — neither the
+    /// scalar nor the `std::simd` native kernel, so profile output gets its
+    /// own label (the `simd` feature changes nothing on this path).
+    fn kernel_variant(&self) -> &'static str {
+        "pjrt-aot"
+    }
 }
 
 /// Convenience: run the fused LIF-step artifact (used by the e2e example and

@@ -56,9 +56,74 @@ pub trait MacBackend {
 
     /// Backend label for logs/benches.
     fn name(&self) -> &'static str;
+
+    /// Which inner-loop implementation this backend runs (`"scalar"`,
+    /// `"simd"`, …) — so bench/profile output is attributable to a kernel.
+    fn kernel_variant(&self) -> &'static str {
+        "scalar"
+    }
 }
 
-/// Plain Rust matvec — the default backend.
+/// `out[c] += s · row[c]` — the scalar MAC inner loop (always compiled; the
+/// bit-identity oracle for [`axpy_simd`] and the kernel benches' baseline).
+#[inline]
+fn axpy_scalar(out: &mut [f32], row: &[f32], s: f32) {
+    for (o, &w) in out.iter_mut().zip(row) {
+        *o += s * w;
+    }
+}
+
+/// `out[c] += s · row[c]` on 16-lane f32 vectors. Bit-identical to
+/// [`axpy_scalar`]: each lane performs the same separate multiply-then-add
+/// (`std::simd` never contracts to FMA), and the sub-vector tail runs the
+/// scalar loop.
+#[cfg(feature = "simd")]
+#[inline]
+fn axpy_simd(out: &mut [f32], row: &[f32], s: f32) {
+    use std::simd::prelude::*;
+    const LANES: usize = 16;
+    let sv = f32x16::splat(s);
+    let n_full = (out.len().min(row.len()) / LANES) * LANES;
+    let mut c = 0usize;
+    while c < n_full {
+        let ov = f32x16::from_slice(&out[c..c + LANES]);
+        let wv = f32x16::from_slice(&row[c..c + LANES]);
+        (ov + sv * wv).copy_to_slice(&mut out[c..c + LANES]);
+        c += LANES;
+    }
+    axpy_scalar(&mut out[n_full..], &row[n_full..], s);
+}
+
+/// The scalar-reference matvec with [`MacBackend::matvec_into`] semantics
+/// (out fully overwritten, silent lanes skipped, issued MACs returned) —
+/// always compiled, so benches and the equivalence tests can compare the
+/// dispatched kernel against it under any feature set.
+pub fn matvec_into_scalar(
+    out: &mut [f32],
+    stacked: &[f32],
+    weights: &[f32],
+    n_rows: usize,
+    n_cols: usize,
+) -> u64 {
+    assert_eq!(stacked.len(), n_rows);
+    assert_eq!(weights.len(), n_rows * n_cols);
+    assert_eq!(out.len(), n_cols);
+    out.fill(0.0);
+    let mut issued = 0u64;
+    for (r, &s) in stacked.iter().enumerate() {
+        if s == 0.0 {
+            continue; // stacked input is sparse: skip silent lanes
+        }
+        axpy_scalar(out, &weights[r * n_cols..(r + 1) * n_cols], s);
+        issued += n_cols as u64;
+    }
+    issued
+}
+
+/// Plain Rust matvec — the default backend. The per-row MAC inner loop is
+/// explicit 16-lane `std::simd` under the `simd` feature (bit-identical to
+/// the scalar loop — see [`matvec_into_scalar`]); issued-MAC accounting is
+/// shared between both variants.
 #[derive(Default)]
 pub struct NativeMac;
 
@@ -71,26 +136,34 @@ impl MacBackend for NativeMac {
         n_rows: usize,
         n_cols: usize,
     ) -> u64 {
-        assert_eq!(stacked.len(), n_rows);
-        assert_eq!(weights.len(), n_rows * n_cols);
-        assert_eq!(out.len(), n_cols);
-        out.fill(0.0);
-        let mut issued = 0u64;
-        for (r, &s) in stacked.iter().enumerate() {
-            if s == 0.0 {
-                continue; // stacked input is sparse: skip silent lanes
-            }
-            let row = &weights[r * n_cols..(r + 1) * n_cols];
-            for (o, &w) in out.iter_mut().zip(row) {
-                *o += s * w;
-            }
-            issued += n_cols as u64;
+        #[cfg(not(feature = "simd"))]
+        {
+            matvec_into_scalar(out, stacked, weights, n_rows, n_cols)
         }
-        issued
+        #[cfg(feature = "simd")]
+        {
+            assert_eq!(stacked.len(), n_rows);
+            assert_eq!(weights.len(), n_rows * n_cols);
+            assert_eq!(out.len(), n_cols);
+            out.fill(0.0);
+            let mut issued = 0u64;
+            for (r, &s) in stacked.iter().enumerate() {
+                if s == 0.0 {
+                    continue; // stacked input is sparse: skip silent lanes
+                }
+                axpy_simd(out, &weights[r * n_cols..(r + 1) * n_cols], s);
+                issued += n_cols as u64;
+            }
+            issued
+        }
     }
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn kernel_variant(&self) -> &'static str {
+        crate::model::lif::kernel_variant()
     }
 }
 
@@ -141,5 +214,50 @@ mod tests {
     fn shape_mismatch_panics() {
         let mut b = NativeMac;
         b.matvec(&[1.0; 3], &[1.0; 5], 3, 2);
+    }
+
+    #[test]
+    fn native_kernel_variant_matches_build_features() {
+        let expected = if cfg!(feature = "simd") { "simd" } else { "scalar" };
+        assert_eq!(NativeMac.kernel_variant(), expected);
+    }
+
+    /// The dispatched kernel must match the scalar reference bit-for-bit on
+    /// random integer-valued inputs — across shapes that exercise full
+    /// 16-lane vectors, scalar tails, and sub-vector rows. Under the default
+    /// build this is trivially true (same code); under `--features simd` it
+    /// is the matvec half of the SIMD bit-identity guarantee.
+    #[test]
+    fn dispatched_matvec_is_bit_identical_to_scalar() {
+        use crate::prop::Prop;
+        Prop::new("NativeMac::matvec_into ≡ scalar", 80).check(
+            |g| {
+                let n_rows = g.usize(1, 40);
+                let n_cols = g.usize(1, 70);
+                // Integer-valued f32: spike counts and quantized weights.
+                let stacked = g.vec(n_rows, |g| {
+                    if g.bool(0.4) {
+                        0.0f32
+                    } else {
+                        g.usize(0, 4) as f32
+                    }
+                });
+                let weights = g.vec(n_rows * n_cols, |g| g.i64(-8, 8) as f32);
+                (n_rows, n_cols, stacked, weights)
+            },
+            |(n_rows, n_cols, stacked, weights)| {
+                let mut native = NativeMac;
+                let mut out = vec![f32::NAN; *n_cols];
+                let issued = native.matvec_into(&mut out, stacked, weights, *n_rows, *n_cols);
+                let mut oracle = vec![f32::NAN; *n_cols];
+                let issued_ref =
+                    matvec_into_scalar(&mut oracle, stacked, weights, *n_rows, *n_cols);
+                issued == issued_ref
+                    && out
+                        .iter()
+                        .zip(oracle.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+            },
+        );
     }
 }

@@ -21,6 +21,9 @@
 //! * [`batch`] — [`BatchRunner`]: many independent stimulus samples fanned
 //!   over worker threads against shared compiled layers (composable with
 //!   intra-sample layer parallelism via `with_intra_jobs`).
+//! * [`spikebits`] — bit-packed spike words: `u64` bitmaps iterated via
+//!   `trailing_zeros`, shared by both engines' spike dispatch and by the
+//!   serial ring readout / parallel row-occupancy gating.
 //!
 //! **Numerical equivalence**: weights are integers (quantized u8 magnitudes,
 //! sign = synapse type) and both engines accumulate them exactly (i32 /
@@ -32,8 +35,10 @@ pub mod batch;
 pub mod network;
 pub mod parallel_engine;
 pub mod serial_engine;
+pub mod spikebits;
 
 pub use backend::{BackendBox, MacBackend, NativeMac};
+pub use spikebits::SpikeWords;
 pub use batch::{BatchRun, BatchRunner};
 pub use network::{
     LayerActivity, NetworkSim, PhaseProfile, Recorder, SpikeProvider, VoltageTrace,

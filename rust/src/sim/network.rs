@@ -25,6 +25,7 @@
 use super::backend::{BackendBox, NativeMac};
 use super::parallel_engine::ParallelLayerEngine;
 use super::serial_engine::SerialLayerEngine;
+use super::spikebits::SpikeWords;
 #[cfg(not(feature = "pjrt"))]
 use crate::costmodel::serial::balanced_split;
 use crate::model::lif::lif_step_chunked;
@@ -68,6 +69,17 @@ impl LayerEngine {
         }
     }
 
+    /// Bitmap fast path: the sequential stepping loop packs each source
+    /// population's spikes once per step and hands every engine the shared
+    /// words (the id-list path above packs per engine call instead — used
+    /// by the worker threads, which carry staged id lists).
+    fn step_currents_words(&mut self, spikes_in: &SpikeWords) -> &[f32] {
+        match self {
+            LayerEngine::Serial(e) => e.step_currents_words(spikes_in),
+            LayerEngine::Parallel(e) => e.step_currents_words(spikes_in),
+        }
+    }
+
     fn reset(&mut self) {
         match self {
             LayerEngine::Serial(e) => e.reset(),
@@ -102,6 +114,14 @@ impl LayerEngine {
         match self {
             LayerEngine::Serial(e) => (e.readout_nanos, e.dispatch_nanos),
             LayerEngine::Parallel(e) => (e.readout_nanos, e.dispatch_nanos),
+        }
+    }
+
+    /// The MAC-backend kernel variant, for parallel engines.
+    fn backend_kernel(&self) -> Option<&'static str> {
+        match self {
+            LayerEngine::Serial(_) => None,
+            LayerEngine::Parallel(e) => Some(e.backend_kernel_variant()),
         }
     }
 }
@@ -273,6 +293,9 @@ pub struct NetworkSim {
     currents: Vec<Vec<f32>>,
     /// Per-population spike scratch for the current step.
     spike_buf: Vec<Vec<u32>>,
+    /// Per-population bit-packed view of `spike_buf`, repacked once per
+    /// step so every consuming engine dispatches on shared `u64` words.
+    spike_words: Vec<SpikeWords>,
     record_spikes: Vec<bool>,
     record_v: Vec<bool>,
     pub recorder: Recorder,
@@ -368,6 +391,11 @@ impl NetworkSim {
             pops,
             currents: net.populations.iter().map(|p| vec![0.0; p.n_neurons]).collect(),
             spike_buf: vec![Vec::new(); net.populations.len()],
+            spike_words: net
+                .populations
+                .iter()
+                .map(|p| SpikeWords::new(p.n_neurons))
+                .collect(),
             record_spikes: net.populations.iter().map(|p| p.record_spikes).collect(),
             record_v: net.populations.iter().map(|p| p.record_v).collect(),
             recorder: Recorder::default(),
@@ -447,6 +475,9 @@ impl NetworkSim {
         for s in &mut self.spike_buf {
             s.clear();
         }
+        for w in &mut self.spike_words {
+            w.clear();
+        }
         self.recorder = Recorder::default();
         self.t = 0;
     }
@@ -483,6 +514,22 @@ impl NetworkSim {
             })
             .collect();
         out.sort_by_key(|a| a.proj);
+        out
+    }
+
+    /// Distinct MAC-backend kernel variants across the parallel engines
+    /// (empty when every layer runs serial) — `simulate --profile` prints
+    /// this next to the LIF kernel variant so bench numbers are
+    /// attributable to an implementation.
+    pub fn backend_kernel_variants(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for slot in &self.engines {
+            if let Some(k) = slot.engine.backend_kernel() {
+                if !out.contains(&k) {
+                    out.push(k);
+                }
+            }
+        }
         out
     }
 
@@ -523,6 +570,7 @@ impl NetworkSim {
             ref mut pops,
             ref mut currents,
             ref mut spike_buf,
+            ref mut spike_words,
             ref record_spikes,
             ref record_v,
             ref mut recorder,
@@ -538,7 +586,9 @@ impl NetworkSim {
             // input currents are complete (all inbound engines ran in
             // earlier waves). Only the LIF branch is charged to the LIF
             // phase timer; provider (stimulus-generation) time is the
-            // caller's, not the simulator's.
+            // caller's, not the simulator's. Each population's spikes are
+            // bit-packed once here, so every consuming engine in Phase B
+            // dispatches on the shared words.
             for &p in &pops_of_wave[w] {
                 let buf = &mut spike_buf[p];
                 if let Some(state) = &mut pops[p] {
@@ -558,6 +608,7 @@ impl NetworkSim {
                     buf.clear();
                     provider(PopulationId(p), t, buf);
                 }
+                spike_words[p].fill_from_ids(buf);
             }
 
             let t0 = profile.then(Instant::now);
@@ -579,7 +630,7 @@ impl NetworkSim {
             // Phase B: engines sourced in this wave accumulate the currents
             // their (strictly deeper) targets owe.
             for slot in &mut engines[lo..hi] {
-                let due = slot.engine.step_currents(&spike_buf[slot.src.0]);
+                let due = slot.engine.step_currents_words(&spike_words[slot.src.0]);
                 for (a, &d) in currents[slot.tgt.0].iter_mut().zip(due) {
                     *a += d;
                 }

@@ -18,6 +18,7 @@
 
 use super::backend::BackendBox;
 use crate::paradigm::parallel::ParallelCompiled;
+use crate::sim::spikebits::{any_set_in_range, SpikeWords};
 use std::time::Instant;
 
 /// Executes one parallel-compiled layer.
@@ -33,6 +34,14 @@ pub struct ParallelLayerEngine {
     /// Writes into each ring slot since it was last cleared; 0 means the
     /// slot is all-zero and the whole MAC phase can be skipped.
     slot_writes: Vec<u32>,
+    /// Word-aligned row-occupancy bitmap per ring slot
+    /// (`[slot][row_words]`): bit `row` of slot `s` is set iff some spike
+    /// wrote stacked lane `row` of slot `s` since it was last cleared. A
+    /// subordinate's silence test becomes a masked word scan of its row
+    /// span instead of an f32 scan of its lanes.
+    occupied: Vec<u64>,
+    /// `n_rows.div_ceil(64)` — the per-slot stride of `occupied`.
+    row_words: usize,
     /// All chunk weights pre-converted to f32 for the backend, packed
     /// into one contiguous buffer; `chunk_spans[i]` is subordinate `i`'s
     /// `(offset, len)` slice of it.
@@ -42,6 +51,11 @@ pub struct ParallelLayerEngine {
     currents: Vec<f32>,
     /// Persistent subordinate-output scratch (sized to the widest chunk).
     out_scratch: Vec<f32>,
+    /// Scratch bitmap backing the id-list
+    /// [`ParallelLayerEngine::step_currents`] wrapper (the words path
+    /// [`ParallelLayerEngine::step_currents_words`] is the primary
+    /// implementation).
+    spike_scratch: SpikeWords,
     backend: BackendBox,
     t: u64,
     /// MAC multiply-accumulate operations actually issued by the backend
@@ -78,15 +92,20 @@ impl ParallelLayerEngine {
         let max_cols =
             compiled.subordinates.iter().map(|s| s.n_cols()).max().unwrap_or(0);
         let n_target = compiled.n_target;
+        let n_source = compiled.n_source;
+        let row_words = rows.div_ceil(64);
         ParallelLayerEngine {
             compiled,
             ring: vec![0.0; d * rows],
             n_rows: rows,
             slot_writes: vec![0; d],
+            occupied: vec![0; d * row_words],
+            row_words,
             chunk_weights,
             chunk_spans,
             currents: vec![0.0; n_target],
             out_scratch: vec![0.0; max_cols],
+            spike_scratch: SpikeWords::new(n_source),
             backend,
             t: 0,
             macs: 0,
@@ -113,26 +132,47 @@ impl ParallelLayerEngine {
         self.backend.name()
     }
 
+    /// The backend's MAC inner-loop implementation (`"scalar"`, `"simd"`,
+    /// `"pjrt-aot"`) — surfaced by `simulate --profile`.
+    pub fn backend_kernel_variant(&self) -> &'static str {
+        self.backend.kernel_variant()
+    }
+
     /// Clear all dynamic state (stacked rings, clock) so the engine can run
     /// a fresh stimulus without recompiling. The `macs` telemetry keeps
     /// accumulating across resets (batch accounting reads it at the end).
     pub fn reset(&mut self) {
         self.ring.fill(0.0);
         self.slot_writes.fill(0);
+        self.occupied.fill(0);
         self.currents.fill(0.0);
         self.t = 0;
     }
 
+    /// Id-list convenience wrapper around
+    /// [`ParallelLayerEngine::step_currents_words`]: packs `spikes_in` into
+    /// the engine-owned scratch bitmap (duplicates collapse, out-of-range
+    /// ids drop) and steps on the words path.
+    pub fn step_currents(&mut self, spikes_in: &[u32]) -> &[f32] {
+        let mut scratch = std::mem::take(&mut self.spike_scratch);
+        scratch.fill_from_ids(spikes_in);
+        self.step_currents_words(&scratch);
+        self.spike_scratch = scratch;
+        &self.currents
+    }
+
     /// Advance one timestep (same contract as
-    /// [`super::serial_engine::SerialLayerEngine::step_currents`]; the
+    /// [`super::serial_engine::SerialLayerEngine::step_currents_words`]; the
     /// returned slice lives in engine-owned scratch, valid until the next
     /// call).
-    pub fn step_currents(&mut self, spikes_in: &[u32]) -> &[f32] {
+    pub fn step_currents_words(&mut self, spikes_in: &SpikeWords) -> &[f32] {
         let ParallelLayerEngine {
             ref compiled,
             ref mut ring,
             n_rows,
             ref mut slot_writes,
+            ref mut occupied,
+            row_words,
             ref chunk_weights,
             ref chunk_spans,
             ref mut currents,
@@ -155,14 +195,17 @@ impl ParallelLayerEngine {
 
         // Phase 1: subordinate MAC matmuls over the due stacked slot.
         // A slot nothing wrote into since its last clear is identically
-        // zero — skip the whole phase (and the clear).
+        // zero — skip the whole phase (and the clear). Within a live slot,
+        // each subordinate's silence test is a masked word scan of its row
+        // span in the occupancy bitmap — O(rows/64), not O(rows) f32 loads.
         if slot_writes[slot] > 0 {
+            let occ = &occupied[slot * row_words..(slot + 1) * row_words];
             let stacked = &ring[base..base + n_rows];
             for (sub, &(w_off, w_len)) in compiled.subordinates.iter().zip(chunk_spans) {
-                let lanes = &stacked[sub.row_lo..sub.row_hi];
-                if lanes.iter().all(|&s| s == 0.0) {
+                if !any_set_in_range(occ, sub.row_lo, sub.row_hi) {
                     continue; // this chunk's row span is silent this step
                 }
+                let lanes = &stacked[sub.row_lo..sub.row_hi];
                 let rows = sub.n_rows();
                 let cols = sub.n_cols();
                 let weights = &chunk_weights[w_off..w_off + w_len];
@@ -177,26 +220,41 @@ impl ParallelLayerEngine {
                 }
             }
             ring[base..base + n_rows].fill(0.0);
+            occupied[slot * row_words..(slot + 1) * row_words].fill(0);
             slot_writes[slot] = 0;
         }
         if let Some(t0) = t0 {
             *readout_nanos += t0.elapsed().as_nanos() as u64;
         }
 
-        // Phase 2: dominant-PE spike preprocessing into future slots.
+        // Phase 2: dominant-PE spike preprocessing into future slots — set
+        // bits walked via `trailing_zeros`. Ids at or beyond the merging
+        // tables' range end the walk (bits ascend), mirroring the serial
+        // engine's dispatch guard.
         let t0 = profile.then(Instant::now);
-        for &src in spikes_in {
-            for e in compiled.tables.entries_of(src) {
-                let write_slot = (t + e.delay as usize) % d;
-                ring[write_slot * n_rows + e.row as usize] += 1.0;
-                slot_writes[write_slot] += 1;
+        let n_source = compiled.n_source;
+        'dispatch: for (swi, &sword) in spikes_in.words().iter().enumerate() {
+            let mut sw = sword;
+            while sw != 0 {
+                let src = ((swi << 6) + sw.trailing_zeros() as usize) as u32;
+                sw &= sw - 1;
+                if src as usize >= n_source {
+                    break 'dispatch;
+                }
+                for e in compiled.tables.entries_of(src) {
+                    let write_slot = (t + e.delay as usize) % d;
+                    let row = e.row as usize;
+                    ring[write_slot * n_rows + row] += 1.0;
+                    occupied[write_slot * row_words + (row >> 6)] |= 1u64 << (row & 63);
+                    slot_writes[write_slot] += 1;
+                }
             }
         }
         if let Some(t0) = t0 {
             *dispatch_nanos += t0.elapsed().as_nanos() as u64;
         }
 
-        self.spikes_in += spikes_in.len() as u64;
+        self.spikes_in += spikes_in.count() as u64;
         self.steps += 1;
         self.t += 1;
         &self.currents
@@ -304,5 +362,44 @@ mod tests {
         assert_eq!(e.timestep(), 0);
         let second = run(&mut e);
         assert_eq!(first, second, "reset must reproduce the run exactly");
+    }
+
+    #[test]
+    fn words_path_matches_id_list_path() {
+        use crate::rng::Rng;
+        let mut syns = Vec::new();
+        let mut rng = Rng::new(1213);
+        for s in 0..60u32 {
+            for _ in 0..4 {
+                syns.push(syn(
+                    s,
+                    rng.below(50) as u32,
+                    rng.below(9) as u8 + 1,
+                    rng.below(5) as u16 + 1,
+                    rng.chance(0.3),
+                ));
+            }
+        }
+        let mut by_ids = engine_for(syns.clone(), 60, 50);
+        let mut by_words = engine_for(syns, 60, 50);
+        let mut packed = SpikeWords::new(60);
+        for t in 0..40 {
+            let firing: Vec<u32> = (0..60).filter(|_| rng.chance(0.25)).collect();
+            packed.fill_from_ids(&firing);
+            let a = by_ids.step_currents(&firing).to_vec();
+            let b = by_words.step_currents_words(&packed);
+            assert_eq!(a, b, "t={t}");
+        }
+        assert_eq!(by_ids.macs, by_words.macs);
+        assert_eq!(by_ids.spikes_in, by_words.spikes_in);
+    }
+
+    #[test]
+    fn words_path_ignores_bits_beyond_table_range() {
+        let mut e = engine_for(vec![syn(0, 0, 6, 1, false)], 2, 1);
+        let mut s = SpikeWords::new(100);
+        s.fill_from_ids(&[0, 50, 99]); // sources ≥ 2 have no merging entries
+        e.step_currents_words(&s);
+        assert_eq!(e.step_currents(&[]), [3.0]);
     }
 }

@@ -24,6 +24,7 @@
 
 use crate::model::SynapseType;
 use crate::paradigm::serial::SerialCompiled;
+use crate::sim::spikebits::SpikeWords;
 use std::time::Instant;
 
 struct PeState {
@@ -34,6 +35,14 @@ struct PeState {
     /// Synaptic writes into each ring slot since it was last consumed;
     /// 0 means the slot is identically zero and readout can skip it.
     slot_writes: Vec<u32>,
+    /// Word-aligned written-target bitmap per ring slot
+    /// (`[slot][tgt_words]`): bit `local` of slot `s` is set iff some
+    /// synaptic word wrote local target `local` into slot `s` since it was
+    /// last consumed. Readout walks set bits via `trailing_zeros` instead
+    /// of scanning every local target.
+    written: Vec<u64>,
+    /// `n_tgt.div_ceil(64)` — the per-slot stride of `written`.
+    tgt_words: usize,
     n_tgt: usize,
     delay_range: usize,
 }
@@ -55,6 +64,10 @@ pub struct SerialLayerEngine {
     dispatch_pes: Vec<u32>,
     /// Persistent per-target current scratch, rewritten every step.
     currents: Vec<f32>,
+    /// Scratch bitmap backing the id-list [`SerialLayerEngine::step_currents`]
+    /// wrapper (the words path [`SerialLayerEngine::step_currents_words`] is
+    /// the primary implementation).
+    spike_scratch: SpikeWords,
     t: u64,
     /// Synaptic events processed (telemetry for the perf benches;
     /// cumulative — survives [`SerialLayerEngine::reset`]).
@@ -83,9 +96,12 @@ impl SerialLayerEngine {
             .map(|p| {
                 let n_tgt = p.target_slice.len();
                 let delay_range = p.delay_range as usize;
+                let tgt_words = n_tgt.div_ceil(64);
                 PeState {
                     ring: vec![0; delay_range * SynapseType::COUNT * n_tgt],
                     slot_writes: vec![0; delay_range],
+                    written: vec![0; delay_range * tgt_words],
+                    tgt_words,
                     n_tgt,
                     delay_range,
                 }
@@ -125,6 +141,7 @@ impl SerialLayerEngine {
             dispatch_off,
             dispatch_pes,
             currents: vec![0.0; n_target],
+            spike_scratch: SpikeWords::new(n_source),
             t: 0,
             events: 0,
             spikes_in: 0,
@@ -154,16 +171,30 @@ impl SerialLayerEngine {
         for pe in &mut self.pes {
             pe.ring.fill(0);
             pe.slot_writes.fill(0);
+            pe.written.fill(0);
         }
         self.currents.fill(0.0);
         self.t = 0;
     }
 
-    /// Advance one timestep: consume this step's ring slot into per-target
-    /// currents, then process `spikes_in` (source-population neuron ids
-    /// firing *this* step) into future slots. The returned slice lives in
-    /// engine-owned scratch and is valid until the next call.
+    /// Id-list convenience wrapper around
+    /// [`SerialLayerEngine::step_currents_words`]: packs `spikes_in` into
+    /// the engine-owned scratch bitmap (duplicates collapse, out-of-range
+    /// ids drop — both observationally identical to the historical per-id
+    /// loop) and steps on the words path.
     pub fn step_currents(&mut self, spikes_in: &[u32]) -> &[f32] {
+        let mut scratch = std::mem::take(&mut self.spike_scratch);
+        scratch.fill_from_ids(spikes_in);
+        self.step_currents_words(&scratch);
+        self.spike_scratch = scratch;
+        &self.currents
+    }
+
+    /// Advance one timestep: consume this step's ring slot into per-target
+    /// currents, then process `spikes_in` (bitmap of source-population
+    /// neuron ids firing *this* step) into future slots. The returned slice
+    /// lives in engine-owned scratch and is valid until the next call.
+    pub fn step_currents_words(&mut self, spikes_in: &SpikeWords) -> &[f32] {
         let SerialLayerEngine {
             ref compiled,
             ref mut pes,
@@ -185,6 +216,10 @@ impl SerialLayerEngine {
         // Phase 1: neural-input read-out (time-triggered), gated per
         // (PE, slot) on the pending-write counter — an unwritten slot is
         // identically zero, so reading and clearing it would be pure waste.
+        // Within a live slot, only *written* targets are visited: set bits
+        // of the slot's bitmap, in ascending order, so the f32 accumulation
+        // order (and thus every rounding step) matches the historical full
+        // scan — unwritten targets contributed net == 0 there.
         let t0 = profile.then(Instant::now);
         for (prog, pe) in compiled.pes.iter().zip(pes.iter_mut()) {
             let slot = t % pe.delay_range;
@@ -194,14 +229,21 @@ impl SerialLayerEngine {
             }
             pe.slot_writes[slot] = 0;
             let scale = prog.weight_scale;
-            for local in 0..pe.n_tgt {
-                let e = pe.idx(slot, SynapseType::Excitatory.index(), local);
-                let i = pe.idx(slot, SynapseType::Inhibitory.index(), local);
-                let net = pe.ring[e] - pe.ring[i];
-                pe.ring[e] = 0;
-                pe.ring[i] = 0;
-                if net != 0 {
-                    currents[prog.target_slice.lo as usize + local] += net as f32 * scale;
+            let wbase = slot * pe.tgt_words;
+            for wi in 0..pe.tgt_words {
+                let mut w = pe.written[wbase + wi];
+                pe.written[wbase + wi] = 0;
+                while w != 0 {
+                    let local = (wi << 6) + w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    let e = pe.idx(slot, SynapseType::Excitatory.index(), local);
+                    let i = pe.idx(slot, SynapseType::Inhibitory.index(), local);
+                    let net = pe.ring[e] - pe.ring[i];
+                    pe.ring[e] = 0;
+                    pe.ring[i] = 0;
+                    if net != 0 {
+                        currents[prog.target_slice.lo as usize + local] += net as f32 * scale;
+                    }
                 }
             }
         }
@@ -209,27 +251,38 @@ impl SerialLayerEngine {
             *readout_nanos += t0.elapsed().as_nanos() as u64;
         }
 
-        // Phase 2: event-based synaptic processing of this step's spikes,
-        // dispatched only to the PEs that store rows for each source.
+        // Phase 2: event-based synaptic processing of this step's spikes —
+        // set bits walked via `trailing_zeros`, each dispatched only to the
+        // PEs that store rows for that source. Ids at or beyond the dispatch
+        // range (sources no PE stores rows for) end the walk: bits ascend,
+        // so everything after the first such id is out of range too.
         let t0 = profile.then(Instant::now);
         let n_source = dispatch_off.len() - 1;
-        for &src in spikes_in {
-            if src as usize >= n_source {
-                continue;
-            }
-            let lo = dispatch_off[src as usize] as usize;
-            let hi = dispatch_off[src as usize + 1] as usize;
-            for &pe_idx in &dispatch_pes[lo..hi] {
-                let prog = &compiled.pes[pe_idx as usize];
-                let pe = &mut pes[pe_idx as usize];
-                let Some(slot_idx) = prog.mpt.lookup(src) else { continue };
-                let entry = prog.address_list.entries[slot_idx as usize];
-                for word in prog.matrix.block(entry) {
-                    let write_slot = (t + word.delay() as usize) % pe.delay_range;
-                    let j = pe.idx(write_slot, word.syn_type().index(), word.target() as usize);
-                    pe.ring[j] += word.weight() as i32;
-                    pe.slot_writes[write_slot] += 1;
-                    *events += 1;
+        'dispatch: for (swi, &sword) in spikes_in.words().iter().enumerate() {
+            let mut sw = sword;
+            while sw != 0 {
+                let src = ((swi << 6) + sw.trailing_zeros() as usize) as u32;
+                sw &= sw - 1;
+                if src as usize >= n_source {
+                    break 'dispatch;
+                }
+                let lo = dispatch_off[src as usize] as usize;
+                let hi = dispatch_off[src as usize + 1] as usize;
+                for &pe_idx in &dispatch_pes[lo..hi] {
+                    let prog = &compiled.pes[pe_idx as usize];
+                    let pe = &mut pes[pe_idx as usize];
+                    let Some(slot_idx) = prog.mpt.lookup(src) else { continue };
+                    let entry = prog.address_list.entries[slot_idx as usize];
+                    for word in prog.matrix.block(entry) {
+                        let write_slot = (t + word.delay() as usize) % pe.delay_range;
+                        let target = word.target() as usize;
+                        let j = pe.idx(write_slot, word.syn_type().index(), target);
+                        pe.ring[j] += word.weight() as i32;
+                        pe.slot_writes[write_slot] += 1;
+                        pe.written[write_slot * pe.tgt_words + (target >> 6)] |=
+                            1u64 << (target & 63);
+                        *events += 1;
+                    }
                 }
             }
         }
@@ -237,7 +290,7 @@ impl SerialLayerEngine {
             *dispatch_nanos += t0.elapsed().as_nanos() as u64;
         }
 
-        *spikes_seen += spikes_in.len() as u64;
+        *spikes_seen += spikes_in.count() as u64;
         self.steps += 1;
         self.t += 1;
         &self.currents
@@ -403,5 +456,52 @@ mod tests {
         e.step_currents(&[7]); // no PE stores rows for source 7
         assert_eq!(e.step_currents(&[]), [0.0]);
         assert_eq!(e.events, 0);
+    }
+
+    #[test]
+    fn words_path_ignores_bits_beyond_dispatch_range() {
+        // A caller-owned bitmap sized to the full population can carry bits
+        // beyond the engine's dispatch range (trailing sources with no
+        // synapses); those must be skipped, not panic.
+        let mut e = engine_for(vec![syn(0, 0, 3, 1, false)], 1, 1);
+        let mut s = SpikeWords::new(100);
+        s.fill_from_ids(&[0, 7, 99]);
+        e.step_currents_words(&s);
+        assert_eq!(e.step_currents(&[]), [1.5]);
+        assert_eq!(e.events, 1);
+    }
+
+    #[test]
+    fn words_path_matches_id_list_path() {
+        use crate::rng::Rng;
+        // Two engines over the same compiled layer, one stepped with id
+        // lists and one with pre-packed bitmaps, must produce bit-identical
+        // current streams under random stimulus.
+        let mut syns = Vec::new();
+        let mut rng = Rng::new(909);
+        for s in 0..80u32 {
+            for _ in 0..3 {
+                syns.push(syn(
+                    s,
+                    rng.below(70) as u32,
+                    rng.below(9) as u8 + 1,
+                    rng.below(6) as u16 + 1,
+                    rng.chance(0.3),
+                ));
+            }
+        }
+        let mut by_ids = engine_for(syns.clone(), 80, 70);
+        let mut by_words = engine_for(syns, 80, 70);
+        let mut packed = SpikeWords::new(80);
+        for t in 0..40 {
+            let firing: Vec<u32> =
+                (0..80).filter(|_| rng.chance(0.25)).collect();
+            packed.fill_from_ids(&firing);
+            let a = by_ids.step_currents(&firing).to_vec();
+            let b = by_words.step_currents_words(&packed);
+            assert_eq!(a, b, "t={t}");
+        }
+        assert_eq!(by_ids.events, by_words.events);
+        assert_eq!(by_ids.spikes_in, by_words.spikes_in);
     }
 }

@@ -1,0 +1,185 @@
+//! Bit-packed spike sets.
+//!
+//! A timestep's spike set is naturally sparse and order-insensitive, so both
+//! engines carry it as `u64` words — one bit per source neuron — instead of
+//! per-neuron id lists. Dispatch loops then iterate *set bits* via
+//! `trailing_zeros` (a handful of instructions per spike, zero work for
+//! silent words) rather than branching once per neuron, which is where
+//! event-driven throughput lives on SpiNNaker2-class cores.
+//!
+//! Semantics note: packing collapses duplicate ids (a bitmap has no
+//! multiplicity) and drops out-of-range ids at `set` time. Neither occurs on
+//! the sim's hot paths — a LIF population emits each id at most once per
+//! step, and the engines already discarded out-of-range sources — so packed
+//! dispatch is observationally identical to the per-id loops it replaces
+//! (property-tested in [`crate::sim::network`]).
+
+/// A fixed-capacity set of neuron ids, one bit per id, packed into `u64`
+/// words. The word count is fixed at construction so steady-state reuse
+/// ([`SpikeWords::fill_from_ids`]) never allocates.
+#[derive(Debug, Clone, Default)]
+pub struct SpikeWords {
+    words: Vec<u64>,
+    n_bits: usize,
+}
+
+impl SpikeWords {
+    /// An empty set with capacity for ids `0..n_bits`.
+    pub fn new(n_bits: usize) -> Self {
+        SpikeWords { words: vec![0u64; n_bits.div_ceil(64)], n_bits }
+    }
+
+    /// Id capacity (ids `>= n_bits` are ignored by [`SpikeWords::set`]).
+    pub fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    /// The packed words, low ids in low bits of low words.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Clear every bit (word-granular `fill`, not per-id).
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Set the bit for `id`; ids beyond capacity are silently dropped
+    /// (mirrors the engines' historical `src >= n_source` guard).
+    #[inline]
+    pub fn set(&mut self, id: u32) {
+        let id = id as usize;
+        if id < self.n_bits {
+            self.words[id >> 6] |= 1u64 << (id & 63);
+        }
+    }
+
+    /// Replace the set's contents with the given ids (duplicates collapse,
+    /// out-of-range ids drop).
+    pub fn fill_from_ids(&mut self, ids: &[u32]) {
+        self.clear();
+        for &id in ids {
+            self.set(id);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Visit every set id in ascending order.
+    #[inline]
+    pub fn for_each(&self, mut f: impl FnMut(usize)) {
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                f((wi << 6) + w.trailing_zeros() as usize);
+                w &= w - 1; // clear lowest set bit
+            }
+        }
+    }
+}
+
+/// Is any bit in `[lo, hi)` set across a word slice? Used by the parallel
+/// engine to test a subordinate's row span against the slot-occupancy bitmap
+/// without scanning f32 lanes.
+#[inline]
+pub fn any_set_in_range(words: &[u64], lo: usize, hi: usize) -> bool {
+    if lo >= hi {
+        return false;
+    }
+    let (wl, wh) = (lo >> 6, (hi - 1) >> 6);
+    if wl == wh {
+        // Single word: mask bits [lo&63, (hi-1)&63].
+        let mask = (!0u64 << (lo & 63)) & (!0u64 >> (63 - ((hi - 1) & 63)));
+        return words[wl] & mask != 0;
+    }
+    if words[wl] & (!0u64 << (lo & 63)) != 0 {
+        return true;
+    }
+    if words[wh] & (!0u64 >> (63 - ((hi - 1) & 63))) != 0 {
+        return true;
+    }
+    words[wl + 1..wh].iter().any(|&w| w != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collected(s: &SpikeWords) -> Vec<usize> {
+        let mut out = Vec::new();
+        s.for_each(|id| out.push(id));
+        out
+    }
+
+    #[test]
+    fn set_and_iterate_ascending() {
+        let mut s = SpikeWords::new(200);
+        for id in [199, 0, 63, 64, 127, 128, 5] {
+            s.set(id);
+        }
+        assert_eq!(collected(&s), vec![0, 5, 63, 64, 127, 128, 199]);
+        assert_eq!(s.count(), 7);
+    }
+
+    #[test]
+    fn out_of_range_and_duplicates() {
+        let mut s = SpikeWords::new(10);
+        s.fill_from_ids(&[3, 3, 3, 9, 10, 500]);
+        assert_eq!(collected(&s), vec![3, 9]);
+    }
+
+    #[test]
+    fn clear_and_refill_reuses_capacity() {
+        let mut s = SpikeWords::new(130);
+        s.fill_from_ids(&[1, 129]);
+        assert_eq!(s.count(), 2);
+        s.fill_from_ids(&[64]);
+        assert_eq!(collected(&s), vec![64]);
+        s.clear();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.words().len(), 3);
+    }
+
+    #[test]
+    fn zero_capacity_is_inert() {
+        let mut s = SpikeWords::new(0);
+        s.set(0);
+        assert_eq!(s.count(), 0);
+        assert!(s.words().is_empty());
+    }
+
+    #[test]
+    fn range_test_matches_naive_scan() {
+        use crate::prop::Prop;
+        Prop::new("any_set_in_range ≡ naive", 200).check(
+            |g| {
+                let n = g.usize(1, 300);
+                let ids = g.vec(g.usize(0, 12), |g| g.usize(0, n - 1) as u32);
+                let lo = g.usize(0, n);
+                let hi = g.usize(0, n);
+                (n, ids, lo, hi)
+            },
+            |(n, ids, lo, hi)| {
+                let mut s = SpikeWords::new(*n);
+                s.fill_from_ids(ids);
+                let naive = ids.iter().any(|&id| (*lo..*hi).contains(&(id as usize)));
+                any_set_in_range(s.words(), *lo, *hi) == naive
+            },
+        );
+    }
+
+    #[test]
+    fn range_test_word_boundaries() {
+        let mut s = SpikeWords::new(256);
+        s.set(64);
+        assert!(any_set_in_range(s.words(), 64, 65));
+        assert!(any_set_in_range(s.words(), 0, 65));
+        assert!(any_set_in_range(s.words(), 64, 256));
+        assert!(!any_set_in_range(s.words(), 0, 64));
+        assert!(!any_set_in_range(s.words(), 65, 256));
+        assert!(!any_set_in_range(s.words(), 64, 64));
+    }
+}

@@ -13,6 +13,7 @@
 
 use super::SwitchMode;
 use crate::classifier::Classifier;
+use crate::costmodel::activity::{CalibrationConstants, DEFAULT_HYSTERESIS_MARGIN};
 use crate::model::LayerCharacter;
 use crate::paradigm::{CostEstimate, Paradigm};
 
@@ -82,16 +83,31 @@ impl SwitchPolicy {
     /// firing rate ([`crate::costmodel::activity`]) instead of defaulting
     /// to serial — the telemetry loop from
     /// [`crate::sim::LayerActivity::firing_rate`] back into the decision.
+    ///
+    /// With calibration constants ([`crate::calibrate`]; loaded from the
+    /// artifact directory by `simulate`), the tie-break compares *measured
+    /// step seconds* on this host's kernels; without them it falls back to
+    /// the abstract work-item model. Both apply the default hysteresis
+    /// margin, so epsilon-sized wins don't flip the paradigm.
     pub fn decide_with_rate(
         serial: &CostEstimate,
         parallel: &CostEstimate,
         ch: &LayerCharacter,
         rate: f64,
+        cal: Option<&CalibrationConstants>,
     ) -> Paradigm {
         if serial.total_pes() != parallel.total_pes() {
             return Self::decide(serial, parallel);
         }
-        crate::costmodel::activity::runtime_preferred(ch, rate)
+        match cal {
+            Some(c) => crate::costmodel::activity::runtime_preferred_calibrated(
+                ch,
+                rate,
+                c,
+                DEFAULT_HYSTERESIS_MARGIN,
+            ),
+            None => crate::costmodel::activity::runtime_preferred(ch, rate),
+        }
     }
 
     /// Predict the paradigm for a layer character *without compiling*.
@@ -169,6 +185,7 @@ mod tests {
                 &est(Paradigm::Parallel, 5),
                 &dense,
                 0.9,
+                None,
             ),
             Paradigm::Serial
         );
@@ -176,8 +193,64 @@ mod tests {
         // MAC array, near-silence favors event-driven serial.
         let s = est(Paradigm::Serial, 3);
         let p = est(Paradigm::Parallel, 3);
-        assert_eq!(SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.5), Paradigm::Parallel);
-        assert_eq!(SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.001), Paradigm::Serial);
+        assert_eq!(
+            SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.5, None),
+            Paradigm::Parallel
+        );
+        assert_eq!(
+            SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.001, None),
+            Paradigm::Serial
+        );
+    }
+
+    #[test]
+    fn calibration_constants_steer_the_tie_break() {
+        let est = |paradigm| CostEstimate {
+            paradigm,
+            layer_pes: 3,
+            source_hosting_pes: 0,
+            dtcm_bytes: 0,
+            source_hosting_dtcm: 0,
+        };
+        let dense = LayerCharacter::new(255, 255, 1.0, 1);
+        let s = est(Paradigm::Serial);
+        let p = est(Paradigm::Parallel);
+        // The abstract model says parallel at this rate (see above); a host
+        // measured with a crawling MAC path must say serial instead.
+        let slow_mac = CalibrationConstants {
+            serial_events_per_sec: 1e8,
+            parallel_macs_per_sec: 1e4,
+            lif_neuron_steps_per_sec: 1e9,
+            kernel_variant: "scalar".into(),
+        };
+        assert_eq!(
+            SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.5, Some(&slow_mac)),
+            Paradigm::Serial
+        );
+        // And the mirror image: near-silent layer, but the serial path
+        // measures so slow the MAC array still wins.
+        let slow_serial = CalibrationConstants {
+            serial_events_per_sec: 1e2,
+            parallel_macs_per_sec: 1e10,
+            lif_neuron_steps_per_sec: 1e9,
+            kernel_variant: "scalar".into(),
+        };
+        assert_eq!(
+            SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.001, Some(&slow_serial)),
+            Paradigm::Parallel
+        );
+        // Storage still dominates calibration.
+        let cheaper_serial = CostEstimate {
+            paradigm: Paradigm::Serial,
+            layer_pes: 2,
+            source_hosting_pes: 0,
+            dtcm_bytes: 0,
+            source_hosting_dtcm: 0,
+        };
+        assert_eq!(
+            SwitchPolicy::decide_with_rate(&cheaper_serial, &p, &dense, 0.5, Some(&slow_serial)),
+            Paradigm::Serial
+        );
     }
 
     #[test]

@@ -385,3 +385,64 @@ fn pipeline_jobs_do_not_change_sweep_labels_or_network_compiles() {
         assert_eq!(la.n_pes(), lb.n_pes());
     }
 }
+
+#[test]
+fn calibration_measure_save_load_feeds_decide_with_rate() {
+    // Tentpole part 3, end to end: `calibrate` measures this host, the
+    // constants round-trip through the artifact directory exactly, and a
+    // subsequent decision consumes them in `SwitchPolicy::decide_with_rate`.
+    use s2switch::costmodel::CalibrationConstants;
+    use s2switch::model::LayerCharacter;
+    use s2switch::paradigm::CostEstimate;
+    use s2switch::switching::SwitchPolicy;
+
+    let dir = std::env::temp_dir().join("s2switch_itest_calibration");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Empty store → no constants, not an error.
+    assert!(s2switch::calibrate::load_from_dir(&dir).unwrap().is_none());
+
+    // Measure the real kernels and persist next to the artifact store, the
+    // way `s2switch calibrate --artifact-dir` does.
+    let measured = s2switch::calibrate::measure();
+    s2switch::calibrate::save(&s2switch::calibrate::path_in(&dir), &measured).unwrap();
+    let loaded = s2switch::calibrate::load_from_dir(&dir)
+        .unwrap()
+        .expect("constants were just written");
+    assert_eq!(loaded, measured, "save/load must round-trip exactly");
+    assert_eq!(loaded.kernel_variant, s2switch::model::lif::kernel_variant());
+
+    // A storage-tied layer decision must consume the loaded constants: with
+    // extreme overrides the tie-break demonstrably flips relative to the
+    // uncalibrated work-item model.
+    let est = |paradigm| CostEstimate {
+        paradigm,
+        layer_pes: 3,
+        source_hosting_pes: 0,
+        dtcm_bytes: 0,
+        source_hosting_dtcm: 0,
+    };
+    let s = est(Paradigm::Serial);
+    let p = est(Paradigm::Parallel);
+    let dense = LayerCharacter::new(255, 255, 1.0, 1);
+    assert_eq!(
+        SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.5, None),
+        Paradigm::Parallel,
+        "uncalibrated work-item model prefers the MAC array on a dense busy layer"
+    );
+    let slow_mac = CalibrationConstants { parallel_macs_per_sec: 1.0, ..loaded.clone() };
+    assert_eq!(
+        SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.5, Some(&slow_mac)),
+        Paradigm::Serial,
+        "a measured crawling MAC path must flip the tie-break to serial"
+    );
+    let slow_serial = CalibrationConstants { serial_events_per_sec: 1.0, ..slow_mac };
+    let really_slow_serial =
+        CalibrationConstants { parallel_macs_per_sec: 1e12, ..slow_serial };
+    assert_eq!(
+        SwitchPolicy::decide_with_rate(&s, &p, &dense, 0.001, Some(&really_slow_serial)),
+        Paradigm::Parallel,
+        "a measured crawling serial path must flip a near-silent layer to parallel"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
