@@ -1,0 +1,242 @@
+//! Bench F1 — fault-tolerant execution: recovery latency vs fault rate,
+//! the artifact store's contribution to recovery speed, and the
+//! survivable-fault ceiling of each placement strategy.
+//!
+//! Part 1 runs a 3-layer network over a sweep of per-sample fault rates
+//! and reports wall-clock, injected faults, layer migrations, paradigm
+//! flips, and the derived average cost of one recovery (rollback +
+//! re-admission + re-materialization + re-placement + replay) over the
+//! fault-free baseline. Part 2 repeats the harshest sweep point on a warm
+//! artifact store, where every re-materialization is a disk hit — the
+//! zero-recompile recovery path. Part 3 drives chaos (rate 1.0) against a
+//! machine with a fixed PE slack until the run degrades, reporting how
+//! many faults each placement strategy survives before no feasible
+//! re-placement exists. The machine-readable baseline goes to
+//! `BENCH_fault.json` (override with `S2SWITCH_BENCH_OUT`).
+//!
+//! ```bash
+//! cargo bench --bench fault_tolerance
+//! ```
+
+use s2switch::bench_harness::{human_ns, Report};
+use s2switch::hardware::{ChipSpec, MachineSpec, PeSpec, PlacementStrategy};
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder, PopulationId};
+use s2switch::rng::Rng;
+use s2switch::switching::{FaultRunReport, RecoveryConfig, SwitchMode, SwitchingSystem};
+use std::time::Instant;
+
+const SAMPLES: u64 = 8;
+const STEPS: u64 = 50;
+const RATES: [f64; 4] = [0.0, 0.25, 0.5, 1.0];
+
+fn bench_net() -> Network {
+    let mut b = NetworkBuilder::new(33);
+    let inp = b.spike_source("in", 80);
+    let h1 = b.lif_population("h1", 60, LifParams { alpha: 0.9, ..Default::default() });
+    let h2 = b.lif_population("h2", 40, LifParams { alpha: 0.85, ..Default::default() });
+    let out = b.lif_population("out", 10, LifParams::default());
+    b.project(
+        inp,
+        h1,
+        Connector::FixedProbability(0.4),
+        SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+        0.02,
+    );
+    b.project(
+        h1,
+        h2,
+        Connector::FixedProbability(0.6),
+        SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+        0.02,
+    );
+    b.project(
+        h2,
+        out,
+        Connector::FixedProbability(0.9),
+        SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+        0.03,
+    );
+    b.build()
+}
+
+fn provider_for(s: u64) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+    let mut rng = Rng::new(1234 + s * 0x9E37);
+    move |pop, _t, out: &mut Vec<u32>| {
+        if pop.0 == 0 {
+            for n in 0..80u32 {
+                if rng.chance(0.2) {
+                    out.push(n);
+                }
+            }
+        }
+    }
+}
+
+fn run(sys: &mut SwitchingSystem, net: &Network, rate: f64, samples: u64) -> FaultRunReport {
+    let cfg = RecoveryConfig {
+        samples,
+        steps_per_sample: STEPS,
+        fault_rate: rate,
+        fault_seed: 11,
+        ..Default::default()
+    };
+    let spec = MachineSpec::default();
+    sys.run_fault_tolerant(net, spec, PlacementStrategy::ChipPacked, &cfg, provider_for)
+        .expect("the default machine survives the bench sweep")
+}
+
+fn main() {
+    let pe = PeSpec::default();
+    let net = bench_net();
+
+    // ---- Part 1: recovery latency vs fault rate ------------------------
+    let mut rep = Report::new(
+        "Fault-tolerant run over 8 samples — cost of recovery vs per-sample fault rate",
+        &["fault rate", "wall-clock", "faults", "migrations", "flips", "avg recovery"],
+    );
+    let mut sweep = Vec::new();
+    let mut wall0_ns = 0u128;
+    for &rate in &RATES {
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, pe);
+        let t0 = Instant::now();
+        let report = run(&mut sys, &net, rate, SAMPLES);
+        let wall = t0.elapsed().as_nanos();
+        if rate == 0.0 {
+            wall0_ns = wall;
+        }
+        let replayed = report.stats.replayed_samples;
+        let avg_recovery_ns = if replayed > 0 {
+            wall.saturating_sub(wall0_ns) as f64 / replayed as f64
+        } else {
+            0.0
+        };
+        rep.row(vec![
+            format!("{rate:.2}"),
+            human_ns(wall as f64),
+            report.stats.faults_injected.to_string(),
+            report.stats.migrations.to_string(),
+            report.stats.paradigm_flips.to_string(),
+            human_ns(avg_recovery_ns),
+        ]);
+        sweep.push((rate, wall, report, avg_recovery_ns));
+    }
+    rep.finish();
+
+    // ---- Part 2: warm-store recovery (zero recompiles) -----------------
+    let dir = std::env::temp_dir().join(format!("s2a-faultbench-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cold = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    cold.set_artifact_dir(&dir).unwrap();
+    let t0 = Instant::now();
+    let _ = run(&mut cold, &net, 1.0, SAMPLES);
+    let t_cold = t0.elapsed();
+
+    let mut warm = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    warm.set_artifact_dir(&dir).unwrap();
+    let t0 = Instant::now();
+    let warm_report = run(&mut warm, &net, 1.0, SAMPLES);
+    let t_warm = t0.elapsed();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let zero_recompiles = warm_report.compile.total_compiles() == 0;
+    println!(
+        "\nchaos at rate 1.0: cold store {} vs warm store {} — zero recompiles: {}, \
+         {} disk hits → {}",
+        human_ns(t_cold.as_nanos() as f64),
+        human_ns(t_warm.as_nanos() as f64),
+        zero_recompiles,
+        warm_report.compile.disk_hits,
+        if zero_recompiles { "self-healing re-placement reproduced ✓" } else { "NOT reproduced ✗" }
+    );
+
+    // ---- Part 3: survivable-fault ceiling per strategy ------------------
+    // Size the machine with a fixed PE slack over the ideal plan and kill
+    // one occupied PE per sample until re-placement fails.
+    let mut sizer = SwitchingSystem::new(SwitchMode::Ideal, pe);
+    let (_, ideal_pes) = sizer.compile_network(&net).unwrap();
+    const SLACK: usize = 8;
+    const CHAOS_SAMPLES: u64 = 64;
+    let spec = MachineSpec {
+        chips_x: 2,
+        chips_y: 2,
+        chip: ChipSpec { pes_per_chip: (ideal_pes + SLACK).div_ceil(4), ..Default::default() },
+    };
+    let mut rep = Report::new(
+        "Survivable-fault ceiling — rate 1.0 chaos until no feasible re-placement",
+        &["strategy", "survived faults", "degraded", "dead PEs at end"],
+    );
+    let mut ceiling = Vec::new();
+    for strategy in PlacementStrategy::ALL {
+        let cfg = RecoveryConfig {
+            samples: CHAOS_SAMPLES,
+            steps_per_sample: 10,
+            fault_rate: 1.0,
+            fault_seed: 11,
+            ..Default::default()
+        };
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, pe);
+        let report = sys
+            .run_fault_tolerant(&net, spec, strategy, &cfg, provider_for)
+            .expect("chaos must degrade, not error");
+        rep.row(vec![
+            strategy.name().to_string(),
+            report.stats.replayed_samples.to_string(),
+            report.is_degraded().to_string(),
+            report.final_faults.n_dead_pes().to_string(),
+        ]);
+        ceiling.push((strategy, report));
+    }
+    rep.finish();
+    println!(
+        "machine: 2x2 chips, {} PEs/chip ({} total; ideal plan needs {ideal_pes}, slack {SLACK})",
+        spec.chip.pes_per_chip,
+        spec.total_pes()
+    );
+
+    // ---- Machine-readable baseline -------------------------------------
+    let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_fault.json".into());
+    let rates_json: Vec<String> = sweep
+        .iter()
+        .map(|(rate, wall, report, avg)| {
+            format!(
+                "    {{ \"rate\": {rate:.2}, \"wall_ns\": {wall}, \"faults\": {}, \
+                 \"migrations\": {}, \"paradigm_flips\": {}, \"replayed_samples\": {}, \
+                 \"avg_recovery_ns\": {avg:.0}, \"checkpoint_peak_bytes\": {} }}",
+                report.stats.faults_injected,
+                report.stats.migrations,
+                report.stats.paradigm_flips,
+                report.stats.replayed_samples,
+                report.stats.checkpoint_bytes,
+            )
+        })
+        .collect();
+    let ceiling_json: Vec<String> = ceiling
+        .iter()
+        .map(|(strategy, report)| {
+            format!(
+                "    {{ \"strategy\": \"{}\", \"survived_faults\": {}, \"degraded\": {}, \
+                 \"dead_pes\": {} }}",
+                strategy.name(),
+                report.stats.replayed_samples,
+                report.is_degraded(),
+                report.final_faults.n_dead_pes(),
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"fault_tolerance\",\n  \"network\": \"80-60-40-10 (3 projections)\",\n  \"samples\": {SAMPLES},\n  \"steps_per_sample\": {STEPS},\n  \"rates\": [\n{}\n  ],\n  \"warm_store\": {{\n    \"cold_wall_ns\": {},\n    \"warm_wall_ns\": {},\n    \"warm_total_compiles\": {},\n    \"warm_disk_hits\": {},\n    \"zero_recompiles\": {}\n  }},\n  \"ceiling_machine\": {{ \"chips_x\": 2, \"chips_y\": 2, \"pes_per_chip\": {}, \"ideal_plan_pes\": {ideal_pes}, \"slack_pes\": {SLACK} }},\n  \"ceiling\": [\n{}\n  ]\n}}\n",
+        rates_json.join(",\n"),
+        t_cold.as_nanos(),
+        t_warm.as_nanos(),
+        warm_report.compile.total_compiles(),
+        warm_report.compile.disk_hits,
+        zero_recompiles,
+        spec.chip.pes_per_chip,
+        ceiling_json.join(",\n"),
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("baseline written to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -92,6 +92,24 @@ impl From<std::io::Error> for ArtifactError {
     }
 }
 
+/// Publish attempts after the first, for transient I/O failures only.
+const PUBLISH_RETRIES: u32 = 3;
+
+/// First retry backoff; doubles per attempt (5 → 10 → 20 ms).
+const PUBLISH_BACKOFF_MS: u64 = 5;
+
+/// I/O failures worth retrying: the operation may succeed unchanged a
+/// moment later. Everything else (permissions, missing directory, full
+/// disk) surfaces immediately.
+fn is_transient(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
 /// A whole compiled network as one artifact: per-layer paradigm decisions,
 /// the materialized layers (projection order), and their cost estimates.
 #[derive(Clone, Debug, PartialEq)]
@@ -148,12 +166,37 @@ impl ArtifactStore {
         self.len() == 0
     }
 
-    /// Atomically publish `bytes` at `path`: write a sibling temp file,
-    /// then rename over the target (rename is atomic on POSIX, so readers
-    /// see either the old complete file or the new complete file — never a
-    /// torn write). The temp name is unique per process *and* per call so
-    /// concurrent writers of the same key cannot interleave.
+    /// Atomically publish `bytes` at `path`, retrying transient I/O
+    /// failures a bounded number of times with doubling backoff (a busy
+    /// NFS mount or an EINTR must not cost a recompile on the next boot).
+    /// Non-transient errors surface immediately.
     fn publish(&self, path: &Path, bytes: &[u8]) -> Result<(), ArtifactError> {
+        let mut delay = std::time::Duration::from_millis(PUBLISH_BACKOFF_MS);
+        let mut attempt = 0;
+        loop {
+            match self.publish_once(path, bytes) {
+                Ok(()) => return Ok(()),
+                Err(ArtifactError::Io(e)) if attempt < PUBLISH_RETRIES && is_transient(&e) => {
+                    attempt += 1;
+                    eprintln!(
+                        "artifact store: transient error publishing {} ({e}); \
+                         retry {attempt}/{PUBLISH_RETRIES} in {delay:?}",
+                        path.display()
+                    );
+                    std::thread::sleep(delay);
+                    delay *= 2;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One publish attempt: write a sibling temp file, then rename over
+    /// the target (rename is atomic on POSIX, so readers see either the
+    /// old complete file or the new complete file — never a torn write).
+    /// The temp name is unique per process *and* per call so concurrent
+    /// writers of the same key cannot interleave.
+    fn publish_once(&self, path: &Path, bytes: &[u8]) -> Result<(), ArtifactError> {
         use std::sync::atomic::{AtomicU64, Ordering};
         static SEQ: AtomicU64 = AtomicU64::new(0);
         let tmp = path.with_extension(format!(
@@ -171,6 +214,25 @@ impl ArtifactStore {
                 std::fs::remove_file(&tmp).ok();
                 Err(e.into())
             }
+        }
+    }
+
+    /// Move a corrupt artifact aside as `<name>.s2a.bad` (atomic rename)
+    /// with the decode failure logged, so it stops resurfacing as an error
+    /// on every lookup and the next compile can republish the key cleanly.
+    /// Best-effort: a failed rename leaves the file in place.
+    fn quarantine(&self, path: &Path, why: &ArtifactError) {
+        let bad = path.with_extension("s2a.bad");
+        match std::fs::rename(path, &bad) {
+            Ok(()) => eprintln!(
+                "artifact store: quarantined corrupt {} → {} ({why})",
+                path.display(),
+                bad.display()
+            ),
+            Err(e) => eprintln!(
+                "artifact store: {} is corrupt ({why}) but could not be quarantined: {e}",
+                path.display()
+            ),
         }
     }
 
@@ -192,13 +254,23 @@ impl ArtifactStore {
     /// Load a compiled layer. `Ok(None)` = not in the store; `Err` = the
     /// file exists but is truncated/corrupt/foreign (callers treat both as
     /// a miss, the latter is additionally worth surfacing in telemetry).
+    /// A corrupt file is quarantined to `<key>.s2a.bad` on the way out, so
+    /// the next lookup is a clean miss and the next compile re-publishes.
     pub fn load_layer(&self, key: u64) -> Result<Option<CompiledLayer>, ArtifactError> {
-        let Some(bytes) = self.read(&self.key_path(key))? else {
+        let path = self.key_path(key);
+        let Some(bytes) = self.read(&path)? else {
             return Ok(None);
         };
-        let sections = codec::read_container(&bytes)?;
+        self.decode_layer_bytes(&bytes).map(Some).map_err(|e| {
+            self.quarantine(&path, &e);
+            e
+        })
+    }
+
+    fn decode_layer_bytes(&self, bytes: &[u8]) -> Result<CompiledLayer, ArtifactError> {
+        let sections = codec::read_container(bytes)?;
         match sections.as_slice() {
-            [(codec::SEC_LAYER, body)] => Ok(Some(codec::decode_layer(body)?)),
+            [(codec::SEC_LAYER, body)] => codec::decode_layer(body),
             _ => Err(ArtifactError::Malformed {
                 what: "layer artifact",
                 detail: format!("expected one LAYER section, found {}", sections.len()),
@@ -213,15 +285,23 @@ impl ArtifactStore {
         self.publish(&self.key_path(key), &bytes)
     }
 
-    /// Load a cost estimate (same miss/corrupt contract as
+    /// Load a cost estimate (same miss/corrupt/quarantine contract as
     /// [`ArtifactStore::load_layer`]).
     pub fn load_estimate(&self, key: u64) -> Result<Option<CostEstimate>, ArtifactError> {
-        let Some(bytes) = self.read(&self.key_path(key))? else {
+        let path = self.key_path(key);
+        let Some(bytes) = self.read(&path)? else {
             return Ok(None);
         };
-        let sections = codec::read_container(&bytes)?;
+        self.decode_estimate_bytes(&bytes).map(Some).map_err(|e| {
+            self.quarantine(&path, &e);
+            e
+        })
+    }
+
+    fn decode_estimate_bytes(&self, bytes: &[u8]) -> Result<CostEstimate, ArtifactError> {
+        let sections = codec::read_container(bytes)?;
         match sections.as_slice() {
-            [(codec::SEC_ESTIMATE, body)] => Ok(Some(codec::decode_estimate(body)?)),
+            [(codec::SEC_ESTIMATE, body)] => codec::decode_estimate(body),
             _ => Err(ArtifactError::Malformed {
                 what: "estimate artifact",
                 detail: format!("expected one ESTIMATE section, found {}", sections.len()),
@@ -244,12 +324,21 @@ impl ArtifactStore {
     }
 
     /// Load a whole-network artifact saved by
-    /// [`ArtifactStore::save_network`].
+    /// [`ArtifactStore::save_network`] (corrupt files are quarantined like
+    /// [`ArtifactStore::load_layer`]'s).
     pub fn load_network(&self, name: &str) -> Result<Option<NetworkArtifact>, ArtifactError> {
-        let Some(bytes) = self.read(&self.net_path(name))? else {
+        let path = self.net_path(name);
+        let Some(bytes) = self.read(&path)? else {
             return Ok(None);
         };
-        let sections = codec::read_container(&bytes)?;
+        self.decode_network_bytes(&bytes).map(Some).map_err(|e| {
+            self.quarantine(&path, &e);
+            e
+        })
+    }
+
+    fn decode_network_bytes(&self, bytes: &[u8]) -> Result<NetworkArtifact, ArtifactError> {
+        let sections = codec::read_container(bytes)?;
         let mut decisions = None;
         let mut layers = Vec::new();
         let mut estimates = Vec::new();
@@ -281,7 +370,7 @@ impl ArtifactStore {
                 ),
             });
         }
-        Ok(Some(NetworkArtifact { decisions, layers, estimates }))
+        Ok(NetworkArtifact { decisions, layers, estimates })
     }
 }
 
@@ -486,6 +575,26 @@ mod tests {
         // Garbage bytes are a BadMagic, not a panic.
         std::fs::write(&path, b"not an artifact at all").unwrap();
         assert!(matches!(store.load_layer(7).unwrap_err(), ArtifactError::BadMagic { .. }));
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn corrupt_artifacts_are_quarantined_and_the_key_self_heals() {
+        let store = tmp_store("quarantine");
+        let (s, _, _, _) = compile_pair(40, 40, 0.4, 2, 13);
+        store.save_layer(9, &s).unwrap();
+        let path = store.dir().join(format!("{:016x}.s2a", 9u64));
+        std::fs::write(&path, b"garbage").unwrap();
+        // First lookup surfaces the corruption and moves the file aside.
+        assert!(store.load_layer(9).is_err());
+        assert!(!path.exists(), "corrupt file must be renamed away");
+        let bad = path.with_extension("s2a.bad");
+        assert!(bad.exists(), "quarantined copy must exist for post-mortem");
+        // Second lookup is a clean miss — the error does not resurface.
+        assert!(store.load_layer(9).unwrap().is_none());
+        // Republishing the key heals it.
+        store.save_layer(9, &s).unwrap();
+        assert_eq!(store.load_layer(9).unwrap().unwrap(), s);
         std::fs::remove_dir_all(store.dir()).ok();
     }
 

@@ -264,6 +264,12 @@ mod tests {
         )
         .unwrap();
         assert!(load(&path).is_err(), "non-positive rates are invalid");
+        std::fs::write(
+            &path,
+            r#"{"schema_version":1,"kernel_variant":"scalar","serial_events_per_sec":-2e8,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
+        )
+        .unwrap();
+        assert!(load(&path).is_err(), "negative rates are invalid");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -111,7 +111,11 @@ impl Allocator {
             PlacementStrategy::Balanced => self.pick_balanced(),
         };
         let Some(idx) = idx else {
-            bail!("machine full: all {} PEs allocated", self.machine.total_pes());
+            bail!(
+                "machine full: all {} usable PEs allocated ({} faulted)",
+                self.machine.usable_pes(),
+                self.machine.total_pes() - self.machine.usable_pes()
+            );
         };
         self.alloc_index(idx, label, dtcm_bytes)
     }
@@ -333,6 +337,55 @@ mod tests {
                 got
             };
             assert_eq!(run(), run(), "strategy {strategy} must be deterministic");
+        }
+    }
+
+    #[test]
+    fn rollback_under_mid_transaction_fault_restores_machine_byte_for_byte() {
+        // A PE dies *between* begin and commit: the journal must restore
+        // the machine to exactly its pre-transaction state — byte-level
+        // `Machine` equality, not just count/DTCM accounting.
+        let mut a = Allocator::new(grid(2, 2, 4), PlacementStrategy::ChipPacked);
+        a.allocate("keep0", 500).unwrap();
+        a.allocate("keep1", 700).unwrap();
+        let before = a.machine().clone();
+        a.begin();
+        let t0 = a.allocate("t0", 100).unwrap();
+        let t1 = a.allocate("t1", 200).unwrap();
+        // Mid-transaction fault on a PE the transaction just placed.
+        assert!(a.machine.kill_pe(t1), "t1 hosts a transaction allocation");
+        a.rollback();
+        // Rollback frees the journal (dead PE included); the only residue
+        // is the fault mark itself, which by design outlives transactions.
+        let mut expected = before;
+        expected.kill_pe(t1);
+        assert_eq!(a.machine(), &expected, "journal must restore allocation state exactly");
+        assert_eq!(a.machine().dtcm_used(t0), 0);
+        assert_eq!(a.machine().label(t1), "");
+        // And the next allocation routes around the dead PE.
+        let next = a.allocate("next", 100).unwrap();
+        assert_eq!(next, t0, "freed healthy PE is reused first");
+        assert_ne!(a.allocate("after", 100).unwrap(), t1, "dead PE must not come back");
+    }
+
+    #[test]
+    fn strategies_route_around_faults() {
+        use crate::hardware::{FaultMap, Machine, PeHandle};
+        for strategy in PlacementStrategy::ALL {
+            let mut faults = FaultMap::healthy();
+            faults.kill_chip(0, 0);
+            faults.kill_pe(PeHandle { chip_x: 1, chip_y: 0, core: 0 });
+            let machine = Machine::with_faults(grid(2, 1, 4), faults);
+            let mut a = Allocator::from_machine(machine, strategy);
+            let pes = a.place_group("g", &[("a", 10), ("b", 10), ("c", 10)]).unwrap();
+            assert!(
+                pes.iter().all(|pe| pe.chip_x == 1 && pe.core != 0),
+                "{strategy}: placement must avoid faulted resources, got {pes:?}"
+            );
+            // 3 of the chip's 3 surviving PEs are taken; one more must fail
+            // with the fault-aware capacity message.
+            let err = a.allocate("overflow", 10).unwrap_err();
+            assert!(format!("{err:#}").contains("5 faulted"), "{err:#}");
         }
     }
 

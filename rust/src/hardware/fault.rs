@@ -1,0 +1,516 @@
+//! Fault model over the machine: dead PEs, dead chips, degraded NoC links.
+//!
+//! SpiNNaker2-class machines are large enough that dead resources are an
+//! operational fact, not an edge case (the 10M-core system paper budgets
+//! for them explicitly). This module gives the mapping stack a first-class
+//! fault vocabulary:
+//!
+//! * [`FaultMap`] — the set of resources planning must never place on:
+//!   dead PEs, whole dead chips, and degraded inter-chip links (a latency
+//!   multiplier the NoC estimator can price). Loadable from a JSON file
+//!   (`simulate --fault-map`) and mutable at runtime as faults are
+//!   detected.
+//! * [`FaultSchedule`] — a deterministic, seeded mid-run fault injector:
+//!   each sample boundary draws (seed-reproducibly) whether a fault fires
+//!   and which victim PE it kills. Two runs with the same seed, rate, and
+//!   victim list produce bit-identical [`FaultEvent`] sequences — the
+//!   chaos-test contract CI enforces.
+//! * [`FaultEvent`] / [`FaultError`] — the typed currency of the recovery
+//!   state machine in `switching::recovery` (detect → rollback → re-admit
+//!   → re-materialize → re-place → replay; DESIGN.md §Fault-Tolerance).
+//!   Unsurvivable faults surface as a typed error and a per-layer
+//!   `Skipped` status, never a panic or a silently wrong answer.
+
+use super::machine::PeHandle;
+use super::spec::MachineSpec;
+use crate::io::json::Json;
+use crate::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::Path;
+
+/// An undirected inter-chip link, stored with endpoints sorted so
+/// `(a, b)` and `(b, a)` name the same link.
+pub type ChipLink = ((usize, usize), (usize, usize));
+
+fn link_key(a: (usize, usize), b: (usize, usize)) -> ChipLink {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Typed fault-path failure. Recovery code returns these instead of
+/// panicking; the CLI and the run report render them with full context.
+#[derive(Debug)]
+pub enum FaultError {
+    /// The `--fault-map` file could not be read.
+    Io { path: String, source: std::io::Error },
+    /// The `--fault-map` file parsed but is not a valid fault map.
+    BadFaultMap { path: String, detail: String },
+    /// A fault names a resource outside the machine.
+    OutOfRange { what: &'static str, detail: String },
+    /// Recovery found no feasible re-placement for a layer on the
+    /// surviving machine (the degraded-mode trigger, not a crash).
+    NoFeasiblePlacement { layer: usize, detail: String },
+    /// A replacement layer could not be re-materialized.
+    Rematerialize { layer: usize, detail: String },
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::Io { path, source } => {
+                write!(f, "fault map {path}: {source}")
+            }
+            FaultError::BadFaultMap { path, detail } => {
+                write!(f, "fault map {path}: {detail}")
+            }
+            FaultError::OutOfRange { what, detail } => {
+                write!(f, "fault targets nonexistent {what}: {detail}")
+            }
+            FaultError::NoFeasiblePlacement { layer, detail } => {
+                write!(f, "no feasible re-placement for layer {layer}: {detail}")
+            }
+            FaultError::Rematerialize { layer, detail } => {
+                write!(f, "re-materializing layer {layer}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FaultError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// The set of faulted resources planning must route around.
+///
+/// Dead chips subsume their PEs: a PE is faulted when it is listed dead
+/// *or* its chip is. Degraded links carry a latency multiplier ≥ 1 that
+/// the NoC traffic estimator applies per traversal.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultMap {
+    dead_pes: BTreeSet<PeHandle>,
+    dead_chips: BTreeSet<(usize, usize)>,
+    degraded_links: BTreeMap<ChipLink, f64>,
+}
+
+impl FaultMap {
+    /// A pristine machine: nothing faulted.
+    pub fn healthy() -> Self {
+        FaultMap::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dead_pes.is_empty() && self.dead_chips.is_empty() && self.degraded_links.is_empty()
+    }
+
+    /// Mark one PE dead. Returns `true` if it was previously healthy.
+    pub fn kill_pe(&mut self, pe: PeHandle) -> bool {
+        let fresh = !self.is_pe_dead(pe);
+        self.dead_pes.insert(pe);
+        fresh
+    }
+
+    /// Mark a whole chip (all its PEs) dead.
+    pub fn kill_chip(&mut self, chip_x: usize, chip_y: usize) {
+        self.dead_chips.insert((chip_x, chip_y));
+    }
+
+    /// Degrade the inter-chip link between `a` and `b` by `factor` (≥ 1;
+    /// a traversal costs `factor ×` the healthy latency). Direction does
+    /// not matter.
+    pub fn degrade_link(&mut self, a: (usize, usize), b: (usize, usize), factor: f64) {
+        self.degraded_links.insert(link_key(a, b), factor.max(1.0));
+    }
+
+    /// Is this PE unusable (listed dead, or on a dead chip)?
+    pub fn is_pe_dead(&self, pe: PeHandle) -> bool {
+        self.dead_pes.contains(&pe) || self.dead_chips.contains(&(pe.chip_x, pe.chip_y))
+    }
+
+    pub fn is_chip_dead(&self, chip_x: usize, chip_y: usize) -> bool {
+        self.dead_chips.contains(&(chip_x, chip_y))
+    }
+
+    /// Latency multiplier for the link `a`↔`b` (1.0 when healthy).
+    pub fn link_factor(&self, a: (usize, usize), b: (usize, usize)) -> f64 {
+        self.degraded_links.get(&link_key(a, b)).copied().unwrap_or(1.0)
+    }
+
+    /// Individually-dead PEs (dead chips not expanded).
+    pub fn dead_pes(&self) -> impl Iterator<Item = PeHandle> + '_ {
+        self.dead_pes.iter().copied()
+    }
+
+    pub fn dead_chips(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.dead_chips.iter().copied()
+    }
+
+    pub fn n_dead_pes(&self) -> usize {
+        self.dead_pes.len()
+    }
+
+    pub fn n_dead_chips(&self) -> usize {
+        self.dead_chips.len()
+    }
+
+    pub fn n_degraded_links(&self) -> usize {
+        self.degraded_links.len()
+    }
+
+    /// How many PEs of a `spec`-sized machine this map rules out (dead
+    /// chips expand to their PE count; out-of-grid faults count zero).
+    /// Admission uses this to shrink its capacity headroom.
+    pub fn dead_pe_count(&self, spec: &MachineSpec) -> usize {
+        let per_chip = spec.chip.pes_per_chip;
+        let chips = self
+            .dead_chips
+            .iter()
+            .filter(|&&(x, y)| x < spec.chips_x && y < spec.chips_y)
+            .count();
+        let lone = self
+            .dead_pes
+            .iter()
+            .filter(|pe| {
+                pe.chip_x < spec.chips_x && pe.chip_y < spec.chips_y && pe.core < per_chip
+            })
+            .filter(|pe| !self.dead_chips.contains(&(pe.chip_x, pe.chip_y)))
+            .count();
+        chips * per_chip + lone
+    }
+
+    /// Parse the `--fault-map` JSON schema:
+    ///
+    /// ```json
+    /// {
+    ///   "dead_pes":       [{"chip_x": 0, "chip_y": 0, "core": 3}],
+    ///   "dead_chips":     [{"x": 1, "y": 0}],
+    ///   "degraded_links": [{"ax": 0, "ay": 0, "bx": 1, "by": 0, "factor": 2.5}]
+    /// }
+    /// ```
+    ///
+    /// Every section is optional; unknown keys are rejected so a typo'd
+    /// map fails loudly instead of silently faulting nothing.
+    pub fn from_json(text: &str, origin: &str) -> Result<FaultMap, FaultError> {
+        let bad = |detail: String| FaultError::BadFaultMap {
+            path: origin.to_string(),
+            detail,
+        };
+        let json = Json::parse(text).map_err(|e| bad(format!("invalid JSON: {e}")))?;
+        let Json::Obj(fields) = &json else {
+            return Err(bad("top level must be an object".into()));
+        };
+        for key in fields.keys() {
+            if !matches!(key.as_str(), "dead_pes" | "dead_chips" | "degraded_links") {
+                return Err(bad(format!(
+                    "unknown key '{key}' (want dead_pes/dead_chips/degraded_links)"
+                )));
+            }
+        }
+        let arr = |key: &str| -> Result<&[Json], FaultError> {
+            match json.get(key) {
+                None => Ok(&[]),
+                Some(Json::Arr(items)) => Ok(items.as_slice()),
+                Some(_) => Err(bad(format!("'{key}' must be an array"))),
+            }
+        };
+        let field = |obj: &Json, section: &str, key: &str| -> Result<usize, FaultError> {
+            let v = obj.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                bad(format!("{section} entry: missing numeric '{key}'"))
+            })?;
+            if v < 0.0 || v.fract() != 0.0 {
+                return Err(bad(format!(
+                    "{section} entry: '{key}' must be a non-negative integer, got {v}"
+                )));
+            }
+            Ok(v as usize)
+        };
+
+        let mut map = FaultMap::healthy();
+        for item in arr("dead_pes")? {
+            map.dead_pes.insert(PeHandle {
+                chip_x: field(item, "dead_pes", "chip_x")?,
+                chip_y: field(item, "dead_pes", "chip_y")?,
+                core: field(item, "dead_pes", "core")?,
+            });
+        }
+        for item in arr("dead_chips")? {
+            map.dead_chips.insert((
+                field(item, "dead_chips", "x")?,
+                field(item, "dead_chips", "y")?,
+            ));
+        }
+        for item in arr("degraded_links")? {
+            let factor = item
+                .get("factor")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad("degraded_links entry: missing numeric 'factor'".into()))?;
+            if !factor.is_finite() || factor < 1.0 {
+                return Err(bad(format!(
+                    "degraded_links entry: factor must be finite and >= 1, got {factor}"
+                )));
+            }
+            let a = (
+                field(item, "degraded_links", "ax")?,
+                field(item, "degraded_links", "ay")?,
+            );
+            let b = (
+                field(item, "degraded_links", "bx")?,
+                field(item, "degraded_links", "by")?,
+            );
+            map.degrade_link(a, b, factor);
+        }
+        Ok(map)
+    }
+
+    /// Load a fault map from a `--fault-map` JSON file.
+    pub fn load(path: &Path) -> Result<FaultMap, FaultError> {
+        let text = std::fs::read_to_string(path).map_err(|source| FaultError::Io {
+            path: path.display().to_string(),
+            source,
+        })?;
+        FaultMap::from_json(&text, &path.display().to_string())
+    }
+
+    /// Serialize back to the [`FaultMap::from_json`] schema (report/debug
+    /// output; lossless round trip modulo float formatting).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "dead_pes",
+                Json::Arr(
+                    self.dead_pes
+                        .iter()
+                        .map(|pe| {
+                            Json::obj(vec![
+                                ("chip_x", Json::Num(pe.chip_x as f64)),
+                                ("chip_y", Json::Num(pe.chip_y as f64)),
+                                ("core", Json::Num(pe.core as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "dead_chips",
+                Json::Arr(
+                    self.dead_chips
+                        .iter()
+                        .map(|&(x, y)| {
+                            Json::obj(vec![
+                                ("x", Json::Num(x as f64)),
+                                ("y", Json::Num(y as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "degraded_links",
+                Json::Arr(
+                    self.degraded_links
+                        .iter()
+                        .map(|(&((ax, ay), (bx, by)), &factor)| {
+                            Json::obj(vec![
+                                ("ax", Json::Num(ax as f64)),
+                                ("ay", Json::Num(ay as f64)),
+                                ("bx", Json::Num(bx as f64)),
+                                ("by", Json::Num(by as f64)),
+                                ("factor", Json::Num(factor)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One injected fault: a PE died at a sample boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Sample index at whose boundary the fault fired.
+    pub sample: u64,
+    /// The PE that died.
+    pub pe: PeHandle,
+}
+
+/// Deterministic seeded mid-run fault injector.
+///
+/// At each sample boundary the caller offers the list of currently
+/// *occupied, healthy* PEs (sorted — `Vec<PeHandle>` from a `BTreeSet`
+/// or placement order); with probability `rate` the schedule kills one of
+/// them, chosen uniformly from the offered list. The draw stream is a
+/// pure function of the seed, so identical runs inject identical faults —
+/// the determinism CI's chaos test asserts.
+#[derive(Clone, Debug)]
+pub struct FaultSchedule {
+    rng: Rng,
+    rate: f64,
+    injected: usize,
+}
+
+impl FaultSchedule {
+    /// `rate` is the per-sample fault probability, clamped to [0, 1].
+    pub fn new(seed: u64, rate: f64) -> Self {
+        FaultSchedule {
+            rng: Rng::new(seed ^ 0xfa17_fa17_fa17_fa17),
+            rate: rate.clamp(0.0, 1.0),
+            injected: 0,
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> usize {
+        self.injected
+    }
+
+    /// Draw the fault decision for the boundary before `sample`.
+    /// `victims` are the PEs eligible to die (occupied and healthy);
+    /// an empty list means nothing can fault this round. One uniform
+    /// draw is consumed for the fire decision and, when it fires, one
+    /// more for victim choice — so the stream stays aligned across runs
+    /// regardless of outcome order.
+    pub fn draw(&mut self, sample: u64, victims: &[PeHandle]) -> Option<FaultEvent> {
+        if !self.rng.chance(self.rate) || victims.is_empty() {
+            return None;
+        }
+        let idx = self.rng.below(victims.len());
+        self.injected += 1;
+        Some(FaultEvent { sample, pe: victims[idx] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe(x: usize, y: usize, core: usize) -> PeHandle {
+        PeHandle { chip_x: x, chip_y: y, core }
+    }
+
+    #[test]
+    fn dead_chip_subsumes_its_pes() {
+        let mut map = FaultMap::healthy();
+        assert!(map.is_empty());
+        map.kill_chip(1, 0);
+        assert!(map.is_pe_dead(pe(1, 0, 17)));
+        assert!(!map.is_pe_dead(pe(0, 0, 17)));
+        assert!(map.is_chip_dead(1, 0));
+        assert!(!map.is_empty());
+    }
+
+    #[test]
+    fn kill_pe_reports_freshness() {
+        let mut map = FaultMap::healthy();
+        assert!(map.kill_pe(pe(0, 0, 3)));
+        assert!(!map.kill_pe(pe(0, 0, 3)), "second kill is stale");
+        map.kill_chip(2, 2);
+        assert!(!map.kill_pe(pe(2, 2, 9)), "already dead via chip");
+        assert_eq!(map.n_dead_pes(), 2);
+    }
+
+    #[test]
+    fn link_degradation_is_symmetric() {
+        let mut map = FaultMap::healthy();
+        map.degrade_link((0, 0), (1, 0), 2.5);
+        assert_eq!(map.link_factor((1, 0), (0, 0)), 2.5);
+        assert_eq!(map.link_factor((0, 0), (1, 0)), 2.5);
+        assert_eq!(map.link_factor((0, 0), (0, 1)), 1.0);
+        assert_eq!(map.n_degraded_links(), 1);
+    }
+
+    #[test]
+    fn dead_pe_count_expands_chips_and_ignores_out_of_grid() {
+        let spec = MachineSpec { chips_x: 2, chips_y: 2, ..Default::default() };
+        let per_chip = spec.chip.pes_per_chip;
+        let mut map = FaultMap::healthy();
+        map.kill_chip(0, 1);
+        map.kill_pe(pe(0, 1, 3)); // subsumed by its dead chip
+        map.kill_pe(pe(1, 1, 7)); // counts alone
+        map.kill_pe(pe(9, 9, 0)); // outside the 2x2 grid
+        map.kill_chip(5, 5); // outside the grid
+        map.kill_pe(pe(0, 0, per_chip + 1)); // core beyond the chip
+        assert_eq!(map.dead_pe_count(&spec), per_chip + 1);
+        assert_eq!(FaultMap::healthy().dead_pe_count(&spec), 0);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let mut map = FaultMap::healthy();
+        map.kill_pe(pe(0, 0, 3));
+        map.kill_pe(pe(3, 2, 151));
+        map.kill_chip(1, 1);
+        map.degrade_link((0, 0), (1, 0), 4.0);
+        let text = map.to_json().to_string_compact();
+        let back = FaultMap::from_json(&text, "test").unwrap();
+        assert_eq!(back, map);
+    }
+
+    #[test]
+    fn json_rejects_malformed_maps() {
+        let cases = [
+            ("not json", "invalid JSON"),
+            ("[1,2]", "top level"),
+            (r#"{"dead_pe":[]}"#, "unknown key"),
+            (r#"{"dead_pes":{"chip_x":0}}"#, "must be an array"),
+            (r#"{"dead_pes":[{"chip_x":0,"chip_y":0}]}"#, "missing numeric 'core'"),
+            (r#"{"dead_pes":[{"chip_x":0.5,"chip_y":0,"core":1}]}"#, "non-negative integer"),
+            (r#"{"dead_chips":[{"x":-1,"y":0}]}"#, "non-negative integer"),
+            (
+                r#"{"degraded_links":[{"ax":0,"ay":0,"bx":1,"by":0,"factor":0.5}]}"#,
+                "factor must be finite and >= 1",
+            ),
+        ];
+        for (text, want) in cases {
+            let err = FaultMap::from_json(text, "t").unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(want), "for {text:?}: got {msg:?}, want {want:?}");
+            assert!(matches!(err, FaultError::BadFaultMap { .. }));
+        }
+    }
+
+    #[test]
+    fn missing_file_is_a_typed_io_error() {
+        let err = FaultMap::load(Path::new("/definitely/not/here.json")).unwrap_err();
+        assert!(matches!(err, FaultError::Io { .. }));
+        assert!(err.to_string().contains("not/here.json"));
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let victims: Vec<PeHandle> = (0..10).map(|c| pe(0, 0, c)).collect();
+        let run = |seed| {
+            let mut sched = FaultSchedule::new(seed, 0.5);
+            (0..64).map(|s| sched.draw(s, &victims)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay identically");
+        assert_ne!(run(7), run(8), "different seeds must differ");
+        let events: Vec<FaultEvent> = run(7).into_iter().flatten().collect();
+        assert!(!events.is_empty(), "rate 0.5 over 64 samples must fire");
+        assert!(events.iter().all(|e| victims.contains(&e.pe)));
+    }
+
+    #[test]
+    fn zero_rate_never_fires_and_empty_victims_cannot() {
+        let victims = vec![pe(0, 0, 0)];
+        let mut sched = FaultSchedule::new(1, 0.0);
+        assert!((0..100).all(|s| sched.draw(s, &victims).is_none()));
+        let mut sched = FaultSchedule::new(1, 1.0);
+        assert!(sched.draw(0, &[]).is_none(), "no victims, no fault");
+        assert_eq!(sched.injected(), 0);
+        assert!(sched.draw(1, &victims).is_some());
+        assert_eq!(sched.injected(), 1);
+    }
+}

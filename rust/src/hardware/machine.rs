@@ -5,6 +5,7 @@
 //! machine enforces the per-PE budget and exposes utilization metrics that
 //! the evaluation benches report.
 
+use super::fault::FaultMap;
 use super::spec::MachineSpec;
 use anyhow::{bail, Result};
 
@@ -23,28 +24,39 @@ impl std::fmt::Display for PeHandle {
 }
 
 /// Allocation record for one PE.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 struct PeState {
     allocated: bool,
     dtcm_used: usize,
     label: String,
 }
 
-/// A machine with allocation state.
-#[derive(Clone, Debug)]
+/// A machine with allocation state and a fault map. Faulted PEs are
+/// excluded from every free-capacity scan and rejected by allocation, so
+/// strategies layered on top route around faults without knowing about
+/// them. `PartialEq` compares the full allocation state byte for byte —
+/// the allocator-rollback tests' exactness oracle.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Machine {
     spec: MachineSpec,
     pes: Vec<PeState>,
     next_free: usize,
+    faults: FaultMap,
 }
 
 impl Machine {
     pub fn new(spec: MachineSpec) -> Self {
+        Machine::with_faults(spec, FaultMap::healthy())
+    }
+
+    /// A machine born with known-faulted resources (`--fault-map`).
+    pub fn with_faults(spec: MachineSpec, faults: FaultMap) -> Self {
         let n = spec.total_pes();
         Machine {
             spec,
             pes: vec![PeState { allocated: false, dtcm_used: 0, label: String::new() }; n],
             next_free: 0,
+            faults,
         }
     }
 
@@ -71,20 +83,48 @@ impl Machine {
         }
     }
 
+    /// The machine's fault map.
+    pub fn fault_map(&self) -> &FaultMap {
+        &self.faults
+    }
+
+    /// Replace the fault map wholesale (e.g. after loading `--fault-map`).
+    /// Existing allocations on newly-faulted PEs are kept — the recovery
+    /// path detects and evacuates them.
+    pub fn set_fault_map(&mut self, faults: FaultMap) {
+        self.faults = faults;
+    }
+
+    /// Mark one PE dead mid-run. Returns `true` when the PE currently
+    /// hosts an allocation (the caller must evacuate/re-place it).
+    pub fn kill_pe(&mut self, pe: PeHandle) -> bool {
+        self.faults.kill_pe(pe);
+        self.pes[self.index(pe)].allocated
+    }
+
+    /// Is this PE unusable per the fault map?
+    pub fn is_faulted(&self, pe: PeHandle) -> bool {
+        self.faults.is_pe_dead(pe)
+    }
+
+    fn faulted_index(&self, idx: usize) -> bool {
+        self.faults.is_pe_dead(self.handle(idx))
+    }
+
     /// Allocate the next free PE, charging `dtcm_bytes` against its budget.
     ///
     /// Fails if the machine is full or the request exceeds the usable DTCM
     /// (total minus the OS reserve — the reserve is accounted inside the
     /// cost models, so `dtcm_bytes` here must already include it).
     pub fn allocate(&mut self, label: &str, dtcm_bytes: usize) -> Result<PeHandle> {
-        // next_free is a low-water mark; scan forward from it.
-        while self.next_free < self.pes.len() && self.pes[self.next_free].allocated {
-            self.next_free += 1;
-        }
-        if self.next_free >= self.pes.len() {
-            bail!("machine full: all {} PEs allocated", self.pes.len());
-        }
-        self.allocate_index(self.next_free, label, dtcm_bytes)
+        let Some(idx) = self.first_free_index() else {
+            bail!(
+                "machine full: all {} usable PEs allocated ({} faulted)",
+                self.usable_pes(),
+                self.total_pes() - self.usable_pes()
+            );
+        };
+        self.allocate_index(idx, label, dtcm_bytes)
     }
 
     /// Allocate one *specific* PE by linear index (the [`super::alloc::Allocator`]
@@ -102,6 +142,9 @@ impl Machine {
                 self.spec.chip.pe.dtcm_bytes
             );
         }
+        if self.faulted_index(idx) {
+            bail!("PE {} is faulted; allocation '{label}' refused", self.handle(idx));
+        }
         if self.pes[idx].allocated {
             bail!("PE {} already allocated (to '{}')", self.handle(idx), self.pes[idx].label);
         }
@@ -115,9 +158,11 @@ impl Machine {
         Ok(self.handle(idx))
     }
 
-    /// Lowest free linear index, if any (pure scan from the low-water mark).
+    /// Lowest free, non-faulted linear index, if any (pure scan from the
+    /// low-water mark).
     pub(crate) fn first_free_index(&self) -> Option<usize> {
-        (self.next_free..self.pes.len()).find(|&i| !self.pes[i].allocated)
+        (self.next_free..self.pes.len())
+            .find(|&i| !self.pes[i].allocated && !self.faulted_index(i))
     }
 
     /// Release a PE back to the pool.
@@ -137,9 +182,16 @@ impl Machine {
         self.pes.len()
     }
 
-    /// PEs still free on the machine.
+    /// PEs still allocatable on the machine (free and not faulted).
     pub fn free_pes(&self) -> usize {
-        self.pes.len() - self.allocated_count()
+        (0..self.pes.len())
+            .filter(|&i| !self.pes[i].allocated && !self.faulted_index(i))
+            .count()
+    }
+
+    /// PEs not ruled out by the fault map (allocated or not).
+    pub fn usable_pes(&self) -> usize {
+        (0..self.pes.len()).filter(|&i| !self.faulted_index(i)).count()
     }
 
     /// Chips on the machine (row-major linear chip index space).
@@ -152,14 +204,16 @@ impl Machine {
         chip * per_chip..(chip + 1) * per_chip
     }
 
-    /// Free PEs on one chip.
+    /// Allocatable PEs on one chip (free and not faulted).
     pub fn chip_free_pes(&self, chip: usize) -> usize {
-        self.chip_range(chip).filter(|&i| !self.pes[i].allocated).count()
+        self.chip_range(chip)
+            .filter(|&i| !self.pes[i].allocated && !self.faulted_index(i))
+            .count()
     }
 
-    /// Lowest free linear index on one chip, if any.
+    /// Lowest free, non-faulted linear index on one chip, if any.
     pub(crate) fn first_free_in_chip(&self, chip: usize) -> Option<usize> {
-        self.chip_range(chip).find(|&i| !self.pes[i].allocated)
+        self.chip_range(chip).find(|&i| !self.pes[i].allocated && !self.faulted_index(i))
     }
 
     /// DTCM bytes in use on one chip.
@@ -290,6 +344,64 @@ mod tests {
         assert_eq!(m.chips_used(), 1);
         assert_eq!(m.first_free_in_chip(0), Some(2));
         assert_eq!(m.first_free_in_chip(1), Some(4));
+    }
+
+    #[test]
+    fn faulted_pes_are_invisible_to_allocation() {
+        let mut faults = FaultMap::healthy();
+        faults.kill_pe(PeHandle { chip_x: 0, chip_y: 0, core: 0 });
+        faults.kill_pe(PeHandle { chip_x: 0, chip_y: 0, core: 2 });
+        let mut m = Machine::with_faults(MachineSpec::default(), faults);
+        assert_eq!(m.usable_pes(), 150);
+        assert_eq!(m.free_pes(), 150);
+        // The scan routes around cores 0 and 2.
+        assert_eq!(m.allocate("a", 100).unwrap().core, 1);
+        assert_eq!(m.allocate("b", 100).unwrap().core, 3);
+        assert_eq!(m.chip_free_pes(0), 148);
+        // Direct placement on a faulted PE is refused with a typed message.
+        let err = m.allocate_index(0, "x", 100).unwrap_err();
+        assert!(err.to_string().contains("faulted"), "{err}");
+    }
+
+    #[test]
+    fn dead_chip_shifts_allocation_to_the_next_chip() {
+        let spec = MachineSpec { chips_x: 2, chips_y: 1, ..Default::default() };
+        let mut faults = FaultMap::healthy();
+        faults.kill_chip(0, 0);
+        let mut m = Machine::with_faults(spec, faults);
+        assert_eq!(m.usable_pes(), 152);
+        let pe = m.allocate("a", 100).unwrap();
+        assert_eq!((pe.chip_x, pe.chip_y), (1, 0));
+        assert_eq!(m.chip_free_pes(0), 0);
+        assert_eq!(m.first_free_in_chip(0), None);
+    }
+
+    #[test]
+    fn kill_pe_reports_hosted_allocations_and_blocks_reuse() {
+        let mut m = Machine::single_chip();
+        let a = m.allocate("victim", 500).unwrap();
+        assert!(m.kill_pe(a), "PE hosted an allocation");
+        assert!(m.is_faulted(a));
+        // Evacuating frees the bookkeeping, but the PE stays unallocatable.
+        m.free(a);
+        let b = m.allocate("next", 100).unwrap();
+        assert_ne!(b, a, "dead PE must not be reused");
+        // Killing a free PE reports no hosted allocation.
+        let idle = PeHandle { chip_x: 0, chip_y: 0, core: 50 };
+        assert!(!m.kill_pe(idle));
+    }
+
+    #[test]
+    fn machine_equality_is_byte_level() {
+        let mut a = Machine::single_chip();
+        let mut b = Machine::single_chip();
+        assert_eq!(a, b);
+        a.allocate("x", 100).unwrap();
+        assert_ne!(a, b);
+        b.allocate("x", 100).unwrap();
+        assert_eq!(a, b);
+        b.allocate("y", 100).unwrap();
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -13,12 +13,16 @@
 //! * [`alloc`] — strategy-driven, transactional allocation over a machine
 //!   (linear / chip-packed / balanced placement).
 //! * [`noc`] — a hop-count/latency NoC model with multicast routing.
+//! * [`fault`] — the fault model (dead PEs/chips, degraded links) and the
+//!   deterministic seeded fault injector driving the recovery path.
 
 pub mod alloc;
+pub mod fault;
 pub mod machine;
 pub mod noc;
 pub mod spec;
 
 pub use alloc::{Allocator, PlacementStrategy};
+pub use fault::{FaultError, FaultEvent, FaultMap, FaultSchedule};
 pub use machine::{Machine, PeHandle};
 pub use spec::{ChipSpec, MacArraySpec, MachineSpec, PeSpec};

@@ -13,6 +13,7 @@
 //!                   [--intra-jobs N] [--profile]
 //!                   [--machine WxH|light-board] [--strategy S]
 //!                   [--artifact-dir PATH]
+//!                   [--fault-map PATH] [--fault-seed N] [--fault-rate F]
 //!                   [--record-csv PATH]      # demo 3-layer network
 //! s2switch calibrate [--artifact-dir PATH] [--out FILE]
 //! ```
@@ -118,11 +119,16 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|cali
   simulate  --steps N --batch S --pjrt --jobs N --intra-jobs N --profile
             --record-csv PATH --machine WxH|light-board --strategy S
             --artifact-dir PATH
+            --fault-map PATH --fault-seed N --fault-rate F
             run the demo network end to end (--batch S: S stimulus samples
             through the BatchRunner; --intra-jobs N: per-sample layer
             parallelism; --profile: per-phase wall-clock breakdown plus the
             kernel variants and calibration constants in play;
-            --record-csv: dump recorded spikes)
+            --record-csv: dump recorded spikes; any --fault-* flag routes
+            the run through the fault-tolerant recovery loop — --fault-map
+            loads pre-existing dead PEs/chips/degraded links, --fault-rate
+            injects seeded mid-run PE deaths recovered by checkpointed
+            re-placement from the artifact store)
   calibrate --artifact-dir PATH --out FILE
             micro-benchmark this host's kernels (serial events/s, parallel
             MACs/s, LIF neuron-steps/s) and persist the constants as
@@ -280,9 +286,12 @@ fn cmd_decide(args: &Args) -> Result<()> {
     let model = PathBuf::from(args.get("model").unwrap_or("data/adaboost.json"));
     let sys = load_switching_system(&model, PeSpec::default())
         .context("train a model first: s2switch train")?;
-    let verdict = sys
-        .prejudge(&ch)?
-        .expect("a loaded classifier system always prejudges");
+    let verdict = sys.prejudge(&ch)?.ok_or_else(|| {
+        anyhow::anyhow!(
+            "the loaded model produced no prejudgment for this layer — \
+             retrain it (s2switch train) and pass the new --model"
+        )
+    })?;
     println!(
         "layer (src={}, tgt={}, density={:.2}, delay={}) → {}",
         ch.n_source, ch.n_target, ch.density, ch.delay_range, verdict
@@ -404,8 +413,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // Host calibration constants live next to the artifact store; when
     // present they re-price the runtime-informed paradigm check in measured
     // step seconds (run `s2switch calibrate` to produce them).
+    // A corrupt or implausible calibration file must not poison paradigm
+    // decisions: warn and fall back to the static cost formulas.
     let calibration = match args.get("artifact-dir") {
-        Some(dir) => s2switch::calibrate::load_from_dir(std::path::Path::new(dir))?,
+        Some(dir) => match s2switch::calibrate::load_from_dir(std::path::Path::new(dir)) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("warning: ignoring calibration constants ({e:#}); using static formulas");
+                None
+            }
+        },
         None => None,
     };
     if let Some(c) = &calibration {
@@ -418,6 +435,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             );
         }
     }
+    // Any --fault-* flag routes through the fault-tolerant recovery loop
+    // (checkpoint at sample boundaries, re-admit + re-place survivors,
+    // replay — DESIGN.md §Fault-Tolerance).
+    if args.has("fault-map") || args.has("fault-seed") || args.has("fault-rate") {
+        return simulate_faulted(args, &net, &mut sys, steps, rate);
+    }
+
     // Capacity-aware admission: prejudge → feasibility check → compile →
     // place + route on the requested machine (Fig. 2's tail).
     let adm = sys.admit_network(&net, parse_machine(args)?, parse_strategy(args)?)?;
@@ -545,6 +569,81 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if let Some(out) = record_path {
         sim.recorder.save_spikes_csv(std::path::Path::new(out))?;
         println!("spikes exported to {out}");
+    }
+    Ok(())
+}
+
+/// `simulate --fault-*`: run the stimulus samples through the recovery
+/// loop instead of the plain simulator. `--batch S` sets the sample count
+/// (default 1); each sample runs `--steps` timesteps. Output ends with the
+/// deterministic [`RecoveryStats`](s2switch::switching::RecoveryStats)
+/// line the CI chaos check compares across runs.
+fn simulate_faulted(
+    args: &Args,
+    net: &s2switch::model::Network,
+    sys: &mut SwitchingSystem,
+    steps: u64,
+    rate: f64,
+) -> Result<()> {
+    use s2switch::hardware::FaultMap;
+    use s2switch::switching::RecoveryConfig;
+    ensure!(!args.has("pjrt"), "--fault-* runs on the native backend");
+    ensure!(
+        !args.has("profile"),
+        "--profile applies to plain single-sample runs (recovery rebuilds the sim mid-run)"
+    );
+    let initial_faults = match args.get("fault-map") {
+        Some(path) => FaultMap::load(std::path::Path::new(path))?,
+        None => FaultMap::healthy(),
+    };
+    let samples = args.parse_or("batch", 1u64)?.max(1);
+    let cfg = RecoveryConfig {
+        samples,
+        steps_per_sample: steps,
+        fault_seed: args.parse_or("fault-seed", 7u64)?,
+        fault_rate: args.parse_or("fault-rate", 0.0f64)?,
+        initial_faults,
+    };
+    println!(
+        "fault-tolerant run: {} sample(s) × {} steps, {} pre-dead PE(s), \
+         {} pre-dead chip(s), fault rate {} (seed {})",
+        cfg.samples,
+        cfg.steps_per_sample,
+        cfg.initial_faults.n_dead_pes(),
+        cfg.initial_faults.n_dead_chips(),
+        cfg.fault_rate,
+        cfg.fault_seed
+    );
+    let sizes: Vec<usize> = net.populations.iter().map(|p| p.n_neurons).collect();
+    let provider_for = |sample: u64| {
+        let sizes = sizes.clone();
+        let mut rng = Rng::new(99u64.wrapping_add(sample * 0x9E37_79B9_7F4A_7C15));
+        move |p: s2switch::model::PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..sizes[p.0] as u32).filter(|_| rng.chance(rate)));
+        }
+    };
+    let report = sys.run_fault_tolerant(
+        net,
+        parse_machine(args)?,
+        parse_strategy(args)?,
+        &cfg,
+        provider_for,
+    )?;
+    for (i, rec) in report.recorders.iter().enumerate() {
+        println!("sample {i:>3}: {:>6} spikes", rec.total_spikes());
+    }
+    for (i, status) in report.layer_status.iter().enumerate() {
+        println!("layer {i}: {status}");
+    }
+    println!("recovery: {}", report.stats);
+    println!(
+        "compiles: {} run, {} cache hits, {} artifact hits",
+        report.compile.total_compiles(),
+        report.compile.cache_hits,
+        report.compile.disk_hits
+    );
+    if let Some(err) = &report.degraded {
+        println!("degraded: {err}");
     }
     Ok(())
 }

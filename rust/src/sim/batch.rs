@@ -342,6 +342,38 @@ mod tests {
     }
 
     #[test]
+    fn panicking_provider_surfaces_on_the_caller_without_deadlock() {
+        let net = demo_net();
+        let layers = compiled(&net);
+        let runner = BatchRunner::new(&net, layers.clone()).unwrap().with_jobs(4);
+        // Sample 3's provider panics; the panic must resurface on the
+        // caller via resume_unwind — never a hang in the thread scope.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            runner.run(8, 30, |i| {
+                let mut inner = provider_for(i);
+                move |p: crate::model::PopulationId, t: u64, out: &mut Vec<u32>| {
+                    if i == 3 {
+                        panic!("stimulus source {i} failed");
+                    }
+                    inner(p, t, out)
+                }
+            })
+        }));
+        let payload = result.expect_err("worker panic must propagate to the caller");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("stimulus source 3"), "panic message lost: {msg:?}");
+        // The runner stays usable and sibling state is uncorrupted: a
+        // clean run afterwards still matches standalone sims bit for bit.
+        let clean = runner.run(4, 30, provider_for);
+        for i in 0..4 {
+            let mut sim = NetworkSim::native(&net, layers.clone()).unwrap();
+            let mut provider = provider_for(i);
+            sim.run(30, &mut provider);
+            assert_eq!(clean.recorders[i], sim.recorder, "sample {i} corrupted by the panic");
+        }
+    }
+
+    #[test]
     fn throughput_accounting_adds_up() {
         let net = demo_net();
         let run = BatchRunner::new(&net, compiled(&net))

@@ -41,7 +41,8 @@ pub use backend::{BackendBox, MacBackend, NativeMac};
 pub use spikebits::SpikeWords;
 pub use batch::{BatchRun, BatchRunner};
 pub use network::{
-    LayerActivity, NetworkSim, PhaseProfile, Recorder, SpikeProvider, VoltageTrace,
+    EngineCheckpoint, LayerActivity, NetworkSim, PhaseProfile, Recorder, SimCheckpoint,
+    SpikeProvider, VoltageTrace,
 };
-pub use parallel_engine::ParallelLayerEngine;
-pub use serial_engine::SerialLayerEngine;
+pub use parallel_engine::{ParallelEngineCheckpoint, ParallelLayerEngine};
+pub use serial_engine::{SerialEngineCheckpoint, SerialLayerEngine};

@@ -23,8 +23,8 @@
 //! [`super::batch::BatchRunner`] builds on.
 
 use super::backend::{BackendBox, NativeMac};
-use super::parallel_engine::ParallelLayerEngine;
-use super::serial_engine::SerialLayerEngine;
+use super::parallel_engine::{ParallelEngineCheckpoint, ParallelLayerEngine};
+use super::serial_engine::{SerialEngineCheckpoint, SerialLayerEngine};
 use super::spikebits::SpikeWords;
 #[cfg(not(feature = "pjrt"))]
 use crate::costmodel::serial::balanced_split;
@@ -32,7 +32,7 @@ use crate::model::lif::lif_step_chunked;
 use crate::model::{LifParams, Network, PopulationId};
 use crate::paradigm::Paradigm;
 use crate::switching::CompiledLayer;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
 #[cfg(not(feature = "pjrt"))]
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -123,6 +123,108 @@ impl LayerEngine {
             LayerEngine::Serial(_) => None,
             LayerEngine::Parallel(e) => Some(e.backend_kernel_variant()),
         }
+    }
+
+    fn checkpoint(&self) -> EngineCheckpoint {
+        match self {
+            LayerEngine::Serial(e) => EngineCheckpoint::Serial(e.checkpoint()),
+            LayerEngine::Parallel(e) => EngineCheckpoint::Parallel(e.checkpoint()),
+        }
+    }
+
+    fn reset_to(&mut self, t: u64) {
+        match self {
+            LayerEngine::Serial(e) => e.reset_to(t),
+            LayerEngine::Parallel(e) => e.reset_to(t),
+        }
+    }
+}
+
+/// Snapshot of one layer engine's dynamic state, tagged by paradigm.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineCheckpoint {
+    Serial(SerialEngineCheckpoint),
+    Parallel(ParallelEngineCheckpoint),
+}
+
+impl EngineCheckpoint {
+    /// True when every captured buffer is identically zero (the post-reset
+    /// state) — the only state that can restore across a paradigm flip.
+    pub fn is_pristine(&self) -> bool {
+        match self {
+            EngineCheckpoint::Serial(c) => c.is_pristine(),
+            EngineCheckpoint::Parallel(c) => c.is_pristine(),
+        }
+    }
+
+    pub fn timestep(&self) -> u64 {
+        match self {
+            EngineCheckpoint::Serial(c) => c.timestep(),
+            EngineCheckpoint::Parallel(c) => c.timestep(),
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        match self {
+            EngineCheckpoint::Serial(c) => c.byte_size(),
+            EngineCheckpoint::Parallel(c) => c.byte_size(),
+        }
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        match self {
+            EngineCheckpoint::Serial(_) => Paradigm::Serial,
+            EngineCheckpoint::Parallel(_) => Paradigm::Parallel,
+        }
+    }
+}
+
+/// Snapshot of a [`NetworkSim`]'s complete dynamic state at one timestep:
+/// membrane voltages and refractory counters, input-current accumulators,
+/// spike scratch (id lists and packed words), per-engine ring state, the
+/// recorder, and the clock. Cumulative telemetry (activity counters,
+/// profiling nanos) is deliberately excluded — it is reporting state, not
+/// replay state. The recovery path takes one of these at every sample
+/// boundary and rolls back to it when a fault invalidates the sample
+/// ([`NetworkSim::restore`]); stimulus RNG cursors live with the caller's
+/// [`SpikeProvider`], which the recovery runner snapshots alongside
+/// (`crate::rng::Rng` is `Clone`).
+#[derive(Clone, Debug)]
+pub struct SimCheckpoint {
+    /// Per engine: original projection index + paradigm-tagged state, in
+    /// the sim's wave-grouped engine order.
+    engines: Vec<(usize, EngineCheckpoint)>,
+    /// Per population: `(v, refrac)` for LIF populations, `None` for
+    /// spike sources.
+    pops: Vec<Option<(Vec<f32>, Vec<u32>)>>,
+    currents: Vec<Vec<f32>>,
+    spike_buf: Vec<Vec<u32>>,
+    spike_words: Vec<SpikeWords>,
+    recorder: Recorder,
+    t: u64,
+}
+
+impl SimCheckpoint {
+    pub fn timestep(&self) -> u64 {
+        self.t
+    }
+
+    /// In-memory footprint of the captured state — what a checkpoint costs
+    /// (the `checkpoint_bytes` recovery statistic).
+    pub fn byte_size(&self) -> usize {
+        let engines: usize = self.engines.iter().map(|(_, e)| e.byte_size()).sum();
+        let pops: usize = self
+            .pops
+            .iter()
+            .flatten()
+            .map(|(v, r)| v.len() * 4 + r.len() * 4)
+            .sum();
+        let currents: usize = self.currents.iter().map(|c| c.len() * 4).sum();
+        let spikes: usize = self.spike_buf.iter().map(|s| s.len() * 4).sum();
+        let words: usize = self.spike_words.iter().map(|w| w.words().len() * 8).sum();
+        let recorder: usize = self.recorder.spikes.values().map(|v| v.len() * 12).sum::<usize>()
+            + self.recorder.v.values().map(|t| t.data.len() * 4).sum::<usize>();
+        engines + pops + currents + spikes + words + recorder + 8
     }
 }
 
@@ -480,6 +582,92 @@ impl NetworkSim {
         }
         self.recorder = Recorder::default();
         self.t = 0;
+    }
+
+    /// Snapshot the sim's complete dynamic state (see [`SimCheckpoint`]).
+    pub fn checkpoint(&self) -> SimCheckpoint {
+        SimCheckpoint {
+            engines: self.engines.iter().map(|s| (s.proj, s.engine.checkpoint())).collect(),
+            pops: self
+                .pops
+                .iter()
+                .map(|p| p.as_ref().map(|s| (s.v.clone(), s.refrac.clone())))
+                .collect(),
+            currents: self.currents.clone(),
+            spike_buf: self.spike_buf.clone(),
+            spike_words: self.spike_words.clone(),
+            recorder: self.recorder.clone(),
+            t: self.t,
+        }
+    }
+
+    /// Restore a [`NetworkSim::checkpoint`] — into this sim, or into a
+    /// freshly built sim over the *same network* (the recovery path builds
+    /// a new sim from re-admitted layers and restores into it). Subsequent
+    /// stepping replays bit-identically.
+    ///
+    /// An engine whose paradigm flipped since the snapshot (capacity-driven
+    /// re-admission) accepts only a *pristine* snapshot — mid-sample ring
+    /// state has no cross-paradigm representation; the recovery runner
+    /// checkpoints at sample boundaries, where engines are pristine by
+    /// construction. Telemetry is left accumulating, as across
+    /// [`NetworkSim::reset`].
+    pub fn restore(&mut self, ckpt: &SimCheckpoint) -> Result<()> {
+        ensure!(
+            ckpt.engines.len() == self.engines.len()
+                && ckpt.pops.len() == self.pops.len()
+                && ckpt.currents.len() == self.currents.len(),
+            "checkpoint shape mismatch: {} engines / {} populations vs sim {} / {}",
+            ckpt.engines.len(),
+            ckpt.pops.len(),
+            self.engines.len(),
+            self.pops.len()
+        );
+        for (slot, (proj, eck)) in self.engines.iter_mut().zip(&ckpt.engines) {
+            ensure!(
+                slot.proj == *proj,
+                "checkpoint engine order mismatch at projection {proj} (sim has {})",
+                slot.proj
+            );
+            match (&mut slot.engine, eck) {
+                (LayerEngine::Serial(e), EngineCheckpoint::Serial(c)) => e.restore(c)?,
+                (LayerEngine::Parallel(e), EngineCheckpoint::Parallel(c)) => e.restore(c)?,
+                (engine, ck) => {
+                    ensure!(
+                        ck.is_pristine(),
+                        "layer {proj}: cannot restore mid-sample {} state into a {} engine",
+                        ck.paradigm(),
+                        engine.paradigm()
+                    );
+                    engine.reset_to(ck.timestep());
+                }
+            }
+        }
+        for (state, snap) in self.pops.iter_mut().zip(&ckpt.pops) {
+            match (state, snap) {
+                (Some(state), Some((v, refrac))) => {
+                    ensure!(
+                        v.len() == state.v.len(),
+                        "checkpoint population size {} vs sim {}",
+                        v.len(),
+                        state.v.len()
+                    );
+                    state.v.copy_from_slice(v);
+                    state.refrac.copy_from_slice(refrac);
+                }
+                (None, None) => {}
+                _ => bail!("checkpoint population kinds do not match the sim"),
+            }
+        }
+        for (c, snap) in self.currents.iter_mut().zip(&ckpt.currents) {
+            ensure!(c.len() == snap.len(), "checkpoint current buffer shape mismatch");
+            c.copy_from_slice(snap);
+        }
+        self.spike_buf.clone_from(&ckpt.spike_buf);
+        self.spike_words.clone_from(&ckpt.spike_words);
+        self.recorder = ckpt.recorder.clone();
+        self.t = ckpt.t;
+        Ok(())
     }
 
     /// Synaptic events processed by the serial engines (cumulative).
@@ -1207,6 +1395,63 @@ mod tests {
         assert_eq!(sim.timestep(), 0);
         let second = run_once(&mut sim);
         assert_eq!(first, second, "reset + rerun must be bit-identical");
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bit_identically() {
+        // Mid-run checkpoint: snapshot sim + stimulus RNG cursor, run on,
+        // then roll both back and replay — recorders must match exactly.
+        let net = three_layer_net(21, 50, 30, 10, 0.5, 0.8, 3, 2);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let mut rng = Rng::new(404);
+        let stim = |rng: &mut Rng, out: &mut Vec<u32>| {
+            out.extend((0..50u32).filter(|_| rng.chance(0.25)));
+        };
+        sim.run(30, &mut |_p, _t, out: &mut Vec<u32>| stim(&mut rng, out));
+        let ckpt = sim.checkpoint();
+        let mut rng_ck = rng.clone();
+        assert_eq!(ckpt.timestep(), 30);
+        assert!(ckpt.byte_size() > 0);
+        sim.run(20, &mut |_p, _t, out: &mut Vec<u32>| stim(&mut rng, out));
+        let first = sim.recorder.clone();
+        sim.restore(&ckpt).unwrap();
+        assert_eq!(sim.timestep(), 30);
+        sim.run(20, &mut |_p, _t, out: &mut Vec<u32>| stim(&mut rng_ck, out));
+        assert_eq!(sim.recorder, first, "rollback + replay must be bit-identical");
+        assert_eq!(sim.timestep(), 50);
+    }
+
+    #[test]
+    fn pristine_checkpoints_cross_paradigms_mid_sample_ones_do_not() {
+        // The recovery contract: a sample-boundary (pristine) snapshot can
+        // restore into a re-admitted sim whose layers flipped paradigm; a
+        // mid-sample snapshot cannot.
+        let net = two_layer_net(2, 60, 40, 0.4, 5);
+        let compile = |mode| {
+            let mut sys = SwitchingSystem::new(mode, PeSpec::default());
+            sys.compile_network(&net).unwrap().0
+        };
+        let mut serial_sim =
+            NetworkSim::native(&net, compile(SwitchMode::ForceSerial)).unwrap();
+        let pristine = serial_sim.checkpoint();
+        let mut provider = provider_with(60, 0.2, 11);
+        serial_sim.run(60, &mut provider);
+        let reference = serial_sim.recorder.clone();
+        let mid_run = serial_sim.checkpoint();
+
+        let mut parallel_sim =
+            NetworkSim::native(&net, compile(SwitchMode::ForceParallel)).unwrap();
+        parallel_sim.restore(&pristine).unwrap();
+        let mut provider = provider_with(60, 0.2, 11);
+        parallel_sim.run(60, &mut provider);
+        assert_eq!(
+            parallel_sim.recorder, reference,
+            "pristine restore + replay must reproduce the run across paradigms"
+        );
+        let err = parallel_sim.restore(&mid_run).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot restore mid-sample"), "{err:#}");
     }
 
     #[test]

@@ -19,7 +19,47 @@
 use super::backend::BackendBox;
 use crate::paradigm::parallel::ParallelCompiled;
 use crate::sim::spikebits::{any_set_in_range, SpikeWords};
+use anyhow::{ensure, Result};
 use std::time::Instant;
+
+/// Snapshot of one parallel engine's dynamic state — the stacked-input
+/// ring, slot write counters, row-occupancy bitmaps, current scratch, and
+/// the clock. Telemetry (`macs`/`spikes_in`/`steps`/profiling nanos) is
+/// deliberately excluded: it is cumulative reporting state, not replay
+/// state, and [`ParallelLayerEngine::restore`] leaves it untouched.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParallelEngineCheckpoint {
+    ring: Vec<f32>,
+    slot_writes: Vec<u32>,
+    occupied: Vec<u64>,
+    currents: Vec<f32>,
+    t: u64,
+}
+
+impl ParallelEngineCheckpoint {
+    /// True when every buffer is identically zero — the state [`ParallelLayerEngine::reset`]
+    /// produces (any clock value is consistent with an empty ring).
+    pub fn is_pristine(&self) -> bool {
+        self.ring.iter().all(|&x| x == 0.0)
+            && self.slot_writes.iter().all(|&x| x == 0)
+            && self.occupied.iter().all(|&x| x == 0)
+            && self.currents.iter().all(|&c| c == 0.0)
+    }
+
+    pub fn timestep(&self) -> u64 {
+        self.t
+    }
+
+    /// In-memory footprint of the captured state (the recovery stats'
+    /// checkpoint-cost accounting).
+    pub fn byte_size(&self) -> usize {
+        self.ring.len() * 4
+            + self.slot_writes.len() * 4
+            + self.occupied.len() * 8
+            + self.currents.len() * 4
+            + 8
+    }
+}
 
 /// Executes one parallel-compiled layer.
 pub struct ParallelLayerEngine {
@@ -147,6 +187,45 @@ impl ParallelLayerEngine {
         self.occupied.fill(0);
         self.currents.fill(0.0);
         self.t = 0;
+    }
+
+    /// Snapshot all dynamic state (see [`ParallelEngineCheckpoint`]).
+    pub fn checkpoint(&self) -> ParallelEngineCheckpoint {
+        ParallelEngineCheckpoint {
+            ring: self.ring.clone(),
+            slot_writes: self.slot_writes.clone(),
+            occupied: self.occupied.clone(),
+            currents: self.currents.clone(),
+            t: self.t,
+        }
+    }
+
+    /// Restore a [`ParallelLayerEngine::checkpoint`] taken from an engine
+    /// of identical shape (same compiled layer). Telemetry keeps
+    /// accumulating across restores, like it does across
+    /// [`ParallelLayerEngine::reset`].
+    pub fn restore(&mut self, ckpt: &ParallelEngineCheckpoint) -> Result<()> {
+        ensure!(
+            ckpt.ring.len() == self.ring.len()
+                && ckpt.slot_writes.len() == self.slot_writes.len()
+                && ckpt.occupied.len() == self.occupied.len()
+                && ckpt.currents.len() == self.currents.len(),
+            "parallel checkpoint buffer shapes do not match the engine"
+        );
+        self.ring.copy_from_slice(&ckpt.ring);
+        self.slot_writes.copy_from_slice(&ckpt.slot_writes);
+        self.occupied.copy_from_slice(&ckpt.occupied);
+        self.currents.copy_from_slice(&ckpt.currents);
+        self.t = ckpt.t;
+        Ok(())
+    }
+
+    /// [`ParallelLayerEngine::reset`] but resuming the clock at `t` — the
+    /// cross-paradigm pristine-restore path (an empty ring is consistent
+    /// with any clock value).
+    pub fn reset_to(&mut self, t: u64) {
+        self.reset();
+        self.t = t;
     }
 
     /// Id-list convenience wrapper around
@@ -362,6 +441,27 @@ mod tests {
         assert_eq!(e.timestep(), 0);
         let second = run(&mut e);
         assert_eq!(first, second, "reset must reproduce the run exactly");
+    }
+
+    #[test]
+    fn checkpoint_restore_replays_in_flight_state() {
+        let mut e = engine_for(vec![syn(0, 1, 10, 3, false), syn(1, 0, 6, 1, true)], 2, 3);
+        e.step_currents(&[0, 1]);
+        let ckpt = e.checkpoint();
+        assert!(!ckpt.is_pristine(), "in-flight spikes must show in the snapshot");
+        assert!(ckpt.byte_size() > 0);
+        let tail = |e: &mut ParallelLayerEngine| -> Vec<Vec<f32>> {
+            (0..4).map(|_| e.step_currents(&[]).to_vec()).collect()
+        };
+        let first = tail(&mut e);
+        e.restore(&ckpt).unwrap();
+        assert_eq!(e.timestep(), 1);
+        assert_eq!(tail(&mut e), first, "restore must replay bit-identically");
+        e.reset_to(5);
+        assert!(e.checkpoint().is_pristine());
+        assert_eq!(e.timestep(), 5);
+        let mut other = engine_for(vec![syn(0, 0, 1, 1, false)], 1, 1);
+        assert!(other.restore(&ckpt).is_err(), "foreign checkpoint must be refused");
     }
 
     #[test]

@@ -25,6 +25,7 @@
 use crate::model::SynapseType;
 use crate::paradigm::serial::SerialCompiled;
 use crate::sim::spikebits::SpikeWords;
+use anyhow::{ensure, Result};
 use std::time::Instant;
 
 struct PeState {
@@ -51,6 +52,45 @@ impl PeState {
     #[inline]
     fn idx(&self, slot: usize, syn_type: usize, target: usize) -> usize {
         (slot * SynapseType::COUNT + syn_type) * self.n_tgt + target
+    }
+}
+
+/// Snapshot of one serial engine's dynamic state — ring buffers, pending
+/// write counters, written-target bitmaps, current scratch, and the clock.
+/// Telemetry (`events`/`spikes_in`/`steps`/profiling nanos) is deliberately
+/// excluded: it is cumulative reporting state, not replay state, and
+/// [`SerialLayerEngine::restore`] leaves it untouched.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SerialEngineCheckpoint {
+    rings: Vec<Vec<i32>>,
+    slot_writes: Vec<Vec<u32>>,
+    written: Vec<Vec<u64>>,
+    currents: Vec<f32>,
+    t: u64,
+}
+
+impl SerialEngineCheckpoint {
+    /// True when every buffer is identically zero — the state [`SerialLayerEngine::reset`]
+    /// produces (any clock value is consistent with empty rings).
+    pub fn is_pristine(&self) -> bool {
+        self.rings.iter().all(|r| r.iter().all(|&x| x == 0))
+            && self.slot_writes.iter().all(|s| s.iter().all(|&x| x == 0))
+            && self.written.iter().all(|w| w.iter().all(|&x| x == 0))
+            && self.currents.iter().all(|&c| c == 0.0)
+    }
+
+    pub fn timestep(&self) -> u64 {
+        self.t
+    }
+
+    /// In-memory footprint of the captured state (the recovery stats'
+    /// checkpoint-cost accounting).
+    pub fn byte_size(&self) -> usize {
+        self.rings.iter().map(|r| r.len() * 4).sum::<usize>()
+            + self.slot_writes.iter().map(|s| s.len() * 4).sum::<usize>()
+            + self.written.iter().map(|w| w.len() * 8).sum::<usize>()
+            + self.currents.len() * 4
+            + 8
     }
 }
 
@@ -175,6 +215,55 @@ impl SerialLayerEngine {
         }
         self.currents.fill(0.0);
         self.t = 0;
+    }
+
+    /// Snapshot all dynamic state (see [`SerialEngineCheckpoint`]).
+    pub fn checkpoint(&self) -> SerialEngineCheckpoint {
+        SerialEngineCheckpoint {
+            rings: self.pes.iter().map(|p| p.ring.clone()).collect(),
+            slot_writes: self.pes.iter().map(|p| p.slot_writes.clone()).collect(),
+            written: self.pes.iter().map(|p| p.written.clone()).collect(),
+            currents: self.currents.clone(),
+            t: self.t,
+        }
+    }
+
+    /// Restore a [`SerialLayerEngine::checkpoint`] taken from an engine of
+    /// identical shape (same compiled layer). Telemetry keeps accumulating
+    /// across restores, like it does across [`SerialLayerEngine::reset`].
+    pub fn restore(&mut self, ckpt: &SerialEngineCheckpoint) -> Result<()> {
+        ensure!(
+            ckpt.rings.len() == self.pes.len() && ckpt.currents.len() == self.currents.len(),
+            "serial checkpoint shape mismatch: {} PEs / {} targets vs engine {} / {}",
+            ckpt.rings.len(),
+            ckpt.currents.len(),
+            self.pes.len(),
+            self.currents.len()
+        );
+        for (i, pe) in self.pes.iter().enumerate() {
+            ensure!(
+                ckpt.rings[i].len() == pe.ring.len()
+                    && ckpt.slot_writes[i].len() == pe.slot_writes.len()
+                    && ckpt.written[i].len() == pe.written.len(),
+                "serial checkpoint PE {i} buffer shapes do not match the engine"
+            );
+        }
+        for (i, pe) in self.pes.iter_mut().enumerate() {
+            pe.ring.copy_from_slice(&ckpt.rings[i]);
+            pe.slot_writes.copy_from_slice(&ckpt.slot_writes[i]);
+            pe.written.copy_from_slice(&ckpt.written[i]);
+        }
+        self.currents.copy_from_slice(&ckpt.currents);
+        self.t = ckpt.t;
+        Ok(())
+    }
+
+    /// [`SerialLayerEngine::reset`] but resuming the clock at `t` — the
+    /// cross-paradigm pristine-restore path (empty rings are consistent
+    /// with any clock value).
+    pub fn reset_to(&mut self, t: u64) {
+        self.reset();
+        self.t = t;
     }
 
     /// Id-list convenience wrapper around
@@ -402,6 +491,30 @@ mod tests {
         assert_eq!(e.timestep(), 0);
         let second = run(&mut e);
         assert_eq!(first, second, "reset must reproduce the run exactly");
+    }
+
+    #[test]
+    fn checkpoint_restore_replays_in_flight_state() {
+        // Checkpoint while delayed weights are still in flight; the restored
+        // engine must deliver them at exactly the same steps.
+        let mut e = engine_for(vec![syn(0, 1, 10, 3, false), syn(1, 0, 6, 1, true)], 2, 3);
+        e.step_currents(&[0, 1]);
+        let ckpt = e.checkpoint();
+        assert!(!ckpt.is_pristine(), "in-flight weights must show in the snapshot");
+        assert!(ckpt.byte_size() > 0);
+        let tail = |e: &mut SerialLayerEngine| -> Vec<Vec<f32>> {
+            (0..4).map(|_| e.step_currents(&[]).to_vec()).collect()
+        };
+        let first = tail(&mut e);
+        e.restore(&ckpt).unwrap();
+        assert_eq!(e.timestep(), 1);
+        assert_eq!(tail(&mut e), first, "restore must replay bit-identically");
+        // Pristine snapshots are recognized; mismatched shapes are typed errors.
+        e.reset_to(7);
+        assert!(e.checkpoint().is_pristine());
+        assert_eq!(e.timestep(), 7);
+        let mut other = engine_for(vec![syn(0, 0, 1, 1, false)], 1, 1);
+        assert!(other.restore(&ckpt).is_err(), "foreign checkpoint must be refused");
     }
 
     #[test]

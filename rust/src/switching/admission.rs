@@ -24,7 +24,7 @@ use super::pipeline::{CompileJob, CompilePipeline};
 use super::placement::Placement;
 use super::policy::SwitchPolicy;
 use super::{network_jobs, CompileStats, CompiledLayer, SwitchingSystem};
-use crate::hardware::{MachineSpec, PlacementStrategy};
+use crate::hardware::{FaultMap, MachineSpec, PlacementStrategy};
 use crate::model::Network;
 use crate::paradigm::Paradigm;
 use anyhow::{bail, Context, Result};
@@ -78,11 +78,11 @@ struct Headroom {
 }
 
 impl Headroom {
-    fn of(spec: &MachineSpec) -> Headroom {
-        Headroom {
-            free_pes: spec.total_pes(),
-            free_dtcm: spec.total_pes() * spec.chip.pe.dtcm_bytes,
-        }
+    /// Headroom of a `spec`-sized machine minus its faulted PEs — recovery
+    /// re-admission plans against exactly the surviving capacity.
+    fn of(spec: &MachineSpec, faults: &FaultMap) -> Headroom {
+        let usable = spec.total_pes() - faults.dead_pe_count(spec);
+        Headroom { free_pes: usable, free_dtcm: usable * spec.chip.pe.dtcm_bytes }
     }
 
     // With today's cost models the PE dimension always binds first (every
@@ -108,8 +108,9 @@ pub(super) fn plan_decisions(
     net: &Network,
     jobs: &[CompileJob],
     spec: &MachineSpec,
+    faults: &FaultMap,
 ) -> Result<Vec<LayerDecision>> {
-    let mut headroom = Headroom::of(spec);
+    let mut headroom = Headroom::of(spec, faults);
     // Source populations whose hosting PEs are already charged.
     let mut hosted: BTreeSet<usize> = BTreeSet::new();
     let mut decisions = Vec::with_capacity(jobs.len());
@@ -181,14 +182,16 @@ pub(super) fn plan_decisions(
         if admitted.is_none() {
             bail!(
                 "admission failed at layer {i} (projection {}): {}; \
-                 {} of {} PEs and {} B DTCM remain on the {}x{}-chip machine",
+                 {} of {} usable PEs and {} B DTCM remain on the {}x{}-chip machine \
+                 ({} PEs faulted)",
                 proj.id.0,
                 notes.join(", "),
                 headroom.free_pes,
-                spec.total_pes(),
+                spec.total_pes() - faults.dead_pe_count(spec),
                 headroom.free_dtcm,
                 spec.chips_x,
-                spec.chips_y
+                spec.chips_y,
+                faults.dead_pe_count(spec)
             );
         }
     }
@@ -208,8 +211,25 @@ impl SwitchingSystem {
         spec: MachineSpec,
         strategy: PlacementStrategy,
     ) -> Result<NetworkAdmission> {
+        self.admit_network_faulted(net, spec, strategy, &FaultMap::healthy())
+    }
+
+    /// [`SwitchingSystem::admit_network`] against a machine with known
+    /// faults: planning headroom shrinks to the surviving capacity (so a
+    /// prejudged paradigm that no longer fits flips to the other — a
+    /// capacity override, exactly the healthy-machine fallback semantics),
+    /// and placement routes around every dead resource. The recovery path
+    /// re-admits through here after each fault; on a warmed-up pipeline the
+    /// materialize step is pure cache/artifact hits — zero recompiles.
+    pub fn admit_network_faulted(
+        &mut self,
+        net: &Network,
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        faults: &FaultMap,
+    ) -> Result<NetworkAdmission> {
         let jobs = network_jobs(net);
-        let decisions = plan_decisions(&self.policy, &self.pipeline, net, &jobs, &spec)
+        let decisions = plan_decisions(&self.policy, &self.pipeline, net, &jobs, &spec, faults)
             .context("capacity-feasibility planning")?;
         let overrides = decisions.iter().filter(|d| d.overridden).count();
         if overrides > 0 {
@@ -218,8 +238,9 @@ impl SwitchingSystem {
         let forced: Vec<Option<Paradigm>> = decisions.iter().map(|d| Some(d.chosen)).collect();
         let run = self.pipeline.run_decided(&forced, &jobs)?;
         self.stats = run.stats;
-        let placement = Placement::with_strategy(net, &run.layers, spec, strategy)
-            .context("placing an admitted network (feasibility accepted it)")?;
+        let placement =
+            Placement::with_strategy_faults(net, &run.layers, spec, strategy, faults.clone())
+                .context("placing an admitted network (feasibility accepted it)")?;
         Ok(NetworkAdmission {
             decisions,
             layers: run.layers,
@@ -334,6 +355,45 @@ mod tests {
             adm.placement.n_pes(),
             network_pe_count(&net, &adm.layers, &PeSpec::default())
         );
+    }
+
+    #[test]
+    fn fault_shrunken_headroom_flips_the_paradigm() {
+        use crate::hardware::PeHandle;
+        let net = dense_net();
+        let (serial_total, parallel_total) = paradigm_totals(&net);
+        let spec = machine(1, 1, serial_total);
+        // Healthy machine: the ForceSerial prejudgment fits as planned.
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let adm = sys.admit_network(&net, spec, PlacementStrategy::Linear).unwrap();
+        assert_eq!(adm.capacity_overrides(), 0);
+        // Kill PEs until only the parallel plan fits the survivors: the
+        // same prejudgment must flip via the capacity-override path.
+        let dead = serial_total - parallel_total;
+        let mut faults = FaultMap::healthy();
+        for core in 0..dead {
+            faults.kill_pe(PeHandle { chip_x: 0, chip_y: 0, core });
+        }
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let adm = sys
+            .admit_network_faulted(&net, spec, PlacementStrategy::Linear, &faults)
+            .unwrap();
+        assert_eq!(adm.capacity_overrides(), 1);
+        assert_eq!(adm.decisions[0].chosen, Paradigm::Parallel);
+        assert!(adm.decisions[0].overridden);
+        let on_dead = adm
+            .placement
+            .graph
+            .vertices
+            .iter()
+            .any(|v| faults.is_pe_dead(v.pe.expect("placed")));
+        assert!(!on_dead, "no vertex may land on a dead PE");
+        // One more death and neither paradigm fits: typed diagnostic.
+        faults.kill_pe(PeHandle { chip_x: 0, chip_y: 0, core: dead });
+        let err = sys
+            .admit_network_faulted(&net, spec, PlacementStrategy::Linear, &faults)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("PEs faulted"), "{err:#}");
     }
 
     #[test]

@@ -23,12 +23,14 @@ pub mod admission;
 pub mod pipeline;
 pub mod placement;
 pub mod policy;
+pub mod recovery;
 
 pub use crate::paradigm::CompiledLayer;
 pub use admission::{LayerDecision, NetworkAdmission};
 pub use pipeline::{CompileJob, CompilePipeline, PipelineRun};
 pub use placement::Placement;
 pub use policy::{SwitchError, SwitchPolicy};
+pub use recovery::{FaultRunReport, LayerStatus, RecoveryConfig, RecoveryStats};
 
 use crate::classifier::{AdaBoost, Classifier};
 use crate::dataset::Dataset;

@@ -11,7 +11,7 @@ use super::CompiledLayer;
 use crate::graph::machine_graph::{MachineGraph, SliceRange, VertexRole};
 use crate::graph::routing::RoutingTable;
 use crate::hardware::noc::{Noc, NocConfig};
-use crate::hardware::{Allocator, Machine, MachineSpec, PlacementStrategy};
+use crate::hardware::{Allocator, FaultMap, Machine, MachineSpec, PlacementStrategy};
 use crate::model::Network;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -44,6 +44,21 @@ impl Placement {
         layers: &[CompiledLayer],
         spec: MachineSpec,
         strategy: PlacementStrategy,
+    ) -> Result<Placement> {
+        Placement::with_strategy_faults(net, layers, spec, strategy, FaultMap::healthy())
+    }
+
+    /// [`Placement::with_strategy`] on a machine carrying a [`FaultMap`]:
+    /// the allocator sees faulted PEs as unusable, so every strategy
+    /// routes around dead resources and the error on overflow reports the
+    /// faulted count. The recovery path re-places surviving layers through
+    /// here after each detected fault.
+    pub fn with_strategy_faults(
+        net: &Network,
+        layers: &[CompiledLayer],
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        faults: FaultMap,
     ) -> Result<Placement> {
         let mut graph = MachineGraph::default();
         let mut emitters: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
@@ -157,7 +172,7 @@ impl Placement {
         }
 
         // 4. Place (group-transactionally, under the strategy) and route.
-        let mut alloc = Allocator::new(spec, strategy);
+        let mut alloc = Allocator::from_machine(Machine::with_faults(spec, faults), strategy);
         graph.place_groups(&mut alloc, &groups).context("placing machine graph")?;
         let machine = alloc.into_machine();
         let routing = RoutingTable::from_machine_graph(&graph);
@@ -348,6 +363,30 @@ mod tests {
             results.iter().find(|r| r.0 == s).copied().unwrap()
         };
         assert!(by(PlacementStrategy::Balanced).2 >= by(PlacementStrategy::ChipPacked).2);
+    }
+
+    #[test]
+    fn faulted_placement_avoids_dead_resources() {
+        use crate::hardware::PeHandle;
+        let (net, layers) = compiled(SwitchMode::Ideal);
+        let spec = MachineSpec {
+            chips_x: 3,
+            chips_y: 1,
+            chip: crate::hardware::ChipSpec { pes_per_chip: 4, ..Default::default() },
+        };
+        let mut faults = FaultMap::healthy();
+        faults.kill_chip(0, 0);
+        faults.kill_pe(PeHandle { chip_x: 1, chip_y: 0, core: 0 });
+        for strategy in crate::hardware::PlacementStrategy::ALL {
+            let p =
+                Placement::with_strategy_faults(&net, &layers, spec, strategy, faults.clone())
+                    .unwrap();
+            for v in &p.graph.vertices {
+                let pe = v.pe.expect("placed");
+                assert!(!faults.is_pe_dead(pe), "{strategy}: vertex on dead PE {pe}");
+            }
+            assert_eq!(p.machine.fault_map(), &faults, "machine carries the map");
+        }
     }
 
     #[test]

@@ -1,0 +1,517 @@
+//! Fault-tolerant execution: the detect → rollback → re-admit →
+//! re-materialize → re-place → replay loop (DESIGN.md §Fault-Tolerance).
+//!
+//! The runner simulates stimulus samples against a placed admission and,
+//! at every sample boundary, lets a deterministic [`FaultSchedule`] kill
+//! one of the occupied PEs. A hit makes the just-run sample's results
+//! suspect, so recovery rolls the sim back to the boundary checkpoint
+//! (pristine by construction — legal to restore across a paradigm flip),
+//! re-admits the network against the shrunken machine through
+//! [`SwitchingSystem::admit_network_faulted`] (capacity overrides may
+//! flip a layer to the other paradigm), re-materializes the replacement
+//! layers from the pipeline's cache/artifact tiers (zero recompiles on a
+//! warm store), rebuilds the sim on the new placement, and replays the
+//! sample with the same stimulus. Recovered recorders are bit-identical
+//! to a fault-free run because both paradigms accumulate integer weights
+//! exactly ([`crate::sim`]).
+//!
+//! When no feasible re-placement exists on the survivors, the run
+//! *degrades* instead of crashing: the layers stranded on the dead PE are
+//! marked [`LayerStatus::Skipped`], the remaining samples are counted as
+//! skipped, and the report carries a typed
+//! [`FaultError::NoFeasiblePlacement`] — never a panic, never a wrong
+//! answer presented as a right one.
+
+use super::placement::Placement;
+use super::{CompileStats, SwitchingSystem};
+use crate::graph::machine_graph::VertexRole;
+use crate::hardware::{
+    FaultError, FaultMap, FaultSchedule, MachineSpec, PeHandle, PlacementStrategy,
+};
+use crate::model::{Network, PopulationId};
+use crate::paradigm::Paradigm;
+use crate::sim::{NetworkSim, Recorder};
+use anyhow::{Context, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Per-layer outcome of a fault-tolerant run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerStatus {
+    /// Never disturbed by a fault.
+    Healthy,
+    /// Rebuilt on surviving resources by at least one recovery (its PE
+    /// died, or a recovery's capacity override changed its paradigm).
+    Migrated {
+        /// Recoveries that rebuilt this layer.
+        times: usize,
+        /// True when some recovery changed the layer's paradigm.
+        flipped: bool,
+    },
+    /// No feasible re-placement existed on the surviving machine — the
+    /// layer is out of service (the degraded-mode marker).
+    Skipped,
+}
+
+impl fmt::Display for LayerStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LayerStatus::Healthy => write!(f, "healthy"),
+            LayerStatus::Migrated { times, flipped } => {
+                write!(f, "migrated x{times}{}", if *flipped { " (paradigm flip)" } else { "" })
+            }
+            LayerStatus::Skipped => write!(f, "skipped"),
+        }
+    }
+}
+
+/// Recovery accounting — deterministic for a fixed `--fault-seed`, so two
+/// identical runs print identical lines (the CI chaos check).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Faults the schedule injected (occupied-PE deaths).
+    pub faults_injected: usize,
+    /// Layers rebuilt on surviving resources across all recoveries.
+    pub migrations: usize,
+    /// Layers whose paradigm changed during a recovery (capacity
+    /// overrides against the shrunken headroom).
+    pub paradigm_flips: usize,
+    /// Samples rolled back and replayed after a successful recovery.
+    pub replayed_samples: usize,
+    /// Samples abandoned when the run degraded (includes the suspect one).
+    pub skipped_samples: usize,
+    /// Peak boundary-checkpoint footprint in bytes.
+    pub checkpoint_bytes: usize,
+}
+
+impl fmt::Display for RecoveryStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "faults={} migrations={} flips={} replayed={} skipped={} checkpoint_peak={}B",
+            self.faults_injected,
+            self.migrations,
+            self.paradigm_flips,
+            self.replayed_samples,
+            self.skipped_samples,
+            self.checkpoint_bytes
+        )
+    }
+}
+
+/// Knobs of a fault-tolerant run (the CLI's `--fault-*` flags).
+#[derive(Clone, Debug)]
+pub struct RecoveryConfig {
+    pub samples: u64,
+    pub steps_per_sample: u64,
+    /// Seed of the deterministic [`FaultSchedule`].
+    pub fault_seed: u64,
+    /// Per-sample fault probability (clamped to [0, 1] by the schedule).
+    pub fault_rate: f64,
+    /// Faults present before the run starts (`--fault-map`).
+    pub initial_faults: FaultMap,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            samples: 1,
+            steps_per_sample: 100,
+            fault_seed: 7,
+            fault_rate: 0.0,
+            initial_faults: FaultMap::healthy(),
+        }
+    }
+}
+
+/// What a fault-tolerant run produced.
+#[derive(Debug)]
+pub struct FaultRunReport {
+    /// One recorder per *completed* sample, in sample order. Whenever
+    /// recovery succeeds these are bit-identical to a fault-free run.
+    pub recorders: Vec<Recorder>,
+    /// Per-layer (projection-order) outcome.
+    pub layer_status: Vec<LayerStatus>,
+    pub stats: RecoveryStats,
+    /// Compile-effort snapshot after the run — the zero-recompile claim
+    /// (`total_compiles() == 0` on a warm artifact store) reads here.
+    pub compile: CompileStats,
+    /// The typed degraded-mode trigger when the run ended early.
+    pub degraded: Option<FaultError>,
+    /// Fault map at the end of the run (initial + injected).
+    pub final_faults: FaultMap,
+}
+
+impl FaultRunReport {
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.is_some()
+    }
+}
+
+/// Occupied, healthy PEs of a placement — the victim pool the schedule
+/// draws from (sorted, so the draw is deterministic).
+fn occupied_healthy(placement: &Placement, faults: &FaultMap) -> Vec<PeHandle> {
+    let set: BTreeSet<PeHandle> = placement
+        .graph
+        .vertices
+        .iter()
+        .filter_map(|v| v.pe)
+        .filter(|pe| !faults.is_pe_dead(*pe))
+        .collect();
+    set.into_iter().collect()
+}
+
+/// Layers (projection indices) that lose state when `pe` dies: layer
+/// vertices placed on it, plus — for a source-hosting vertex — every
+/// projection consuming the hosted population.
+fn affected_layers(net: &Network, placement: &Placement, pe: PeHandle) -> Vec<usize> {
+    let mut out = BTreeSet::new();
+    for v in placement.graph.vertices.iter().filter(|v| v.pe == Some(pe)) {
+        if v.role == VertexRole::Source {
+            for (i, proj) in net.projections.iter().enumerate() {
+                if proj.source == v.population {
+                    out.insert(i);
+                }
+            }
+        } else if let Some(idx) = layer_of_label(net, &v.label) {
+            out.insert(idx);
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Parse the `proj{id}-…` prefix placement stamps on layer vertices back
+/// to a projection index.
+fn layer_of_label(net: &Network, label: &str) -> Option<usize> {
+    let rest = label.strip_prefix("proj")?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    let id: usize = digits.parse().ok()?;
+    net.projections.iter().position(|p| p.id.0 == id)
+}
+
+impl SwitchingSystem {
+    /// Run `cfg.samples` independent stimulus samples fault-tolerantly on
+    /// a `spec`-sized machine (module docs describe the recovery loop).
+    ///
+    /// `provider_for(sample)` must return the sample's stimulus afresh on
+    /// every call — recovery replays a sample by asking for it again, and
+    /// bit-identical replay needs bit-identical spikes.
+    pub fn run_fault_tolerant<F, P>(
+        &mut self,
+        net: &Network,
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        cfg: &RecoveryConfig,
+        mut provider_for: F,
+    ) -> Result<FaultRunReport>
+    where
+        F: FnMut(u64) -> P,
+        P: FnMut(PopulationId, u64, &mut Vec<u32>),
+    {
+        let mut faults = cfg.initial_faults.clone();
+        let mut schedule = FaultSchedule::new(cfg.fault_seed, cfg.fault_rate);
+        let mut stats = RecoveryStats::default();
+        let mut adm = self
+            .admit_network_faulted(net, spec, strategy, &faults)
+            .context("initial fault-aware admission")?;
+        let mut status = vec![LayerStatus::Healthy; net.projections.len()];
+        let mut sim = NetworkSim::native(net, adm.layers.clone())?;
+        let mut recorders = Vec::with_capacity(cfg.samples as usize);
+        let mut degraded = None;
+
+        for s in 0..cfg.samples {
+            sim.reset();
+            // Samples are independent, so the boundary checkpoint is
+            // pristine — exactly the state class that may be restored
+            // into a paradigm-flipped engine.
+            let ckpt = sim.checkpoint();
+            stats.checkpoint_bytes = stats.checkpoint_bytes.max(ckpt.byte_size());
+            let mut provider = provider_for(s);
+            sim.run(cfg.steps_per_sample, &mut provider);
+
+            // The injector decides at the boundary whether a PE died
+            // while this sample ran; a hit voids the sample's results.
+            let victims = occupied_healthy(&adm.placement, &faults);
+            if let Some(ev) = schedule.draw(s, &victims) {
+                stats.faults_injected += 1;
+                faults.kill_pe(ev.pe);
+                let affected = affected_layers(net, &adm.placement, ev.pe);
+                let prev: Vec<Paradigm> = adm.decisions.iter().map(|d| d.chosen).collect();
+                match self.admit_network_faulted(net, spec, strategy, &faults) {
+                    Ok(next) => {
+                        let mut rebuilt: BTreeSet<usize> = affected.iter().copied().collect();
+                        for (i, d) in next.decisions.iter().enumerate() {
+                            if d.chosen != prev[i] {
+                                stats.paradigm_flips += 1;
+                                rebuilt.insert(i);
+                            }
+                        }
+                        stats.migrations += rebuilt.len();
+                        for &l in &rebuilt {
+                            let flip = next.decisions[l].chosen != prev[l];
+                            let (times, flipped) = match status[l] {
+                                LayerStatus::Migrated { times, flipped } => {
+                                    (times + 1, flipped || flip)
+                                }
+                                _ => (1, flip),
+                            };
+                            status[l] = LayerStatus::Migrated { times, flipped };
+                        }
+                        adm = next;
+                        let mut fresh = NetworkSim::native(net, adm.layers.clone())?;
+                        fresh.restore(&ckpt).context("restoring the boundary checkpoint")?;
+                        sim = fresh;
+                        let mut provider = provider_for(s);
+                        sim.run(cfg.steps_per_sample, &mut provider);
+                        stats.replayed_samples += 1;
+                    }
+                    Err(e) => {
+                        for &l in &affected {
+                            status[l] = LayerStatus::Skipped;
+                        }
+                        stats.skipped_samples = (cfg.samples - s) as usize;
+                        degraded = Some(FaultError::NoFeasiblePlacement {
+                            layer: affected.first().copied().unwrap_or(0),
+                            detail: format!("PE {} died at sample {s}: {e:#}", ev.pe),
+                        });
+                        break;
+                    }
+                }
+            }
+            recorders.push(sim.recorder.clone());
+        }
+
+        Ok(FaultRunReport {
+            recorders,
+            layer_status: status,
+            stats,
+            compile: self.stats,
+            degraded,
+            final_faults: faults,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::{ChipSpec, PeSpec};
+    use crate::model::connector::{Connector, SynapseDraw};
+    use crate::model::{LifParams, NetworkBuilder};
+    use crate::rng::Rng;
+    use crate::switching::SwitchMode;
+
+    fn two_layer_net() -> Network {
+        let mut b = NetworkBuilder::new(21);
+        let inp = b.spike_source("in", 60);
+        let hid = b.lif_population("hid", 40, LifParams { alpha: 0.9, ..Default::default() });
+        let out = b.lif_population("out", 12, LifParams { alpha: 0.85, ..Default::default() });
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.8),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.build()
+    }
+
+    /// Stimulus for sample `s`: deterministic per (sample, timestep).
+    fn provider_for(s: u64) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+        let mut rng = Rng::new(500 + s * 0x9E37);
+        move |pop, _t, out: &mut Vec<u32>| {
+            if pop.0 == 0 {
+                for n in 0..60u32 {
+                    if rng.chance(0.2) {
+                        out.push(n);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fault-free reference recorders: one plain sim, reset per sample.
+    fn baseline(net: &Network, samples: u64, steps: u64) -> Vec<Recorder> {
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(net).unwrap();
+        let mut sim = NetworkSim::native(net, layers).unwrap();
+        (0..samples)
+            .map(|s| {
+                sim.reset();
+                let mut p = provider_for(s);
+                sim.run(steps, &mut p);
+                sim.recorder.clone()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fault_free_run_matches_plain_simulation() {
+        let net = two_layer_net();
+        let cfg = RecoveryConfig { samples: 3, steps_per_sample: 40, ..Default::default() };
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let report = sys
+            .run_fault_tolerant(
+                &net,
+                MachineSpec::default(),
+                PlacementStrategy::ChipPacked,
+                &cfg,
+                provider_for,
+            )
+            .unwrap();
+        assert!(!report.is_degraded());
+        assert_eq!(report.stats.faults_injected, 0);
+        assert_eq!(report.stats.migrations, 0);
+        assert!(report.stats.checkpoint_bytes > 0, "boundary checkpoints were taken");
+        assert!(report.layer_status.iter().all(|s| *s == LayerStatus::Healthy));
+        let reference = baseline(&net, 3, 40);
+        assert_eq!(report.recorders.len(), 3);
+        for (got, want) in report.recorders.iter().zip(&reference) {
+            assert_eq!(got.spikes, want.spikes);
+        }
+    }
+
+    #[test]
+    fn injected_faults_recover_bit_identically() {
+        let net = two_layer_net();
+        // rate 1.0: one occupied PE dies at every sample boundary. The
+        // default machine has plenty of survivors, so every recovery
+        // succeeds and every sample replays bit-identically.
+        let cfg = RecoveryConfig {
+            samples: 2,
+            steps_per_sample: 40,
+            fault_rate: 1.0,
+            fault_seed: 11,
+            ..Default::default()
+        };
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let report = sys
+            .run_fault_tolerant(
+                &net,
+                MachineSpec::default(),
+                PlacementStrategy::ChipPacked,
+                &cfg,
+                provider_for,
+            )
+            .unwrap();
+        assert!(!report.is_degraded(), "{:?}", report.degraded);
+        assert_eq!(report.stats.faults_injected, 2);
+        assert_eq!(report.stats.replayed_samples, 2);
+        assert!(report.stats.migrations >= 2, "{}", report.stats);
+        assert_eq!(report.final_faults.n_dead_pes(), 2);
+        assert!(
+            report
+                .layer_status
+                .iter()
+                .any(|s| matches!(s, LayerStatus::Migrated { .. })),
+            "{:?}",
+            report.layer_status
+        );
+        let reference = baseline(&net, 2, 40);
+        for (got, want) in report.recorders.iter().zip(&reference) {
+            assert_eq!(got.spikes, want.spikes, "recovered sample must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn chaos_runs_are_deterministic_for_a_fixed_seed() {
+        let net = two_layer_net();
+        let cfg = RecoveryConfig {
+            samples: 3,
+            steps_per_sample: 30,
+            fault_rate: 0.7,
+            fault_seed: 4242,
+            ..Default::default()
+        };
+        let run = || {
+            let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+            sys.run_fault_tolerant(
+                &net,
+                MachineSpec::default(),
+                PlacementStrategy::ChipPacked,
+                &cfg,
+                provider_for,
+            )
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.stats.to_string(), b.stats.to_string());
+        assert_eq!(a.layer_status, b.layer_status);
+        assert_eq!(a.final_faults, b.final_faults);
+        for (ra, rb) in a.recorders.iter().zip(&b.recorders) {
+            assert_eq!(ra.spikes, rb.spikes);
+        }
+    }
+
+    #[test]
+    fn past_ceiling_faults_degrade_with_a_typed_report() {
+        // A dense single-layer net on a machine sized exactly for its
+        // cheaper (parallel) plan: the very first fault leaves too few
+        // survivors for either paradigm — degraded mode, not a panic.
+        let mut b = NetworkBuilder::new(7);
+        let inp = b.spike_source("in", 255);
+        let out = b.lif_population("out", 255, LifParams::default());
+        b.project(
+            inp,
+            out,
+            Connector::FixedProbability(1.0),
+            SynapseDraw { delay_range: 1, w_max: 100, ..Default::default() },
+            0.01,
+        );
+        let net = b.build();
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (_, pes) = sys.compile_network(&net).unwrap();
+        let spec = MachineSpec {
+            chips_x: 1,
+            chips_y: 1,
+            chip: ChipSpec { pes_per_chip: pes, ..Default::default() },
+        };
+        let cfg = RecoveryConfig {
+            samples: 4,
+            steps_per_sample: 10,
+            fault_rate: 1.0,
+            fault_seed: 3,
+            ..Default::default()
+        };
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let provider = |s: u64| {
+            let mut rng = Rng::new(900 + s);
+            move |pop: PopulationId, _t: u64, out: &mut Vec<u32>| {
+                if pop.0 == 0 {
+                    for n in 0..255u32 {
+                        if rng.chance(0.1) {
+                            out.push(n);
+                        }
+                    }
+                }
+            }
+        };
+        let report = sys
+            .run_fault_tolerant(&net, spec, PlacementStrategy::Linear, &cfg, provider)
+            .unwrap();
+        assert!(report.is_degraded());
+        match report.degraded.as_ref().unwrap() {
+            FaultError::NoFeasiblePlacement { layer, detail } => {
+                assert_eq!(*layer, 0);
+                assert!(detail.contains("died at sample"), "{detail}");
+            }
+            other => panic!("wrong error kind: {other}"),
+        }
+        assert_eq!(report.stats.faults_injected, 1);
+        assert_eq!(report.stats.skipped_samples, 4, "suspect + remaining samples all skipped");
+        assert!(report.recorders.is_empty(), "no sample completed trustworthily");
+        assert!(
+            report.layer_status.contains(&LayerStatus::Skipped),
+            "{:?}",
+            report.layer_status
+        );
+    }
+}
