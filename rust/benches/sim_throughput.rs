@@ -18,7 +18,12 @@
 //!   fallbacks, asserting bit-identical outputs;
 //! * the calibrated-decision sweep: `calibrate::measure()` on this host,
 //!   then the abstract work-item model vs the measured-constant model at
-//!   every sweep rate.
+//!   every sweep rate;
+//! * adaptive re-switching: a storage-tied layer under a quiet→busy→quiet
+//!   drift schedule — `run_adaptive` (window 1, patience 1, calibrated
+//!   tie-break) races both frozen paradigms, recorders asserted
+//!   bit-identical to the fixed-engine-sequence replay and swaps asserted
+//!   to fetch from the compile cache (zero recompiles).
 //!
 //! Writes the machine-readable baseline to `BENCH_sim.json` (override with
 //! `S2SWITCH_BENCH_OUT`), the way compile_time writes `BENCH_compile.json`.
@@ -37,12 +42,15 @@ use s2switch::model::lif::{kernel_variant, lif_step_chunked, lif_step_chunked_sc
 use s2switch::model::{LayerCharacter, LifParams, Network, NetworkBuilder, PopulationId};
 use s2switch::paradigm::parallel::{compile_parallel, WdmConfig};
 use s2switch::paradigm::serial::compile_serial;
+use s2switch::paradigm::Paradigm;
 use s2switch::rng::Rng;
 use s2switch::sim::backend::matvec_into_scalar;
 use s2switch::sim::{
     BatchRunner, MacBackend, NativeMac, NetworkSim, ParallelLayerEngine, SerialLayerEngine,
 };
-use s2switch::switching::{SwitchMode, SwitchingSystem};
+use s2switch::switching::{
+    network_jobs, AdaptiveConfig, CompilePipeline, SwitchMode, SwitchingSystem,
+};
 use std::time::Instant;
 
 const STEPS: usize = 200;
@@ -479,7 +487,179 @@ fn main() {
     }
     rep.finish();
 
-    // ---- Machine-readable baseline (BENCH_sim.json v3) -------------------
+    // ---- Part 8: adaptive re-switching under rate drift ------------------
+    // Probe the estimate space for a storage-tied shape (a tie is what
+    // makes the runtime tie-break live), then race the adaptive runner
+    // against both frozen paradigms on a quiet→busy→quiet drift schedule.
+    // Throughput ratios are recorded, not asserted — only bit-identity and
+    // zero swap recompiles are hard gates.
+    const DRIFT_SAMPLES: u64 = 12;
+    const DRIFT_STEPS: u64 = 100;
+    let probe = CompilePipeline::new(PeSpec::default(), WdmConfig::default());
+    let mut prng = Rng::new(42);
+    let mut tied: Option<(usize, usize, f64, u16)> = None;
+    'probe: for (n_src, n_tgt) in [(255usize, 255usize), (200, 200), (255, 128), (128, 255)] {
+        for density in [0.1, 0.2, 0.3, 0.5] {
+            for delay in [1u16, 2] {
+                let mut b = NetworkBuilder::new(prng.below(1 << 30) as u64);
+                let inp = b.spike_source("in", n_src);
+                let hid = b.lif_population("hid", n_tgt, LifParams::default());
+                b.project(
+                    inp,
+                    hid,
+                    Connector::FixedProbability(density),
+                    SynapseDraw { delay_range: delay, w_max: 100, ..Default::default() },
+                    0.02,
+                );
+                let tnet = b.build();
+                let jobs = network_jobs(&tnet);
+                if let Ok((s, p)) = probe.estimate_pair(&jobs[0]) {
+                    if s.total_pes() == p.total_pes() {
+                        tied = Some((n_src, n_tgt, density, delay));
+                        break 'probe;
+                    }
+                }
+            }
+        }
+    }
+    let storage_tied = tied.is_some();
+    // Without a tie the decision is storage-dominated and no swap can fire;
+    // the race still runs (and still checks equivalence) on a fallback.
+    let (a_src, a_tgt, a_density, a_delay) = tied.unwrap_or((255, 255, 0.5, 1));
+    let mut b = NetworkBuilder::new(7);
+    let inp = b.spike_source("in", a_src);
+    let hid = b.lif_population(
+        "hid",
+        a_tgt,
+        LifParams { alpha: 0.8, v_th: 1.0, ..Default::default() },
+    );
+    b.project(
+        inp,
+        hid,
+        Connector::FixedProbability(a_density),
+        SynapseDraw { delay_range: a_delay, w_max: 100, ..Default::default() },
+        0.02,
+    );
+    let drift_net = b.build();
+
+    let mut drift_provider = |s: u64| {
+        let rate = if (4..8).contains(&s) { 0.6 } else { 0.002 };
+        let n = a_src as u32;
+        let mut rng = Rng::new(0xD21F + s);
+        move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..n).filter(|_| rng.chance(rate)));
+        }
+    };
+    let compile_forced = |mode| {
+        let mut s = SwitchingSystem::new(mode, PeSpec::default());
+        s.compile_network(&drift_net).unwrap().0
+    };
+    let frozen_serial = compile_forced(SwitchMode::ForceSerial);
+    let frozen_parallel = compile_forced(SwitchMode::ForceParallel);
+    let run_frozen = |layers: &[s2switch::switching::CompiledLayer]| -> u64 {
+        let mut sim = NetworkSim::native(&drift_net, layers.to_vec()).unwrap();
+        let mut best = u64::MAX;
+        for _ in 0..(WARMUP + MEASURE) {
+            let t0 = Instant::now();
+            for s in 0..DRIFT_SAMPLES {
+                sim.reset();
+                let mut provider = drift_provider(s);
+                sim.run(DRIFT_STEPS, &mut provider);
+            }
+            best = best.min(t0.elapsed().as_nanos() as u64);
+        }
+        best
+    };
+    let serial_ns = run_frozen(&frozen_serial);
+    let parallel_ns = run_frozen(&frozen_parallel);
+
+    let mut asys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (alayers, _) = asys.compile_network(&drift_net).unwrap();
+    let compiles_before = asys.stats.total_compiles();
+    let cfg = AdaptiveConfig {
+        samples: DRIFT_SAMPLES,
+        steps_per_sample: DRIFT_STEPS,
+        swap_window: 1,
+        swap_patience: 1,
+        jobs: 1,
+        calibration: Some(cal.clone()),
+    };
+    let mut best_report = None;
+    for _ in 0..(WARMUP + MEASURE) {
+        let r = asys
+            .run_adaptive(&drift_net, alayers.clone(), &cfg, &mut drift_provider)
+            .unwrap();
+        let keep = match &best_report {
+            Some(b) => r.wall_nanos < b.wall_nanos,
+            None => true,
+        };
+        if keep {
+            best_report = Some(r);
+        }
+    }
+    let report = best_report.unwrap();
+
+    // Equivalence: replay every sample with a fresh fixed-paradigm sim per
+    // the recorded assignment — recorders must match bit for bit.
+    let mut identical = true;
+    for (s, (rec, assign)) in report.recorders.iter().zip(&report.assignments).enumerate() {
+        let layer = match assign[0] {
+            Paradigm::Serial => frozen_serial[0].clone(),
+            Paradigm::Parallel => frozen_parallel[0].clone(),
+        };
+        let mut fixed = NetworkSim::native(&drift_net, vec![layer]).unwrap();
+        let mut provider = drift_provider(s as u64);
+        fixed.run(DRIFT_STEPS, &mut provider);
+        identical &= rec == &fixed.recorder;
+    }
+    assert!(identical, "adaptive recorders must match the fixed-paradigm-sequence replay");
+    let swap_recompiles = report.compile.total_compiles() - compiles_before;
+    assert_eq!(swap_recompiles, 0, "hot swaps must fetch from the compile cache, not recompile");
+
+    let total_steps = (DRIFT_SAMPLES * DRIFT_STEPS) as f64;
+    let frozen_s_sps = total_steps / (serial_ns as f64 / 1e9);
+    let frozen_p_sps = total_steps / (parallel_ns as f64 / 1e9);
+    let adaptive_sps = total_steps / (report.wall_nanos as f64 / 1e9);
+    let worse_sps = frozen_s_sps.min(frozen_p_sps);
+    let better_sps = frozen_s_sps.max(frozen_p_sps);
+    let mean_swap_ns = if report.swaps.is_empty() {
+        0
+    } else {
+        report.swaps.iter().map(|w| w.swap_nanos).sum::<u64>() / report.swaps.len() as u64
+    };
+    let mut rep = Report::new(
+        "Adaptive re-switching — quiet→busy→quiet drift, 12 samples × 100 steps",
+        &["runner", "steps/s", "vs worse frozen", "swaps", "identical"],
+    );
+    rep.row(vec![
+        "frozen serial".into(),
+        format!("{frozen_s_sps:.0}"),
+        format!("{:.2}×", frozen_s_sps / worse_sps),
+        "-".into(),
+        "-".into(),
+    ]);
+    rep.row(vec![
+        "frozen parallel".into(),
+        format!("{frozen_p_sps:.0}"),
+        format!("{:.2}×", frozen_p_sps / worse_sps),
+        "-".into(),
+        "-".into(),
+    ]);
+    rep.row(vec![
+        "adaptive W=1 K=1".into(),
+        format!("{adaptive_sps:.0}"),
+        format!("{:.2}×", adaptive_sps / worse_sps),
+        report.swaps.len().to_string(),
+        identical.to_string(),
+    ]);
+    rep.finish();
+    println!(
+        "adaptive: layer {a_src}×{a_tgt} d={a_density} delay={a_delay} (tied={storage_tied}) | \
+         {} swap(s), mean swap {mean_swap_ns} ns, {swap_recompiles} recompiles",
+        report.swaps.len()
+    );
+
+    // ---- Machine-readable baseline (BENCH_sim.json v4) -------------------
     let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".into());
     let jobs_rows = |rows: &[(usize, u64, f64, f64, bool)]| -> String {
         rows.iter()
@@ -522,8 +702,14 @@ fn main() {
         cal.lif_neuron_steps_per_sec,
         decisions_json.join(",\n"),
     );
+    let adaptive_json = format!(
+        "  \"adaptive\": {{\n    \"layer\": \"{a_src}x{a_tgt} d={a_density} delay={a_delay}\",\n    \"storage_tied\": {storage_tied},\n    \"samples\": {DRIFT_SAMPLES},\n    \"steps_per_sample\": {DRIFT_STEPS},\n    \"swap_window\": 1,\n    \"swap_patience\": 1,\n    \"frozen_serial_steps_per_s\": {frozen_s_sps:.1},\n    \"frozen_parallel_steps_per_s\": {frozen_p_sps:.1},\n    \"adaptive_steps_per_s\": {adaptive_sps:.1},\n    \"vs_worse_frozen\": {:.4},\n    \"vs_better_frozen\": {:.4},\n    \"swaps\": {},\n    \"mean_swap_ns\": {mean_swap_ns},\n    \"swap_recompiles\": {swap_recompiles},\n    \"identical_to_fixed_sequence\": {identical}\n  }}",
+        adaptive_sps / worse_sps,
+        adaptive_sps / better_sps,
+        report.swaps.len(),
+    );
     let json = format!(
-        "{{\n  \"bench\": \"sim_throughput\",\n  \"schema_version\": 3,\n  \"e2e\": {{\n    \"network\": \"demo 200-120-20\",\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"e2e_low_rate\": {{\n    \"network\": \"demo 200-120-20\",\n    \"rate\": 0.10,\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"rate_sweep\": {{\n    \"layer\": \"255x255 d=0.5 delay=8\",\n    \"steps\": {},\n    \"points\": [\n{}\n    ]\n  }},\n  \"batch\": {{\n    \"samples\": {},\n    \"steps_per_sample\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n  \"intra\": {{\n    \"network\": \"wide 256-4x160-32\",\n    \"steps\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n{},\n{}\n}}\n",
+        "{{\n  \"bench\": \"sim_throughput\",\n  \"schema_version\": 4,\n  \"e2e\": {{\n    \"network\": \"demo 200-120-20\",\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"e2e_low_rate\": {{\n    \"network\": \"demo 200-120-20\",\n    \"rate\": 0.10,\n    \"steps\": {},\n    \"p50_ns\": {:.0},\n    \"steps_per_s\": {:.1},\n    \"events_per_s\": {:.1},\n    \"issued_macs_per_s\": {:.1}\n  }},\n  \"rate_sweep\": {{\n    \"layer\": \"255x255 d=0.5 delay=8\",\n    \"steps\": {},\n    \"points\": [\n{}\n    ]\n  }},\n  \"batch\": {{\n    \"samples\": {},\n    \"steps_per_sample\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n  \"intra\": {{\n    \"network\": \"wide 256-4x160-32\",\n    \"steps\": {},\n    \"runs\": [\n{}\n    ]\n  }},\n{},\n{},\n{}\n}}\n",
         STEPS,
         e2e_p50,
         e2e_steps_s,
@@ -543,6 +729,7 @@ fn main() {
         jobs_rows(&intra_rows),
         kernels_json,
         calibrated_json,
+        adaptive_json,
     );
     match std::fs::write(&out, &json) {
         Ok(()) => println!("baseline written to {out}"),

@@ -23,6 +23,13 @@
 //! seed/fingerprint, LIF params, `PeSpec`, `WdmConfig`, paradigm), so a
 //! changed config simply misses and compiles fresh, and a format change
 //! bumps [`codec::VERSION`], demoting every older file to a miss.
+//!
+//! Because `paradigm` is part of the key, an ideal-mode compile persists
+//! **both** compiled forms of every layer. That inventory is what makes
+//! runtime re-switching free: when [`crate::switching::adaptive`] (or a
+//! fault migration) asks for the paradigm a layer is *not* currently
+//! running, the fetch is a disk hit, never a recompile — live hot-swaps
+//! on a warm store report `total_compiles() == 0`.
 
 pub mod codec;
 

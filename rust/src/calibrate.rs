@@ -40,7 +40,68 @@ use std::time::Instant;
 pub const CALIBRATION_FILE: &str = "calibration.json";
 
 /// Schema version written to (and required from) the constants file.
-pub const CALIBRATION_SCHEMA: u32 = 1;
+/// Schema 2 added measurement provenance (`host`, `measured_unix_secs`);
+/// schema-1 files carry none, so they are rejected with a re-run hint
+/// rather than trusted blind.
+pub const CALIBRATION_SCHEMA: u32 = 2;
+
+/// Constants older than this are considered stale: hardware doesn't drift,
+/// but kernels, compilers, and thermal envelopes do, and a month is long
+/// enough for any of them to have moved.
+pub const STALE_AFTER_SECS: u64 = 30 * 24 * 3600;
+
+/// Measured constants plus their provenance — who measured them, and when.
+/// `simulate` checks both before trusting the tie-break numbers: constants
+/// measured on another host or a different kernel variant price the wrong
+/// machine, and [`STALE_AFTER_SECS`]-old ones may price the wrong build.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationRecord {
+    pub constants: CalibrationConstants,
+    /// [`host_fingerprint`] of the measuring machine.
+    pub host: String,
+    /// Measurement wall-clock, seconds since the Unix epoch (0 = unknown,
+    /// which always reads as stale).
+    pub measured_unix_secs: u64,
+}
+
+impl CalibrationRecord {
+    /// Seconds elapsed since the measurement, given the current Unix time.
+    pub fn age_secs(&self, now_unix_secs: u64) -> u64 {
+        now_unix_secs.saturating_sub(self.measured_unix_secs)
+    }
+
+    /// Older than [`STALE_AFTER_SECS`]?
+    pub fn is_stale(&self, now_unix_secs: u64) -> bool {
+        self.measured_unix_secs == 0 || self.age_secs(now_unix_secs) > STALE_AFTER_SECS
+    }
+}
+
+/// A best-effort identity for the measuring machine: hostname (from
+/// `$HOSTNAME`, falling back to `/proc/sys/kernel/hostname`, falling back
+/// to `unknown-host`) plus OS and architecture — enough to notice a
+/// calibration file that traveled with an artifact store to a different
+/// machine.
+pub fn host_fingerprint() -> String {
+    let host = std::env::var("HOSTNAME")
+        .ok()
+        .filter(|h| !h.trim().is_empty())
+        .or_else(|| {
+            std::fs::read_to_string("/proc/sys/kernel/hostname")
+                .ok()
+                .map(|h| h.trim().to_string())
+                .filter(|h| !h.is_empty())
+        })
+        .unwrap_or_else(|| "unknown-host".to_string());
+    format!("{host}/{}-{}", std::env::consts::OS, std::env::consts::ARCH)
+}
+
+/// Current Unix time in seconds (0 if the clock reads before the epoch).
+pub fn now_unix_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
 
 /// The reference workload every measurement runs on: the throughput
 /// benches' 255 × 255 sweep layer at density 0.5, delay range 8, with a
@@ -153,7 +214,9 @@ pub fn path_in(dir: &Path) -> PathBuf {
     dir.join(CALIBRATION_FILE)
 }
 
-/// Persist constants as JSON (creates `path`'s parent directory if needed).
+/// Persist constants as JSON (creates `path`'s parent directory if
+/// needed), stamping this host's [`host_fingerprint`] and the current time
+/// as the measurement provenance.
 pub fn save(path: &Path, c: &CalibrationConstants) -> crate::Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -167,14 +230,17 @@ pub fn save(path: &Path, c: &CalibrationConstants) -> crate::Result<()> {
         ("serial_events_per_sec", Json::Num(c.serial_events_per_sec)),
         ("parallel_macs_per_sec", Json::Num(c.parallel_macs_per_sec)),
         ("lif_neuron_steps_per_sec", Json::Num(c.lif_neuron_steps_per_sec)),
+        ("host", Json::Str(host_fingerprint())),
+        ("measured_unix_secs", Json::Num(now_unix_secs() as f64)),
     ]);
     std::fs::write(path, json.to_string_compact() + "\n")
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(())
 }
 
-/// Load constants from a file written by [`save`].
-pub fn load(path: &Path) -> crate::Result<CalibrationConstants> {
+/// Load a full record (constants + provenance) from a file written by
+/// [`save`].
+pub fn load_record(path: &Path) -> crate::Result<CalibrationRecord> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let json = Json::parse(&text)
@@ -195,16 +261,34 @@ pub fn load(path: &Path) -> crate::Result<CalibrationConstants> {
             .filter(|x| x.is_finite() && *x > 0.0)
             .ok_or_else(|| anyhow!("{}: missing or non-positive {key}", path.display()))
     };
-    Ok(CalibrationConstants {
-        serial_events_per_sec: num("serial_events_per_sec")?,
-        parallel_macs_per_sec: num("parallel_macs_per_sec")?,
-        lif_neuron_steps_per_sec: num("lif_neuron_steps_per_sec")?,
-        kernel_variant: json
-            .get("kernel_variant")
+    Ok(CalibrationRecord {
+        constants: CalibrationConstants {
+            serial_events_per_sec: num("serial_events_per_sec")?,
+            parallel_macs_per_sec: num("parallel_macs_per_sec")?,
+            lif_neuron_steps_per_sec: num("lif_neuron_steps_per_sec")?,
+            kernel_variant: json
+                .get("kernel_variant")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+        },
+        host: json
+            .get("host")
             .and_then(Json::as_str)
-            .unwrap_or("unknown")
+            .unwrap_or("unknown-host")
             .to_string(),
+        measured_unix_secs: json
+            .get("measured_unix_secs")
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite() && *x >= 0.0)
+            .unwrap_or(0.0) as u64,
     })
+}
+
+/// Load just the constants from a file written by [`save`] (callers that
+/// want the provenance use [`load_record`]).
+pub fn load(path: &Path) -> crate::Result<CalibrationConstants> {
+    load_record(path).map(|r| r.constants)
 }
 
 /// Best-effort load from an artifact directory: `None` when no constants
@@ -212,11 +296,16 @@ pub fn load(path: &Path) -> crate::Result<CalibrationConstants> {
 /// model); a *corrupt* file is an error the caller should surface rather
 /// than silently decide without.
 pub fn load_from_dir(dir: &Path) -> crate::Result<Option<CalibrationConstants>> {
+    load_record_from_dir(dir).map(|r| r.map(|r| r.constants))
+}
+
+/// [`load_from_dir`], keeping the provenance for staleness/host checks.
+pub fn load_record_from_dir(dir: &Path) -> crate::Result<Option<CalibrationRecord>> {
     let path = path_in(dir);
     if !path.exists() {
         return Ok(None);
     }
-    load(&path).map(Some)
+    load_record(&path).map(Some)
 }
 
 #[cfg(test)]
@@ -245,7 +334,38 @@ mod tests {
         save(&path, &c).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back, c);
+        // save() stamped this host's provenance; a freshly written file can
+        // never read as stale or foreign.
+        let rec = load_record(&path).unwrap();
+        assert_eq!(rec.constants, c);
+        assert_eq!(rec.host, host_fingerprint());
+        assert!(rec.measured_unix_secs > 0);
+        assert!(!rec.is_stale(now_unix_secs()));
+        assert_eq!(
+            load_record_from_dir(&dir).unwrap().expect("file exists"),
+            rec,
+            "dir-level record load must agree"
+        );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn staleness_is_thirty_days_and_unknown_times_are_stale() {
+        let rec = CalibrationRecord {
+            constants: CalibrationConstants {
+                serial_events_per_sec: 1.0,
+                parallel_macs_per_sec: 1.0,
+                lif_neuron_steps_per_sec: 1.0,
+                kernel_variant: "scalar".to_string(),
+            },
+            host: "elsewhere/linux-x86_64".to_string(),
+            measured_unix_secs: 1_000_000,
+        };
+        assert!(!rec.is_stale(rec.measured_unix_secs + STALE_AFTER_SECS));
+        assert!(rec.is_stale(rec.measured_unix_secs + STALE_AFTER_SECS + 1));
+        assert_eq!(rec.age_secs(rec.measured_unix_secs - 5), 0, "clock skew saturates");
+        let unknown = CalibrationRecord { measured_unix_secs: 0, ..rec };
+        assert!(unknown.is_stale(1), "an unstamped measurement is never trusted as fresh");
     }
 
     #[test]
@@ -258,18 +378,36 @@ mod tests {
         assert!(load_from_dir(&dir).is_err(), "corrupt file must not be silently skipped");
         std::fs::write(&path, r#"{"schema_version":99}"#).unwrap();
         assert!(load(&path).unwrap_err().to_string().contains("schema"));
+        // Provenance-free schema-1 files demand a re-measure, not blind trust.
         std::fs::write(
             &path,
-            r#"{"schema_version":1,"kernel_variant":"scalar","serial_events_per_sec":0,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
+            r#"{"schema_version":1,"kernel_variant":"scalar","serial_events_per_sec":1,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
+        )
+        .unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("re-run"), "{err}");
+        std::fs::write(
+            &path,
+            r#"{"schema_version":2,"kernel_variant":"scalar","serial_events_per_sec":0,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
         )
         .unwrap();
         assert!(load(&path).is_err(), "non-positive rates are invalid");
         std::fs::write(
             &path,
-            r#"{"schema_version":1,"kernel_variant":"scalar","serial_events_per_sec":-2e8,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
+            r#"{"schema_version":2,"kernel_variant":"scalar","serial_events_per_sec":-2e8,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
         )
         .unwrap();
         assert!(load(&path).is_err(), "negative rates are invalid");
+        // Missing provenance in an otherwise valid schema-2 file degrades
+        // to "unknown" (the caller's staleness warning fires) — not an error.
+        std::fs::write(
+            &path,
+            r#"{"schema_version":2,"kernel_variant":"scalar","serial_events_per_sec":1,"parallel_macs_per_sec":1,"lif_neuron_steps_per_sec":1}"#,
+        )
+        .unwrap();
+        let rec = load_record(&path).unwrap();
+        assert_eq!(rec.host, "unknown-host");
+        assert!(rec.is_stale(now_unix_secs()));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -37,6 +37,20 @@ pub fn serial_events_per_step(ch: &LayerCharacter, rate: f64) -> f64 {
     rate.clamp(0.0, 1.0) * ch.n_source as f64 * ch.n_target as f64 * ch.density
 }
 
+/// Observed per-source-neuron firing rate from windowed spike counters:
+/// `spikes / (steps × n_source)`, the empirical counterpart of the `rate`
+/// parameter every cost function above takes. Total-by-construction: an
+/// empty window (`steps == 0`) or a zero-neuron source reports `0.0` — a
+/// silent window and an unobservable one both mean "no evidence of
+/// activity", and the decision machinery must never see a NaN.
+pub fn observed_rate(spikes: u64, steps: u64, n_source: usize) -> f64 {
+    let denom = steps as f64 * n_source as f64;
+    if denom == 0.0 {
+        return 0.0;
+    }
+    spikes as f64 / denom
+}
+
 /// Expected occupied weight-delay-map rows: a `(source, delay)` lane exists
 /// iff at least one of the source's `n_target` potential synapses drew that
 /// delay (delays uniform over `1..=delay_range`, presence `density`).
@@ -169,6 +183,15 @@ mod tests {
         let p_lo = parallel_mac_issues_per_step(&ch, 0.1);
         let p_hi = parallel_mac_issues_per_step(&ch, 0.9);
         assert!(p_hi / p_lo < 1.01, "parallel work saturates once steps are non-silent");
+    }
+
+    #[test]
+    fn observed_rate_is_total_and_never_nan() {
+        assert_eq!(observed_rate(50, 100, 10), 0.05);
+        assert_eq!(observed_rate(0, 100, 10), 0.0, "silent window is rate 0");
+        assert_eq!(observed_rate(0, 0, 10), 0.0, "empty window is rate 0, not NaN");
+        assert_eq!(observed_rate(7, 5, 0), 0.0, "zero-neuron source is rate 0");
+        assert!(observed_rate(u64::MAX, 1, 1).is_finite());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! s2switch dataset  [--out data/dataset.csv] [--small] [--jobs N] [--artifact-dir PATH]
 //! s2switch train    [--data data/dataset.csv] [--seeds 20] [--out data/adaboost.json]
 //! s2switch decide   --src N --tgt N --density F --delay N [--model data/adaboost.json]
+//!                   [--rate R] [--artifact-dir PATH]
 //! s2switch compile  --src N --tgt N --density F --delay N [--mode serial|parallel|ideal|classifier]
 //!                   [--machine WxH|light-board] [--strategy linear|chip-packed|balanced]
 //!                   [--artifact-dir PATH]
@@ -13,6 +14,7 @@
 //!                   [--intra-jobs N] [--profile]
 //!                   [--machine WxH|light-board] [--strategy S]
 //!                   [--artifact-dir PATH]
+//!                   [--adaptive] [--swap-window W] [--swap-patience K]
 //!                   [--fault-map PATH] [--fault-seed N] [--fault-rate F]
 //!                   [--record-csv PATH]      # demo 3-layer network
 //! s2switch calibrate [--artifact-dir PATH] [--out FILE]
@@ -42,10 +44,24 @@
 //! relabeling, `compile`, and `simulate` all share it.
 //! `calibrate` micro-benchmarks this host's real kernels (serial events/s,
 //! parallel MACs/s, LIF neuron-steps/s) and persists the constants as
-//! `calibration.json` next to the artifact store; a later `simulate
+//! `calibration.json` next to the artifact store, stamped with the
+//! measuring host's fingerprint and timestamp; a later `simulate
 //! --artifact-dir` auto-loads them so the runtime-informed paradigm check
 //! prices the tie-break in measured step seconds instead of abstract work
-//! items.
+//! items, warning when they are stale (>30 days), from another host, or
+//! from a different kernel variant.
+//! `simulate --adaptive` routes the batch through the live re-switching
+//! loop ([`run_adaptive`](s2switch::switching::SwitchingSystem::run_adaptive)):
+//! every `--swap-window W` samples of windowed activity feed the
+//! rate-aware decision, and after `--swap-patience K` consecutive losses a
+//! layer's engine is hot-swapped between samples with zero recompiles (the
+//! alternate form comes from the compile cache / artifact store). Combined
+//! with `--fault-*` flags the same knobs drive the recovery loop's
+//! boundary re-switching, where every swap is ratified by a
+//! preference-aware re-admission before it lands.
+//! `decide --rate R` runs the runtime-informed decision for one layer from
+//! the CLI; with `--artifact-dir` it requires (and consumes) the stored
+//! calibration, erroring out with a `calibrate` hint when none exists.
 
 use anyhow::{bail, ensure, Context, Result};
 use s2switch::coordinator::{
@@ -113,27 +129,40 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|cali
             generate + label the sweep corpus
   train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
   decide    --src N --tgt N --density F --delay N --model PATH
+            (--rate R: runtime-informed decision at observed firing rate R
+            instead of the classifier; --artifact-dir PATH: price the
+            tie-break with the stored calibration — an error, with a
+            `calibrate` hint, when none exists there)
   compile   --src N --tgt N --density F --delay N --mode MODE
             --machine WxH|light-board --strategy linear|chip-packed|balanced
             --artifact-dir PATH
   simulate  --steps N --batch S --pjrt --jobs N --intra-jobs N --profile
             --record-csv PATH --machine WxH|light-board --strategy S
             --artifact-dir PATH
+            --adaptive --swap-window W --swap-patience K
             --fault-map PATH --fault-seed N --fault-rate F
             run the demo network end to end (--batch S: S stimulus samples
             through the BatchRunner; --intra-jobs N: per-sample layer
             parallelism; --profile: per-phase wall-clock breakdown plus the
             kernel variants and calibration constants in play;
-            --record-csv: dump recorded spikes; any --fault-* flag routes
+            --record-csv: dump recorded spikes; --adaptive: live re-switch
+            layer engines from windowed activity — the other paradigm must
+            win W-sample windows K boundaries in a row, then the layer
+            hot-swaps between samples with zero recompiles, printing one
+            deterministic `swap:` line per event; any --fault-* flag routes
             the run through the fault-tolerant recovery loop — --fault-map
             loads pre-existing dead PEs/chips/degraded links, --fault-rate
             injects seeded mid-run PE deaths recovered by checkpointed
-            re-placement from the artifact store)
+            re-placement from the artifact store; --adaptive composes with
+            --fault-*: boundary swaps are ratified by preference-aware
+            re-admission so they survive fault migrations)
   calibrate --artifact-dir PATH --out FILE
             micro-benchmark this host's kernels (serial events/s, parallel
             MACs/s, LIF neuron-steps/s) and persist the constants as
-            calibration.json next to the artifact store; simulate
-            auto-loads them for the runtime-informed paradigm check
+            calibration.json next to the artifact store, stamped with this
+            host's fingerprint + timestamp; simulate auto-loads them for
+            the runtime-informed paradigm check and warns when they are
+            stale (>30 days), foreign, or from another kernel variant
   (--jobs N: worker threads for compiling, batching and same-wave layer
    stepping, 0 = one per CPU;
    --machine WxH: chip grid, light-board = 8x6; compile/simulate print a
@@ -283,6 +312,9 @@ fn layer_flags(args: &Args) -> Result<LayerCharacter> {
 
 fn cmd_decide(args: &Args) -> Result<()> {
     let ch = layer_flags(args)?;
+    if args.has("rate") {
+        return cmd_decide_rate(args, &ch);
+    }
     let model = PathBuf::from(args.get("model").unwrap_or("data/adaboost.json"));
     let sys = load_switching_system(&model, PeSpec::default())
         .context("train a model first: s2switch train")?;
@@ -296,6 +328,66 @@ fn cmd_decide(args: &Args) -> Result<()> {
         "layer (src={}, tgt={}, density={:.2}, delay={}) → {}",
         ch.n_source, ch.n_target, ch.density, ch.delay_range, verdict
     );
+    Ok(())
+}
+
+/// `decide --rate R`: the runtime-informed decision path — storage first,
+/// rate-priced step seconds as the tie-break — for one layer, reachable
+/// without running a simulation. With `--artifact-dir` the stored
+/// calibration is *required* (a typed error points at `s2switch calibrate`
+/// when it is absent); without it the abstract work-item model prices the
+/// tie-break.
+fn cmd_decide_rate(args: &Args, ch: &LayerCharacter) -> Result<()> {
+    use s2switch::switching::{CompileJob, CompilePipeline, SwitchPolicy};
+    let rate: f64 = args.parse_or("rate", 0.0)?;
+    ensure!((0.0..=1.0).contains(&rate), "--rate {rate}: firing rate must be in [0, 1]");
+    let calibration = match args.get("artifact-dir") {
+        Some(dir) => {
+            let rec = s2switch::calibrate::load_record_from_dir(std::path::Path::new(dir))?
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no calibration constants in {dir} — run \
+                         `s2switch calibrate --artifact-dir {dir}` first"
+                    )
+                })?;
+            warn_calibration_provenance(&rec);
+            Some(rec.constants)
+        }
+        None => None,
+    };
+    // Realize the layer so both estimates price real synapse content, the
+    // same way `compile` and the dataset labeler do.
+    let mut rng = Rng::new(args.parse_or("seed", 1u64)?);
+    let proj = s2switch::dataset::realize_layer(
+        ch.n_source,
+        ch.n_target,
+        ch.density,
+        ch.delay_range,
+        &mut rng,
+    );
+    let job = CompileJob::new(&proj, ch.n_source, ch.n_target, LifParams::default());
+    let pipeline = CompilePipeline::new(
+        PeSpec::default(),
+        s2switch::paradigm::parallel::WdmConfig::default(),
+    );
+    let (s, p) = pipeline.estimate_pair(&job)?;
+    let verdict =
+        SwitchPolicy::decide_with_rate(&s, &p, &job.character, rate, calibration.as_ref());
+    let tied = s.total_pes() == p.total_pes();
+    println!(
+        "layer (src={}, tgt={}, density={:.2}, delay={}) at rate {rate:.3} → {verdict}",
+        ch.n_source, ch.n_target, ch.density, ch.delay_range
+    );
+    println!(
+        "  storage: serial {} PEs vs parallel {} PEs{}",
+        s.total_pes(),
+        p.total_pes(),
+        if tied { " (tie — runtime model decides)" } else { "" }
+    );
+    match &calibration {
+        Some(c) => println!("  tie-break: calibrated step seconds ({} kernel)", c.kernel_variant),
+        None => println!("  tie-break: abstract work items (no calibration loaded)"),
+    }
     Ok(())
 }
 
@@ -375,6 +467,46 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Warn when loaded calibration constants should not be trusted blind:
+/// measured on a different kernel variant, on another host, or too long
+/// ago ([`STALE_AFTER_SECS`](s2switch::calibrate::STALE_AFTER_SECS)). The
+/// run proceeds either way — the warning tells the user to re-run
+/// `s2switch calibrate`, it does not block.
+fn warn_calibration_provenance(rec: &s2switch::calibrate::CalibrationRecord) {
+    let built = s2switch::model::lif::kernel_variant();
+    if rec.constants.kernel_variant != built {
+        println!(
+            "warning: calibration constants were measured on the `{}` kernel \
+             but this binary runs `{built}` — re-run `s2switch calibrate`",
+            rec.constants.kernel_variant
+        );
+    }
+    let here = s2switch::calibrate::host_fingerprint();
+    if rec.host != here {
+        println!(
+            "warning: calibration constants were measured on `{}` but this host \
+             is `{here}` — re-run `s2switch calibrate`",
+            rec.host
+        );
+    }
+    let now = s2switch::calibrate::now_unix_secs();
+    if rec.is_stale(now) {
+        if rec.measured_unix_secs == 0 {
+            println!(
+                "warning: calibration constants carry no measurement timestamp — \
+                 re-run `s2switch calibrate`"
+            );
+        } else {
+            println!(
+                "warning: calibration constants are {} day(s) old (stale after {}) — \
+                 re-run `s2switch calibrate`",
+                rec.age_secs(now) / 86_400,
+                s2switch::calibrate::STALE_AFTER_SECS / 86_400
+            );
+        }
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let steps: u64 = args.parse_or("steps", 200)?;
     // --config FILE loads a JSON network description; otherwise a built-in
@@ -416,8 +548,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // A corrupt or implausible calibration file must not poison paradigm
     // decisions: warn and fall back to the static cost formulas.
     let calibration = match args.get("artifact-dir") {
-        Some(dir) => match s2switch::calibrate::load_from_dir(std::path::Path::new(dir)) {
-            Ok(c) => c,
+        Some(dir) => match s2switch::calibrate::load_record_from_dir(std::path::Path::new(dir)) {
+            Ok(Some(rec)) => {
+                // Provenance checks: never silently trust stale or foreign
+                // constants (the decision still runs — forewarned).
+                warn_calibration_provenance(&rec);
+                Some(rec.constants)
+            }
+            Ok(None) => None,
             Err(e) => {
                 println!("warning: ignoring calibration constants ({e:#}); using static formulas");
                 None
@@ -425,21 +563,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         },
         None => None,
     };
-    if let Some(c) = &calibration {
-        let built = s2switch::model::lif::kernel_variant();
-        if c.kernel_variant != built {
-            println!(
-                "warning: calibration constants were measured on the `{}` kernel \
-                 but this binary runs `{built}` — re-run `s2switch calibrate`",
-                c.kernel_variant
-            );
-        }
-    }
     // Any --fault-* flag routes through the fault-tolerant recovery loop
     // (checkpoint at sample boundaries, re-admit + re-place survivors,
-    // replay — DESIGN.md §Fault-Tolerance).
+    // replay — DESIGN.md §Fault-Tolerance). --adaptive composes: the
+    // recovery loop evaluates boundary swaps with the same knobs.
     if args.has("fault-map") || args.has("fault-seed") || args.has("fault-rate") {
         return simulate_faulted(args, &net, &mut sys, steps, rate);
+    }
+    // --adaptive without faults: the live re-switching loop.
+    if args.has("adaptive") {
+        return simulate_adaptive(args, &net, &mut sys, steps, rate, calibration);
     }
 
     // Capacity-aware admission: prejudge → feasibility check → compile →
@@ -597,12 +730,15 @@ fn simulate_faulted(
         None => FaultMap::healthy(),
     };
     let samples = args.parse_or("batch", 1u64)?.max(1);
+    let adaptive = args.has("adaptive");
     let cfg = RecoveryConfig {
         samples,
         steps_per_sample: steps,
         fault_seed: args.parse_or("fault-seed", 7u64)?,
         fault_rate: args.parse_or("fault-rate", 0.0f64)?,
         initial_faults,
+        swap_window: if adaptive { args.parse_or("swap-window", 2usize)? } else { 0 },
+        swap_patience: if adaptive { args.parse_or("swap-patience", 2usize)? } else { 0 },
     };
     println!(
         "fault-tolerant run: {} sample(s) × {} steps, {} pre-dead PE(s), \
@@ -635,6 +771,22 @@ fn simulate_faulted(
     for (i, status) in report.layer_status.iter().enumerate() {
         println!("layer {i}: {status}");
     }
+    // One deterministic line per executed hot-swap (wall-clock is reported
+    // separately: these lines are what the CI determinism diff compares).
+    for w in &report.swaps {
+        println!(
+            "swap: sample={} layer={} {}->{} rate={:.4}",
+            w.sample, w.layer, w.from, w.to, w.window_rate
+        );
+    }
+    if adaptive {
+        println!(
+            "adaptive: {} swap(s) (window {}, patience {})",
+            report.swaps.len(),
+            cfg.swap_window,
+            cfg.swap_patience
+        );
+    }
     println!("recovery: {}", report.stats);
     println!(
         "compiles: {} run, {} cache hits, {} artifact hits",
@@ -645,6 +797,87 @@ fn simulate_faulted(
     if let Some(err) = &report.degraded {
         println!("degraded: {err}");
     }
+    Ok(())
+}
+
+/// `simulate --adaptive`: drive the batch through the live re-switching
+/// loop. `--batch S` sets the sample count (default 8), `--steps` the
+/// timesteps per sample; `--swap-window W` / `--swap-patience K` tune the
+/// hysteresis state machine. Prints one deterministic `swap:` line per
+/// executed hot-swap (the CI determinism diff compares these across two
+/// fixed-seed runs) plus a latency/compile summary.
+fn simulate_adaptive(
+    args: &Args,
+    net: &s2switch::model::Network,
+    sys: &mut SwitchingSystem,
+    steps: u64,
+    rate: f64,
+    calibration: Option<s2switch::costmodel::CalibrationConstants>,
+) -> Result<()> {
+    use s2switch::switching::AdaptiveConfig;
+    ensure!(!args.has("pjrt"), "--adaptive runs on the native backend");
+    ensure!(
+        !args.has("profile"),
+        "--profile applies to plain single-sample runs (adaptive swaps engines mid-run)"
+    );
+    let calibrated = calibration.is_some();
+    let cfg = AdaptiveConfig {
+        samples: args.parse_or("batch", 8u64)?.max(1),
+        steps_per_sample: steps,
+        swap_window: args.parse_or("swap-window", 2usize)?,
+        swap_patience: args.parse_or("swap-patience", 2usize)?,
+        jobs: args.parse_or("intra-jobs", 1usize)?,
+        calibration,
+    };
+    let (layers, _) = sys.compile_network(net)?;
+    let initial: Vec<_> = layers.iter().map(|l| l.paradigm()).collect();
+    println!(
+        "adaptive run: {} sample(s) × {} steps (window {}, patience {}, {} tie-break)",
+        cfg.samples,
+        cfg.steps_per_sample,
+        cfg.swap_window,
+        cfg.swap_patience,
+        if calibrated { "calibrated" } else { "abstract" }
+    );
+    let sizes: Vec<usize> = net.populations.iter().map(|p| p.n_neurons).collect();
+    let provider_for = |sample: u64| {
+        let sizes = sizes.clone();
+        let mut rng = Rng::new(99u64.wrapping_add(sample * 0x9E37_79B9_7F4A_7C15));
+        move |p: s2switch::model::PopulationId, _t: u64, out: &mut Vec<u32>| {
+            out.extend((0..sizes[p.0] as u32).filter(|_| rng.chance(rate)));
+        }
+    };
+    let report = sys.run_adaptive(net, layers, &cfg, provider_for)?;
+    for (i, rec) in report.recorders.iter().enumerate() {
+        println!("sample {i:>3}: {:>6} spikes", rec.total_spikes());
+    }
+    for w in &report.swaps {
+        println!(
+            "swap: sample={} layer={} {}->{} rate={:.4}",
+            w.sample, w.layer, w.from, w.to, w.window_rate
+        );
+    }
+    for (i, (a, b)) in initial.iter().zip(&report.paradigms).enumerate() {
+        println!("layer {i}: {a} → {b}{}", if a == b { " (kept)" } else { " (re-switched)" });
+    }
+    let mean_ns = if report.swaps.is_empty() {
+        0
+    } else {
+        report.swaps.iter().map(|w| w.swap_nanos).sum::<u64>() / report.swaps.len() as u64
+    };
+    println!(
+        "adaptive: {} swap(s) over {} sample(s) in {:.2?}, mean swap latency {:.2?}",
+        report.swaps.len(),
+        report.recorders.len(),
+        std::time::Duration::from_nanos(report.wall_nanos),
+        std::time::Duration::from_nanos(mean_ns)
+    );
+    println!(
+        "compiles: {} run, {} cache hits, {} artifact hits",
+        report.compile.total_compiles(),
+        report.compile.cache_hits,
+        report.compile.disk_hits
+    );
     Ok(())
 }
 

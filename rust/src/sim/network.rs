@@ -109,6 +109,21 @@ impl LayerEngine {
         }
     }
 
+    /// (window_spikes, window_steps) of the current activity window.
+    fn window_counts(&self) -> (u64, u64) {
+        match self {
+            LayerEngine::Serial(e) => (e.window_spikes, e.window_steps),
+            LayerEngine::Parallel(e) => (e.window_spikes, e.window_steps),
+        }
+    }
+
+    fn clear_window(&mut self) {
+        match self {
+            LayerEngine::Serial(e) => e.clear_window(),
+            LayerEngine::Parallel(e) => e.clear_window(),
+        }
+    }
+
     /// (readout, dispatch) nanos accumulated while profiling.
     fn phase_nanos(&self) -> (u64, u64) {
         match self {
@@ -334,17 +349,30 @@ pub struct LayerActivity {
     pub events: u64,
     /// MAC operations actually issued (parallel engines; cumulative).
     pub macs: u64,
+    /// Incoming spikes in the *current activity window* (cleared by
+    /// [`NetworkSim::reset`] / [`NetworkSim::clear_windows`] — recent
+    /// activity, not lifetime history).
+    pub window_spikes: u64,
+    /// Timesteps executed in the current activity window.
+    pub window_steps: u64,
 }
 
 impl LayerActivity {
     /// Observed source firing rate: spikes per source neuron per timestep.
     pub fn firing_rate(&self) -> f64 {
-        let denom = (self.steps as f64) * (self.n_source as f64);
-        if denom == 0.0 {
-            0.0
-        } else {
-            self.spikes_in as f64 / denom
-        }
+        crate::costmodel::activity::observed_rate(self.spikes_in, self.steps, self.n_source)
+    }
+
+    /// Observed firing rate over the *current activity window* only — the
+    /// signal the adaptive re-switcher feeds to
+    /// [`crate::switching::SwitchPolicy::decide_with_rate`]. Total: empty
+    /// windows report `0.0`, never NaN.
+    pub fn window_rate(&self) -> f64 {
+        crate::costmodel::activity::observed_rate(
+            self.window_spikes,
+            self.window_steps,
+            self.n_source,
+        )
     }
 }
 
@@ -688,6 +716,7 @@ impl NetworkSim {
             .iter()
             .map(|s| {
                 let (steps, spikes_in, events, macs) = s.engine.telemetry();
+                let (window_spikes, window_steps) = s.engine.window_counts();
                 LayerActivity {
                     proj: s.proj,
                     source: s.src,
@@ -698,11 +727,79 @@ impl NetworkSim {
                     spikes_in,
                     events,
                     macs,
+                    window_spikes,
+                    window_steps,
                 }
             })
             .collect();
         out.sort_by_key(|a| a.proj);
         out
+    }
+
+    /// Start a fresh activity window on every engine without touching ring
+    /// state, lifetime telemetry, or the recorder. The adaptive re-switcher
+    /// calls this after reading [`NetworkSim::layer_activity`] at a sample
+    /// boundary it chose not to act on ([`NetworkSim::reset`] clears
+    /// windows too, as part of rewinding all dynamic state).
+    pub fn clear_windows(&mut self) {
+        for slot in &mut self.engines {
+            slot.engine.clear_window();
+        }
+    }
+
+    /// Hot-swap one projection's engine for a differently-compiled form of
+    /// the *same layer* — the runtime re-switching primitive
+    /// ([`crate::switching::adaptive`]). Legal only between samples: the
+    /// outgoing engine must be pristine (post-[`NetworkSim::reset`] state),
+    /// because mid-sample ring state has no cross-paradigm representation.
+    ///
+    /// The replacement is spliced in place: topology (projection index,
+    /// source/target routing, wave membership) is untouched, so the wave
+    /// schedule and [`NetworkSim::run_jobs`]'s engine partition stay valid.
+    /// Lifetime `steps`/`spikes_in` telemetry carries over to the new
+    /// engine so observed-rate reporting stays continuous; paradigm-specific
+    /// counters (`events`/`macs`) start at zero, and the activity window
+    /// starts fresh. Parallel replacements run on the native MAC backend.
+    pub fn swap_layer_engine(&mut self, proj: usize, layer: CompiledLayer) -> Result<()> {
+        let slot = self
+            .engines
+            .iter_mut()
+            .find(|s| s.proj == proj)
+            .ok_or_else(|| anyhow::anyhow!("no engine for projection {proj}"))?;
+        let n_target = self.currents[slot.tgt.0].len();
+        let ch = layer.character();
+        ensure!(
+            ch.n_source == slot.n_source && ch.n_target == n_target,
+            "swap layer shape {}×{} does not match projection {proj} ({}×{})",
+            ch.n_source,
+            ch.n_target,
+            slot.n_source,
+            n_target
+        );
+        let ck = slot.engine.checkpoint();
+        ensure!(
+            ck.is_pristine(),
+            "projection {proj} has in-flight ring state — engines swap only between samples"
+        );
+        let (steps, spikes_in, _, _) = slot.engine.telemetry();
+        let mut engine = match layer {
+            CompiledLayer::Serial(c) => {
+                let mut e = SerialLayerEngine::new(c, n_target);
+                e.steps = steps;
+                e.spikes_in = spikes_in;
+                LayerEngine::Serial(e)
+            }
+            CompiledLayer::Parallel(c) => {
+                let mut e = ParallelLayerEngine::new(c, Box::new(NativeMac));
+                e.steps = steps;
+                e.spikes_in = spikes_in;
+                LayerEngine::Parallel(e)
+            }
+        };
+        engine.set_profile(self.profile);
+        engine.reset_to(ck.timestep());
+        slot.engine = engine;
+        Ok(())
     }
 
     /// Distinct MAC-backend kernel variants across the parallel engines
@@ -1557,6 +1654,122 @@ mod tests {
         assert_eq!(trace.n_steps(), 25);
         assert_eq!(trace.data.len(), 25 * 7);
         assert_eq!(trace.step(24).len(), 7);
+    }
+
+    #[test]
+    fn swap_layer_engine_splices_between_samples() {
+        // Hot-swap both layers serial→parallel between samples: the swapped
+        // sim's recorder must match a fresh fixed-parallel sim bit for bit,
+        // lifetime telemetry must stay continuous, and the window must
+        // start fresh.
+        let net = three_layer_net(21, 50, 30, 10, 0.5, 0.8, 3, 2);
+        let compile = |mode| {
+            let mut sys = SwitchingSystem::new(mode, PeSpec::default());
+            sys.compile_network(&net).unwrap().0
+        };
+        let parallel_layers = compile(SwitchMode::ForceParallel);
+        let mut sim = NetworkSim::native(&net, compile(SwitchMode::ForceSerial)).unwrap();
+        let mut provider = provider_with(50, 0.25, 77);
+        sim.run(50, &mut provider);
+        sim.reset();
+        for (proj, layer) in parallel_layers.clone().into_iter().enumerate() {
+            sim.swap_layer_engine(proj, layer).unwrap();
+        }
+        let acts = sim.layer_activity();
+        assert_eq!(acts[0].paradigm, Paradigm::Parallel);
+        assert_eq!(acts[0].steps, 50, "lifetime steps carry across the swap");
+        assert!(acts[0].spikes_in > 0, "lifetime spikes carry across the swap");
+        assert_eq!((acts[0].window_spikes, acts[0].window_steps), (0, 0));
+        let mut provider = provider_with(50, 0.25, 78);
+        sim.run(50, &mut provider);
+        let swapped = std::mem::take(&mut sim.recorder);
+
+        let mut fixed = NetworkSim::native(&net, parallel_layers).unwrap();
+        let mut provider = provider_with(50, 0.25, 78);
+        fixed.run(50, &mut provider);
+        assert_eq!(swapped, fixed.recorder, "swapped ≡ fixed-paradigm run");
+        assert!(swapped.total_spikes() > 0);
+    }
+
+    #[test]
+    fn swap_layer_engine_refuses_mid_sample_and_foreign_shapes() {
+        let net = two_layer_net(2, 60, 40, 0.4, 5);
+        let compile = |n: &Network, mode| {
+            let mut sys = SwitchingSystem::new(mode, PeSpec::default());
+            sys.compile_network(n).unwrap().0
+        };
+        let parallel = compile(&net, SwitchMode::ForceParallel);
+        let mut sim = NetworkSim::native(&net, compile(&net, SwitchMode::ForceSerial)).unwrap();
+        let mut provider = provider_with(60, 0.2, 11);
+        sim.run(30, &mut provider);
+        let err = sim.swap_layer_engine(0, parallel[0].clone()).unwrap_err();
+        assert!(format!("{err:#}").contains("in-flight ring state"), "{err:#}");
+        sim.reset();
+        assert!(sim.swap_layer_engine(7, parallel[0].clone()).is_err(), "unknown projection");
+        let other = compile(&two_layer_net(3, 30, 20, 0.4, 2), SwitchMode::ForceParallel);
+        let err = sim.swap_layer_engine(0, other[0].clone()).unwrap_err();
+        assert!(format!("{err:#}").contains("does not match projection"), "{err:#}");
+        sim.swap_layer_engine(0, parallel[0].clone()).unwrap();
+        assert_eq!(sim.layer_activity()[0].paradigm, Paradigm::Parallel);
+    }
+
+    #[test]
+    fn equivalence_property_at_arbitrary_swap_points() {
+        // The tentpole equivalence: any per-sample paradigm sequence,
+        // executed by hot-swapping one long-lived sim between samples, must
+        // reproduce the recorders of per-sample fresh sims of the chosen
+        // fixed paradigms — at jobs 1 and under wave-parallel stepping.
+        Prop::new("hot-swapped ≡ fixed-engine-sequence", 6).check(
+            |g| {
+                (
+                    g.i64(1, 1 << 20) as u64,
+                    g.usize(20, 60),
+                    g.usize(10, 40),
+                    g.f64(0.2, 0.8),
+                    g.usize(1, 6) as u16,
+                    g.i64(1, 1 << 20) as u64,
+                    g.i64(0, 1 << 16) as u64,
+                )
+            },
+            |&(seed, n_in, n_hid, density, delay, stim, flips)| {
+                let net = two_layer_net(seed, n_in, n_hid, density, delay);
+                let compile = |mode| {
+                    let mut sys = SwitchingSystem::new(mode, PeSpec::default());
+                    sys.compile_network(&net).unwrap().0
+                };
+                let serial = compile(SwitchMode::ForceSerial);
+                let parallel = compile(SwitchMode::ForceParallel);
+                let layer_of = |p: Paradigm| match p {
+                    Paradigm::Serial => serial[0].clone(),
+                    Paradigm::Parallel => parallel[0].clone(),
+                };
+                // 6 samples, paradigm per sample from the `flips` bits.
+                let seq: Vec<Paradigm> = (0..6)
+                    .map(|s| {
+                        if (flips >> s) & 1 == 1 {
+                            Paradigm::Parallel
+                        } else {
+                            Paradigm::Serial
+                        }
+                    })
+                    .collect();
+                let mut sim = NetworkSim::native(&net, vec![layer_of(seq[0])]).unwrap();
+                let mut ok = true;
+                for (s, &p) in seq.iter().enumerate() {
+                    sim.reset();
+                    if sim.layer_activity()[0].paradigm != p {
+                        sim.swap_layer_engine(0, layer_of(p)).unwrap();
+                    }
+                    let mut provider = provider_with(n_in, 0.25, stim + s as u64);
+                    sim.run_jobs(20, &mut provider, 1 + (s % 3));
+                    let mut fixed = NetworkSim::native(&net, vec![layer_of(p)]).unwrap();
+                    let mut provider = provider_with(n_in, 0.25, stim + s as u64);
+                    fixed.run(20, &mut provider);
+                    ok &= sim.recorder == fixed.recorder;
+                }
+                ok
+            },
+        );
     }
 
     #[test]

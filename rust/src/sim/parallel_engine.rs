@@ -107,6 +107,15 @@ pub struct ParallelLayerEngine {
     pub spikes_in: u64,
     /// Timesteps executed (cumulative — survives reset, like `macs`).
     pub steps: u64,
+    /// Incoming spikes seen in the *current activity window* — dynamic
+    /// state, unlike the lifetime telemetry above: cleared by
+    /// [`ParallelLayerEngine::reset`] and
+    /// [`ParallelLayerEngine::clear_window`], so the adaptive re-switcher
+    /// reads recent activity, not history.
+    pub window_spikes: u64,
+    /// Timesteps executed in the current activity window (cleared with
+    /// `window_spikes`).
+    pub window_steps: u64,
     /// Phase-1 (MAC consume + reduce) wall-clock, accumulated only while
     /// profiling.
     pub readout_nanos: u64,
@@ -151,6 +160,8 @@ impl ParallelLayerEngine {
             macs: 0,
             spikes_in: 0,
             steps: 0,
+            window_spikes: 0,
+            window_steps: 0,
             readout_nanos: 0,
             dispatch_nanos: 0,
             profile: false,
@@ -178,15 +189,25 @@ impl ParallelLayerEngine {
         self.backend.kernel_variant()
     }
 
-    /// Clear all dynamic state (stacked rings, clock) so the engine can run
-    /// a fresh stimulus without recompiling. The `macs` telemetry keeps
-    /// accumulating across resets (batch accounting reads it at the end).
+    /// Clear all dynamic state (stacked rings, clock, the activity window)
+    /// so the engine can run a fresh stimulus without recompiling. The
+    /// `macs` telemetry keeps accumulating across resets (batch accounting
+    /// reads it at the end).
     pub fn reset(&mut self) {
         self.ring.fill(0.0);
         self.slot_writes.fill(0);
         self.occupied.fill(0);
         self.currents.fill(0.0);
+        self.clear_window();
         self.t = 0;
+    }
+
+    /// Start a fresh activity window: zero `window_spikes`/`window_steps`
+    /// without touching ring state or the lifetime telemetry. The adaptive
+    /// re-switcher calls this at every sample boundary it evaluates.
+    pub fn clear_window(&mut self) {
+        self.window_spikes = 0;
+        self.window_steps = 0;
     }
 
     /// Snapshot all dynamic state (see [`ParallelEngineCheckpoint`]).
@@ -333,8 +354,11 @@ impl ParallelLayerEngine {
             *dispatch_nanos += t0.elapsed().as_nanos() as u64;
         }
 
-        self.spikes_in += spikes_in.count() as u64;
+        let n_in = spikes_in.count() as u64;
+        self.spikes_in += n_in;
         self.steps += 1;
+        self.window_spikes += n_in;
+        self.window_steps += 1;
         self.t += 1;
         &self.currents
     }
@@ -492,6 +516,22 @@ mod tests {
         }
         assert_eq!(by_ids.macs, by_words.macs);
         assert_eq!(by_ids.spikes_in, by_words.spikes_in);
+    }
+
+    #[test]
+    fn window_counters_track_recent_activity_and_reset_clears_them() {
+        let mut e = engine_for(vec![syn(0, 1, 10, 1, false)], 2, 3);
+        e.step_currents(&[0, 1]);
+        e.step_currents(&[]);
+        assert_eq!((e.window_spikes, e.window_steps), (2, 2));
+        e.clear_window();
+        assert_eq!((e.window_spikes, e.window_steps), (0, 0));
+        e.step_currents(&[1]);
+        assert_eq!((e.window_spikes, e.window_steps), (1, 1));
+        assert_eq!((e.spikes_in, e.steps), (3, 3), "lifetime telemetry untouched");
+        e.reset();
+        assert_eq!((e.window_spikes, e.window_steps), (0, 0), "reset clears window");
+        assert_eq!((e.spikes_in, e.steps), (3, 3), "reset preserves lifetime");
     }
 
     #[test]

@@ -118,6 +118,14 @@ pub struct SerialLayerEngine {
     pub spikes_in: u64,
     /// Timesteps executed (cumulative — survives reset, like `events`).
     pub steps: u64,
+    /// Incoming spikes seen in the *current activity window* — dynamic
+    /// state, unlike the lifetime telemetry above: cleared by
+    /// [`SerialLayerEngine::reset`] and [`SerialLayerEngine::clear_window`],
+    /// so the adaptive re-switcher reads recent activity, not history.
+    pub window_spikes: u64,
+    /// Timesteps executed in the current activity window (cleared with
+    /// `window_spikes`).
+    pub window_steps: u64,
     /// `(PE, slot)` ring reads skipped because no write was pending — the
     /// sparsity-gating win counter.
     pub skipped_slots: u64,
@@ -186,6 +194,8 @@ impl SerialLayerEngine {
             events: 0,
             spikes_in: 0,
             steps: 0,
+            window_spikes: 0,
+            window_steps: 0,
             skipped_slots: 0,
             readout_nanos: 0,
             dispatch_nanos: 0,
@@ -204,9 +214,10 @@ impl SerialLayerEngine {
         self.profile = on;
     }
 
-    /// Clear all dynamic state (ring buffers, clock) so the engine can run
-    /// a fresh stimulus without recompiling. The `events` telemetry keeps
-    /// accumulating across resets (batch accounting reads it at the end).
+    /// Clear all dynamic state (ring buffers, clock, the activity window)
+    /// so the engine can run a fresh stimulus without recompiling. The
+    /// lifetime telemetry (`events`/`spikes_in`/`steps`) keeps accumulating
+    /// across resets (batch accounting reads it at the end).
     pub fn reset(&mut self) {
         for pe in &mut self.pes {
             pe.ring.fill(0);
@@ -214,7 +225,16 @@ impl SerialLayerEngine {
             pe.written.fill(0);
         }
         self.currents.fill(0.0);
+        self.clear_window();
         self.t = 0;
+    }
+
+    /// Start a fresh activity window: zero `window_spikes`/`window_steps`
+    /// without touching ring state or the lifetime telemetry. The adaptive
+    /// re-switcher calls this at every sample boundary it evaluates.
+    pub fn clear_window(&mut self) {
+        self.window_spikes = 0;
+        self.window_steps = 0;
     }
 
     /// Snapshot all dynamic state (see [`SerialEngineCheckpoint`]).
@@ -379,8 +399,11 @@ impl SerialLayerEngine {
             *dispatch_nanos += t0.elapsed().as_nanos() as u64;
         }
 
-        *spikes_seen += spikes_in.count() as u64;
+        let n_in = spikes_in.count() as u64;
+        *spikes_seen += n_in;
         self.steps += 1;
+        self.window_spikes += n_in;
+        self.window_steps += 1;
         self.t += 1;
         &self.currents
     }
@@ -561,6 +584,55 @@ mod tests {
             assert_eq!(e.step_currents(&firing), expected[t as usize], "t={t}");
         }
         assert!(e.skipped_slots > 0, "a 30%-rate stimulus must leave silent slots");
+    }
+
+    #[test]
+    fn window_counters_roll_over_independently_of_lifetime_telemetry() {
+        let mut e = engine_for(vec![syn(0, 1, 10, 2, false)], 2, 3);
+        e.step_currents(&[0, 1]);
+        e.step_currents(&[0]);
+        assert_eq!((e.window_spikes, e.window_steps), (3, 2));
+        assert_eq!((e.spikes_in, e.steps), (3, 2));
+        // Rolling the window starts a fresh count; lifetime keeps going.
+        e.clear_window();
+        assert_eq!((e.window_spikes, e.window_steps), (0, 0));
+        e.step_currents(&[1]);
+        assert_eq!((e.window_spikes, e.window_steps), (1, 1));
+        assert_eq!((e.spikes_in, e.steps), (4, 3), "lifetime must span windows");
+        // The clock is untouched by a window roll.
+        assert_eq!(e.timestep(), 3);
+    }
+
+    #[test]
+    fn reset_clears_the_window_but_preserves_lifetime_telemetry() {
+        let mut e = engine_for(vec![syn(0, 0, 4, 1, false)], 2, 1);
+        e.step_currents(&[0, 1]);
+        e.step_currents(&[0]);
+        let (life_spikes, life_steps, life_events) = (e.spikes_in, e.steps, e.events);
+        assert!(life_spikes > 0 && life_events > 0);
+        e.reset();
+        assert_eq!((e.window_spikes, e.window_steps), (0, 0), "reset must clear the window");
+        assert_eq!(
+            (e.spikes_in, e.steps, e.events),
+            (life_spikes, life_steps, life_events),
+            "reset must not touch lifetime telemetry"
+        );
+    }
+
+    #[test]
+    fn zero_spike_windows_count_steps_and_rate_to_zero() {
+        use crate::costmodel::activity::observed_rate;
+        let mut e = engine_for(vec![syn(0, 0, 4, 1, false)], 2, 1);
+        for _ in 0..5 {
+            e.step_currents(&[]);
+        }
+        assert_eq!((e.window_spikes, e.window_steps), (0, 5));
+        let rate = observed_rate(e.window_spikes, e.window_steps, 2);
+        assert_eq!(rate, 0.0, "silent window must rate to exactly 0.0");
+        // An empty window (no steps at all) must not divide by zero either.
+        e.clear_window();
+        assert_eq!(observed_rate(e.window_spikes, e.window_steps, 2), 0.0);
+        assert!(observed_rate(0, 5, 0).is_finite(), "zero sources must not NaN");
     }
 
     #[test]

@@ -182,4 +182,58 @@ mod tests {
         assert!(!any_set_in_range(s.words(), 65, 256));
         assert!(!any_set_in_range(s.words(), 64, 64));
     }
+
+    #[test]
+    fn set_and_iterate_exactly_at_word_boundaries() {
+        // Capacities 63/64/65 straddle the one-word/two-word edge; the last
+        // legal id and the first illegal one differ by a single bit.
+        for cap in [63usize, 64, 65] {
+            let mut s = SpikeWords::new(cap);
+            assert_eq!(s.words().len(), cap.div_ceil(64), "cap={cap}");
+            let last = (cap - 1) as u32;
+            s.fill_from_ids(&[0, last]);
+            assert_eq!(collected(&s), vec![0, last as usize], "cap={cap}");
+            s.set(cap as u32); // first out-of-range id: silently dropped
+            assert_eq!(s.count(), 2, "cap={cap}: id {cap} must drop");
+        }
+        // Ids 63/64/65 in a roomy set land on both sides of the word seam.
+        let mut s = SpikeWords::new(128);
+        s.fill_from_ids(&[63, 64, 65]);
+        assert_eq!(collected(&s), vec![63, 64, 65]);
+        assert_eq!(s.words()[0], 1u64 << 63, "bit 63 is the top of word 0");
+        assert_eq!(s.words()[1], 0b11, "bits 64/65 are the bottom of word 1");
+    }
+
+    #[test]
+    fn range_test_spans_partial_first_and_last_words() {
+        // A three-word set with bits only in the middle word: ranges whose
+        // partial first/last words clip the middle from either side must
+        // agree with the bit positions exactly.
+        let mut s = SpikeWords::new(192);
+        s.fill_from_ids(&[70, 120]);
+        assert!(any_set_in_range(s.words(), 65, 121), "partial words contain both");
+        assert!(any_set_in_range(s.words(), 70, 71), "tightest window on bit 70");
+        assert!(any_set_in_range(s.words(), 100, 190), "partial first word after 70");
+        assert!(!any_set_in_range(s.words(), 0, 70), "stops one short of bit 70");
+        assert!(!any_set_in_range(s.words(), 71, 120), "interior gap between bits");
+        assert!(!any_set_in_range(s.words(), 121, 192), "starts one past bit 120");
+        // Range spanning all three words with only edge words populated.
+        s.fill_from_ids(&[10, 180]);
+        assert!(any_set_in_range(s.words(), 5, 64), "partial first word only");
+        assert!(any_set_in_range(s.words(), 128, 181), "partial last word only");
+        assert!(!any_set_in_range(s.words(), 11, 180), "middle word is empty");
+    }
+
+    #[test]
+    fn out_of_range_ids_drop_without_corrupting_neighbors() {
+        // Dropping must be exact: id == n_bits (first illegal, same word as
+        // legal bits when n_bits % 64 != 0) and huge ids alike leave the
+        // word content of legal ids untouched.
+        let mut s = SpikeWords::new(65);
+        s.fill_from_ids(&[64, 65, 66, 127, 128, u32::MAX]);
+        assert_eq!(collected(&s), vec![64], "only the last legal id survives");
+        assert_eq!(s.words()[1], 1, "word 1 holds exactly bit 64");
+        assert!(!any_set_in_range(s.words(), 0, 64));
+        assert!(any_set_in_range(s.words(), 64, 65));
+    }
 }

@@ -102,6 +102,14 @@ impl Headroom {
 
 /// Plan capacity-feasible paradigm decisions for every layer, in
 /// projection order. Pure planning: estimates only, nothing materialized.
+///
+/// `prefer` is a per-layer runtime preference overlay (index = projection;
+/// missing entries / `None` = no preference): the adaptive re-switcher's
+/// current engine assignment, which a fault-driven re-admission must honor
+/// over the static policy so a swap and a migration never fight over the
+/// placement. A preference is still subject to the capacity fallback —
+/// when it does not fit the surviving headroom, the other paradigm is
+/// admitted and the layer is recorded as overridden.
 pub(super) fn plan_decisions(
     policy: &SwitchPolicy,
     pipeline: &CompilePipeline,
@@ -109,6 +117,7 @@ pub(super) fn plan_decisions(
     jobs: &[CompileJob],
     spec: &MachineSpec,
     faults: &FaultMap,
+    prefer: &[Option<Paradigm>],
 ) -> Result<Vec<LayerDecision>> {
     let mut headroom = Headroom::of(spec, faults);
     // Source populations whose hosting PEs are already charged.
@@ -118,7 +127,10 @@ pub(super) fn plan_decisions(
     for (i, job) in jobs.iter().enumerate() {
         let proj = &net.projections[i];
         let src_is_source = net.population(proj.source).is_source();
-        let prejudged = policy.prejudge(&job.character)?;
+        let prejudged = match prefer.get(i).copied().flatten() {
+            Some(p) => Some(p),
+            None => policy.prejudge(&job.character)?,
+        };
         let candidates = match prejudged {
             Some(p) => [p, p.other()],
             None => {
@@ -228,9 +240,31 @@ impl SwitchingSystem {
         strategy: PlacementStrategy,
         faults: &FaultMap,
     ) -> Result<NetworkAdmission> {
+        self.admit_network_faulted_with_preferences(net, spec, strategy, faults, &[])
+    }
+
+    /// [`SwitchingSystem::admit_network_faulted`] with a per-layer paradigm
+    /// preference overlay (index = projection; `None` / missing = defer to
+    /// the policy). This is the re-admission entry for the adaptive
+    /// re-switcher: after a live swap, the recovery path passes the current
+    /// engine assignment here so a fault migration re-plans around *what is
+    /// actually running*, not the static prejudgment — a swap and a
+    /// migration in the same run never fight over the placement. Preferences
+    /// stay subject to the capacity fallback: one that no longer fits the
+    /// surviving headroom flips to the other paradigm and is counted in
+    /// [`CompileStats::capacity_overrides`].
+    pub fn admit_network_faulted_with_preferences(
+        &mut self,
+        net: &Network,
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        faults: &FaultMap,
+        prefer: &[Option<Paradigm>],
+    ) -> Result<NetworkAdmission> {
         let jobs = network_jobs(net);
-        let decisions = plan_decisions(&self.policy, &self.pipeline, net, &jobs, &spec, faults)
-            .context("capacity-feasibility planning")?;
+        let decisions =
+            plan_decisions(&self.policy, &self.pipeline, net, &jobs, &spec, faults, prefer)
+                .context("capacity-feasibility planning")?;
         let overrides = decisions.iter().filter(|d| d.overridden).count();
         if overrides > 0 {
             self.pipeline.note_capacity_overrides(overrides);
@@ -419,6 +453,53 @@ mod tests {
             .admit_network(&net, MachineSpec::default(), PlacementStrategy::Linear)
             .unwrap_err();
         assert!(format!("{err:#}").contains("trained classifier"), "{err:#}");
+    }
+
+    #[test]
+    fn preference_overlay_steers_readmission_but_yields_to_capacity() {
+        let net = dense_net();
+        let (serial_total, parallel_total) = paradigm_totals(&net);
+        // Ideal mode would pick parallel (cheaper on this dense delay-1
+        // net); a live-swap preference for serial must win when it fits.
+        let spec = machine(1, 1, serial_total);
+        let prefer = vec![Some(Paradigm::Serial)];
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let adm = sys
+            .admit_network_faulted_with_preferences(
+                &net,
+                spec,
+                PlacementStrategy::Linear,
+                &FaultMap::healthy(),
+                &prefer,
+            )
+            .unwrap();
+        assert_eq!(adm.decisions[0].prejudged, Some(Paradigm::Serial));
+        assert_eq!(adm.decisions[0].chosen, Paradigm::Serial);
+        assert!(!adm.decisions[0].overridden);
+        assert_eq!(adm.layers[0].paradigm(), Paradigm::Serial);
+        // On a machine too small for the preferred paradigm the capacity
+        // fallback still applies: the preference flips and is counted.
+        let tight = machine(1, 1, parallel_total);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let adm = sys
+            .admit_network_faulted_with_preferences(
+                &net,
+                tight,
+                PlacementStrategy::Linear,
+                &FaultMap::healthy(),
+                &prefer,
+            )
+            .unwrap();
+        assert_eq!(adm.decisions[0].chosen, Paradigm::Parallel);
+        assert!(adm.decisions[0].overridden);
+        assert_eq!(adm.stats.capacity_overrides, 1);
+        // An empty overlay is exactly the un-preferenced path.
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let plain = sys
+            .admit_network(&net, machine(1, 1, serial_total), PlacementStrategy::Linear)
+            .unwrap();
+        assert_eq!(plain.decisions[0].prejudged, None);
+        assert_eq!(plain.decisions[0].chosen, Paradigm::Parallel);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! compilers behind [`crate::paradigm::ParadigmCompiler`]. `SwitchingSystem`
 //! is the thin stateful front the CLI, benches and examples drive.
 
+pub mod adaptive;
 pub mod admission;
 pub mod pipeline;
 pub mod placement;
@@ -26,6 +27,7 @@ pub mod policy;
 pub mod recovery;
 
 pub use crate::paradigm::CompiledLayer;
+pub use adaptive::{AdaptiveConfig, AdaptiveRunReport, SwapEvent, SwapGovernor};
 pub use admission::{LayerDecision, NetworkAdmission};
 pub use pipeline::{CompileJob, CompilePipeline, PipelineRun};
 pub use placement::Placement;

@@ -583,6 +583,20 @@ impl CompilePipeline {
         }
     }
 
+    /// Fetch one paradigm's compiled form of one job through the cache
+    /// tiers (memory → disk artifact → compile) — the runtime re-switcher's
+    /// zero-recompile path: on a store warmed by an Ideal-mode compile both
+    /// paradigms are on disk, so this is a pure cache hit
+    /// (`total_compiles()` stays put; [`CompileStats::disk_hits`] counts the
+    /// disk tier).
+    pub fn compile_paradigm(
+        &self,
+        paradigm: Paradigm,
+        job: &CompileJob,
+    ) -> Result<Arc<CompiledLayer>> {
+        self.cached_compile(paradigm, job).map(|(layer, _)| layer)
+    }
+
     /// Shape-only estimates under **both** paradigms — run-both-compilers
     /// in estimate mode, the dataset labeler's whole job. Returns
     /// (serial, parallel).

@@ -21,9 +21,23 @@
 //! skipped, and the report carries a typed
 //! [`FaultError::NoFeasiblePlacement`] — never a panic, never a wrong
 //! answer presented as a right one.
+//!
+//! The loop also composes with live re-switching ([`super::adaptive`]):
+//! with [`RecoveryConfig::swap_window`]/[`RecoveryConfig::swap_patience`]
+//! non-zero, sample boundaries additionally evaluate the observed-rate
+//! decision and may hot-swap a layer's engine. A swap is only executed
+//! after a preference-aware re-admission
+//! ([`SwitchingSystem::admit_network_faulted_with_preferences`]) ratifies
+//! it — admission is the single arbiter of the placement, so a swap and a
+//! fault migration in the same run can never disagree about where layers
+//! live. Fault re-admissions pass the same preference overlay, so a
+//! migration preserves earlier swaps instead of snapping back to the
+//! static prejudgment.
 
+use super::adaptive::{SwapEvent, SwapGovernor};
 use super::placement::Placement;
-use super::{CompileStats, SwitchingSystem};
+use super::policy::SwitchPolicy;
+use super::{network_jobs, CompileStats, SwitchingSystem};
 use crate::graph::machine_graph::VertexRole;
 use crate::hardware::{
     FaultError, FaultMap, FaultSchedule, MachineSpec, PeHandle, PlacementStrategy,
@@ -34,6 +48,7 @@ use crate::sim::{NetworkSim, Recorder};
 use anyhow::{Context, Result};
 use std::collections::BTreeSet;
 use std::fmt;
+use std::time::Instant;
 
 /// Per-layer outcome of a fault-tolerant run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,6 +125,12 @@ pub struct RecoveryConfig {
     pub fault_rate: f64,
     /// Faults present before the run starts (`--fault-map`).
     pub initial_faults: FaultMap,
+    /// Sliding-window width (samples) for the adaptive re-switcher's rate
+    /// estimate; `0` (the default) disables live re-switching.
+    pub swap_window: usize,
+    /// Consecutive boundaries the other paradigm must win before a swap;
+    /// `0` (the default) disables live re-switching.
+    pub swap_patience: usize,
 }
 
 impl Default for RecoveryConfig {
@@ -120,6 +141,8 @@ impl Default for RecoveryConfig {
             fault_seed: 7,
             fault_rate: 0.0,
             initial_faults: FaultMap::healthy(),
+            swap_window: 0,
+            swap_patience: 0,
         }
     }
 }
@@ -140,6 +163,11 @@ pub struct FaultRunReport {
     pub degraded: Option<FaultError>,
     /// Fault map at the end of the run (initial + injected).
     pub final_faults: FaultMap,
+    /// Live paradigm swaps executed at sample boundaries (empty unless
+    /// [`RecoveryConfig::swap_window`] and
+    /// [`RecoveryConfig::swap_patience`] are both non-zero). Every swap
+    /// listed here was ratified by a preference-aware re-admission.
+    pub swaps: Vec<SwapEvent>,
 }
 
 impl FaultRunReport {
@@ -219,6 +247,24 @@ impl SwitchingSystem {
         let mut recorders = Vec::with_capacity(cfg.samples as usize);
         let mut degraded = None;
 
+        // Live re-switching state. `prefer` is the overlay every re-admission
+        // honors: `Some` exactly for layers a swap has moved off their
+        // statically decided paradigm, so fault migrations keep them there.
+        let adaptive = cfg.swap_window > 0 && cfg.swap_patience > 0;
+        let jobs = network_jobs(net);
+        let ests = if adaptive {
+            jobs.iter()
+                .map(|j| self.pipeline.estimate_pair(j))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            Vec::new()
+        };
+        let mut governors: Vec<SwapGovernor> = (0..jobs.len())
+            .map(|_| SwapGovernor::new(cfg.swap_window.max(1), cfg.swap_patience.max(1)))
+            .collect();
+        let mut prefer: Vec<Option<Paradigm>> = vec![None; jobs.len()];
+        let mut swaps: Vec<SwapEvent> = Vec::new();
+
         for s in 0..cfg.samples {
             sim.reset();
             // Samples are independent, so the boundary checkpoint is
@@ -237,7 +283,13 @@ impl SwitchingSystem {
                 faults.kill_pe(ev.pe);
                 let affected = affected_layers(net, &adm.placement, ev.pe);
                 let prev: Vec<Paradigm> = adm.decisions.iter().map(|d| d.chosen).collect();
-                match self.admit_network_faulted(net, spec, strategy, &faults) {
+                match self.admit_network_faulted_with_preferences(
+                    net,
+                    spec,
+                    strategy,
+                    &faults,
+                    &prefer,
+                ) {
                     Ok(next) => {
                         let mut rebuilt: BTreeSet<usize> = affected.iter().copied().collect();
                         for (i, d) in next.decisions.iter().enumerate() {
@@ -258,6 +310,14 @@ impl SwitchingSystem {
                             status[l] = LayerStatus::Migrated { times, flipped };
                         }
                         adm = next;
+                        // Capacity may have overridden a swap preference on
+                        // the shrunken machine — sync the overlay to what is
+                        // actually running so later re-admissions agree.
+                        for (i, d) in adm.decisions.iter().enumerate() {
+                            if prefer[i].is_some() {
+                                prefer[i] = Some(d.chosen);
+                            }
+                        }
                         let mut fresh = NetworkSim::native(net, adm.layers.clone())?;
                         fresh.restore(&ckpt).context("restoring the boundary checkpoint")?;
                         sim = fresh;
@@ -279,6 +339,71 @@ impl SwitchingSystem {
                 }
             }
             recorders.push(sim.recorder.clone());
+
+            // Adaptive boundary: evaluate the observed-rate decision and
+            // hot-swap engines the re-admission ratifies. Runs after the
+            // fault draw, so the counters read here are the accepted
+            // (possibly replayed) sample's.
+            if adaptive && s + 1 < cfg.samples {
+                let acts = sim.layer_activity();
+                let rates: Vec<f64> = acts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| governors[i].observe(a.window_spikes, a.window_steps, a.n_source))
+                    .collect();
+                // Rewind so engines are pristine for any splice below (the
+                // next iteration starts from reset() anyway).
+                sim.reset();
+                for i in 0..jobs.len() {
+                    let (serial, parallel) = &ests[i];
+                    let want = SwitchPolicy::decide_with_rate(
+                        serial,
+                        parallel,
+                        &jobs[i].character,
+                        rates[i],
+                        None,
+                    );
+                    let from = adm.decisions[i].chosen;
+                    if !governors[i].vote(want != from) {
+                        continue;
+                    }
+                    prefer[i] = Some(want);
+                    let sw0 = Instant::now();
+                    let ratified = match self.admit_network_faulted_with_preferences(
+                        net,
+                        spec,
+                        strategy,
+                        &faults,
+                        &prefer,
+                    ) {
+                        Ok(next) => {
+                            let agreed = next.decisions.iter().enumerate().all(|(j, d)| {
+                                d.chosen == if j == i { want } else { adm.decisions[j].chosen }
+                            });
+                            agreed.then_some(next)
+                        }
+                        Err(_) => None,
+                    };
+                    match ratified {
+                        Some(next) => {
+                            sim.swap_layer_engine(i, next.layers[i].clone())?;
+                            adm = next;
+                            swaps.push(SwapEvent {
+                                sample: s,
+                                layer: i,
+                                from,
+                                to: want,
+                                window_rate: rates[i],
+                                swap_nanos: sw0.elapsed().as_nanos() as u64,
+                            });
+                        }
+                        // Admission vetoed the swap (capacity, or no feasible
+                        // placement with it): keep running as-is and keep the
+                        // overlay truthful.
+                        None => prefer[i] = Some(from),
+                    }
+                }
+            }
         }
 
         Ok(FaultRunReport {
@@ -288,6 +413,7 @@ impl SwitchingSystem {
             compile: self.stats,
             degraded,
             final_faults: faults,
+            swaps,
         })
     }
 }
@@ -448,6 +574,122 @@ mod tests {
         assert_eq!(a.final_faults, b.final_faults);
         for (ra, rb) in a.recorders.iter().zip(&b.recorders) {
             assert_eq!(ra.spikes, rb.spikes);
+        }
+    }
+
+    /// Mirror of the probe in `adaptive`'s tests (test modules are
+    /// per-file): a single-layer shape whose paradigms tie on total PEs, so
+    /// the rate tie-break — and therefore live swapping — is reachable.
+    fn storage_tied_shape(sys: &SwitchingSystem) -> Option<(usize, usize, f64, u16)> {
+        let mut rng = Rng::new(42);
+        for (n_src, n_tgt) in [(255usize, 255usize), (200, 200), (255, 128), (128, 255)] {
+            for density in [0.1, 0.2, 0.3, 0.5] {
+                for delay in [1u16, 2] {
+                    let mut b = NetworkBuilder::new(rng.below(1 << 30) as u64);
+                    let inp = b.spike_source("in", n_src);
+                    let hid = b.lif_population("hid", n_tgt, LifParams::default());
+                    b.project(
+                        inp,
+                        hid,
+                        Connector::FixedProbability(density),
+                        SynapseDraw { delay_range: delay, w_max: 100, ..Default::default() },
+                        0.02,
+                    );
+                    let net = b.build();
+                    let jobs = network_jobs(&net);
+                    if let Ok((s, p)) = sys.pipeline.estimate_pair(&jobs[0]) {
+                        if s.total_pes() == p.total_pes() {
+                            return Some((n_src, n_tgt, density, delay));
+                        }
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn tied_single_layer(n_src: usize, n_tgt: usize, density: f64, delay: u16) -> Network {
+        let mut b = NetworkBuilder::new(7);
+        let inp = b.spike_source("in", n_src);
+        let hid = b.lif_population("hid", n_tgt, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(density),
+            SynapseDraw { delay_range: delay, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.build()
+    }
+
+    /// Quiet for samples 0..3, busy after — the drift that makes a frozen
+    /// paradigm wrong half the time on a storage-tied layer.
+    fn drifting(n_in: usize, s: u64) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+        let rate = if s < 3 { 0.002 } else { 0.6 };
+        let mut rng = Rng::new(0xD1F7 + s);
+        move |_p, _t, out: &mut Vec<u32>| {
+            out.extend((0..n_in as u32).filter(|_| rng.chance(rate)));
+        }
+    }
+
+    #[test]
+    fn live_swaps_compose_with_fault_migrations() {
+        let probe = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let Some((n_src, n_tgt, density, delay)) = storage_tied_shape(&probe) else {
+            eprintln!("no storage-tied shape in probe grid — skipping composition test");
+            return;
+        };
+        let net = tied_single_layer(n_src, n_tgt, density, delay);
+        let run = |fault_rate: f64| {
+            let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+            let cfg = RecoveryConfig {
+                samples: 6,
+                steps_per_sample: 40,
+                fault_rate,
+                fault_seed: 99,
+                swap_window: 1,
+                swap_patience: 1,
+                ..Default::default()
+            };
+            sys.run_fault_tolerant(
+                &net,
+                MachineSpec::default(),
+                PlacementStrategy::ChipPacked,
+                &cfg,
+                |s| drifting(n_src, s),
+            )
+            .unwrap()
+        };
+        let faulted = run(1.0);
+        let calm = run(0.0);
+        assert!(!faulted.is_degraded(), "{:?}", faulted.degraded);
+        assert_eq!(faulted.stats.faults_injected, 6);
+        assert!(!faulted.swaps.is_empty(), "rate drift on a tied layer must swap");
+        for w in &faulted.swaps {
+            assert_ne!(w.from, w.to);
+            assert!(w.swap_nanos > 0);
+        }
+        // A migration must preserve an earlier swap: if a fault re-admission
+        // snapped the layer back to its static decision, the governor would
+        // fire the identical swap again — so consecutive swaps of one layer
+        // must chain (each starts from where the previous one landed).
+        for pair in faulted.swaps.windows(2) {
+            if pair[0].layer == pair[1].layer {
+                assert_eq!(pair[0].to, pair[1].from, "swap log must chain");
+            }
+        }
+        // Faults are invisible to both the swap schedule and the results:
+        // the per-boundary replays are bit-identical, so the fault-free run
+        // of the same config swaps at the same boundaries and records the
+        // same spikes.
+        let key = |v: &[SwapEvent]| -> Vec<(u64, usize, Paradigm, Paradigm)> {
+            v.iter().map(|w| (w.sample, w.layer, w.from, w.to)).collect()
+        };
+        assert_eq!(key(&faulted.swaps), key(&calm.swaps));
+        assert_eq!(calm.stats.faults_injected, 0);
+        assert_eq!(faulted.recorders.len(), calm.recorders.len());
+        for (a, b) in faulted.recorders.iter().zip(&calm.recorders) {
+            assert_eq!(a.spikes, b.spikes);
         }
     }
 
