@@ -161,6 +161,7 @@ fn main() {
         chips_x: 2,
         chips_y: 2,
         chip: ChipSpec { pes_per_chip: (ideal_pes + SLACK).div_ceil(4), ..Default::default() },
+        ..Default::default()
     };
     let mut rep = Report::new(
         "Survivable-fault ceiling — rate 1.0 chaos until no feasible re-placement",

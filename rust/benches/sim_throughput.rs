@@ -36,6 +36,7 @@ use s2switch::bench_harness::{Bench, Report};
 use s2switch::costmodel::activity::{runtime_preferred, runtime_preferred_calibrated};
 use s2switch::costmodel::DEFAULT_HYSTERESIS_MARGIN;
 use s2switch::dataset::realize_layer;
+use s2switch::graph::BoardAssignment;
 use s2switch::hardware::PeSpec;
 use s2switch::model::connector::{Connector, SynapseDraw};
 use s2switch::model::lif::{kernel_variant, lif_step_chunked, lif_step_chunked_scalar};
@@ -47,6 +48,7 @@ use s2switch::rng::Rng;
 use s2switch::sim::backend::matvec_into_scalar;
 use s2switch::sim::{
     BatchRunner, MacBackend, NativeMac, NetworkSim, ParallelLayerEngine, SerialLayerEngine,
+    ShardedSim,
 };
 use s2switch::switching::{
     network_jobs, AdaptiveConfig, CompilePipeline, SwitchMode, SwitchingSystem,
@@ -346,6 +348,70 @@ fn main() {
             identical.to_string(),
         ]);
         intra_rows.push((jobs, best_ns, STEPS as f64 / wall_s, speedup, identical));
+    }
+    rep.finish();
+
+    // ---- Part 5b: sharded board-array throughput (console only) ----------
+    // Four independent 256→256 chains split over 1/2/4 `ShardedSim` boards
+    // with the wave-boundary spike-word exchange; recorders must be
+    // board-count-invariant. The machine-readable scaling baseline lives in
+    // BENCH_place.json (table1_costmodel) — this section is telemetry.
+    let shard_chains = 4usize;
+    let shard_width = 256usize;
+    let shard_net = {
+        let mut b = NetworkBuilder::new(17);
+        for i in 0..shard_chains {
+            let inp = b.spike_source(&format!("in{i}"), shard_width);
+            let out = b.lif_population(&format!("out{i}"), shard_width, LifParams::default());
+            b.project(
+                inp,
+                out,
+                Connector::FixedProbability(0.3),
+                SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+                0.02,
+            );
+        }
+        b.build()
+    };
+    let mut shard_sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (shard_layers, _) = shard_sys.compile_network(&shard_net).unwrap();
+    let mut rep = Report::new(
+        "Sharded board-array throughput — 4 chains (256→256), 200 steps",
+        &["boards", "wall-clock ms", "steps/s", "speedup", "identical"],
+    );
+    let mut shard_base: Option<(f64, s2switch::sim::Recorder)> = None;
+    for boards in [1usize, 2, 4] {
+        let board_of_pop: Vec<usize> =
+            (0..shard_net.populations.len()).map(|p| (p / 2) % boards).collect();
+        let board_of_layer =
+            shard_net.projections.iter().map(|proj| board_of_pop[proj.target.0]).collect();
+        let assignment = BoardAssignment { boards, board_of_pop, board_of_layer };
+        let mut sim = ShardedSim::new(&shard_net, &shard_layers, &assignment).unwrap();
+        let mut best_ns = u64::MAX;
+        for _ in 0..(WARMUP + MEASURE) {
+            sim.reset();
+            let mut provider = bernoulli_provider(shard_width as u32, 0.15, 37);
+            let t0 = Instant::now();
+            sim.run_jobs(STEPS as u64, &mut provider, boards);
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as u64);
+        }
+        let wall_s = best_ns as f64 / 1e9;
+        let merged = sim.merged_recorder();
+        let (base_wall, identical) = match &shard_base {
+            None => {
+                shard_base = Some((wall_s, merged));
+                (wall_s, true)
+            }
+            Some((b, rec)) => (*b, *rec == merged),
+        };
+        assert!(identical, "sharded output must be board-count-invariant (boards={boards})");
+        rep.row(vec![
+            boards.to_string(),
+            format!("{:.1}", wall_s * 1e3),
+            format!("{:.0}", STEPS as f64 / wall_s),
+            format!("{:.2}×", base_wall / wall_s),
+            identical.to_string(),
+        ]);
     }
     rep.finish();
 

@@ -19,14 +19,17 @@ use s2switch::bench_harness::{Bench, Report};
 use s2switch::costmodel::parallel::{dominant_cost, subordinate_fixed_cost};
 use s2switch::costmodel::serial::{serial_layout, serial_pe_cost};
 use s2switch::dataset::{generate_grid, realize_layer, SweepConfig};
-use s2switch::hardware::{MachineSpec, PeSpec, PlacementStrategy};
+use s2switch::graph::{partition, BoardAssignment, PartitionStrategy};
+use s2switch::hardware::{ChipSpec, MachineSpec, PeSpec, PlacementStrategy};
 use s2switch::model::connector::{Connector, SynapseDraw};
-use s2switch::model::{LayerCharacter, LifParams, Network, NetworkBuilder};
+use s2switch::model::{LayerCharacter, LifParams, Network, NetworkBuilder, PopulationId};
 use s2switch::paradigm::parallel::wdm::{build_wdm, WdmConfig};
 use s2switch::paradigm::{LayerJob, ParadigmCompiler, ParallelCompiler, SerialCompiler};
 use s2switch::rng::Rng;
+use s2switch::sim::{NetworkSim, ShardedSim};
 use s2switch::switching::{SwitchMode, SwitchingSystem};
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 fn main() {
     let pe = PeSpec::default();
@@ -251,7 +254,7 @@ fn placed_reality() {
     let mut sys = SwitchingSystem::new(SwitchMode::Ideal, pe);
     let mut rep = Report::new(
         "Placement strategies — ideal mode, NoC cost on the light board",
-        &["strategy", "chips", "static tree hops", "traffic hops"],
+        &["strategy", "chips", "static tree hops", "on-board", "board-link", "traffic hops"],
     );
     let mut strategy_rows = Vec::new();
     for strategy in PlacementStrategy::ALL {
@@ -259,16 +262,19 @@ fn placed_reality() {
             .admit_network(&net, spec, strategy)
             .expect("light board admits the bench net");
         let noc = adm.placement.estimate_traffic(&spike_counts);
+        let split = adm.placement.static_hops_split();
         rep.row(vec![
             strategy.to_string(),
             adm.placement.chips_used().to_string(),
-            adm.placement.static_tree_hops().to_string(),
+            split.total().to_string(),
+            split.on_board.to_string(),
+            split.board_links.to_string(),
             noc.hops.to_string(),
         ]);
         strategy_rows.push((
             strategy.name(),
             adm.placement.chips_used(),
-            adm.placement.static_tree_hops(),
+            split,
             noc.hops,
         ));
     }
@@ -288,22 +294,299 @@ fn placed_reality() {
         .collect();
     let strategies_json: Vec<String> = strategy_rows
         .iter()
-        .map(|(name, chips, static_hops, traffic_hops)| {
+        .map(|(name, chips, split, traffic_hops)| {
             format!(
-                "    {{ \"strategy\": \"{name}\", \"chips_used\": {chips}, \"static_tree_hops\": {static_hops}, \"traffic_hops\": {traffic_hops} }}"
+                "    {{ \"strategy\": \"{name}\", \"chips_used\": {chips}, \"static_tree_hops\": {}, \"on_board_hops\": {}, \"board_link_hops\": {}, \"traffic_hops\": {traffic_hops} }}",
+                split.total(),
+                split.on_board,
+                split.board_links,
             )
         })
         .collect();
+    let sharding_json = sharding_baseline();
     let json = format!(
-        "{{\n  \"bench\": \"table1_costmodel\",\n  \"network\": \"500-200-40 (dense delay-1 input, sparse delay-16 output)\",\n  \"machine\": {{ \"chips_x\": {}, \"chips_y\": {}, \"pes_per_chip\": {} }},\n  \"spikes_per_neuron\": 4,\n  \"modes\": [\n{}\n  ],\n  \"strategies\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"table1_costmodel\",\n  \"schema_version\": 2,\n  \"network\": \"500-200-40 (dense delay-1 input, sparse delay-16 output)\",\n  \"machine\": {{ \"boards\": {}, \"chips_x\": {}, \"chips_y\": {}, \"pes_per_chip\": {} }},\n  \"spikes_per_neuron\": 4,\n  \"modes\": [\n{}\n  ],\n  \"strategies\": [\n{}\n  ],\n{}\n}}\n",
+        spec.boards,
         spec.chips_x,
         spec.chips_y,
         spec.chip.pes_per_chip,
         modes_json.join(",\n"),
         strategies_json.join(",\n"),
+        sharding_json,
     );
     match std::fs::write(&out, &json) {
         Ok(()) => println!("placed baseline written to {out}"),
         Err(e) => eprintln!("could not write {out}: {e}"),
     }
+}
+
+/// A `boards`-board array of single-chip boards with `pes_per_chip` PEs —
+/// the smallest geometry that still exercises board-level planning.
+fn tiny_board_array(boards: usize, pes_per_chip: usize) -> MachineSpec {
+    MachineSpec {
+        boards,
+        chips_x: 1,
+        chips_y: 1,
+        chip: ChipSpec { pes_per_chip, ..Default::default() },
+    }
+}
+
+/// `chains` parallel in→hid→out chains with **layer-major interleaved**
+/// population ids (all sources, then all hiddens, then all outputs): the
+/// id order that forces the linear next-fit baseline to cut chains across
+/// boards while traffic clustering keeps each chain whole.
+fn chain_grid_net(chains: usize, width: usize) -> Network {
+    let mut b = NetworkBuilder::new(47);
+    let ins: Vec<_> = (0..chains).map(|i| b.spike_source(&format!("in{i}"), width)).collect();
+    let hids: Vec<_> = (0..chains)
+        .map(|i| b.lif_population(&format!("hid{i}"), width, LifParams::default()))
+        .collect();
+    let outs: Vec<_> = (0..chains)
+        .map(|i| b.lif_population(&format!("out{i}"), width, LifParams::default()))
+        .collect();
+    for i in 0..chains {
+        b.project(
+            ins[i],
+            hids[i],
+            Connector::FixedProbability(0.3),
+            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hids[i],
+            outs[i],
+            Connector::FixedProbability(0.3),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.03,
+        );
+    }
+    b.build()
+}
+
+/// `chains` independent in→out pairs (ids per-chain: in0, out0, in1, …),
+/// each `width` neurons wide — the balanced workload for the capacity and
+/// scaling sections.
+fn pair_chain_net(chains: usize, width: usize, density: f64, delay: u16) -> Network {
+    let mut b = NetworkBuilder::new(53);
+    for i in 0..chains {
+        let inp = b.spike_source(&format!("in{i}"), width);
+        let out = b.lif_population(&format!("out{i}"), width, LifParams::default());
+        b.project(
+            inp,
+            out,
+            Connector::FixedProbability(density),
+            SynapseDraw { delay_range: delay, w_max: 100, ..Default::default() },
+            0.02,
+        );
+    }
+    b.build()
+}
+
+/// Bernoulli provider over every source population (fresh RNG per call
+/// site so sharded and reference runs see identical stimulus sequences).
+fn chain_provider(width: u32, rate: f64, seed: u64) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+        out.extend((0..width).filter(|_| rng.chance(rate)));
+    }
+}
+
+/// §Sharding baseline: traffic-vs-linear partition cut on interleaved
+/// chains, a ≥10× over-single-board-capacity admission simulated end to
+/// end, and per-board throughput scaling of [`ShardedSim`] at 1/2/4
+/// boards. Returns the `"sharding"` JSON fragment for `BENCH_place.json`
+/// (schema v2).
+fn sharding_baseline() -> String {
+    // ---- Cut: traffic clustering vs the linear next-fit baseline --------
+    let chains = 4usize;
+    let cut_net = chain_grid_net(chains, 60);
+    // Probe PE demand on one generous board, then size boards to one chain
+    // plus slack so the partition strategy is what decides the cut.
+    let mut probe = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let probed = probe
+        .admit_network_sharded(
+            &cut_net,
+            tiny_board_array(1, 4096),
+            PlacementStrategy::Linear,
+            PartitionStrategy::Traffic,
+        )
+        .expect("generous board admits the chain net");
+    let demand = probed.demand;
+    let chain_demand: Vec<usize> = (0..chains)
+        .map(|i| demand[i] + demand[chains + i] + demand[2 * chains + i])
+        .collect();
+    let max_chain = *chain_demand.iter().max().unwrap();
+    let max_pop = *demand.iter().max().unwrap();
+    let cut_spec = tiny_board_array(chains, max_chain + max_pop + 4);
+    let capacity = vec![cut_spec.pes_per_board(); cut_spec.boards];
+    let linear = partition(&cut_net, &demand, &capacity, PartitionStrategy::Linear)
+        .expect("next-fit fits: per-board slack exceeds the largest population");
+    let mut cut_sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let traffic = cut_sys
+        .admit_network_sharded(
+            &cut_net,
+            cut_spec,
+            PlacementStrategy::Linear,
+            PartitionStrategy::Traffic,
+        )
+        .expect("chain-per-board array admits the chain net");
+    let linear_cut = linear.cut_hops(&cut_net);
+    let traffic_cut = traffic.assignment.cut_hops(&cut_net);
+
+    // ---- Capacity: admit + simulate ≥10× one board's capacity -----------
+    let cap_chains = 40usize;
+    let cap_width = 16usize;
+    let cap_net = pair_chain_net(cap_chains, cap_width, 0.4, 2);
+    let mut cap_probe = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let cap_probed = cap_probe
+        .admit_network_sharded(
+            &cap_net,
+            tiny_board_array(1, 4096),
+            PlacementStrategy::Linear,
+            PartitionStrategy::Traffic,
+        )
+        .expect("generous board admits the capacity net");
+    let network_pes = cap_probed.admission.placement.n_pes();
+    let total_demand: usize = cap_probed.demand.iter().sum();
+    let max_chain_demand = (0..cap_chains)
+        .map(|i| cap_probed.demand[2 * i] + cap_probed.demand[2 * i + 1])
+        .max()
+        .unwrap();
+    let cap_boards = 16usize;
+    let per_board = total_demand.div_ceil(cap_boards) + max_chain_demand;
+    let mut lone = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let single_board_rejects = lone
+        .admit_network(&cap_net, tiny_board_array(1, per_board), PlacementStrategy::Linear)
+        .is_err();
+    let mut cap_sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let cap_spec = tiny_board_array(cap_boards, per_board);
+    let cap_sharded = cap_sys
+        .admit_network_sharded(
+            &cap_net,
+            cap_spec,
+            PlacementStrategy::Linear,
+            PartitionStrategy::Traffic,
+        )
+        .expect("16-board array admits the over-capacity net");
+    let over_ratio = network_pes as f64 / cap_spec.pes_per_board() as f64;
+    let board_demand = cap_sharded.assignment.board_demand(&cap_sharded.demand);
+
+    const CAP_STEPS: u64 = 50;
+    let mut sharded_sim =
+        ShardedSim::new(&cap_net, &cap_sharded.admission.layers, &cap_sharded.assignment)
+            .expect("sharded sim builds from the sharded admission");
+    let mut provider = chain_provider(cap_width as u32, 0.2, 77);
+    sharded_sim.run(CAP_STEPS, &mut provider);
+    let sharded_rec = sharded_sim.merged_recorder();
+    let mut reference =
+        NetworkSim::native(&cap_net, cap_sharded.admission.layers.clone()).unwrap();
+    let mut provider = chain_provider(cap_width as u32, 0.2, 77);
+    reference.run(CAP_STEPS, &mut provider);
+    let cap_identical = sharded_rec == reference.recorder;
+    assert!(cap_identical, "sharded recorders must match the single-sim reference");
+    let cap_spikes = sharded_rec.total_spikes();
+
+    let mut rep = Report::new(
+        "Sharding — partition cut and over-capacity admission",
+        &["section", "value"],
+    );
+    rep.row(vec!["linear cut hops (4 interleaved chains)".into(), linear_cut.to_string()]);
+    rep.row(vec!["traffic cut hops".into(), traffic_cut.to_string()]);
+    rep.row(vec!["network PEs / board PEs".into(), format!("{over_ratio:.1}×")]);
+    rep.row(vec!["single board rejects".into(), single_board_rejects.to_string()]);
+    rep.row(vec![
+        format!("sharded run ({CAP_STEPS} steps, {cap_boards} boards) spikes"),
+        cap_spikes.to_string(),
+    ]);
+    rep.row(vec!["bit-identical to single sim".into(), cap_identical.to_string()]);
+    rep.finish();
+
+    // ---- Scaling: per-board throughput at 1/2/4 boards -------------------
+    const SCALE_STEPS: u64 = 100;
+    const SCALE_TRIES: usize = 4;
+    let scale_chains = 4usize;
+    let scale_width = 300usize;
+    let scale_net = pair_chain_net(scale_chains, scale_width, 0.3, 4);
+    let mut scale_sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (scale_layers, _) = scale_sys.compile_network(&scale_net).unwrap();
+    let assignment_for = |boards: usize| -> BoardAssignment {
+        let board_of_pop: Vec<usize> =
+            (0..scale_net.populations.len()).map(|p| (p / 2) % boards).collect();
+        let board_of_layer =
+            scale_net.projections.iter().map(|proj| board_of_pop[proj.target.0]).collect();
+        BoardAssignment { boards, board_of_pop, board_of_layer }
+    };
+    let mut rep = Report::new(
+        "Sharding — per-board throughput scaling (4 chains, 300→300 each)",
+        &["boards", "steps/s", "speedup", "efficiency", "identical"],
+    );
+    let mut scaling_rows: Vec<(usize, f64, f64, f64, bool)> = Vec::new();
+    let mut base: Option<(f64, s2switch::sim::Recorder)> = None;
+    for boards in [1usize, 2, 4] {
+        let mut sim = ShardedSim::new(&scale_net, &scale_layers, &assignment_for(boards))
+            .expect("hand-built chain assignment is valid");
+        let mut best_ns = u64::MAX;
+        for _ in 0..SCALE_TRIES {
+            sim.reset();
+            let mut provider = chain_provider(scale_width as u32, 0.2, 31);
+            let t0 = Instant::now();
+            sim.run_jobs(SCALE_STEPS, &mut provider, boards);
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as u64);
+        }
+        let steps_s = SCALE_STEPS as f64 / (best_ns as f64 / 1e9);
+        let merged = sim.merged_recorder();
+        let (base_rate, identical) = match &base {
+            None => {
+                base = Some((steps_s, merged));
+                (steps_s, true)
+            }
+            Some((r, rec)) => (*r, *rec == merged),
+        };
+        assert!(identical, "recorders must be board-count-invariant (boards={boards})");
+        let speedup = steps_s / base_rate;
+        let efficiency = speedup / boards as f64;
+        rep.row(vec![
+            boards.to_string(),
+            format!("{steps_s:.0}"),
+            format!("{speedup:.2}×"),
+            format!("{efficiency:.2}"),
+            identical.to_string(),
+        ]);
+        scaling_rows.push((boards, steps_s, speedup, efficiency, identical));
+    }
+    rep.finish();
+    let efficiency_at_4 = scaling_rows.last().unwrap().3;
+    let scaling_ok = efficiency_at_4 >= 0.75;
+    println!(
+        "sharding: traffic cut {traffic_cut} < linear {linear_cut} | {over_ratio:.1}× over \
+         one board | efficiency@4 boards {efficiency_at_4:.2} (target ≥0.75: {scaling_ok})"
+    );
+
+    // ---- JSON fragment ---------------------------------------------------
+    let per_board_json: Vec<String> = board_demand
+        .iter()
+        .enumerate()
+        .map(|(b, d)| {
+            format!(
+                "      {{ \"board\": {b}, \"demand_pes\": {d}, \"capacity_pes\": {}, \"utilization\": {:.4} }}",
+                cap_spec.pes_per_board(),
+                *d as f64 / cap_spec.pes_per_board() as f64,
+            )
+        })
+        .collect();
+    let scaling_json: Vec<String> = scaling_rows
+        .iter()
+        .map(|(boards, steps_s, speedup, efficiency, identical)| {
+            format!(
+                "      {{ \"boards\": {boards}, \"steps_per_s\": {steps_s:.1}, \"speedup\": {speedup:.4}, \"efficiency\": {efficiency:.4}, \"identical\": {identical} }}"
+            )
+        })
+        .collect();
+    format!(
+        "  \"sharding\": {{\n    \"grid\": \"{cap_chains} chains of {cap_width}→{cap_width} over {cap_boards} single-chip boards\",\n    \"boards\": {cap_boards},\n    \"per_board\": [\n{}\n    ],\n    \"cut\": {{ \"network\": \"{chains} interleaved chains of 60-60-60\", \"linear_cut_hops\": {linear_cut}, \"traffic_cut_hops\": {traffic_cut}, \"traffic_beats_linear\": {} }},\n    \"capacity\": {{ \"single_board_pes\": {}, \"network_pes\": {network_pes}, \"over_capacity_ratio\": {over_ratio:.4}, \"single_board_rejects\": {single_board_rejects}, \"steps\": {CAP_STEPS}, \"total_spikes\": {cap_spikes}, \"identical_to_single_sim\": {cap_identical} }},\n    \"scaling\": [\n{}\n    ],\n    \"efficiency_at_4_boards\": {efficiency_at_4:.4},\n    \"scaling_ok\": {scaling_ok}\n  }}",
+        per_board_json.join(",\n"),
+        traffic_cut < linear_cut,
+        cap_spec.pes_per_board(),
+        scaling_json.join(",\n"),
+    )
 }

@@ -124,16 +124,39 @@ impl MachineGraph {
         alloc: &mut crate::hardware::Allocator,
         groups: &[(String, Vec<usize>)],
     ) -> crate::Result<()> {
-        for (name, members) in groups {
+        self.place_groups_on_boards(alloc, groups, &[])
+    }
+
+    /// [`MachineGraph::place_groups`] with a per-group board pin: group `i`
+    /// is placed with the allocator restricted to `boards[i]` (missing /
+    /// `None` entries = unrestricted, full-grid placement). Sharded
+    /// placement pins each layer's group to the board the partitioner
+    /// assigned it; the restriction is lifted afterwards.
+    pub fn place_groups_on_boards(
+        &mut self,
+        alloc: &mut crate::hardware::Allocator,
+        groups: &[(String, Vec<usize>)],
+        boards: &[Option<usize>],
+    ) -> crate::Result<()> {
+        for (i, (name, members)) in groups.iter().enumerate() {
+            alloc.restrict_to_board(boards.get(i).copied().flatten());
             let requests: Vec<(&str, usize)> = members
                 .iter()
                 .map(|&v| (self.vertices[v].label.as_str(), self.vertices[v].dtcm_bytes))
                 .collect();
-            let pes = alloc.place_group(name, &requests)?;
+            let placed = alloc.place_group(name, &requests);
+            let pes = match placed {
+                Ok(pes) => pes,
+                Err(e) => {
+                    alloc.restrict_to_board(None);
+                    return Err(e);
+                }
+            };
             for (&v, pe) in members.iter().zip(pes) {
                 self.vertices[v].pe = Some(pe);
             }
         }
+        alloc.restrict_to_board(None);
         Ok(())
     }
 }
@@ -180,12 +203,44 @@ mod tests {
             chips_x: 1,
             chips_y: 1,
             chip: ChipSpec { pes_per_chip: 1, ..Default::default() },
+            ..Default::default()
         };
         let mut g2 = g.clone();
         g2.vertices.iter_mut().for_each(|v| v.pe = None);
         let mut alloc = Allocator::new(tiny, PlacementStrategy::Linear);
         let err = g2.place_groups(&mut alloc, &groups).unwrap_err();
         assert!(format!("{err:#}").contains("layer0"), "{err:#}");
+    }
+
+    #[test]
+    fn place_groups_on_boards_pins_each_group() {
+        use crate::hardware::{Allocator, ChipSpec, MachineSpec, PlacementStrategy};
+        let mut g = MachineGraph::default();
+        let a = g.add_vertex(
+            PopulationId(0),
+            SliceRange { lo: 0, hi: 4 },
+            VertexRole::Source,
+            10,
+            "a".into(),
+        );
+        let b = g.add_vertex(
+            PopulationId(1),
+            SliceRange { lo: 0, hi: 4 },
+            VertexRole::Serial,
+            10,
+            "b".into(),
+        );
+        let spec = MachineSpec {
+            boards: 2,
+            chips_x: 1,
+            chips_y: 1,
+            chip: ChipSpec { pes_per_chip: 4, ..Default::default() },
+        };
+        let groups = vec![("g0".to_string(), vec![a]), ("g1".to_string(), vec![b])];
+        let mut alloc = Allocator::new(spec, PlacementStrategy::Linear);
+        g.place_groups_on_boards(&mut alloc, &groups, &[Some(1), Some(0)]).unwrap();
+        assert_eq!(spec.board_of_chip_x(g.vertices[a].pe.unwrap().chip_x), 1);
+        assert_eq!(spec.board_of_chip_x(g.vertices[b].pe.unwrap().chip_x), 0);
     }
 
     #[test]

@@ -4,12 +4,16 @@
 //! hold one population each and whose edges are the projections. Each vertex
 //! is split into sub-population *machine vertices* sized to fit one PE, and
 //! the sub-population connectivity induces the *machine graph* plus the
-//! multicast *routing table* loaded into the NoC routers.
+//! multicast *routing table* loaded into the NoC routers. On board arrays,
+//! [`mod@partition`] first assigns populations to boards, minimizing
+//! estimated inter-board spike traffic.
 
 pub mod application;
 pub mod machine_graph;
+pub mod partition;
 pub mod routing;
 
 pub use application::{AppEdge, AppGraph, AppVertex};
 pub use machine_graph::{MachineEdge, MachineGraph, MachineVertex, SliceRange};
+pub use partition::{partition, BoardAssignment, PartitionStrategy};
 pub use routing::{RoutingEntry, RoutingTable};

@@ -1,0 +1,372 @@
+//! Traffic-aware layer-to-board partitioning.
+//!
+//! On a board array (hardware::spec `boards > 1`) the admission pipeline
+//! must decide which board each population — and therefore each layer's
+//! synapse/neuron PEs — lives on. Crossing a board boundary costs an
+//! order of magnitude more per hop than an on-board chip link
+//! ([`crate::hardware::noc::NocConfig::per_board_link_ns`]), so the
+//! partition objective is to keep heavily-spiking projections on one
+//! board: minimize the estimated inter-board multicast traffic, following
+//! the graph-clustering approach of Song et al., "Compiling Spiking
+//! Neural Networks to Neuromorphic Hardware".
+//!
+//! Two deterministic strategies, toggled by the CLI's `--partition`:
+//!
+//! * [`PartitionStrategy::Linear`] — next-fit over populations in id
+//!   order, the obvious baseline: fill board 0, move on. Cheap, but blind
+//!   to topology — it cuts chains wherever the capacity seam happens to
+//!   fall.
+//! * [`PartitionStrategy::Traffic`] — greedy cluster growth. Each board
+//!   is seeded with the unassigned population carrying the most total
+//!   incident spike traffic, then grown by repeatedly pulling in the
+//!   unassigned population with the highest affinity (summed projection
+//!   traffic) to the board's current set, until nothing connected fits.
+//!   Leftovers go first-fit. Ties break on the lowest population id, so
+//!   the result is a pure function of (network, demand, capacity) — no
+//!   RNG, no thread-count sensitivity.
+//!
+//! Traffic on a projection is estimated as its source population size
+//! (every source neuron's spike traverses the multicast tree once per
+//! timestep in the worst case) — the same proxy the NoC traffic
+//! estimator uses for tree-hop accounting.
+
+use crate::model::Network;
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+/// Deterministic layer-to-board partition strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartitionStrategy {
+    /// Next-fit over populations in id order (baseline).
+    Linear,
+    /// Greedy traffic-weighted cluster growth (default).
+    Traffic,
+}
+
+impl PartitionStrategy {
+    /// Every strategy, in documentation order (bench sweeps iterate this).
+    pub const ALL: [PartitionStrategy; 2] =
+        [PartitionStrategy::Linear, PartitionStrategy::Traffic];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionStrategy::Linear => "linear",
+            PartitionStrategy::Traffic => "traffic",
+        }
+    }
+
+    /// Parse a CLI spelling (`linear` | `traffic`).
+    pub fn parse(s: &str) -> Result<PartitionStrategy> {
+        match s {
+            "linear" => Ok(PartitionStrategy::Linear),
+            "traffic" => Ok(PartitionStrategy::Traffic),
+            other => bail!("unknown partition strategy '{other}' (linear|traffic)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A population→board (and thus layer→board) assignment.
+///
+/// A *layer* (projection) always executes on its **target** population's
+/// board: every projection into population P accumulates currents on P's
+/// board, which is what keeps sharded accumulation order — and therefore
+/// recorded spikes — bit-identical to the single-board run (see
+/// DESIGN.md §Sharding).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BoardAssignment {
+    /// Number of boards partitioned over.
+    pub boards: usize,
+    /// Board index per population id.
+    pub board_of_pop: Vec<usize>,
+    /// Board index per projection (layer) id: the target's board.
+    pub board_of_layer: Vec<usize>,
+}
+
+impl BoardAssignment {
+    /// The trivial assignment: everything on board 0 (single-machine runs).
+    pub fn single_board(net: &Network) -> Self {
+        BoardAssignment {
+            boards: 1,
+            board_of_pop: vec![0; net.populations.len()],
+            board_of_layer: vec![0; net.projections.len()],
+        }
+    }
+
+    /// Estimated inter-board multicast traffic this assignment pays per
+    /// timestep: for every projection whose source and target boards
+    /// differ, its source population size (spikes per step, worst case)
+    /// times the board-link crossings between the two boards (boards are
+    /// arrayed along x, so that is their index distance). The partition
+    /// objective, and the `BENCH_place.json` `cut_hops` metric.
+    pub fn cut_hops(&self, net: &Network) -> u64 {
+        net.projections
+            .iter()
+            .map(|proj| {
+                let (sb, tb) =
+                    (self.board_of_pop[proj.source.0], self.board_of_pop[proj.target.0]);
+                net.populations[proj.source.0].n_neurons as u64 * sb.abs_diff(tb) as u64
+            })
+            .sum()
+    }
+
+    /// PE demand per board under this assignment (`demand` is per pop).
+    pub fn board_demand(&self, demand: &[usize]) -> Vec<usize> {
+        let mut per_board = vec![0usize; self.boards];
+        for (p, &b) in self.board_of_pop.iter().enumerate() {
+            per_board[b] += demand[p];
+        }
+        per_board
+    }
+}
+
+/// Assign populations to boards.
+///
+/// * `demand[p]` — estimated PE demand of population `p` (its layers'
+///   synapse/neuron PEs plus source hosting, from the admission
+///   estimator).
+/// * `capacity[b]` — usable PEs on board `b`.
+///
+/// Deterministic: same `(net, demand, capacity, strategy)` ⇒ same
+/// assignment, regardless of caller thread count. Fails (typed error, no
+/// panic) when some population fits no board.
+pub fn partition(
+    net: &Network,
+    demand: &[usize],
+    capacity: &[usize],
+    strategy: PartitionStrategy,
+) -> Result<BoardAssignment> {
+    let n = net.populations.len();
+    ensure!(demand.len() == n, "demand entries ({}) != populations ({n})", demand.len());
+    ensure!(!capacity.is_empty(), "partitioning needs at least one board");
+    let board_of_pop = match strategy {
+        PartitionStrategy::Linear => partition_linear(demand, capacity)?,
+        PartitionStrategy::Traffic => partition_traffic(net, demand, capacity)?,
+    };
+    let board_of_layer =
+        net.projections.iter().map(|proj| board_of_pop[proj.target.0]).collect();
+    Ok(BoardAssignment { boards: capacity.len(), board_of_pop, board_of_layer })
+}
+
+/// Next-fit in population-id order: fill the current board until the next
+/// population no longer fits, then move to the next board (never back).
+fn partition_linear(demand: &[usize], capacity: &[usize]) -> Result<Vec<usize>> {
+    let mut board_of_pop = vec![0usize; demand.len()];
+    let mut board = 0;
+    let mut used = 0;
+    for (p, &need) in demand.iter().enumerate() {
+        while board < capacity.len() && used + need > capacity[board] {
+            board += 1;
+            used = 0;
+        }
+        if board == capacity.len() {
+            bail!(
+                "linear partition: population {p} (demand {need} PEs) fits no remaining board"
+            );
+        }
+        board_of_pop[p] = board;
+        used += need;
+    }
+    Ok(board_of_pop)
+}
+
+/// Greedy traffic-weighted cluster growth (see module docs).
+fn partition_traffic(net: &Network, demand: &[usize], capacity: &[usize]) -> Result<Vec<usize>> {
+    let n = net.populations.len();
+    // Symmetric pop↔pop affinity: summed source-size traffic of the
+    // projections between them (self-loops carry no cut cost — skip).
+    let mut affinity: Vec<BTreeMap<usize, u64>> = vec![BTreeMap::new(); n];
+    for proj in &net.projections {
+        let (s, t) = (proj.source.0, proj.target.0);
+        if s == t {
+            continue;
+        }
+        let traffic = net.populations[s].n_neurons as u64;
+        *affinity[s].entry(t).or_insert(0) += traffic;
+        *affinity[t].entry(s).or_insert(0) += traffic;
+    }
+    let total_weight: Vec<u64> = affinity.iter().map(|m| m.values().sum()).collect();
+
+    const UNASSIGNED: usize = usize::MAX;
+    let mut board_of_pop = vec![UNASSIGNED; n];
+    let mut remaining = capacity.to_vec();
+    for board in 0..capacity.len() {
+        // Seed: the unassigned population with the most total incident
+        // traffic that fits this board (ties → lowest id).
+        let seed = (0..n)
+            .filter(|&p| board_of_pop[p] == UNASSIGNED && demand[p] <= remaining[board])
+            .max_by_key(|&p| (total_weight[p], std::cmp::Reverse(p)));
+        let Some(seed) = seed else { continue };
+        board_of_pop[seed] = board;
+        remaining[board] -= demand[seed];
+        // Grow: pull in the unassigned population with the highest
+        // affinity to the board's current set, while anything connected
+        // still fits.
+        loop {
+            let next = (0..n)
+                .filter(|&p| board_of_pop[p] == UNASSIGNED && demand[p] <= remaining[board])
+                .filter_map(|p| {
+                    let pull: u64 = affinity[p]
+                        .iter()
+                        .filter(|&(&q, _)| board_of_pop[q] == board)
+                        .map(|(_, &w)| w)
+                        .sum();
+                    (pull > 0).then_some((pull, p))
+                })
+                .max_by_key(|&(pull, p)| (pull, std::cmp::Reverse(p)));
+            let Some((_, p)) = next else { break };
+            board_of_pop[p] = board;
+            remaining[board] -= demand[p];
+        }
+    }
+    // Leftovers (disconnected, or squeezed out of their cluster's board):
+    // first-fit into any board with room.
+    for p in 0..n {
+        if board_of_pop[p] != UNASSIGNED {
+            continue;
+        }
+        match (0..capacity.len()).find(|&b| demand[p] <= remaining[b]) {
+            Some(b) => {
+                board_of_pop[p] = b;
+                remaining[b] -= demand[p];
+            }
+            None => bail!(
+                "traffic partition: population {p} (demand {} PEs) fits no board \
+                 (per-board free: {remaining:?})",
+                demand[p]
+            ),
+        }
+    }
+    Ok(board_of_pop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::connector::SynapseDraw;
+    use crate::model::{Connector, LifParams, NetworkBuilder};
+
+    /// `chains` parallel in→hid→out chains with **layer-major interleaved**
+    /// pop ids (all ins, then all hids, then all outs) — the id order that
+    /// makes next-fit cut every chain while traffic clustering keeps each
+    /// chain whole.
+    fn chain_net(chains: usize, width: usize) -> Network {
+        let mut b = NetworkBuilder::new(7);
+        let ins: Vec<_> =
+            (0..chains).map(|i| b.spike_source(&format!("in{i}"), width)).collect();
+        let hids: Vec<_> = (0..chains)
+            .map(|i| b.lif_population(&format!("hid{i}"), width, LifParams::default()))
+            .collect();
+        let outs: Vec<_> = (0..chains)
+            .map(|i| b.lif_population(&format!("out{i}"), width, LifParams::default()))
+            .collect();
+        for i in 0..chains {
+            b.project(ins[i], hids[i], Connector::OneToOne, SynapseDraw::default(), 1.0);
+            b.project(hids[i], outs[i], Connector::OneToOne, SynapseDraw::default(), 1.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in PartitionStrategy::ALL {
+            assert_eq!(PartitionStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(PartitionStrategy::parse("radial").is_err());
+    }
+
+    #[test]
+    fn linear_is_next_fit_in_id_order() {
+        let net = chain_net(2, 4);
+        // 6 pops, demand 2 each, 3 boards of 4: pops (0,1) (2,3) (4,5).
+        let a = partition(&net, &[2; 6], &[4, 4, 4], PartitionStrategy::Linear).unwrap();
+        assert_eq!(a.board_of_pop, vec![0, 0, 1, 1, 2, 2]);
+        // Layers land on their target's board.
+        assert_eq!(a.board_of_layer.len(), 4);
+        for (i, proj) in net.projections.iter().enumerate() {
+            assert_eq!(a.board_of_layer[i], a.board_of_pop[proj.target.0]);
+        }
+    }
+
+    #[test]
+    fn traffic_keeps_chains_whole_where_linear_cuts() {
+        let net = chain_net(4, 8);
+        // 12 pops of demand 1 over 4 boards of 3: each board holds exactly
+        // one chain's 3 pops under traffic clustering; next-fit instead
+        // packs by id (in0,in1,in2 | in3,hid0,hid1 | …), cutting chains.
+        let demand = vec![1usize; 12];
+        let capacity = vec![3usize; 4];
+        let linear = partition(&net, &demand, &capacity, PartitionStrategy::Linear).unwrap();
+        let traffic = partition(&net, &demand, &capacity, PartitionStrategy::Traffic).unwrap();
+        assert_eq!(traffic.cut_hops(&net), 0, "{:?}", traffic.board_of_pop);
+        assert!(
+            linear.cut_hops(&net) > 0,
+            "interleaved ids must force next-fit to cut: {:?}",
+            linear.board_of_pop
+        );
+        for i in 0..4 {
+            let chain = [i, 4 + i, 8 + i].map(|p| traffic.board_of_pop[p]);
+            assert_eq!(chain[0], chain[1], "chain {i} split: {chain:?}");
+            assert_eq!(chain[1], chain[2], "chain {i} split: {chain:?}");
+        }
+    }
+
+    #[test]
+    fn cut_hops_weighs_source_size_and_board_distance() {
+        let net = chain_net(1, 8); // in(8) → hid(8) → out(8)
+        let hand = |board_of_pop: Vec<usize>| {
+            let board_of_layer =
+                net.projections.iter().map(|p| board_of_pop[p.target.0]).collect();
+            BoardAssignment { boards: 3, board_of_pop, board_of_layer }
+        };
+        assert_eq!(hand(vec![0, 0, 0]).cut_hops(&net), 0);
+        assert_eq!(hand(vec![0, 0, 1]).cut_hops(&net), 8, "hid→out crosses once");
+        assert_eq!(hand(vec![0, 2, 2]).cut_hops(&net), 16, "in→hid crosses two links");
+    }
+
+    #[test]
+    fn board_demand_sums_per_board() {
+        let net = chain_net(2, 4);
+        let a = partition(&net, &[5, 1, 2, 2, 3, 3], &[8, 8], PartitionStrategy::Linear).unwrap();
+        let per_board = a.board_demand(&[5, 1, 2, 2, 3, 3]);
+        assert_eq!(per_board.iter().sum::<usize>(), 16);
+        assert_eq!(per_board.len(), 2);
+        assert!(per_board.iter().all(|&d| d <= 8));
+    }
+
+    #[test]
+    fn over_capacity_is_a_typed_error() {
+        let net = chain_net(1, 4);
+        for s in PartitionStrategy::ALL {
+            let err = partition(&net, &[4, 4, 4], &[5, 5], s).unwrap_err();
+            assert!(format!("{err:#}").contains("fits no"), "{s}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        let net = chain_net(4, 8);
+        let demand = vec![1usize; 12];
+        let capacity = vec![3usize; 4];
+        for s in PartitionStrategy::ALL {
+            let a = partition(&net, &demand, &capacity, s).unwrap();
+            let b = partition(&net, &demand, &capacity, s).unwrap();
+            assert_eq!(a, b, "{s}");
+        }
+    }
+
+    #[test]
+    fn single_board_is_all_zeroes() {
+        let net = chain_net(2, 4);
+        let a = BoardAssignment::single_board(&net);
+        assert_eq!(a.boards, 1);
+        assert!(a.board_of_pop.iter().all(|&b| b == 0));
+        assert!(a.board_of_layer.iter().all(|&b| b == 0));
+        assert_eq!(a.cut_hops(&net), 0);
+    }
+}

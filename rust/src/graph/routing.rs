@@ -6,7 +6,7 @@
 //! vertex's spikes out to every machine vertex that consumes them.
 
 use super::machine_graph::MachineGraph;
-use crate::hardware::noc::Noc;
+use crate::hardware::noc::{Noc, TreeHops};
 use crate::hardware::PeHandle;
 use std::collections::BTreeMap;
 
@@ -74,13 +74,23 @@ impl RoutingTable {
     /// Panics if the graph has unplaced vertices (like
     /// [`RoutingTable::from_machine_graph`]).
     pub fn total_tree_hops(&self, graph: &MachineGraph) -> u64 {
-        self.entries
-            .iter()
-            .map(|e| {
-                let src = graph.vertices[e.source_vertex].pe.expect("placed");
-                Noc::multicast_tree_hops(src, &e.destinations)
-            })
-            .sum()
+        self.tree_hops_split(graph, 0).total()
+    }
+
+    /// [`RoutingTable::total_tree_hops`] with the board-link split: on a
+    /// board array of `board_chips_x`-column boards, x links crossing a
+    /// board boundary are charged separately from on-board x-then-y hops
+    /// (board links are an order of magnitude slower, so strategy
+    /// comparisons must not conflate the two). `board_chips_x == 0` means
+    /// no boundaries — everything counts as on-board, matching the
+    /// single-machine seed accounting.
+    pub fn tree_hops_split(&self, graph: &MachineGraph, board_chips_x: usize) -> TreeHops {
+        let mut hops = TreeHops::default();
+        for e in &self.entries {
+            let src = graph.vertices[e.source_vertex].pe.expect("placed");
+            hops += Noc::multicast_tree_hops_split(src, &e.destinations, board_chips_x);
+        }
+        hops
     }
 
     pub fn is_empty(&self) -> bool {
@@ -166,6 +176,7 @@ mod tests {
                 chips_x: 4,
                 chips_y: 1,
                 chip: ChipSpec { pes_per_chip: 4, ..Default::default() },
+                ..Default::default()
             };
             let mut alloc = Allocator::new(spec, strategy);
             let groups = vec![("g".to_string(), members)];
@@ -177,6 +188,46 @@ mod tests {
         let spread = build(PlacementStrategy::Balanced);
         assert_eq!(packed, 0, "a co-located group needs no inter-chip links");
         assert!(spread > 0, "a spread group must cross chips");
+    }
+
+    #[test]
+    fn tree_hops_split_separates_board_links() {
+        use crate::hardware::{Allocator, ChipSpec, MachineSpec, PlacementStrategy};
+        // A source on board 0 feeding targets on board 1 of a 2-board,
+        // 1-column-per-board machine: every x link crosses the boundary.
+        let mut g = MachineGraph::default();
+        let s = g.add_vertex(
+            PopulationId(0),
+            SliceRange { lo: 0, hi: 4 },
+            VertexRole::Source,
+            10,
+            "s".into(),
+        );
+        let a = g.add_vertex(
+            PopulationId(1),
+            SliceRange { lo: 0, hi: 4 },
+            VertexRole::Serial,
+            10,
+            "a".into(),
+        );
+        g.add_edge(ProjectionId(0), s, a);
+        let spec = MachineSpec {
+            boards: 2,
+            chips_x: 1,
+            chips_y: 1,
+            chip: ChipSpec { pes_per_chip: 1, ..Default::default() },
+        };
+        // One PE per chip forces s → chip 0 (board 0), a → chip 1 (board 1).
+        let mut alloc = Allocator::new(spec, PlacementStrategy::Linear);
+        let groups = vec![("g".to_string(), vec![s, a])];
+        g.place_groups(&mut alloc, &groups).unwrap();
+        let t = RoutingTable::from_machine_graph(&g);
+        let split = t.tree_hops_split(&g, spec.chips_x);
+        assert_eq!(split, TreeHops { on_board: 0, board_links: 1 });
+        assert_eq!(split.total(), t.total_tree_hops(&g));
+        // Width 0 conflates the classes back into on-board, seed-style.
+        let flat = t.tree_hops_split(&g, 0);
+        assert_eq!(flat, TreeHops { on_board: 1, board_links: 0 });
     }
 
     #[test]

@@ -75,6 +75,9 @@ pub struct Allocator {
     strategy: PlacementStrategy,
     /// Journal of the open transaction's allocations (None = autocommit).
     journal: Option<Vec<PeHandle>>,
+    /// When set, every strategy scans only this board's chips (sharded
+    /// placement: each layer's PEs stay on its assigned board).
+    board: Option<usize>,
 }
 
 impl Allocator {
@@ -84,11 +87,30 @@ impl Allocator {
 
     /// Wrap an existing (possibly partially allocated) machine.
     pub fn from_machine(machine: Machine, strategy: PlacementStrategy) -> Self {
-        Allocator { machine, strategy, journal: None }
+        Allocator { machine, strategy, journal: None, board: None }
     }
 
     pub fn strategy(&self) -> PlacementStrategy {
         self.strategy
+    }
+
+    /// Restrict (or lift, with `None`) subsequent allocations to one
+    /// board's chips. Sharded placement sets this per group so a layer's
+    /// PEs land on the board the partitioner assigned it to.
+    pub fn restrict_to_board(&mut self, board: Option<usize>) {
+        if let Some(b) = board {
+            assert!(b < self.machine.n_boards(), "board {b} out of range");
+        }
+        self.board = board;
+    }
+
+    /// The chips the current restriction allows, in deterministic scan
+    /// order (full grid chip-major when unrestricted).
+    fn scan_chips(&self) -> Vec<usize> {
+        match self.board {
+            Some(b) => self.machine.board_chips(b).collect(),
+            None => (0..self.machine.n_chips()).collect(),
+        }
     }
 
     pub fn machine(&self) -> &Machine {
@@ -105,12 +127,26 @@ impl Allocator {
         let idx = match self.strategy {
             // Single allocations: chip-packed *is* linear (the linear index
             // order is chip-major); groups differ — see `place_group`.
-            PlacementStrategy::Linear | PlacementStrategy::ChipPacked => {
-                self.machine.first_free_index()
-            }
+            PlacementStrategy::Linear | PlacementStrategy::ChipPacked => match self.board {
+                None => self.machine.first_free_index(),
+                // Restricted: lowest free PE in board-chip scan order (a
+                // board's chips are per-row column ranges, so the global
+                // low-water mark does not apply).
+                Some(_) => self
+                    .scan_chips()
+                    .into_iter()
+                    .find_map(|c| self.machine.first_free_in_chip(c)),
+            },
             PlacementStrategy::Balanced => self.pick_balanced(),
         };
         let Some(idx) = idx else {
+            if let Some(b) = self.board {
+                bail!(
+                    "board {b} full: all {} free PEs of its {} chips allocated",
+                    self.machine.board_free_pes(b),
+                    self.machine.spec().chips_per_board()
+                );
+            }
             bail!(
                 "machine full: all {} usable PEs allocated ({} faulted)",
                 self.machine.usable_pes(),
@@ -125,7 +161,8 @@ impl Allocator {
     /// with lighter memory load win), then the lowest chip index.
     fn pick_balanced(&self) -> Option<usize> {
         use std::cmp::Reverse;
-        (0..self.machine.n_chips())
+        self.scan_chips()
+            .into_iter()
             .filter(|&c| self.machine.chip_free_pes(c) > 0)
             .max_by_key(|&c| {
                 (
@@ -196,7 +233,9 @@ impl Allocator {
 
     fn try_place_group(&mut self, members: &[(&str, usize)]) -> Result<Vec<PeHandle>> {
         if self.strategy == PlacementStrategy::ChipPacked {
-            let home = (0..self.machine.n_chips())
+            let home = self
+                .scan_chips()
+                .into_iter()
                 .find(|&c| self.machine.chip_free_pes(c) >= members.len());
             if let Some(chip) = home {
                 return members
@@ -227,6 +266,7 @@ mod tests {
             chips_x,
             chips_y,
             chip: ChipSpec { pes_per_chip, ..Default::default() },
+            ..Default::default()
         }
     }
 
@@ -386,6 +426,39 @@ mod tests {
             // with the fault-aware capacity message.
             let err = a.allocate("overflow", 10).unwrap_err();
             assert!(format!("{err:#}").contains("5 faulted"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn board_restriction_pins_every_strategy_to_its_board() {
+        let spec = MachineSpec::board_array(2, 2, 2);
+        let spec = MachineSpec {
+            chip: ChipSpec { pes_per_chip: 3, ..Default::default() },
+            ..spec
+        };
+        for strategy in PlacementStrategy::ALL {
+            let mut a = Allocator::new(spec, strategy);
+            a.restrict_to_board(Some(1));
+            let pes = a.place_group("g", &[("a", 10), ("b", 10), ("c", 10)]).unwrap();
+            assert!(
+                pes.iter().all(|pe| spec.board_of_chip_x(pe.chip_x) == 1),
+                "{strategy}: group must land on board 1, got {pes:?}"
+            );
+            let lone = a.allocate("d", 10).unwrap();
+            assert_eq!(spec.board_of_chip_x(lone.chip_x), 1, "{strategy}");
+            // Fill the rest of the board, then overflow with the board's
+            // own capacity error while the other board still has room.
+            let free = a.machine().board_free_pes(1);
+            for i in 0..free {
+                a.allocate(&format!("f{i}"), 1).unwrap();
+            }
+            let err = a.allocate("over", 1).unwrap_err();
+            assert!(format!("{err:#}").contains("board 1 full"), "{strategy}: {err:#}");
+            assert!(a.machine().board_free_pes(0) > 0);
+            // Lifting the restriction frees the whole grid again.
+            a.restrict_to_board(None);
+            let spill = a.allocate("spill", 1).unwrap();
+            assert_eq!(spec.board_of_chip_x(spill.chip_x), 0, "{strategy}");
         }
     }
 

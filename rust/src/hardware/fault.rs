@@ -173,13 +173,13 @@ impl FaultMap {
         let chips = self
             .dead_chips
             .iter()
-            .filter(|&&(x, y)| x < spec.chips_x && y < spec.chips_y)
+            .filter(|&&(x, y)| x < spec.total_chips_x() && y < spec.chips_y)
             .count();
         let lone = self
             .dead_pes
             .iter()
             .filter(|pe| {
-                pe.chip_x < spec.chips_x && pe.chip_y < spec.chips_y && pe.core < per_chip
+                pe.chip_x < spec.total_chips_x() && pe.chip_y < spec.chips_y && pe.core < per_chip
             })
             .filter(|pe| !self.dead_chips.contains(&(pe.chip_x, pe.chip_y)))
             .count();

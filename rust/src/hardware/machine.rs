@@ -70,15 +70,16 @@ impl Machine {
     }
 
     fn index(&self, pe: PeHandle) -> usize {
-        (pe.chip_y * self.spec.chips_x + pe.chip_x) * self.spec.chip.pes_per_chip + pe.core
+        (pe.chip_y * self.spec.total_chips_x() + pe.chip_x) * self.spec.chip.pes_per_chip
+            + pe.core
     }
 
     fn handle(&self, idx: usize) -> PeHandle {
         let per_chip = self.spec.chip.pes_per_chip;
         let chip = idx / per_chip;
         PeHandle {
-            chip_x: chip % self.spec.chips_x,
-            chip_y: chip / self.spec.chips_x,
+            chip_x: chip % self.spec.total_chips_x(),
+            chip_y: chip / self.spec.total_chips_x(),
             core: idx % per_chip,
         }
     }
@@ -194,9 +195,34 @@ impl Machine {
         (0..self.pes.len()).filter(|&i| !self.faulted_index(i)).count()
     }
 
-    /// Chips on the machine (row-major linear chip index space).
+    /// Chips on the machine (row-major linear chip index space over the
+    /// full `(boards × chips_x) × chips_y` grid).
     pub fn n_chips(&self) -> usize {
         self.spec.chips()
+    }
+
+    /// Boards in the array.
+    pub fn n_boards(&self) -> usize {
+        self.spec.boards
+    }
+
+    /// The board owning a linear chip index.
+    pub fn board_of_chip(&self, chip: usize) -> usize {
+        self.spec.board_of_chip_x(chip % self.spec.total_chips_x())
+    }
+
+    /// Linear chip indices of board `b`, row by row. A board's chips are
+    /// *column ranges per row* of the full grid — not one contiguous linear
+    /// range when `chips_y > 1`.
+    pub fn board_chips(&self, b: usize) -> impl Iterator<Item = usize> + '_ {
+        let (w, total_x) = (self.spec.chips_x, self.spec.total_chips_x());
+        (0..self.spec.chips_y)
+            .flat_map(move |row| (0..w).map(move |cx| row * total_x + b * w + cx))
+    }
+
+    /// Allocatable PEs on one board (free and not faulted).
+    pub fn board_free_pes(&self, b: usize) -> usize {
+        self.board_chips(b).map(|c| self.chip_free_pes(c)).sum()
     }
 
     fn chip_range(&self, chip: usize) -> std::ops::Range<usize> {
@@ -328,6 +354,7 @@ mod tests {
             chips_x: 2,
             chips_y: 1,
             chip: crate::hardware::ChipSpec { pes_per_chip: 4, ..Default::default() },
+            ..Default::default()
         };
         let mut m = Machine::new(spec);
         assert_eq!(m.n_chips(), 2);
@@ -389,6 +416,38 @@ mod tests {
         // Killing a free PE reports no hosted allocation.
         let idle = PeHandle { chip_x: 0, chip_y: 0, core: 50 };
         assert!(!m.kill_pe(idle));
+    }
+
+    #[test]
+    fn board_array_chips_are_per_row_column_ranges() {
+        let spec = MachineSpec {
+            boards: 2,
+            chips_x: 2,
+            chips_y: 2,
+            chip: crate::hardware::ChipSpec { pes_per_chip: 3, ..Default::default() },
+        };
+        let mut m = Machine::new(spec);
+        assert_eq!(m.n_boards(), 2);
+        assert_eq!(m.n_chips(), 8);
+        assert_eq!(m.total_pes(), 24);
+        // Full grid is 4 columns × 2 rows; board 1 owns columns 2..4.
+        assert_eq!(m.board_chips(0).collect::<Vec<_>>(), vec![0, 1, 4, 5]);
+        assert_eq!(m.board_chips(1).collect::<Vec<_>>(), vec![2, 3, 6, 7]);
+        for c in m.board_chips(1) {
+            assert_eq!(m.board_of_chip(c), 1);
+        }
+        assert_eq!(m.board_free_pes(0), 12);
+        // index/handle round-trip covers the whole board-array grid.
+        for idx in 0..m.total_pes() {
+            let h = m.handle(idx);
+            assert_eq!(m.index(h), idx, "{h}");
+            assert!(h.chip_x < spec.total_chips_x());
+            assert!(h.chip_y < spec.chips_y);
+        }
+        // Allocations on board-1 columns report the right board.
+        let pe = m.allocate_index(2 * 3, "b1", 10).unwrap();
+        assert_eq!(spec.board_of_chip_x(pe.chip_x), 1);
+        assert_eq!(m.board_free_pes(1), 11);
     }
 
     #[test]

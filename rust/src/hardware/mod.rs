@@ -25,4 +25,5 @@ pub mod spec;
 pub use alloc::{Allocator, PlacementStrategy};
 pub use fault::{FaultError, FaultEvent, FaultMap, FaultSchedule};
 pub use machine::{Machine, PeHandle};
-pub use spec::{ChipSpec, MacArraySpec, MachineSpec, PeSpec};
+pub use noc::{Noc, NocConfig, TreeHops};
+pub use spec::{ChipSpec, MacArraySpec, MachineParseError, MachineSpec, PeSpec};

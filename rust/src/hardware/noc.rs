@@ -21,11 +21,49 @@ pub struct NocConfig {
     pub per_hop_ns: u64,
     /// Router fan-out cost per additional multicast target (ns).
     pub per_target_ns: u64,
+    /// Additional latency when an x hop crosses between adjacent boards of
+    /// a board array (ns) — board-level links are an order of magnitude
+    /// slower than on-board chip links.
+    pub per_board_link_ns: u64,
+    /// Chip columns per board (board boundaries sit at multiples of this
+    /// along x). `0` = no board boundaries: every hop is on-board, the
+    /// single-machine seed behavior.
+    pub board_chips_x: usize,
 }
 
 impl Default for NocConfig {
     fn default() -> Self {
-        NocConfig { intra_chip_ns: 100, per_hop_ns: 40, per_target_ns: 10 }
+        NocConfig {
+            intra_chip_ns: 100,
+            per_hop_ns: 40,
+            per_target_ns: 10,
+            per_board_link_ns: 400,
+            board_chips_x: 0,
+        }
+    }
+}
+
+/// Multicast tree link counts split by link class: on-board x-then-y chip
+/// links vs board-level links (x hops that cross a board boundary).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TreeHops {
+    /// Links staying within one board's chip grid.
+    pub on_board: u64,
+    /// Links crossing between adjacent boards.
+    pub board_links: u64,
+}
+
+impl TreeHops {
+    /// All tree links regardless of class (the pre-board-array hop count).
+    pub fn total(&self) -> u64 {
+        self.on_board + self.board_links
+    }
+}
+
+impl std::ops::AddAssign for TreeHops {
+    fn add_assign(&mut self, rhs: TreeHops) {
+        self.on_board += rhs.on_board;
+        self.board_links += rhs.board_links;
     }
 }
 
@@ -35,13 +73,15 @@ pub struct Noc {
     pub config: NocConfig,
     /// Cumulative packets sent (telemetry).
     pub packets: u64,
-    /// Cumulative hop count (telemetry).
+    /// Cumulative hop count (telemetry; board links included).
     pub hops: u64,
+    /// Cumulative board-link crossings (telemetry; subset of `hops`).
+    pub board_hops: u64,
 }
 
 impl Noc {
     pub fn new(config: NocConfig) -> Self {
-        Noc { config, packets: 0, hops: 0 }
+        Noc { config, packets: 0, hops: 0, board_hops: 0 }
     }
 
     /// Manhattan (XY-routing) hop distance between two PEs' chips.
@@ -51,9 +91,17 @@ impl Noc {
         dx + dy
     }
 
-    /// Latency estimate for a unicast packet from `src` to `dst`.
+    /// Latency estimate for a unicast packet from `src` to `dst` (board
+    /// crossings along x are charged `per_board_link_ns` each on top of the
+    /// per-hop cost when the config carries board boundaries).
     pub fn unicast_latency_ns(&self, src: PeHandle, dst: PeHandle) -> u64 {
-        self.config.intra_chip_ns + Self::hop_distance(src, dst) * self.config.per_hop_ns
+        let crossings = match self.config.board_chips_x {
+            0 => 0,
+            w => (src.chip_x / w).abs_diff(dst.chip_x / w) as u64,
+        };
+        self.config.intra_chip_ns
+            + Self::hop_distance(src, dst) * self.config.per_hop_ns
+            + crossings * self.config.per_board_link_ns
     }
 
     /// Inter-chip links one multicast packet traverses under x-then-y
@@ -62,6 +110,19 @@ impl Noc {
     /// are charged **once**, not once per destination. This is what makes
     /// chip-packed placements measurably cheaper than scattered ones.
     pub fn multicast_tree_hops(src: PeHandle, targets: &[PeHandle]) -> u64 {
+        Self::multicast_tree_hops_split(src, targets, 0).total()
+    }
+
+    /// [`Noc::multicast_tree_hops`] with link classification: an x link
+    /// between columns `x` and `x+1` is a **board link** when the two
+    /// columns belong to different boards of `board_chips_x`-column boards
+    /// (`board_chips_x == 0` = no board boundaries, everything on-board).
+    /// Shared trunk segments are still charged once per class.
+    pub fn multicast_tree_hops_split(
+        src: PeHandle,
+        targets: &[PeHandle],
+        board_chips_x: usize,
+    ) -> TreeHops {
         let mut links: BTreeSet<((usize, usize), (usize, usize))> = BTreeSet::new();
         for dst in targets {
             let (mut x, mut y) = (src.chip_x, src.chip_y);
@@ -76,7 +137,16 @@ impl Noc {
                 y = ny;
             }
         }
-        links.len() as u64
+        let mut hops = TreeHops::default();
+        for &((ax, _), (bx, _)) in &links {
+            let crosses = board_chips_x > 0 && ax / board_chips_x != bx / board_chips_x;
+            if crosses {
+                hops.board_links += 1;
+            } else {
+                hops.on_board += 1;
+            }
+        }
+        hops
     }
 
     /// Deliver a multicast packet; returns per-target latencies in the order
@@ -91,7 +161,9 @@ impl Noc {
     /// traffic estimator's bulk path (N spikes along one routing entry).
     pub fn multicast_scaled(&mut self, src: PeHandle, targets: &[PeHandle], count: u64) -> Vec<u64> {
         self.packets += count;
-        self.hops += count * Self::multicast_tree_hops(src, targets);
+        let tree = Self::multicast_tree_hops_split(src, targets, self.config.board_chips_x);
+        self.hops += count * tree.total();
+        self.board_hops += count * tree.board_links;
         targets
             .iter()
             .enumerate()
@@ -153,6 +225,35 @@ mod tests {
         let lat_one = one.multicast(pe(0, 0, 0), &[pe(2, 0, 0), pe(2, 1, 0)]);
         assert_eq!(lat_bulk, lat_one, "latency profile is per packet");
         assert_eq!(one.hops, 3);
+    }
+
+    #[test]
+    fn board_links_split_out_of_the_tree() {
+        // Boards 2 columns wide: (0,0) → (3,0) walks x links 0-1, 1-2, 2-3;
+        // 1-2 and only 1-2 crosses the board boundary.
+        let hops = Noc::multicast_tree_hops_split(pe(0, 0, 0), &[pe(3, 0, 0)], 2);
+        assert_eq!(hops, TreeHops { on_board: 2, board_links: 1 });
+        assert_eq!(hops.total(), Noc::multicast_tree_hops(pe(0, 0, 0), &[pe(3, 0, 0)]));
+        // Width 0 = no boundaries: everything on-board.
+        let flat = Noc::multicast_tree_hops_split(pe(0, 0, 0), &[pe(3, 0, 0)], 0);
+        assert_eq!(flat, TreeHops { on_board: 3, board_links: 0 });
+        // y links never cross boards.
+        let y_only = Noc::multicast_tree_hops_split(pe(1, 0, 0), &[pe(1, 4, 0)], 2);
+        assert_eq!(y_only, TreeHops { on_board: 4, board_links: 0 });
+    }
+
+    #[test]
+    fn board_hops_telemetry_and_latency() {
+        let cfg = NocConfig { board_chips_x: 2, ..Default::default() };
+        let mut noc = Noc::new(cfg);
+        noc.multicast_scaled(pe(0, 0, 0), &[pe(3, 0, 0)], 5);
+        assert_eq!(noc.hops, 5 * 3);
+        assert_eq!(noc.board_hops, 5);
+        // Crossing a board boundary costs more than the same distance
+        // within one board.
+        let across = noc.unicast_latency_ns(pe(1, 0, 0), pe(2, 0, 0));
+        let within = noc.unicast_latency_ns(pe(0, 0, 0), pe(1, 0, 0));
+        assert_eq!(across - within, cfg.per_board_link_ns);
     }
 
     #[test]

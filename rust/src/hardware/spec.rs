@@ -91,10 +91,22 @@ impl Default for ChipSpec {
     }
 }
 
-/// A whole machine: a W×H grid of chips (scales to supercomputer size).
+/// A whole machine: `boards` boards arrayed along the x axis, each a
+/// W×H grid of chips (scales to the 10M-core supercomputer shape:
+/// board-of-boards, chips within boards).
+///
+/// `chips_x`/`chips_y` are **per-board** dimensions; the full chip grid is
+/// `(boards × chips_x) × chips_y`, with board `b` owning chip columns
+/// `b*chips_x .. (b+1)*chips_x`. Crossing between adjacent boards uses a
+/// board-level link with its own latency cost (see
+/// [`super::noc::NocConfig::per_board_link_ns`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MachineSpec {
+    /// Number of boards in the array (1 = the single-machine seed shape).
+    pub boards: usize,
+    /// Chip columns per board.
     pub chips_x: usize,
+    /// Chip rows per board.
     pub chips_y: usize,
     pub chip: ChipSpec,
 }
@@ -102,20 +114,96 @@ pub struct MachineSpec {
 impl Default for MachineSpec {
     fn default() -> Self {
         // Single-chip default, like the paper's per-layer experiments.
-        MachineSpec { chips_x: 1, chips_y: 1, chip: ChipSpec::default() }
+        MachineSpec { boards: 1, chips_x: 1, chips_y: 1, chip: ChipSpec::default() }
     }
 }
+
+/// Typed rejection of a malformed `--machine` specification — the CLI
+/// surfaces these instead of panicking on bad input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MachineParseError {
+    /// Not `light-board`, `WxH` or `BxWxH` with integer dimensions.
+    Malformed(String),
+    /// Parsed, but some dimension is zero (a machine with no chips).
+    ZeroDimension(String),
+}
+
+impl std::fmt::Display for MachineParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MachineParseError::Malformed(s) => {
+                write!(f, "malformed machine spec '{s}': expected WxH, BxWxH or light-board")
+            }
+            MachineParseError::ZeroDimension(s) => {
+                write!(f, "machine spec '{s}' has a zero dimension: every one of boards, chips_x and chips_y must be >= 1")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MachineParseError {}
 
 impl MachineSpec {
     /// A board-scale machine (SpiNNaker2 light board: 8×6 grid = 48 chips).
     pub fn board() -> Self {
-        MachineSpec { chips_x: 8, chips_y: 6, chip: ChipSpec::default() }
+        MachineSpec { boards: 1, chips_x: 8, chips_y: 6, chip: ChipSpec::default() }
     }
 
-    pub fn chips(&self) -> usize {
+    /// A board array: `boards` boards of `chips_x`×`chips_y` chips each.
+    pub fn board_array(boards: usize, chips_x: usize, chips_y: usize) -> Self {
+        MachineSpec { boards, chips_x, chips_y, chip: ChipSpec::default() }
+    }
+
+    /// Parse a `--machine` spec: `light-board` (8×6), `WxH` (one board) or
+    /// `BxWxH` (a B-board array of W×H-chip boards). Typed errors, never a
+    /// panic, on malformed or zero-dimension input.
+    pub fn parse(s: &str) -> Result<Self, MachineParseError> {
+        if s == "light-board" {
+            return Ok(MachineSpec::board());
+        }
+        let parts: Vec<&str> = s.split('x').collect();
+        let dims: Vec<usize> = parts
+            .iter()
+            .map(|p| p.parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| MachineParseError::Malformed(s.to_string()))?;
+        let (boards, chips_x, chips_y) = match dims[..] {
+            [w, h] => (1, w, h),
+            [b, w, h] => (b, w, h),
+            _ => return Err(MachineParseError::Malformed(s.to_string())),
+        };
+        if boards == 0 || chips_x == 0 || chips_y == 0 {
+            return Err(MachineParseError::ZeroDimension(s.to_string()));
+        }
+        Ok(MachineSpec { boards, chips_x, chips_y, chip: ChipSpec::default() })
+    }
+
+    /// Chip columns across the whole board array.
+    pub fn total_chips_x(&self) -> usize {
+        self.boards * self.chips_x
+    }
+
+    /// The board owning chip column `x` of the full grid.
+    pub fn board_of_chip_x(&self, x: usize) -> usize {
+        x / self.chips_x
+    }
+
+    /// Chips per board.
+    pub fn chips_per_board(&self) -> usize {
         self.chips_x * self.chips_y
     }
 
+    /// PEs per board.
+    pub fn pes_per_board(&self) -> usize {
+        self.chips_per_board() * self.chip.pes_per_chip
+    }
+
+    /// Chips across the whole board array.
+    pub fn chips(&self) -> usize {
+        self.boards * self.chips_x * self.chips_y
+    }
+
+    /// PEs across the whole board array.
     pub fn total_pes(&self) -> usize {
         self.chips() * self.chip.pes_per_chip
     }
@@ -153,6 +241,85 @@ mod tests {
     fn machine_pe_counts() {
         assert_eq!(MachineSpec::default().total_pes(), 152);
         assert_eq!(MachineSpec::board().total_pes(), 48 * 152);
+    }
+
+    #[test]
+    fn board_array_geometry() {
+        let spec = MachineSpec::board_array(4, 2, 3);
+        assert_eq!(spec.chips(), 24);
+        assert_eq!(spec.chips_per_board(), 6);
+        assert_eq!(spec.total_chips_x(), 8);
+        assert_eq!(spec.pes_per_board(), 6 * 152);
+        assert_eq!(spec.total_pes(), 24 * 152);
+        assert_eq!(spec.board_of_chip_x(0), 0);
+        assert_eq!(spec.board_of_chip_x(1), 0);
+        assert_eq!(spec.board_of_chip_x(2), 1);
+        assert_eq!(spec.board_of_chip_x(7), 3);
+    }
+
+    #[test]
+    fn parse_accepts_all_three_forms() {
+        assert_eq!(MachineSpec::parse("light-board").unwrap(), MachineSpec::board());
+        let wh = MachineSpec::parse("3x2").unwrap();
+        assert_eq!((wh.boards, wh.chips_x, wh.chips_y), (1, 3, 2));
+        let bwh = MachineSpec::parse("4x3x2").unwrap();
+        assert_eq!((bwh.boards, bwh.chips_x, bwh.chips_y), (4, 3, 2));
+    }
+
+    #[test]
+    fn parse_rejects_empty() {
+        assert_eq!(MachineSpec::parse(""), Err(MachineParseError::Malformed("".into())));
+    }
+
+    #[test]
+    fn parse_rejects_bare_separator() {
+        assert_eq!(MachineSpec::parse("x"), Err(MachineParseError::Malformed("x".into())));
+    }
+
+    #[test]
+    fn parse_rejects_missing_dimension() {
+        assert_eq!(MachineSpec::parse("2x"), Err(MachineParseError::Malformed("2x".into())));
+    }
+
+    #[test]
+    fn parse_rejects_non_numeric() {
+        assert_eq!(MachineSpec::parse("ax3"), Err(MachineParseError::Malformed("ax3".into())));
+        assert_eq!(
+            MachineSpec::parse("2x3x-1"),
+            Err(MachineParseError::Malformed("2x3x-1".into()))
+        );
+    }
+
+    #[test]
+    fn parse_rejects_single_number() {
+        assert_eq!(MachineSpec::parse("5"), Err(MachineParseError::Malformed("5".into())));
+    }
+
+    #[test]
+    fn parse_rejects_four_dimensions() {
+        assert_eq!(
+            MachineSpec::parse("2x3x4x5"),
+            Err(MachineParseError::Malformed("2x3x4x5".into()))
+        );
+    }
+
+    #[test]
+    fn parse_rejects_zero_dimensions() {
+        for bad in ["0x3", "3x0", "0x2x2", "2x0x2", "2x2x0"] {
+            assert_eq!(
+                MachineSpec::parse(bad),
+                Err(MachineParseError::ZeroDimension(bad.into())),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_error_displays_the_input() {
+        let e = MachineSpec::parse("bogus").unwrap_err();
+        assert!(e.to_string().contains("bogus"));
+        let e = MachineSpec::parse("0x1").unwrap_err();
+        assert!(e.to_string().contains("zero dimension"));
     }
 
     #[test]

@@ -12,7 +12,8 @@
 //!                   [--artifact-dir PATH]
 //! s2switch simulate [--steps 200] [--batch S] [--pjrt] [--jobs N]
 //!                   [--intra-jobs N] [--profile]
-//!                   [--machine WxH|light-board] [--strategy S]
+//!                   [--machine BxWxH|WxH|light-board] [--strategy S]
+//!                   [--partition linear|traffic]
 //!                   [--artifact-dir PATH]
 //!                   [--adaptive] [--swap-window W] [--swap-patience K]
 //!                   [--fault-map PATH] [--fault-seed N] [--fault-rate F]
@@ -34,7 +35,12 @@
 //! per-layer observed-activity table feeding the runtime-informed
 //! paradigm check.
 //! `--machine WxH` sizes the chip grid (`light-board` = the 8×6 48-chip
-//! SpiNNaker2 light board); `--strategy` picks the PE placement strategy.
+//! SpiNNaker2 light board; `BxWxH` = a board array of B light-board-class
+//! boards, each a WxH chip grid, simulated as one shard per board with
+//! wave-boundary spike exchange); `--partition linear|traffic` picks how
+//! populations are assigned to boards (traffic = minimize estimated
+//! inter-board multicast hops); `--strategy` picks the PE placement
+//! strategy.
 //! Compile/simulate runs end with a placement utilization + NoC hop
 //! summary sourced from the real [`Placement`](s2switch::switching::Placement).
 //! `--artifact-dir PATH` attaches the persistent compiled-artifact store
@@ -137,8 +143,8 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|cali
             --machine WxH|light-board --strategy linear|chip-packed|balanced
             --artifact-dir PATH
   simulate  --steps N --batch S --pjrt --jobs N --intra-jobs N --profile
-            --record-csv PATH --machine WxH|light-board --strategy S
-            --artifact-dir PATH
+            --record-csv PATH --machine BxWxH|WxH|light-board --strategy S
+            --partition linear|traffic --artifact-dir PATH
             --adaptive --swap-window W --swap-patience K
             --fault-map PATH --fault-seed N --fault-rate F
             run the demo network end to end (--batch S: S stimulus samples
@@ -165,8 +171,11 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|cali
             stale (>30 days), foreign, or from another kernel variant
   (--jobs N: worker threads for compiling, batching and same-wave layer
    stepping, 0 = one per CPU;
-   --machine WxH: chip grid, light-board = 8x6; compile/simulate print a
-   placement utilization + NoC hop summary on exit;
+   --machine WxH: chip grid, light-board = 8x6, BxWxH: B-board array of WxH
+   grids — simulate runs one shard per board with wave-boundary spike
+   exchange, partitioned by --partition linear|traffic (default traffic);
+   compile/simulate print a placement utilization + NoC hop summary (with
+   the on-board / board-link-crossing split) on exit;
    --artifact-dir PATH: persistent compiled-artifact store — compiles and
    estimates are served from disk when present and written back when not,
    so a warm store boots with zero materializing compiles)";
@@ -247,22 +256,25 @@ fn attach_artifact_dir(args: &Args, sys: &mut SwitchingSystem) -> Result<()> {
     Ok(())
 }
 
-/// `--machine WxH` (chip grid) or `--machine light-board` (the 8×6 48-chip
-/// SpiNNaker2 light board). Absent → the single-chip default.
+/// `--machine WxH` (chip grid), `--machine BxWxH` (a board array: B boards
+/// of WxH chips each), or `--machine light-board` (the 8×6 48-chip
+/// SpiNNaker2 light board). Absent → the single-chip default. Parsing and
+/// its typed rejections live in [`MachineSpec::parse`].
 fn parse_machine(args: &Args) -> Result<s2switch::hardware::MachineSpec> {
     use s2switch::hardware::MachineSpec;
     match args.get("machine") {
         None => Ok(MachineSpec::default()),
-        Some("light-board") => Ok(MachineSpec::board()),
-        Some(s) => {
-            let (w, h) = s
-                .split_once('x')
-                .with_context(|| format!("--machine {s}: expected WxH or light-board"))?;
-            let chips_x: usize = w.parse().with_context(|| format!("--machine {s}"))?;
-            let chips_y: usize = h.parse().with_context(|| format!("--machine {s}"))?;
-            ensure!(chips_x > 0 && chips_y > 0, "--machine {s}: grid must be non-empty");
-            Ok(MachineSpec { chips_x, chips_y, ..Default::default() })
-        }
+        Some(s) => MachineSpec::parse(s).with_context(|| format!("--machine {s}")),
+    }
+}
+
+/// `--partition linear|traffic` — the board partitioner objective (default:
+/// traffic — greedy traffic-weighted clustering; only consulted when
+/// `--machine BxWxH` names more than one board).
+fn parse_partition(args: &Args) -> Result<s2switch::graph::PartitionStrategy> {
+    match args.get("partition") {
+        None => Ok(s2switch::graph::PartitionStrategy::Traffic),
+        Some(s) => s2switch::graph::PartitionStrategy::parse(s),
     }
 }
 
@@ -280,23 +292,29 @@ fn parse_strategy(args: &Args) -> Result<s2switch::hardware::PlacementStrategy> 
 fn print_placement_summary(adm: &s2switch::switching::NetworkAdmission) {
     let p = &adm.placement;
     let spec = p.machine.spec();
+    let machine_desc = if spec.boards > 1 {
+        format!("{} boards x {}x{} chips", spec.boards, spec.chips_x, spec.chips_y)
+    } else {
+        format!("{}x{} machine", spec.chips_x, spec.chips_y)
+    };
     println!(
-        "placement [{}]: {} PEs on {}/{} chips ({}x{} machine), {} B DTCM placed, \
+        "placement [{}]: {} PEs on {}/{} chips ({machine_desc}), {} B DTCM placed, \
          mean utilization {:.1}%",
         p.strategy,
         p.n_pes(),
         p.chips_used(),
         spec.chips(),
-        spec.chips_x,
-        spec.chips_y,
         p.placed_dtcm(),
         100.0 * p.machine.mean_utilization()
     );
+    let hops = p.static_hops_split();
     println!(
-        "routing: {} multicast entries, {} static inter-chip tree hops, \
-         {} capacity override(s)",
+        "routing: {} multicast entries, {} static inter-chip tree hops \
+         ({} on-board + {} board-link crossings), {} capacity override(s)",
         p.routing.len(),
         p.static_tree_hops(),
+        hops.on_board,
+        hops.board_links,
         adm.capacity_overrides()
     );
 }
@@ -563,6 +581,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         },
         None => None,
     };
+    // --machine BxWxH (boards > 1) routes through the sharded driver: the
+    // traffic-aware partitioner assigns populations to boards, admission
+    // plans against per-board headroom, and one NetworkSim shard per board
+    // runs with spike-word exchange at wave boundaries.
+    let mspec = parse_machine(args)?;
+    if mspec.boards > 1 {
+        ensure!(
+            !args.has("fault-map") && !args.has("fault-seed") && !args.has("fault-rate"),
+            "--fault-* recovery is single-board for now (drop the BxWxH --machine)"
+        );
+        ensure!(!args.has("adaptive"), "--adaptive re-switching is single-board for now");
+        ensure!(args.parse_or("batch", 0usize)? == 0, "--batch is single-board for now");
+        ensure!(!args.has("pjrt"), "sharded runs use the native backend");
+        ensure!(!args.has("profile"), "--profile applies to single-board runs");
+        return simulate_sharded(args, &net, &mut sys, steps, rate, mspec);
+    }
     // Any --fault-* flag routes through the fault-tolerant recovery loop
     // (checkpoint at sample boundaries, re-admit + re-place survivors,
     // replay — DESIGN.md §Fault-Tolerance). --adaptive composes: the
@@ -701,6 +735,81 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     if let Some(out) = record_path {
         sim.recorder.save_spikes_csv(std::path::Path::new(out))?;
+        println!("spikes exported to {out}");
+    }
+    Ok(())
+}
+
+/// `simulate --machine BxWxH` (boards > 1): partition → per-board
+/// admission → sharded placement → one [`ShardedSim`](s2switch::sim::ShardedSim)
+/// shard per board with wave-boundary spike exchange. The stimulus seed and
+/// per-neuron draw order match the single-board path, so recorded spike
+/// counts are comparable across `--machine` values (and identical when the
+/// model is identical — the determinism the shard test suite pins down).
+fn simulate_sharded(
+    args: &Args,
+    net: &s2switch::model::Network,
+    sys: &mut SwitchingSystem,
+    steps: u64,
+    rate: f64,
+    mspec: s2switch::hardware::MachineSpec,
+) -> Result<()> {
+    let pstrat = parse_partition(args)?;
+    let sharded = sys.admit_network_sharded(net, mspec, parse_strategy(args)?, pstrat)?;
+    let adm = &sharded.admission;
+    for (i, l) in adm.layers.iter().enumerate() {
+        println!(
+            "layer {i}: {}{} on board {} ({} PEs, compiled in {:.2?})",
+            l.paradigm(),
+            if adm.decisions[i].overridden { " [capacity override]" } else { "" },
+            sharded.assignment.board_of_layer[i],
+            l.n_pes(),
+            std::time::Duration::from_nanos(adm.layer_nanos[i])
+        );
+    }
+    print_placement_summary(adm);
+    let cap = mspec.pes_per_board();
+    for (b, d) in sharded.assignment.board_demand(&sharded.demand).iter().enumerate() {
+        println!(
+            "board {b}: {d}/{cap} PEs estimated demand ({:.1}% of board capacity)",
+            100.0 * *d as f64 / cap as f64
+        );
+    }
+    println!(
+        "partition [{pstrat}]: {} boards, {} estimated inter-board cut hops",
+        sharded.assignment.boards,
+        sharded.assignment.cut_hops(net)
+    );
+
+    let mut sim = s2switch::sim::ShardedSim::new(net, &adm.layers, &sharded.assignment)?;
+    let sizes: Vec<usize> = net.populations.iter().map(|p| p.n_neurons).collect();
+    let mut rng = Rng::new(99);
+    let mut provider = move |p: s2switch::model::PopulationId, _t: u64, out: &mut Vec<u32>| {
+        out.extend((0..sizes[p.0] as u32).filter(|_| rng.chance(rate)));
+    };
+    let t0 = std::time::Instant::now();
+    sim.run_jobs(steps, &mut provider, resolve_jobs(args)?);
+    let dt = t0.elapsed();
+    println!(
+        "simulated {steps} steps on {} shard(s) in {:.2?} ({:.0} steps/s)",
+        sim.n_shards(),
+        dt,
+        steps as f64 / dt.as_secs_f64()
+    );
+    let recorder = sim.merged_recorder();
+    for pop in &net.populations {
+        if pop.record_spikes {
+            println!("  {}: {} spikes", pop.label, recorder.spike_count(pop.id));
+        }
+    }
+    let secs = dt.as_secs_f64();
+    print_throughput(
+        steps as f64 / secs,
+        sim.total_events() as f64 / secs,
+        sim.total_macs() as f64 / secs,
+    );
+    if let Some(out) = args.get("record-csv").or_else(|| args.get("record")) {
+        recorder.save_spikes_csv(std::path::Path::new(out))?;
         println!("spikes exported to {out}");
     }
     Ok(())

@@ -21,6 +21,10 @@
 //! * [`batch`] — [`BatchRunner`]: many independent stimulus samples fanned
 //!   over worker threads against shared compiled layers (composable with
 //!   intra-sample layer parallelism via `with_intra_jobs`).
+//! * [`shard`] — [`ShardedSim`]: one `NetworkSim` per board of a board
+//!   array, stepped in lock-step waves with a fixed-order spike-word
+//!   exchange at wave boundaries; merged recorders are bit-identical to a
+//!   single-board run at any board and worker count.
 //! * [`spikebits`] — bit-packed spike words: `u64` bitmaps iterated via
 //!   `trailing_zeros`, shared by both engines' spike dispatch and by the
 //!   serial ring readout / parallel row-occupancy gating.
@@ -35,9 +39,11 @@ pub mod batch;
 pub mod network;
 pub mod parallel_engine;
 pub mod serial_engine;
+pub mod shard;
 pub mod spikebits;
 
 pub use backend::{BackendBox, MacBackend, NativeMac};
+pub use shard::ShardedSim;
 pub use spikebits::SpikeWords;
 pub use batch::{BatchRun, BatchRunner};
 pub use network::{

@@ -442,13 +442,16 @@ impl NetworkSim {
     pub fn new(
         net: &Network,
         layers: Vec<CompiledLayer>,
-        mut backend_factory: impl FnMut() -> BackendBox,
+        backend_factory: impl FnMut() -> BackendBox,
     ) -> Result<Self> {
-        Self::validate(net, layers.len())?;
+        let depth = Self::wave_depths(net);
+        Self::with_depths(net, layers, backend_factory, &depth)
+    }
 
-        // Longest-path depth per population ("wave"): sources sit at 0 and
-        // every projection crosses into a strictly deeper wave (guaranteed
-        // by the feed-forward check in `validate`).
+    /// Longest-path depth per population ("wave"): sources sit at 0 and
+    /// every projection crosses into a strictly deeper wave (guaranteed by
+    /// the feed-forward check in `validate`).
+    pub(crate) fn wave_depths(net: &Network) -> Vec<usize> {
         let topo = net.topo_order();
         let mut depth = vec![0usize; net.populations.len()];
         for &pid in &topo {
@@ -458,6 +461,35 @@ impl NetworkSim {
                 }
             }
         }
+        depth
+    }
+
+    /// [`NetworkSim::new`] with a caller-supplied wave depth per population.
+    /// The sharded driver builds each board's shard over a *sub-network*
+    /// (fewer projections) but with the **global** depths of the full
+    /// network, so every shard runs the same wave schedule and the
+    /// wave-boundary spike exchange lines up across boards.
+    pub(crate) fn with_depths(
+        net: &Network,
+        layers: Vec<CompiledLayer>,
+        mut backend_factory: impl FnMut() -> BackendBox,
+        depth: &[usize],
+    ) -> Result<Self> {
+        Self::validate(net, layers.len())?;
+        ensure!(
+            depth.len() == net.populations.len(),
+            "wave depths cover {} populations, network has {}",
+            depth.len(),
+            net.populations.len()
+        );
+        for proj in &net.projections {
+            ensure!(
+                depth[proj.source.0] < depth[proj.target.0],
+                "wave depths are not topological for projection {}",
+                proj.id.0
+            );
+        }
+        let topo = net.topo_order();
         let n_waves = depth.iter().max().map_or(1, |&d| d + 1);
         let mut pops_of_wave = vec![Vec::new(); n_waves];
         for &pid in &topo {
@@ -835,7 +867,7 @@ impl NetworkSim {
     }
 
     /// Pre-size voltage traces for `steps` more recorded rows.
-    fn reserve_recording(&mut self, steps: u64) {
+    pub(crate) fn reserve_recording(&mut self, steps: u64) {
         for (p, state) in self.pops.iter().enumerate() {
             if self.record_v[p] {
                 if let Some(state) = state {
@@ -923,6 +955,111 @@ impl NetworkSim {
         }
 
         self.t += 1;
+    }
+
+    /// Number of topological waves per timestep.
+    pub fn n_waves(&self) -> usize {
+        self.wave_bounds.len()
+    }
+
+    /// Wave-granular Phase A for the **LIF populations** of wave `w`: fire
+    /// from the accumulated currents, bit-pack the spikes, record. Spike
+    /// sources of this wave are left untouched — the sharded driver injects
+    /// their words via [`NetworkSim::inject_words`] instead of a provider
+    /// callback. Together with [`NetworkSim::run_wave_engines`] and
+    /// [`NetworkSim::advance_step`], this decomposes [`NetworkSim::step`]
+    /// so a coordinator can splice a cross-shard spike exchange between a
+    /// wave's firing and its engines.
+    pub fn fire_wave(&mut self, w: usize) {
+        let NetworkSim {
+            ref pops_of_wave,
+            ref mut pops,
+            ref mut currents,
+            ref mut spike_buf,
+            ref mut spike_words,
+            ref record_spikes,
+            ref record_v,
+            ref mut recorder,
+            profile,
+            ref mut lif_nanos,
+            ref mut record_nanos,
+            t,
+            ..
+        } = *self;
+
+        for &p in &pops_of_wave[w] {
+            let Some(state) = &mut pops[p] else { continue };
+            let buf = &mut spike_buf[p];
+            let t0 = profile.then(Instant::now);
+            lif_step_chunked(&state.params, &mut state.v, &currents[p], &mut state.refrac, buf);
+            currents[p].fill(0.0);
+            if let Some(t0) = t0 {
+                *lif_nanos += t0.elapsed().as_nanos() as u64;
+            }
+            spike_words[p].fill_from_ids(buf);
+        }
+
+        let t0 = profile.then(Instant::now);
+        for &p in &pops_of_wave[w] {
+            if pops[p].is_none() {
+                continue;
+            }
+            if record_v[p] {
+                if let Some(state) = &pops[p] {
+                    recorder.record_v_step(p, &state.v);
+                }
+            }
+            if record_spikes[p] && !spike_buf[p].is_empty() {
+                let rec = recorder.spikes.entry(p).or_default();
+                rec.extend(spike_buf[p].iter().map(|&n| (t, n)));
+            }
+        }
+        if let Some(t0) = t0 {
+            *record_nanos += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Overwrite population `p`'s packed spike words for the current step
+    /// with externally produced spikes (a remote shard's firing, or
+    /// coordinator-generated stimulus), recording them if `p` is recorded
+    /// here. The id rebuild iterates set bits in ascending order, matching
+    /// the ascending ids the LIF kernel emits — injected spikes are
+    /// bit-identical to locally fired ones.
+    pub fn inject_words(&mut self, p: usize, words: &SpikeWords) {
+        self.spike_words[p].copy_from(words);
+        let buf = &mut self.spike_buf[p];
+        buf.clear();
+        words.for_each(|id| buf.push(id as u32));
+        if self.record_spikes[p] && !buf.is_empty() {
+            let t = self.t;
+            let rec = self.recorder.spikes.entry(p).or_default();
+            rec.extend(buf.iter().map(|&n| (t, n)));
+        }
+    }
+
+    /// Wave-granular Phase B: the engines sourced in wave `w` consume the
+    /// wave's packed spikes and accumulate currents into their (strictly
+    /// deeper) targets, in fixed engine order.
+    pub fn run_wave_engines(&mut self, w: usize) {
+        let (lo, hi) = self.wave_bounds[w];
+        for slot in &mut self.engines[lo..hi] {
+            let due = slot.engine.step_currents_words(&self.spike_words[slot.src.0]);
+            for (a, &d) in self.currents[slot.tgt.0].iter_mut().zip(due) {
+                *a += d;
+            }
+        }
+    }
+
+    /// Advance the clock after all waves of a timestep ran through
+    /// [`NetworkSim::fire_wave`] / [`NetworkSim::run_wave_engines`].
+    pub fn advance_step(&mut self) {
+        self.t += 1;
+    }
+
+    /// Population `p`'s packed spike words of the current step (valid after
+    /// its wave fired).
+    pub fn spike_words_of(&self, p: usize) -> &SpikeWords {
+        &self.spike_words[p]
     }
 
     /// Run `steps` timesteps single-threaded.
@@ -1443,6 +1580,40 @@ mod tests {
         sim.run_jobs(30, &mut provider, 8);
         sim.run(10, &mut provider);
         assert_eq!(sim.timestep(), 40);
+    }
+
+    #[test]
+    fn wave_granular_stepping_matches_step() {
+        // The sharded driver's decomposition of `step` — fire_wave, an
+        // inject_words exchange for the sources, run_wave_engines,
+        // advance_step — must reproduce the monolithic loop bit-for-bit.
+        let net = three_layer_net(33, 40, 30, 12, 0.4, 0.7, 3, 2);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+
+        let mut reference = NetworkSim::native(&net, layers.clone()).unwrap();
+        let mut provider = provider_with(40, 0.25, 17);
+        reference.run(60, &mut provider);
+
+        let mut sim = NetworkSim::native(&net, layers).unwrap();
+        let mut provider = provider_with(40, 0.25, 17);
+        let mut ids = Vec::new();
+        let mut scratch = SpikeWords::new(40);
+        for _ in 0..60 {
+            for w in 0..sim.n_waves() {
+                sim.fire_wave(w);
+                if w == 0 {
+                    ids.clear();
+                    provider(PopulationId(0), sim.timestep(), &mut ids);
+                    scratch.fill_from_ids(&ids);
+                    sim.inject_words(0, &scratch);
+                }
+                sim.run_wave_engines(w);
+            }
+            sim.advance_step();
+        }
+        assert_eq!(reference.recorder, sim.recorder);
+        assert!(reference.recorder.total_spikes() > 0, "fixture must spike");
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Multi-board sharded simulation: one [`NetworkSim`] per board, lock-step
+//! waves, spike-word exchange at wave boundaries.
+//!
+//! The partitioner ([`crate::graph::partition`]) assigns every population to
+//! a board, and every layer runs on its **target** population's board. Each
+//! board's shard is a [`NetworkSim`] over a sub-network: owned populations
+//! keep their LIF state and recording flags; remote populations appear as
+//! unrecorded spike-source *mirrors* (same id, same size) whose packed
+//! spike words are injected by the coordinator each wave. All shards run the
+//! **global** wave schedule ([`NetworkSim::with_depths`]), so a wave
+//! boundary means the same thing on every board.
+//!
+//! ## Determinism argument
+//!
+//! The merged recorder is bit-identical to a single [`NetworkSim`] over the
+//! whole network, at any board count and any worker count:
+//!
+//! 1. **Accumulation order.** Every projection into population `P` executes
+//!    on `P`'s home board (enforced at construction), so `currents[P]` is
+//!    accumulated by exactly one shard, whose engines run in the same
+//!    wave-grouped projection order as the monolithic sim's — f32 sums see
+//!    the same operands in the same order.
+//! 2. **Spike representation.** The LIF kernel emits ascending neuron ids;
+//!    [`SpikeWords`] iterates set bits ascending. An injected mirror
+//!    therefore reproduces the producer's id list exactly.
+//! 3. **Stimulus.** The coordinator alone calls the [`SpikeProvider`], in
+//!    the same (wave-major, topo-minor) population order as
+//!    [`NetworkSim::step`], once per source per step — a stateful provider
+//!    RNG sees the identical call sequence.
+//! 4. **Recording.** Each population is recorded on exactly one shard (its
+//!    home), at the same `(t, neuron)` granularity; merging is a disjoint
+//!    union keyed by population id.
+//!
+//! Worker threads only move *which CPU* runs a shard's already-deterministic
+//! work between barriers — they never reorder any of the above.
+
+use super::backend::NativeMac;
+use super::network::{NetworkSim, Recorder, SpikeProvider};
+use super::spikebits::SpikeWords;
+use crate::graph::BoardAssignment;
+use crate::model::population::NeuronKind;
+use crate::model::{Network, Population, PopulationId, Projection};
+use crate::switching::CompiledLayer;
+use anyhow::{ensure, Result};
+use std::collections::BTreeSet;
+#[cfg(not(feature = "pjrt"))]
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+#[cfg(not(feature = "pjrt"))]
+use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(not(feature = "pjrt"))]
+use std::sync::{Barrier, Mutex};
+
+/// Board `b`'s view of the network: owned populations verbatim, remote ones
+/// as unrecorded spike-source mirrors, and only the projections whose
+/// target lives on `b`. Mirror projections carry no synapses — the shard's
+/// engines run from the already-compiled layers, never from the model edge.
+fn shard_net(net: &Network, assignment: &BoardAssignment, b: usize) -> Network {
+    let populations: Vec<Population> = net
+        .populations
+        .iter()
+        .map(|p| {
+            if assignment.board_of_pop[p.id.0] == b {
+                p.clone()
+            } else {
+                Population {
+                    id: p.id,
+                    label: format!("{}@b{}", p.label, assignment.board_of_pop[p.id.0]),
+                    n_neurons: p.n_neurons,
+                    kind: NeuronKind::SpikeSource,
+                    record_spikes: false,
+                    record_v: false,
+                }
+            }
+        })
+        .collect();
+    let projections: Vec<Projection> = net
+        .projections
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| assignment.board_of_layer[i] == b)
+        .map(|(_, proj)| Projection {
+            id: proj.id,
+            source: proj.source,
+            target: proj.target,
+            synapses: Vec::new(),
+            weight_scale: proj.weight_scale,
+        })
+        .collect();
+    Network { populations, projections }
+}
+
+/// One simulator shard per board, stepped in lock-step waves with a
+/// fixed-order spike-word exchange at every wave boundary.
+pub struct ShardedSim {
+    shards: Vec<NetworkSim>,
+    /// Home board per population.
+    home: Vec<usize>,
+    /// `sources[p]` — is population `p` a spike source (coordinator-fed)?
+    sources: Vec<bool>,
+    /// Boards population `p`'s words are injected into each wave: consumer
+    /// boards other than its home for LIF populations; home plus all
+    /// consumer boards for sources. Sorted — the fixed exchange order.
+    inject_to: Vec<Vec<usize>>,
+    /// Global wave schedule (population indices per wave, topo order).
+    pops_of_wave: Vec<Vec<usize>>,
+    /// Per-population exchange staging buffer.
+    scratch: Vec<SpikeWords>,
+    /// Reused source-spike id buffer for provider calls.
+    ids: Vec<u32>,
+    n_waves: usize,
+    t: u64,
+}
+
+impl ShardedSim {
+    /// Build one shard per board from a compiled network and its board
+    /// assignment (one compiled layer per projection, same order).
+    pub fn new(
+        net: &Network,
+        layers: &[CompiledLayer],
+        assignment: &BoardAssignment,
+    ) -> Result<Self> {
+        let n_pops = net.populations.len();
+        ensure!(
+            layers.len() == net.projections.len(),
+            "need one compiled layer per projection ({} vs {})",
+            layers.len(),
+            net.projections.len()
+        );
+        ensure!(
+            assignment.board_of_pop.len() == n_pops
+                && assignment.board_of_layer.len() == net.projections.len(),
+            "board assignment shape does not match the network"
+        );
+        ensure!(assignment.boards >= 1, "need at least one board");
+        for (p, &b) in assignment.board_of_pop.iter().enumerate() {
+            ensure!(b < assignment.boards, "population {p} assigned to out-of-range board {b}");
+        }
+        for (i, proj) in net.projections.iter().enumerate() {
+            ensure!(
+                assignment.board_of_layer[i] == assignment.board_of_pop[proj.target.0],
+                "layer {i} does not run on its target's board — the sharded \
+                 accumulation-order invariant would break"
+            );
+        }
+
+        let depth = NetworkSim::wave_depths(net);
+        let n_waves = depth.iter().max().map_or(1, |&d| d + 1);
+        let topo = net.topo_order();
+        let mut pops_of_wave = vec![Vec::new(); n_waves];
+        for &pid in &topo {
+            pops_of_wave[depth[pid.0]].push(pid.0);
+        }
+
+        let shards: Vec<NetworkSim> = (0..assignment.boards)
+            .map(|b| {
+                let sub = shard_net(net, assignment, b);
+                let sub_layers: Vec<CompiledLayer> = net
+                    .projections
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| assignment.board_of_layer[i] == b)
+                    .map(|(i, _)| layers[i].clone())
+                    .collect();
+                NetworkSim::with_depths(&sub, sub_layers, || Box::new(NativeMac), &depth)
+            })
+            .collect::<Result<_>>()?;
+
+        let home = assignment.board_of_pop.clone();
+        let sources: Vec<bool> = net.populations.iter().map(|p| p.is_source()).collect();
+        let mut inject_sets: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n_pops];
+        for (i, proj) in net.projections.iter().enumerate() {
+            let b = assignment.board_of_layer[i];
+            if sources[proj.source.0] || b != home[proj.source.0] {
+                inject_sets[proj.source.0].insert(b);
+            }
+        }
+        for p in 0..n_pops {
+            if sources[p] {
+                // The home shard always receives source spikes, so they are
+                // recorded there (when flagged) exactly once.
+                inject_sets[p].insert(home[p]);
+            }
+        }
+
+        Ok(ShardedSim {
+            shards,
+            home,
+            sources,
+            inject_to: inject_sets.into_iter().map(|s| s.into_iter().collect()).collect(),
+            pops_of_wave,
+            scratch: net.populations.iter().map(|p| SpikeWords::new(p.n_neurons)).collect(),
+            ids: Vec::new(),
+            n_waves,
+            t: 0,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn timestep(&self) -> u64 {
+        self.t
+    }
+
+    /// Advance one timestep on every shard: per wave, all shards fire, the
+    /// coordinator exchanges the wave's spike words in fixed population
+    /// order, all shards run the wave's engines.
+    pub fn step(&mut self, provider: &mut SpikeProvider) {
+        for w in 0..self.n_waves {
+            for shard in &mut self.shards {
+                shard.fire_wave(w);
+            }
+            for &p in &self.pops_of_wave[w] {
+                if self.sources[p] {
+                    self.ids.clear();
+                    provider(PopulationId(p), self.t, &mut self.ids);
+                    self.scratch[p].fill_from_ids(&self.ids);
+                } else {
+                    if self.inject_to[p].is_empty() {
+                        continue;
+                    }
+                    self.scratch[p].copy_from(self.shards[self.home[p]].spike_words_of(p));
+                }
+                for &b in &self.inject_to[p] {
+                    self.shards[b].inject_words(p, &self.scratch[p]);
+                }
+            }
+            for shard in &mut self.shards {
+                shard.run_wave_engines(w);
+            }
+        }
+        for shard in &mut self.shards {
+            shard.advance_step();
+        }
+        self.t += 1;
+    }
+
+    /// Run `steps` timesteps with the coordinator stepping every shard.
+    pub fn run(&mut self, steps: u64, provider: &mut SpikeProvider) {
+        for shard in &mut self.shards {
+            shard.reserve_recording(steps);
+        }
+        for _ in 0..steps {
+            self.step(provider);
+        }
+    }
+
+    /// Run `steps` timesteps with each shard on its own scoped worker
+    /// thread (`jobs` = worker cap; 0 = one per CPU; capped at the board
+    /// count; ≤1 boards/workers falls back to [`ShardedSim::run`]).
+    ///
+    /// Workers own disjoint shard subsets (round-robin) and execute each
+    /// shard's fire/engine phases between barriers; the coordinator alone
+    /// calls the provider and performs the wave-boundary exchange while the
+    /// workers are parked between barriers. Which thread steps a shard is
+    /// the only thing `jobs` changes — recorders stay bit-identical.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_jobs(&mut self, steps: u64, provider: &mut SpikeProvider, jobs: usize) {
+        let jobs = if jobs == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            jobs
+        };
+        let workers = jobs.min(self.shards.len());
+        if workers <= 1 || steps == 0 {
+            self.run(steps, provider);
+            return;
+        }
+        self.run_shards_parallel(steps, provider, workers);
+    }
+
+    /// `pjrt` builds hold non-`Send` backends — step sequentially instead.
+    #[cfg(feature = "pjrt")]
+    pub fn run_jobs(&mut self, steps: u64, provider: &mut SpikeProvider, _jobs: usize) {
+        self.run(steps, provider);
+    }
+
+    /// The barrier-synchronized body behind [`ShardedSim::run_jobs`]
+    /// (`workers ≥ 2`). Schedule per step and wave (everybody waits 3×):
+    ///
+    /// | between            | workers                | coordinator          |
+    /// |--------------------|------------------------|----------------------|
+    /// | b1 → b2            | fire own shards        | provider → scratch   |
+    /// | b2 → b3            | (parked at b3)         | inject spike words   |
+    /// | b3 → next b1       | run own shards' engines| —                    |
+    ///
+    /// The barrier schedule makes shard access exclusive in every region,
+    /// so the per-shard mutexes are uncontended formality.
+    #[cfg(not(feature = "pjrt"))]
+    fn run_shards_parallel(&mut self, steps: u64, provider: &mut SpikeProvider, workers: usize) {
+        for shard in &mut self.shards {
+            shard.reserve_recording(steps);
+        }
+        let n_waves = self.n_waves;
+        let n_shards = self.shards.len();
+        let cells: Vec<Mutex<&mut NetworkSim>> = self.shards.iter_mut().map(Mutex::new).collect();
+        let ShardedSim {
+            ref home,
+            ref sources,
+            ref inject_to,
+            ref pops_of_wave,
+            ref mut scratch,
+            ref mut ids,
+            ref mut t,
+            ..
+        } = *self;
+
+        // Same panic containment as `NetworkSim::run_waves_parallel`: every
+        // work region is caught, the first payload wins, `abort` silences
+        // the rest, every party still runs its full barrier schedule, and
+        // the panic resumes on the caller thread after the scope joins.
+        let abort = AtomicBool::new(false);
+        let panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let trap = |r: std::thread::Result<()>| {
+            if let Err(payload) = r {
+                abort.store(true, Ordering::SeqCst);
+                panic_payload.lock().unwrap().get_or_insert(payload);
+            }
+        };
+
+        let barrier = Barrier::new(workers + 1);
+        std::thread::scope(|scope| {
+            for k in 0..workers {
+                let owned: Vec<usize> = (k..n_shards).step_by(workers).collect();
+                let barrier = &barrier;
+                let cells = &cells;
+                let abort = &abort;
+                let trap = &trap;
+                scope.spawn(move || {
+                    for _ in 0..steps {
+                        for w in 0..n_waves {
+                            barrier.wait(); // b1: coordinator generates stimulus
+                            if !abort.load(Ordering::SeqCst) {
+                                trap(catch_unwind(AssertUnwindSafe(|| {
+                                    for &b in &owned {
+                                        cells[b].lock().unwrap().fire_wave(w);
+                                    }
+                                })));
+                            }
+                            barrier.wait(); // b2: coordinator injects
+                            barrier.wait(); // b3: words are in place
+                            if !abort.load(Ordering::SeqCst) {
+                                trap(catch_unwind(AssertUnwindSafe(|| {
+                                    for &b in &owned {
+                                        cells[b].lock().unwrap().run_wave_engines(w);
+                                    }
+                                })));
+                            }
+                        }
+                        if !abort.load(Ordering::SeqCst) {
+                            trap(catch_unwind(AssertUnwindSafe(|| {
+                                for &b in &owned {
+                                    cells[b].lock().unwrap().advance_step();
+                                }
+                            })));
+                        }
+                    }
+                });
+            }
+
+            // Coordinator (this thread).
+            for _ in 0..steps {
+                for w in 0..n_waves {
+                    barrier.wait(); // b1: workers fire wave w
+                    if !abort.load(Ordering::SeqCst) {
+                        trap(catch_unwind(AssertUnwindSafe(|| {
+                            for &p in &pops_of_wave[w] {
+                                if sources[p] {
+                                    ids.clear();
+                                    provider(PopulationId(p), *t, ids);
+                                    scratch[p].fill_from_ids(ids);
+                                }
+                            }
+                        })));
+                    }
+                    barrier.wait(); // b2: firing done, shards are exclusive
+                    if !abort.load(Ordering::SeqCst) {
+                        trap(catch_unwind(AssertUnwindSafe(|| {
+                            for &p in &pops_of_wave[w] {
+                                if !sources[p] {
+                                    if inject_to[p].is_empty() {
+                                        continue;
+                                    }
+                                    let words = cells[home[p]].lock().unwrap();
+                                    scratch[p].copy_from(words.spike_words_of(p));
+                                }
+                                for &b in &inject_to[p] {
+                                    cells[b].lock().unwrap().inject_words(p, &scratch[p]);
+                                }
+                            }
+                        })));
+                    }
+                    barrier.wait(); // b3: workers run wave w's engines
+                }
+                *t += 1;
+            }
+        });
+
+        if let Some(payload) = panic_payload.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Disjoint union of all shard recorders: every population is recorded
+    /// on exactly one shard (its home board), so this is a re-keying, not a
+    /// merge of overlapping data.
+    pub fn merged_recorder(&self) -> Recorder {
+        let mut out = Recorder::default();
+        for shard in &self.shards {
+            for (&p, spikes) in &shard.recorder.spikes {
+                out.spikes.entry(p).or_default().extend(spikes.iter().copied());
+            }
+            for (&p, trace) in &shard.recorder.v {
+                out.v.insert(p, trace.clone());
+            }
+        }
+        out
+    }
+
+    /// Rewind every shard to t=0 (fresh state, empty recorders).
+    pub fn reset(&mut self) {
+        for shard in &mut self.shards {
+            shard.reset();
+        }
+        self.t = 0;
+    }
+
+    /// Synaptic events processed by serial engines, summed across shards.
+    pub fn total_events(&self) -> u64 {
+        self.shards.iter().map(NetworkSim::total_events).sum()
+    }
+
+    /// MAC operations issued by parallel engines, summed across shards.
+    pub fn total_macs(&self) -> u64 {
+        self.shards.iter().map(NetworkSim::total_macs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::PeSpec;
+    use crate::model::connector::SynapseDraw;
+    use crate::model::{Connector, LifParams, NetworkBuilder};
+    use crate::switching::{SwitchMode, SwitchingSystem};
+
+    fn net3(seed: u64) -> Network {
+        let mut b = NetworkBuilder::new(seed);
+        let inp = b.spike_source("in", 40);
+        let hid = b.lif_population(
+            "hid",
+            30,
+            LifParams { alpha: 0.8, v_th: 1.0, ..Default::default() },
+        );
+        let out = b.lif_population(
+            "out",
+            12,
+            LifParams { alpha: 0.85, v_th: 1.0, ..Default::default() },
+        );
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.4),
+            SynapseDraw { delay_range: 3, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.7),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.05,
+        );
+        b.build()
+    }
+
+    fn stim(seed: u64) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+        let mut rng = crate::rng::Rng::new(seed);
+        move |_p, _t, out: &mut Vec<u32>| out.extend((0..40u32).filter(|_| rng.chance(0.25)))
+    }
+
+    #[test]
+    fn shard_net_mirrors_remote_populations() {
+        let net = net3(5);
+        let asg =
+            BoardAssignment { boards: 2, board_of_pop: vec![0, 0, 1], board_of_layer: vec![0, 1] };
+        let s0 = shard_net(&net, &asg, 0);
+        assert!(s0.populations[0].is_source() && !s0.populations[1].is_source());
+        assert!(s0.populations[2].is_source(), "remote LIF becomes a mirror source");
+        assert!(!s0.populations[2].record_spikes);
+        assert_eq!(s0.projections.len(), 1);
+        assert_eq!(s0.projections[0].id.0, 0);
+        let s1 = shard_net(&net, &asg, 1);
+        assert_eq!(s1.projections.len(), 1);
+        assert_eq!(s1.projections[0].id.0, 1);
+        assert!(s1.projections[0].synapses.is_empty(), "mirror edges carry no synapses");
+    }
+
+    #[test]
+    fn new_rejects_layer_off_its_targets_board() {
+        let net = net3(6);
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let asg =
+            BoardAssignment { boards: 2, board_of_pop: vec![0, 0, 1], board_of_layer: vec![0, 0] };
+        let err = ShardedSim::new(&net, &layers, &asg).unwrap_err();
+        assert!(err.to_string().contains("target's board"), "{err:#}");
+    }
+
+    #[test]
+    fn two_board_run_matches_single_sim() {
+        let net = net3(7);
+        let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+        let (layers, _) = sys.compile_network(&net).unwrap();
+        let mut reference = NetworkSim::native(&net, layers.clone()).unwrap();
+        let mut provider = stim(17);
+        reference.run(80, &mut provider);
+
+        let asg =
+            BoardAssignment { boards: 2, board_of_pop: vec![0, 0, 1], board_of_layer: vec![0, 1] };
+        let mut sharded = ShardedSim::new(&net, &layers, &asg).unwrap();
+        let mut provider = stim(17);
+        sharded.run(80, &mut provider);
+        assert_eq!(sharded.merged_recorder(), reference.recorder);
+        assert!(reference.recorder.total_spikes() > 0, "fixture must spike");
+    }
+}

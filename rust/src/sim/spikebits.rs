@@ -63,6 +63,14 @@ impl SpikeWords {
         }
     }
 
+    /// Copy another set's bits into this one without allocating (both sets
+    /// must have the same capacity — the cross-shard exchange copies between
+    /// same-population buffers only).
+    pub fn copy_from(&mut self, other: &SpikeWords) {
+        debug_assert_eq!(self.n_bits, other.n_bits, "spike-word capacity mismatch");
+        self.words.copy_from_slice(&other.words);
+    }
+
     /// Number of set bits.
     pub fn count(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()

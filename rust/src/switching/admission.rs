@@ -24,6 +24,7 @@ use super::pipeline::{CompileJob, CompilePipeline};
 use super::placement::Placement;
 use super::policy::SwitchPolicy;
 use super::{network_jobs, CompileStats, CompiledLayer, SwitchingSystem};
+use crate::graph::partition::{partition, BoardAssignment, PartitionStrategy};
 use crate::hardware::{FaultMap, MachineSpec, PlacementStrategy};
 use crate::model::Network;
 use crate::paradigm::Paradigm;
@@ -85,6 +86,33 @@ impl Headroom {
         Headroom { free_pes: usable, free_dtcm: usable * spec.chip.pe.dtcm_bytes }
     }
 
+    /// One headroom pool per board of a board array, each shrunk by the
+    /// faults landing on that board (out-of-grid faults count nowhere) —
+    /// sharded planning charges every layer against its own board's pool
+    /// so the capacity fallback stays per-board.
+    fn per_board(spec: &MachineSpec, faults: &FaultMap) -> Vec<Headroom> {
+        let per_chip = spec.chip.pes_per_chip;
+        let mut dead = vec![0usize; spec.boards];
+        for (x, y) in faults.dead_chips() {
+            if x < spec.total_chips_x() && y < spec.chips_y {
+                dead[spec.board_of_chip_x(x)] += per_chip;
+            }
+        }
+        for pe in faults.dead_pes() {
+            let in_grid =
+                pe.chip_x < spec.total_chips_x() && pe.chip_y < spec.chips_y && pe.core < per_chip;
+            if in_grid && !faults.is_chip_dead(pe.chip_x, pe.chip_y) {
+                dead[spec.board_of_chip_x(pe.chip_x)] += 1;
+            }
+        }
+        dead.iter()
+            .map(|&d| {
+                let usable = spec.pes_per_board() - d;
+                Headroom { free_pes: usable, free_dtcm: usable * spec.chip.pe.dtcm_bytes }
+            })
+            .collect()
+    }
+
     // With today's cost models the PE dimension always binds first (every
     // estimate satisfies dtcm <= pes × per-PE budget, which both compilers
     // enforce), so the DTCM dimension is future-proofing for cost models
@@ -119,7 +147,31 @@ pub(super) fn plan_decisions(
     faults: &FaultMap,
     prefer: &[Option<Paradigm>],
 ) -> Result<Vec<LayerDecision>> {
-    let mut headroom = Headroom::of(spec, faults);
+    plan_decisions_boards(policy, pipeline, net, jobs, spec, faults, prefer, None)
+}
+
+/// [`plan_decisions`] generalized over a board partition: with an
+/// `assignment`, each layer's estimate is charged against its **own
+/// board's** headroom pool (source hosting against the source population's
+/// board), so the capacity fallback flips a paradigm exactly when it does
+/// not fit the board it will run on — never borrowing headroom across the
+/// board seam that placement cannot honor. Without an assignment this is
+/// the single-pool whole-machine planning, bit-for-bit the seed behavior.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn plan_decisions_boards(
+    policy: &SwitchPolicy,
+    pipeline: &CompilePipeline,
+    net: &Network,
+    jobs: &[CompileJob],
+    spec: &MachineSpec,
+    faults: &FaultMap,
+    prefer: &[Option<Paradigm>],
+    assignment: Option<&BoardAssignment>,
+) -> Result<Vec<LayerDecision>> {
+    let mut pools = match assignment {
+        Some(_) => Headroom::per_board(spec, faults),
+        None => vec![Headroom::of(spec, faults)],
+    };
     // Source populations whose hosting PEs are already charged.
     let mut hosted: BTreeSet<usize> = BTreeSet::new();
     let mut decisions = Vec::with_capacity(jobs.len());
@@ -127,6 +179,8 @@ pub(super) fn plan_decisions(
     for (i, job) in jobs.iter().enumerate() {
         let proj = &net.projections[i];
         let src_is_source = net.population(proj.source).is_source();
+        let layer_board = assignment.map_or(0, |a| a.board_of_layer[i]);
+        let host_board = assignment.map_or(0, |a| a.board_of_pop[proj.source.0]);
         let prejudged = match prefer.get(i).copied().flatten() {
             Some(p) => Some(p),
             None => policy.prejudge(&job.character)?,
@@ -170,10 +224,26 @@ pub(super) fn plan_decisions(
             let hosts_new = est.paradigm == Paradigm::Serial
                 && src_is_source
                 && !hosted.contains(&proj.source.0);
-            let pes = est.layer_pes + if hosts_new { est.source_hosting_pes } else { 0 };
-            let dtcm = est.dtcm_bytes + if hosts_new { est.source_hosting_dtcm } else { 0 };
-            if headroom.admits(pes, dtcm) {
-                headroom.charge(pes, dtcm);
+            let (host_pes, host_dtcm) = if hosts_new {
+                (est.source_hosting_pes, est.source_hosting_dtcm)
+            } else {
+                (0, 0)
+            };
+            let pes = est.layer_pes + host_pes;
+            let dtcm = est.dtcm_bytes + host_dtcm;
+            let fits = if layer_board == host_board {
+                pools[layer_board].admits(pes, dtcm)
+            } else {
+                pools[layer_board].admits(est.layer_pes, est.dtcm_bytes)
+                    && pools[host_board].admits(host_pes, host_dtcm)
+            };
+            if fits {
+                if layer_board == host_board {
+                    pools[layer_board].charge(pes, dtcm);
+                } else {
+                    pools[layer_board].charge(est.layer_pes, est.dtcm_bytes);
+                    pools[host_board].charge(host_pes, host_dtcm);
+                }
                 if hosts_new {
                     hosted.insert(proj.source.0);
                 }
@@ -192,15 +262,29 @@ pub(super) fn plan_decisions(
             notes.push(format!("{cand} needs {pes} PEs / {dtcm} B DTCM"));
         }
         if admitted.is_none() {
+            if assignment.is_some() {
+                bail!(
+                    "admission failed at layer {i} (projection {}, board {layer_board}): {}; \
+                     {} PEs and {} B DTCM remain on board {layer_board} of the \
+                     {}-board array ({}x{} chips per board)",
+                    proj.id.0,
+                    notes.join(", "),
+                    pools[layer_board].free_pes,
+                    pools[layer_board].free_dtcm,
+                    spec.boards,
+                    spec.chips_x,
+                    spec.chips_y
+                );
+            }
             bail!(
                 "admission failed at layer {i} (projection {}): {}; \
                  {} of {} usable PEs and {} B DTCM remain on the {}x{}-chip machine \
                  ({} PEs faulted)",
                 proj.id.0,
                 notes.join(", "),
-                headroom.free_pes,
+                pools[0].free_pes,
                 spec.total_pes() - faults.dead_pe_count(spec),
-                headroom.free_dtcm,
+                pools[0].free_dtcm,
                 spec.chips_x,
                 spec.chips_y,
                 faults.dead_pe_count(spec)
@@ -208,6 +292,60 @@ pub(super) fn plan_decisions(
         }
     }
     Ok(decisions)
+}
+
+/// Estimated PE demand per population for the board partitioner: each
+/// layer's PEs charged to its **target** population (layers execute where
+/// their target lives), plus source hosting charged once to the source
+/// population. Packs by each layer's **smallest-footprint compilable
+/// paradigm** (hosting included) — the per-board capacity fallback in
+/// [`plan_decisions_boards`] can always reach that floor, so a partition
+/// that fits this demand vector is guaranteed plannable, and paradigm
+/// preference stays a planning concern, not a partitioning one.
+fn pop_demand(pipeline: &CompilePipeline, net: &Network, jobs: &[CompileJob]) -> Result<Vec<usize>> {
+    let mut demand = vec![0usize; net.populations.len()];
+    let mut hosted: BTreeSet<usize> = BTreeSet::new();
+    for (i, job) in jobs.iter().enumerate() {
+        let proj = &net.projections[i];
+        let src_is_source = net.population(proj.source).is_source();
+        let chosen = match (
+            pipeline.estimate(Paradigm::Serial, job),
+            pipeline.estimate(Paradigm::Parallel, job),
+        ) {
+            (Ok(s), Ok(p)) => {
+                let s_hosting = if src_is_source && !hosted.contains(&proj.source.0) {
+                    s.source_hosting_pes
+                } else {
+                    0
+                };
+                if s.layer_pes + s_hosting <= p.layer_pes {
+                    s
+                } else {
+                    p
+                }
+            }
+            (Ok(s), Err(_)) => s,
+            (Err(_), Ok(p)) => p,
+            (Err(e), Err(_)) => {
+                return Err(e).with_context(|| format!("estimating layer {i} for partitioning"))
+            }
+        };
+        demand[proj.target.0] += chosen.layer_pes;
+        if chosen.paradigm == Paradigm::Serial && src_is_source && hosted.insert(proj.source.0) {
+            demand[proj.source.0] += chosen.source_hosting_pes;
+        }
+    }
+    Ok(demand)
+}
+
+/// A network admitted across a board array: the usual [`NetworkAdmission`]
+/// plus the population→board partition it was planned and placed under,
+/// and the per-population PE demand the partitioner packed.
+pub struct ShardedAdmission {
+    pub admission: NetworkAdmission,
+    pub assignment: BoardAssignment,
+    /// Estimated PE demand per population (partitioner input).
+    pub demand: Vec<usize>,
 }
 
 impl SwitchingSystem {
@@ -284,6 +422,68 @@ impl SwitchingSystem {
             wall_nanos: run.wall_nanos,
         })
     }
+
+    /// Whole-network admission across a **board array** (`spec.boards`
+    /// boards): populations are first partitioned onto boards
+    /// (`partition_strategy` — greedy traffic clustering or the linear
+    /// next-fit baseline), then every layer's paradigm is planned against
+    /// its own board's headroom (the capacity fallback stays per-board),
+    /// materialized, and placed with each PE group pinned to its board.
+    /// This is how a network ≥10× larger than one board's capacity admits:
+    /// no single pool ever has to hold it.
+    pub fn admit_network_sharded(
+        &mut self,
+        net: &Network,
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        partition_strategy: PartitionStrategy,
+    ) -> Result<ShardedAdmission> {
+        let jobs = network_jobs(net);
+        let demand = pop_demand(&self.pipeline, net, &jobs)?;
+        let faults = FaultMap::healthy();
+        let capacity = vec![spec.pes_per_board(); spec.boards];
+        let assignment = partition(net, &demand, &capacity, partition_strategy)
+            .context("partitioning populations onto boards")?;
+        let decisions = plan_decisions_boards(
+            &self.policy,
+            &self.pipeline,
+            net,
+            &jobs,
+            &spec,
+            &faults,
+            &[],
+            Some(&assignment),
+        )
+        .context("per-board capacity-feasibility planning")?;
+        let overrides = decisions.iter().filter(|d| d.overridden).count();
+        if overrides > 0 {
+            self.pipeline.note_capacity_overrides(overrides);
+        }
+        let forced: Vec<Option<Paradigm>> = decisions.iter().map(|d| Some(d.chosen)).collect();
+        let run = self.pipeline.run_decided(&forced, &jobs)?;
+        self.stats = run.stats;
+        let placement = Placement::with_strategy_faults_sharded(
+            net,
+            &run.layers,
+            spec,
+            strategy,
+            faults,
+            &assignment,
+        )
+        .context("placing an admitted sharded network (feasibility accepted it)")?;
+        Ok(ShardedAdmission {
+            admission: NetworkAdmission {
+                decisions,
+                layers: run.layers,
+                placement,
+                stats: run.stats,
+                layer_nanos: run.layer_nanos,
+                wall_nanos: run.wall_nanos,
+            },
+            assignment,
+            demand,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -335,6 +535,16 @@ mod tests {
             chips_x,
             chips_y,
             chip: ChipSpec { pes_per_chip, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    fn board_array(boards: usize, chips_x: usize, chips_y: usize, pes: usize) -> MachineSpec {
+        MachineSpec {
+            boards,
+            chips_x,
+            chips_y,
+            chip: ChipSpec { pes_per_chip: pes, ..Default::default() },
         }
     }
 
@@ -500,6 +710,113 @@ mod tests {
             .unwrap();
         assert_eq!(plain.decisions[0].prejudged, None);
         assert_eq!(plain.decisions[0].chosen, Paradigm::Parallel);
+    }
+
+    /// `chains` disconnected serial in→out chains, each needing a few PEs.
+    fn chain_net(chains: usize, n: usize) -> Network {
+        let mut b = NetworkBuilder::new(21);
+        for i in 0..chains {
+            let inp = b.spike_source(&format!("in{i}"), n);
+            let out = b.lif_population(&format!("out{i}"), n, LifParams::default());
+            b.project(
+                inp,
+                out,
+                Connector::FixedProbability(0.2),
+                SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+                0.01,
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn sharded_admission_spreads_over_boards_single_board_cannot_hold() {
+        let net = chain_net(6, 255);
+        // Whole-network serial demand: per chain, 1 hosting PE + ceil(255/255)
+        // serial PE(s). Measure it, then size boards so one board holds only
+        // a fraction of the network.
+        let mut probe = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let whole =
+            probe.admit_network(&net, machine(1, 1, 152), PlacementStrategy::Linear).unwrap();
+        let total_pes = whole.placement.n_pes();
+        assert!(total_pes >= 6, "six chains need at least one PE each");
+        // Boards sized to a third of the network: single-board admission
+        // must fail, sharded admission must succeed.
+        let per_board = total_pes.div_ceil(3);
+        let spec = board_array(4, 1, 1, per_board);
+        // Precondition: the parallel fallback is no escape hatch either on
+        // a lone board this small (sparse layers are serial-cheaper).
+        let mut probe_p = SwitchingSystem::new(SwitchMode::ForceParallel, PeSpec::default());
+        let parallel_pes = probe_p
+            .admit_network(&net, machine(1, 1, 600), PlacementStrategy::Linear)
+            .unwrap()
+            .placement
+            .n_pes();
+        assert!(per_board < parallel_pes, "{per_board} vs parallel {parallel_pes}");
+        let mut single = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        assert!(
+            single
+                .admit_network(&net, machine(1, 1, per_board), PlacementStrategy::Linear)
+                .is_err(),
+            "one board must be too small for the whole network"
+        );
+        for strat in PartitionStrategy::ALL {
+            let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+            let sharded = sys
+                .admit_network_sharded(&net, spec, PlacementStrategy::Linear, strat)
+                .unwrap();
+            assert_eq!(sharded.admission.placement.n_pes(), total_pes, "{strat}");
+            // Every vertex landed on the board its population was assigned.
+            for v in &sharded.admission.placement.graph.vertices {
+                let pe = v.pe.expect("placed");
+                assert_eq!(
+                    spec.board_of_chip_x(pe.chip_x),
+                    sharded.assignment.board_of_pop[v.population.0],
+                    "{strat}: vertex {} off its board",
+                    v.label
+                );
+            }
+            // Per-board demand respects per-board capacity.
+            for (b, d) in sharded.assignment.board_demand(&sharded.demand).iter().enumerate() {
+                assert!(*d <= spec.pes_per_board(), "{strat}: board {b} over capacity");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_capacity_fallback_stays_per_board() {
+        // One dense delay-1 layer (parallel much cheaper than serial) on a
+        // board array whose boards fit only the parallel plan: the
+        // ForceSerial prejudgment must flip per-board, same override
+        // semantics as the single-machine path.
+        let net = dense_net();
+        let (serial_total, parallel_total) = paradigm_totals(&net);
+        assert!(parallel_total < serial_total);
+        let spec = board_array(2, 1, 1, parallel_total);
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let sharded = sys
+            .admit_network_sharded(
+                &net,
+                spec,
+                PlacementStrategy::Linear,
+                PartitionStrategy::Traffic,
+            )
+            .unwrap();
+        assert_eq!(sharded.admission.capacity_overrides(), 1);
+        assert_eq!(sharded.admission.decisions[0].chosen, Paradigm::Parallel);
+        // Board arrays too small on every board fail with the board-scoped
+        // diagnostic.
+        let tiny = board_array(2, 1, 1, 1);
+        let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, PeSpec::default());
+        let err = sys
+            .admit_network_sharded(
+                &net,
+                tiny,
+                PlacementStrategy::Linear,
+                PartitionStrategy::Traffic,
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("board"), "{err:#}");
     }
 
     #[test]

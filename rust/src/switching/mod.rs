@@ -28,7 +28,7 @@ pub mod recovery;
 
 pub use crate::paradigm::CompiledLayer;
 pub use adaptive::{AdaptiveConfig, AdaptiveRunReport, SwapEvent, SwapGovernor};
-pub use admission::{LayerDecision, NetworkAdmission};
+pub use admission::{LayerDecision, NetworkAdmission, ShardedAdmission};
 pub use pipeline::{CompileJob, CompilePipeline, PipelineRun};
 pub use placement::Placement;
 pub use policy::{SwitchError, SwitchPolicy};

@@ -9,8 +9,9 @@
 
 use super::CompiledLayer;
 use crate::graph::machine_graph::{MachineGraph, SliceRange, VertexRole};
+use crate::graph::partition::BoardAssignment;
 use crate::graph::routing::RoutingTable;
-use crate::hardware::noc::{Noc, NocConfig};
+use crate::hardware::noc::{Noc, NocConfig, TreeHops};
 use crate::hardware::{Allocator, FaultMap, Machine, MachineSpec, PlacementStrategy};
 use crate::model::Network;
 use anyhow::{Context, Result};
@@ -60,10 +61,39 @@ impl Placement {
         strategy: PlacementStrategy,
         faults: FaultMap,
     ) -> Result<Placement> {
+        Placement::build(net, layers, spec, strategy, faults, None)
+    }
+
+    /// [`Placement::with_strategy_faults`] pinned to a board partition:
+    /// each source population's host group lands on its assigned board and
+    /// each layer's PE group on its target's board, so every projection
+    /// into a population accumulates on exactly one board — the sharded
+    /// simulator's correctness invariant (DESIGN.md §Sharding).
+    pub fn with_strategy_faults_sharded(
+        net: &Network,
+        layers: &[CompiledLayer],
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        faults: FaultMap,
+        assignment: &BoardAssignment,
+    ) -> Result<Placement> {
+        Placement::build(net, layers, spec, strategy, faults, Some(assignment))
+    }
+
+    fn build(
+        net: &Network,
+        layers: &[CompiledLayer],
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        faults: FaultMap,
+        assignment: Option<&BoardAssignment>,
+    ) -> Result<Placement> {
         let mut graph = MachineGraph::default();
         let mut emitters: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        // Placement groups: `(name, vertex ids)`, placed atomically each.
+        // Placement groups: `(name, vertex ids)`, placed atomically each,
+        // with an optional board pin per group (sharded placement).
         let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut group_boards: Vec<Option<usize>> = Vec::new();
         let pe_spec = spec.chip.pe;
 
         // 1. Source-hosting vertices for spike sources with serial consumers.
@@ -97,12 +127,13 @@ impl Placement {
                 lo = hi;
             }
             groups.push((format!("hosts:{}", pop.label), vs.clone()));
+            group_boards.push(assignment.map(|a| a.board_of_pop[pop.id.0]));
             emitters.insert(pop.id.0, vs);
         }
 
         // 2. Layer vertices.
         let mut layer_vertices: Vec<Vec<usize>> = Vec::new();
-        for (proj, layer) in net.projections.iter().zip(layers) {
+        for (li, (proj, layer)) in net.projections.iter().zip(layers).enumerate() {
             let tgt_pop = proj.target;
             let mut vs = Vec::new();
             match layer {
@@ -149,6 +180,7 @@ impl Placement {
                 }
             }
             groups.push((format!("layer:proj{}", proj.id.0), vs.clone()));
+            group_boards.push(assignment.map(|a| a.board_of_layer[li]));
             layer_vertices.push(vs);
         }
 
@@ -171,9 +203,12 @@ impl Placement {
             }
         }
 
-        // 4. Place (group-transactionally, under the strategy) and route.
+        // 4. Place (group-transactionally, under the strategy, each group
+        //    pinned to its assigned board when sharded) and route.
         let mut alloc = Allocator::from_machine(Machine::with_faults(spec, faults), strategy);
-        graph.place_groups(&mut alloc, &groups).context("placing machine graph")?;
+        graph
+            .place_groups_on_boards(&mut alloc, &groups, &group_boards)
+            .context("placing machine graph")?;
         let machine = alloc.into_machine();
         let routing = RoutingTable::from_machine_graph(&graph);
 
@@ -185,7 +220,10 @@ impl Placement {
     /// its emitting vertices' PEs along the routing table. Returns the NoC
     /// with packet/hop telemetry filled in.
     pub fn estimate_traffic(&self, spike_counts: &BTreeMap<usize, u64>) -> Noc {
-        let mut noc = Noc::new(NocConfig::default());
+        let mut noc = Noc::new(NocConfig {
+            board_chips_x: self.board_chips_x(),
+            ..Default::default()
+        });
         for (&pop, &count) in spike_counts {
             let Some(emitters) = self.emitters.get(&pop) else { continue };
             for &v in emitters {
@@ -221,6 +259,24 @@ impl Placement {
     /// routing entry (see [`RoutingTable::total_tree_hops`]).
     pub fn static_tree_hops(&self) -> u64 {
         self.routing.total_tree_hops(&self.graph)
+    }
+
+    /// Board width to classify links against: `chips_x` on board arrays,
+    /// `0` (no boundaries) on single-board machines.
+    fn board_chips_x(&self) -> usize {
+        let spec = self.machine.spec();
+        if spec.boards > 1 {
+            spec.chips_x
+        } else {
+            0
+        }
+    }
+
+    /// [`Placement::static_tree_hops`] split into on-board chip links vs
+    /// board-link crossings — the placement-summary numbers that keep
+    /// strategy comparisons from conflating the two link classes.
+    pub fn static_hops_split(&self) -> TreeHops {
+        self.routing.tree_hops_split(&self.graph, self.board_chips_x())
     }
 }
 
@@ -323,6 +379,7 @@ mod tests {
             chips_x: 1,
             chips_y: 1,
             chip: crate::hardware::ChipSpec { pes_per_chip: 2, ..Default::default() },
+            ..Default::default()
         };
         let err = Placement::new(&net, &layers, tiny).unwrap_err();
         // The transactional group placer names the group that failed.
@@ -338,6 +395,7 @@ mod tests {
             chips_x: 4,
             chips_y: 1,
             chip: crate::hardware::ChipSpec { pes_per_chip: 3, ..Default::default() },
+            ..Default::default()
         };
         let mut results = Vec::new();
         for strategy in PlacementStrategy::ALL {
@@ -373,6 +431,7 @@ mod tests {
             chips_x: 3,
             chips_y: 1,
             chip: crate::hardware::ChipSpec { pes_per_chip: 4, ..Default::default() },
+            ..Default::default()
         };
         let mut faults = FaultMap::healthy();
         faults.kill_chip(0, 0);
@@ -397,6 +456,7 @@ mod tests {
             chips_x: 4,
             chips_y: 2,
             chip: crate::hardware::ChipSpec { pes_per_chip: 2, ..Default::default() },
+            ..Default::default()
         };
         let mut counts = BTreeMap::new();
         counts.insert(0usize, 40u64);

@@ -715,6 +715,7 @@ mod tests {
             chips_x: 1,
             chips_y: 1,
             chip: ChipSpec { pes_per_chip: pes, ..Default::default() },
+            ..Default::default()
         };
         let cfg = RecoveryConfig {
             samples: 4,

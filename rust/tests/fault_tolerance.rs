@@ -174,6 +174,7 @@ fn faults_past_the_survivable_ceiling_degrade_without_a_panic() {
         chips_x: 1,
         chips_y: 1,
         chip: ChipSpec { pes_per_chip: pes, ..Default::default() },
+        ..Default::default()
     };
     let cfg = RecoveryConfig {
         samples: 5,

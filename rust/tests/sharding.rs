@@ -1,0 +1,229 @@
+//! Cross-board sharding properties (DESIGN.md §Sharding):
+//!
+//! * merged recorders are **bit-identical** to the single-sim run at any
+//!   board count × any worker count;
+//! * the partitioner is deterministic regardless of caller thread count;
+//! * a network ≥10× one board's capacity is rejected by single-board
+//!   admission, admitted by the sharded path, and simulates to the same
+//!   recorders as an unsharded reference sim.
+
+use s2switch::graph::{partition, BoardAssignment, PartitionStrategy};
+use s2switch::hardware::{ChipSpec, MachineSpec, PeSpec, PlacementStrategy};
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder, PopulationId};
+use s2switch::rng::Rng;
+use s2switch::sim::{NetworkSim, ShardedSim};
+use s2switch::switching::{SwitchMode, SwitchingSystem};
+
+fn machine(pes_per_chip: usize) -> MachineSpec {
+    MachineSpec {
+        chips_x: 1,
+        chips_y: 1,
+        chip: ChipSpec { pes_per_chip, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn board_array(boards: usize, pes_per_chip: usize) -> MachineSpec {
+    MachineSpec {
+        boards,
+        chips_x: 1,
+        chips_y: 1,
+        chip: ChipSpec { pes_per_chip, ..Default::default() },
+    }
+}
+
+/// `chains` independent 3-layer equivalence chains (in→hid→out), ids
+/// grouped per chain, every LIF population recording spikes.
+fn chains_net(chains: usize, width: usize) -> Network {
+    let mut b = NetworkBuilder::new(97);
+    for i in 0..chains {
+        let inp = b.spike_source(&format!("in{i}"), width);
+        let hid = b.lif_population(
+            &format!("hid{i}"),
+            width,
+            LifParams { alpha: 0.85, ..Default::default() },
+        );
+        let out = b.lif_population(&format!("out{i}"), (width * 2) / 3, LifParams::default());
+        b.project(
+            inp,
+            hid,
+            Connector::FixedProbability(0.4),
+            SynapseDraw { delay_range: 3, w_max: 100, ..Default::default() },
+            0.02,
+        );
+        b.project(
+            hid,
+            out,
+            Connector::FixedProbability(0.6),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.04,
+        );
+    }
+    b.build()
+}
+
+/// `chains` independent in→out pairs (ids per chain: in0, out0, in1, …).
+fn pair_net(chains: usize, width: usize) -> Network {
+    let mut b = NetworkBuilder::new(21);
+    for i in 0..chains {
+        let inp = b.spike_source(&format!("in{i}"), width);
+        let out = b.lif_population(&format!("out{i}"), width, LifParams::default());
+        b.project(
+            inp,
+            out,
+            Connector::FixedProbability(0.5),
+            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+            0.02,
+        );
+    }
+    b.build()
+}
+
+/// Bernoulli stimulus over every source population, deterministic per
+/// seed — identical call sequences on sharded and reference runs.
+fn provider(width: u32, seed: u64) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    move |_p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+        out.extend((0..width).filter(|_| rng.chance(0.25)));
+    }
+}
+
+/// Round-robin chains over boards: pop `p` of a 3-pop chain lives on
+/// board `(p / 3) % boards`; each layer lands on its target's board.
+fn chain_assignment(net: &Network, pops_per_chain: usize, boards: usize) -> BoardAssignment {
+    let board_of_pop: Vec<usize> =
+        (0..net.populations.len()).map(|p| (p / pops_per_chain) % boards).collect();
+    let board_of_layer =
+        net.projections.iter().map(|proj| board_of_pop[proj.target.0]).collect();
+    BoardAssignment { boards, board_of_pop, board_of_layer }
+}
+
+#[test]
+fn recorders_bit_identical_across_boards_and_jobs() {
+    const STEPS: u64 = 120;
+    let net = chains_net(4, 30);
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (layers, _) = sys.compile_network(&net).unwrap();
+
+    let mut reference = NetworkSim::native(&net, layers.clone()).unwrap();
+    let mut p = provider(30, 5);
+    reference.run(STEPS, &mut p);
+    assert!(reference.recorder.total_spikes() > 0, "the reference run must actually spike");
+
+    for boards in [1usize, 2, 4] {
+        for jobs in [1usize, 8] {
+            let asg = chain_assignment(&net, 3, boards);
+            let mut sim = ShardedSim::new(&net, &layers, &asg).unwrap();
+            let mut p = provider(30, 5);
+            sim.run_jobs(STEPS, &mut p, jobs);
+            assert_eq!(
+                sim.merged_recorder(),
+                reference.recorder,
+                "recorders diverged at boards={boards} jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_reset_reruns_bit_identically() {
+    const STEPS: u64 = 60;
+    let net = chains_net(2, 24);
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let (layers, _) = sys.compile_network(&net).unwrap();
+    let mut sim = ShardedSim::new(&net, &layers, &chain_assignment(&net, 3, 2)).unwrap();
+
+    let mut p = provider(24, 9);
+    sim.run_jobs(STEPS, &mut p, 2);
+    let first = sim.merged_recorder();
+    assert!(first.total_spikes() > 0);
+
+    sim.reset();
+    assert_eq!(sim.timestep(), 0);
+    let mut p = provider(24, 9);
+    sim.run_jobs(STEPS, &mut p, 2);
+    assert_eq!(sim.merged_recorder(), first, "reset must restore the exact initial state");
+}
+
+#[test]
+fn partitioner_is_deterministic_across_threads() {
+    let net = chains_net(4, 20);
+    let demand = vec![2usize; net.populations.len()];
+    let capacity = vec![7usize; 4];
+    for strategy in PartitionStrategy::ALL {
+        let baseline = partition(&net, &demand, &capacity, strategy).unwrap();
+        let results: Vec<BoardAssignment> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| s.spawn(|| partition(&net, &demand, &capacity, strategy).unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (k, r) in results.iter().enumerate() {
+            assert_eq!(*r, baseline, "{strategy}: thread {k} saw a different partition");
+        }
+    }
+}
+
+#[test]
+fn over_capacity_network_admits_sharded_and_matches_single_sim() {
+    const STEPS: u64 = 60;
+    let chains = 40usize;
+    let width = 12usize;
+    let boards = 16usize;
+    let net = pair_net(chains, width);
+
+    // Probe the whole-network footprint on one generous board, then size
+    // real boards to a sliver of it.
+    let mut probe = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let probed = probe
+        .admit_network_sharded(
+            &net,
+            board_array(1, 4096),
+            PlacementStrategy::Linear,
+            PartitionStrategy::Traffic,
+        )
+        .unwrap();
+    let network_pes = probed.admission.placement.n_pes();
+    let total_demand: usize = probed.demand.iter().sum();
+    let max_chain_demand = (0..chains)
+        .map(|i| probed.demand[2 * i] + probed.demand[2 * i + 1])
+        .max()
+        .unwrap();
+    let per_board = total_demand.div_ceil(boards) + max_chain_demand;
+
+    // One board of that size cannot hold the network…
+    let mut lone = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    assert!(
+        lone.admit_network(&net, machine(per_board), PlacementStrategy::Linear).is_err(),
+        "a single {per_board}-PE board must reject the {network_pes}-PE network"
+    );
+
+    // …but the board array admits it, ≥10× over single-board capacity.
+    let spec = board_array(boards, per_board);
+    assert!(
+        network_pes >= 10 * spec.pes_per_board(),
+        "acceptance wants ≥10× one board's capacity ({network_pes} vs {})",
+        spec.pes_per_board()
+    );
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    let sharded = sys
+        .admit_network_sharded(&net, spec, PlacementStrategy::Linear, PartitionStrategy::Traffic)
+        .unwrap();
+    for (b, d) in sharded.assignment.board_demand(&sharded.demand).iter().enumerate() {
+        assert!(*d <= spec.pes_per_board(), "board {b} packed over capacity");
+    }
+
+    // And it simulates: bit-identical to an unsharded reference sim.
+    let mut sim =
+        ShardedSim::new(&net, &sharded.admission.layers, &sharded.assignment).unwrap();
+    let mut p = provider(width as u32, 13);
+    sim.run_jobs(STEPS, &mut p, 8);
+    let merged = sim.merged_recorder();
+    assert!(merged.total_spikes() > 0);
+
+    let mut reference = NetworkSim::native(&net, sharded.admission.layers.clone()).unwrap();
+    let mut p = provider(width as u32, 13);
+    reference.run(STEPS, &mut p);
+    assert_eq!(merged, reference.recorder, "sharded run diverged from the single-sim reference");
+}

@@ -211,6 +211,7 @@ fn oversized_network_admits_on_multichip_via_spill_and_fallback() {
         chips_x: 2,
         chips_y: 2,
         chip: ChipSpec { pes_per_chip: chip, ..Default::default() },
+        ..Default::default()
     };
     assert!(chip < serial_total, "one chip must be insufficient");
     for strategy in PlacementStrategy::ALL {
@@ -240,6 +241,7 @@ fn oversized_network_admits_on_multichip_via_spill_and_fallback() {
             chips_x: 1,
             chips_y: 1,
             chip: ChipSpec { pes_per_chip: serial_total - 1, ..Default::default() },
+            ..Default::default()
         };
         let net = build();
         let mut sys = SwitchingSystem::new(SwitchMode::ForceSerial, pe);
