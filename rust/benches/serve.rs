@@ -1,0 +1,271 @@
+//! Serve-daemon bench — warm boot, sustained micro-batched throughput,
+//! latency percentiles, and client-count determinism (DESIGN.md §Serving).
+//!
+//! Measures, over a real TCP loopback socket:
+//! * cold vs warm boot of the tenant registry (warm must run **zero**
+//!   materializing compiles — asserted, the same gate as `tests/serve.rs`
+//!   and the `serve-baseline` CI job);
+//! * saturating open-loop load from 8 concurrent pipelined clients with
+//!   micro-batching **on** (500 µs window over a 4-engine pool) vs **off**
+//!   (window 0, strict request-at-a-time) — the batching throughput win;
+//! * enqueue-to-response latency percentiles (p50/p99/p999) and the
+//!   executed batch-size histogram from the server's own metrics;
+//! * a fixed-seed request set served at 2 clients and again at 8 clients —
+//!   responses must be identical, and both sets are dumped to
+//!   `bench_out/serve_responses_{2c,8c}.csv` for the CI byte-level diff.
+//!
+//! Writes the machine-readable baseline to `BENCH_serve.json` (override
+//! with `S2SWITCH_BENCH_OUT`), the way sim_throughput writes
+//! `BENCH_sim.json`.
+//!
+//! ```bash
+//! cargo bench --bench serve
+//! ```
+
+use s2switch::bench_harness::Report;
+use s2switch::graph::PartitionStrategy;
+use s2switch::hardware::{MachineSpec, PeSpec, PlacementStrategy};
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder};
+use s2switch::serve::protocol::{
+    decode_response, encode_request_frame, read_frame, Request, Response, RESPONSE_MAGIC,
+};
+use s2switch::serve::{ServeConfig, ServeReport, Server, TenantRegistry, TenantSpec};
+use s2switch::switching::{SwitchMode, SwitchingSystem};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::Instant;
+
+/// Stimulus rate for every benched request.
+const RATE: f64 = 0.15;
+/// Open-loop load: 8 clients x 40 pipelined requests.
+const LOAD_CLIENTS: usize = 8;
+const LOAD_REQUESTS: usize = 320;
+/// Fixed-seed determinism set, served at 2 and at 8 clients.
+const IDENTITY_KEYS: usize = 32;
+/// Pool engines per tenant for every serve run.
+const JOBS: usize = 4;
+
+/// The CLI's `simulate` demo network (200-120-20, mixed-density) — the
+/// same model `serve` hosts without `--networks`.
+fn demo_network() -> Network {
+    let mut b = NetworkBuilder::new(11);
+    let inp = b.spike_source("input", 200);
+    let hid = b.lif_population("hidden", 120, LifParams::default());
+    let out = b.lif_population("output", 20, LifParams::default());
+    b.project(
+        inp,
+        hid,
+        Connector::FixedProbability(0.4),
+        SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+        0.015,
+    );
+    b.project(
+        hid,
+        out,
+        Connector::FixedProbability(0.9),
+        SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+        0.02,
+    );
+    b.build()
+}
+
+fn boot(dir: &Path) -> TenantRegistry {
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    sys.set_artifact_dir(dir).unwrap();
+    TenantRegistry::boot(
+        vec![TenantSpec { name: "demo".into(), net: demo_network() }],
+        &mut sys,
+        MachineSpec::default(),
+        PlacementStrategy::ChipPacked,
+        PartitionStrategy::Traffic,
+    )
+    .unwrap()
+}
+
+/// Serve `keys` (request_id, steps, seed) round-robin across `clients`
+/// pipelined connections; returns (wall seconds, final server report,
+/// request_id → spike counts).
+fn run_load(
+    dir: &Path,
+    window_us: u64,
+    clients: usize,
+    keys: &[(u64, u64, u64)],
+) -> (f64, ServeReport, BTreeMap<u64, Vec<u64>>) {
+    let registry = boot(dir);
+    assert_eq!(registry.report.compiles, 0, "bench serve boots must be warm");
+    let cfg = ServeConfig { batch_window_us: window_us, max_batch: 16, jobs: JOBS };
+    let server = Server::bind(registry, "127.0.0.1:0", cfg).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let t0 = Instant::now();
+    let got: BTreeMap<u64, Vec<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let mine: Vec<(u64, u64, u64)> = keys
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % clients == c)
+                    .map(|(_, &k)| k)
+                    .collect();
+                scope.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    stream.set_nodelay(true).unwrap();
+                    // Open-loop: every request goes on the wire up front;
+                    // responses are matched by request id afterwards.
+                    for &(key, steps, seed) in &mine {
+                        stream
+                            .write_all(&encode_request_frame(&Request {
+                                request_id: key,
+                                network: "demo".to_string(),
+                                steps,
+                                seed,
+                                rate: RATE,
+                            }))
+                            .unwrap();
+                    }
+                    let mut got = BTreeMap::new();
+                    for _ in 0..mine.len() {
+                        let body = read_frame(&mut stream, RESPONSE_MAGIC).unwrap();
+                        match decode_response(&body).unwrap() {
+                            Response::Ok { request_id, spike_counts } => {
+                                got.insert(request_id, spike_counts);
+                            }
+                            other => panic!("bench request failed: {other:?}"),
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    handle.shutdown();
+    let report = server_thread.join().unwrap().unwrap();
+    assert_eq!(got.len(), keys.len(), "every request must be answered Ok");
+    (wall_s, report, got)
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("s2a-bench-serve-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ---- Part 1: cold vs warm boot ---------------------------------------
+    let t0 = Instant::now();
+    let cold = boot(&dir);
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(cold.report.compiles > 0, "first boot must be cold");
+    drop(cold);
+    let warm = boot(&dir);
+    let warm_ms = warm.report.boot_nanos as f64 / 1e6;
+    assert_eq!(warm.report.compiles, 0, "warm boot must run zero materializing compiles");
+    assert!(warm.report.disk_hits > 0, "warm boot must be served from the disk tier");
+    let warm_report = warm.report.clone();
+    drop(warm);
+    let mut rep = Report::new(
+        "Serve warm boot — demo tenant over the artifact store",
+        &["boot", "wall ms", "compiles", "disk hits"],
+    );
+    rep.row(vec!["cold".into(), format!("{cold_ms:.1}"), "(>0)".into(), "0".into()]);
+    rep.row(vec![
+        "warm".into(),
+        format!("{warm_ms:.1}"),
+        warm_report.compiles.to_string(),
+        warm_report.disk_hits.to_string(),
+    ]);
+    rep.finish();
+
+    // ---- Part 2: sustained throughput, batching on vs off ----------------
+    let load_keys: Vec<(u64, u64, u64)> =
+        (0..LOAD_REQUESTS as u64).map(|k| (k + 1, 50, 9000 + k)).collect();
+    let (batched_wall, batched_report, _) = run_load(&dir, 500, LOAD_CLIENTS, &load_keys);
+    let (unbatched_wall, unbatched_report, _) = run_load(&dir, 0, LOAD_CLIENTS, &load_keys);
+    let batched_rps = LOAD_REQUESTS as f64 / batched_wall;
+    let unbatched_rps = LOAD_REQUESTS as f64 / unbatched_wall;
+    let speedup = batched_rps / unbatched_rps;
+    let mut bm = batched_report.metrics.clone();
+    let mut um = unbatched_report.metrics.clone();
+    let mut rep = Report::new(
+        "Open-loop serve throughput — 8 clients x 40 requests, 50 steps each",
+        &["window", "requests/s", "mean batch", "p50", "p99", "p999"],
+    );
+    rep.row(vec![
+        "500 µs".into(),
+        format!("{batched_rps:.0}"),
+        format!("{:.2}", bm.mean_batch()),
+        format!("{:.0} µs", bm.latency.percentile(0.50) / 1e3),
+        format!("{:.0} µs", bm.latency.percentile(0.99) / 1e3),
+        format!("{:.0} µs", bm.latency.percentile(0.999) / 1e3),
+    ]);
+    rep.row(vec![
+        "0 (off)".into(),
+        format!("{unbatched_rps:.0}"),
+        format!("{:.2}", um.mean_batch()),
+        format!("{:.0} µs", um.latency.percentile(0.50) / 1e3),
+        format!("{:.0} µs", um.latency.percentile(0.99) / 1e3),
+        format!("{:.0} µs", um.latency.percentile(0.999) / 1e3),
+    ]);
+    rep.finish();
+    println!(
+        "batching speedup: {speedup:.2}x ({batched_rps:.0} vs {unbatched_rps:.0} requests/s); \
+         batch histogram {:?}",
+        bm.batch_size_counts
+    );
+    assert!(
+        um.mean_batch() <= 1.0 + 1e-9,
+        "window 0 must be strict request-at-a-time, saw mean batch {}",
+        um.mean_batch()
+    );
+
+    // ---- Part 3: client-count determinism --------------------------------
+    let identity_keys: Vec<(u64, u64, u64)> =
+        (0..IDENTITY_KEYS as u64).map(|k| (k + 1, 40 + k % 8, 7000 + k)).collect();
+    let (_, _, got_2c) = run_load(&dir, 500, 2, &identity_keys);
+    let (_, _, got_8c) = run_load(&dir, 500, 8, &identity_keys);
+    let identical = got_2c == got_8c;
+    assert!(identical, "responses must be bit-identical at 2 and 8 clients");
+    let spikes: u64 = got_2c.values().flat_map(|v| v.iter()).sum();
+    assert!(spikes > 0, "the determinism probe must actually spike");
+    std::fs::create_dir_all("bench_out").ok();
+    let dumps = [("serve_responses_2c.csv", &got_2c), ("serve_responses_8c.csv", &got_8c)];
+    for (name, got) in dumps {
+        let mut csv = String::from("request_id,spike_counts\n");
+        for (key, counts) in got.iter() {
+            let joined: Vec<String> = counts.iter().map(u64::to_string).collect();
+            csv.push_str(&format!("{key},{}\n", joined.join(";")));
+        }
+        let path = Path::new("bench_out").join(name);
+        std::fs::write(&path, csv).unwrap();
+        println!("responses written to {}", path.display());
+    }
+    println!("2-client vs 8-client identical: {identical} ({spikes} total spikes)");
+
+    // ---- Machine-readable baseline (BENCH_serve.json v1) -----------------
+    let out = std::env::var("S2SWITCH_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let hist_json: Vec<String> = bm.batch_size_counts.iter().map(u64::to_string).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"schema_version\": 1,\n  \"warm_boot\": {{\n    \"tenants\": {},\n    \"cold_ms\": {cold_ms:.2},\n    \"warm_ms\": {warm_ms:.2},\n    \"compiles\": {},\n    \"cache_hits\": {},\n    \"disk_hits\": {}\n  }},\n  \"throughput\": {{\n    \"clients\": {LOAD_CLIENTS},\n    \"requests\": {LOAD_REQUESTS},\n    \"steps_per_request\": 50,\n    \"requests_per_s\": {batched_rps:.1},\n    \"unbatched_requests_per_s\": {unbatched_rps:.1},\n    \"batching_speedup\": {speedup:.4}\n  }},\n  \"latency\": {{\n    \"p50_us\": {:.1},\n    \"p99_us\": {:.1},\n    \"p999_us\": {:.1},\n    \"mean_us\": {:.1}\n  }},\n  \"batching\": {{\n    \"window_us\": 500,\n    \"max_batch\": 16,\n    \"batches\": {},\n    \"mean_batch\": {:.4},\n    \"hist\": [{}]\n  }},\n  \"identity\": {{\n    \"keys\": {IDENTITY_KEYS},\n    \"clients_2_vs_8_identical\": {identical},\n    \"total_spikes\": {spikes}\n  }}\n}}\n",
+        warm_report.tenants,
+        warm_report.compiles,
+        warm_report.cache_hits,
+        warm_report.disk_hits,
+        bm.latency.percentile(0.50) / 1e3,
+        bm.latency.percentile(0.99) / 1e3,
+        bm.latency.percentile(0.999) / 1e3,
+        bm.latency.mean() / 1e3,
+        bm.batches,
+        bm.mean_batch(),
+        hist_json.join(", "),
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("baseline written to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

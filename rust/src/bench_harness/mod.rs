@@ -8,6 +8,97 @@
 
 use std::time::Instant;
 
+/// The one latency-percentile accumulator every latency report in the tree
+/// shares: [`Bench`] iteration stats, the `simulate --batch` per-sample
+/// latency line, and the serve daemon's per-request accounting all feed
+/// this instead of growing private percentile copies.
+///
+/// Samples are raw nanoseconds; sorting is lazy (first percentile query
+/// after a record sorts once), so recording on a hot path is a plain push.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyHistogram {
+    ns: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram::default()
+    }
+
+    /// Build from integer-nanosecond samples (e.g. `BatchRun::sample_nanos`).
+    pub fn from_nanos<I: IntoIterator<Item = u64>>(samples: I) -> Self {
+        let mut h = LatencyHistogram::new();
+        for s in samples {
+            h.record(s);
+        }
+        h
+    }
+
+    pub fn record(&mut self, nanos: u64) {
+        self.record_f64(nanos as f64);
+    }
+
+    pub fn record_f64(&mut self, nanos: f64) {
+        self.ns.push(nanos);
+        self.sorted = false;
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.ns.extend_from_slice(&other.ns);
+        self.sorted = self.ns.is_empty();
+    }
+
+    pub fn len(&self) -> usize {
+        self.ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ns.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Nearest-rank percentile in nanoseconds (`p` in `[0, 1]`; `0.0` is
+    /// the minimum, `1.0` the maximum). Empty histograms report 0.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.ns.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.ns.len();
+        self.ns[((n as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize]
+    }
+
+    /// Arithmetic mean in nanoseconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.ns.is_empty() {
+            return 0.0;
+        }
+        self.ns.iter().sum::<f64>() / self.ns.len() as f64
+    }
+
+    /// One-line human-readable summary: the quantities serve and
+    /// `simulate --batch` print on exit.
+    pub fn summary(&mut self) -> String {
+        format!(
+            "p50 {} | p99 {} | p999 {} | mean {} | max {} ({} samples)",
+            human_ns(self.percentile(0.50)),
+            human_ns(self.percentile(0.99)),
+            human_ns(self.percentile(0.999)),
+            human_ns(self.mean()),
+            human_ns(self.percentile(1.0)),
+            self.len()
+        )
+    }
+}
+
 /// Statistics over a set of per-iteration timings.
 #[derive(Clone, Debug)]
 pub struct Stats {
@@ -20,17 +111,18 @@ pub struct Stats {
 }
 
 impl Stats {
-    fn from_samples(mut ns: Vec<f64>) -> Stats {
-        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = ns.len();
-        let pct = |p: f64| ns[((n as f64 - 1.0) * p).round() as usize];
+    fn from_samples(ns: Vec<f64>) -> Stats {
+        let mut h = LatencyHistogram::default();
+        for v in ns {
+            h.record_f64(v);
+        }
         Stats {
-            iters: n,
-            mean_ns: ns.iter().sum::<f64>() / n as f64,
-            p50_ns: pct(0.50),
-            p99_ns: pct(0.99),
-            min_ns: ns[0],
-            max_ns: ns[n - 1],
+            iters: h.len(),
+            mean_ns: h.mean(),
+            p50_ns: h.percentile(0.50),
+            p99_ns: h.percentile(0.99),
+            min_ns: h.percentile(0.0),
+            max_ns: h.percentile(1.0),
         }
     }
 

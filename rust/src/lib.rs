@@ -34,6 +34,12 @@
 //!   checksummed binary codec plus a content-addressed on-disk store that
 //!   turns the compile cache into a second, restart-surviving tier
 //!   (compile once, serve many; `--artifact-dir`).
+//! * [`serve`] — the long-lived inference daemon: warm-boots every tenant
+//!   network from the artifact store (zero materializing compiles), admits
+//!   them as co-tenants on one shared machine, and serves spike-count
+//!   inference over a length-prefixed checksummed socket protocol with
+//!   dynamic micro-batching onto persistent [`sim::SimPool`] engines
+//!   (`s2switch serve`).
 //! * [`calibrate`] — host calibration: micro-benchmarks measuring the real
 //!   serial events/s and parallel MACs/s (per kernel variant — scalar or
 //!   `std::simd` behind the `simd` feature), persisted as JSON next to the
@@ -60,6 +66,7 @@ pub mod paradigm;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod switching;
 

@@ -19,6 +19,10 @@
 //!                   [--fault-map PATH] [--fault-seed N] [--fault-rate F]
 //!                   [--record-csv PATH]      # demo 3-layer network
 //! s2switch calibrate [--artifact-dir PATH] [--out FILE]
+//! s2switch serve    [--addr HOST:PORT] [--networks DIR] [--artifact-dir PATH]
+//!                   [--batch-window-us U] [--max-batch N] [--jobs N]
+//!                   [--machine BxWxH|WxH|light-board] [--strategy S]
+//!                   [--partition linear|traffic] [--require-warm]
 //! ```
 //!
 //! `--jobs N` sets the worker-thread count (0 = one thread per CPU) for
@@ -68,6 +72,14 @@
 //! `decide --rate R` runs the runtime-informed decision for one layer from
 //! the CLI; with `--artifact-dir` it requires (and consumes) the stored
 //! calibration, erroring out with a `calibrate` hint when none exists.
+//! `serve` turns the pipeline into a long-lived daemon (DESIGN.md
+//! §Serving): every network under `--networks DIR` (or the built-in demo
+//! net) warm-boots from the artifact store as a co-tenant of one shared
+//! machine, then inference requests arrive over a length-prefixed binary
+//! socket protocol and are dynamically micro-batched (`--batch-window-us`,
+//! `--max-batch`) onto persistent reset-between-requests engine pools —
+//! responses are bit-identical to a one-shot `simulate` at any client
+//! count. SIGINT/SIGTERM drains in-flight batches and exits 0.
 
 use anyhow::{bail, ensure, Context, Result};
 use s2switch::coordinator::{
@@ -130,7 +142,7 @@ impl Args {
     }
 }
 
-const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|calibrate> [flags]
+const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|calibrate|serve> [flags]
   dataset   --out PATH --small --jobs N --artifact-dir PATH
             generate + label the sweep corpus
   train     --data PATH --seeds N --out PATH   train 12 classifiers, save AdaBoost
@@ -169,6 +181,19 @@ const USAGE: &str = "usage: s2switch <dataset|train|decide|compile|simulate|cali
             host's fingerprint + timestamp; simulate auto-loads them for
             the runtime-informed paradigm check and warns when they are
             stale (>30 days), foreign, or from another kernel variant
+  serve     --addr HOST:PORT --networks DIR --artifact-dir PATH
+            --batch-window-us U --max-batch N --jobs N
+            --machine BxWxH|WxH|light-board --strategy S
+            --partition linear|traffic --require-warm
+            long-lived inference daemon: warm-boot every *.json network in
+            --networks DIR (default: the built-in demo net as tenant
+            'demo') as co-tenants of one machine, then serve inference
+            over the binary socket protocol with dynamic micro-batching
+            (--batch-window-us U: accumulation window per tenant, 0 =
+            batching off; --max-batch N: batch size cap; --jobs N:
+            persistent engines per tenant; --require-warm: error out
+            unless the boot had zero materializing compiles and >0 disk
+            hits); SIGINT/SIGTERM drains in-flight work and exits 0
   (--jobs N: worker threads for compiling, batching and same-wave layer
    stepping, 0 = one per CPU;
    --machine WxH: chip grid, light-board = 8x6, BxWxH: B-board array of WxH
@@ -194,6 +219,7 @@ fn main() -> Result<()> {
         "compile" => cmd_compile(&args),
         "simulate" => cmd_simulate(&args),
         "calibrate" => cmd_calibrate(&args),
+        "serve" => cmd_serve(&args),
         other => bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
 }
@@ -525,6 +551,30 @@ fn warn_calibration_provenance(rec: &s2switch::calibrate::CalibrationRecord) {
     }
 }
 
+/// The built-in 3-layer demo network (`simulate` without `--config`;
+/// `serve` without `--networks` hosts it as tenant "demo").
+fn demo_network() -> s2switch::model::Network {
+    let mut b = NetworkBuilder::new(11);
+    let inp = b.spike_source("input", 200);
+    let hid = b.lif_population("hidden", 120, LifParams { alpha: 0.85, ..Default::default() });
+    let out = b.lif_population("output", 20, LifParams { alpha: 0.9, ..Default::default() });
+    b.project(
+        inp,
+        hid,
+        Connector::FixedProbability(0.4),
+        SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+        0.015,
+    );
+    b.project(
+        hid,
+        out,
+        Connector::FixedProbability(0.9),
+        SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+        0.02,
+    );
+    b.build()
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let steps: u64 = args.parse_or("steps", 200)?;
     // --config FILE loads a JSON network description; otherwise a built-in
@@ -533,26 +583,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         s2switch::model::config::network_from_json(&text)?
     } else {
-        let mut b = NetworkBuilder::new(11);
-        let inp = b.spike_source("input", 200);
-        let hid =
-            b.lif_population("hidden", 120, LifParams { alpha: 0.85, ..Default::default() });
-        let out = b.lif_population("output", 20, LifParams { alpha: 0.9, ..Default::default() });
-        b.project(
-            inp,
-            hid,
-            Connector::FixedProbability(0.4),
-            SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
-            0.015,
-        );
-        b.project(
-            hid,
-            out,
-            Connector::FixedProbability(0.9),
-            SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
-            0.02,
-        );
-        b.build()
+        demo_network()
     };
 
     let rate: f64 = args.parse_or("rate", 0.15)?;
@@ -682,6 +713,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             std::time::Duration::from_nanos(run.wall_nanos),
         );
         print_throughput(run.steps_per_sec(), run.events_per_sec(), run.macs_per_sec());
+        // Same histogram utility the serve daemon reports with.
+        let mut hist =
+            s2switch::bench_harness::LatencyHistogram::from_nanos(run.sample_nanos.iter().copied());
+        println!("sample latency: {}", hist.summary());
         if let Some(out) = record_path {
             // One CSV per sample: PATH gains a `.sN` suffix before `.csv`.
             for (i, rec) in run.recorders.iter().enumerate() {
@@ -1123,4 +1158,160 @@ fn build_sim(
          `cargo build --features pjrt` (requires the vendored `xla` crate)"
     );
     NetworkSim::native(net, layers)
+}
+
+/// `serve` owns its run parameters: per-sample knobs travel in each wire
+/// request, one-shot output flags have no serving analogue. Reject the
+/// incompatible `simulate` flags up front, each with a hint at the serving
+/// way to get the same effect (mirrors the sharded-path guards above).
+fn validate_serve_flags(args: &Args) -> Result<()> {
+    let rejected: &[(&str, &str)] = &[
+        ("batch", "serve batches dynamically; tune --batch-window-us / --max-batch instead"),
+        ("record-csv", "serve returns spike counts on the wire; use `simulate --record-csv`"),
+        ("record", "serve returns spike counts on the wire; use `simulate --record-csv`"),
+        ("steps", "steps travel in each request, not on the daemon"),
+        ("rate", "the stimulus rate travels in each request, not on the daemon"),
+        ("seed", "the stimulus seed travels in each request, not on the daemon"),
+        ("config", "serve hosts a directory of networks; use --networks DIR"),
+        ("pjrt", "serve runs persistent native engine pools only"),
+        ("profile", "--profile applies to single-sample `simulate` runs"),
+        ("intra-jobs", "serve parallelizes across requests; --jobs sizes the engine pools"),
+        ("adaptive", "--adaptive re-switching is a `simulate` loop, not a serving mode"),
+        ("swap-window", "--swap-window belongs to `simulate --adaptive`"),
+        ("swap-patience", "--swap-patience belongs to `simulate --adaptive`"),
+        ("fault-map", "fault recovery is a `simulate` mode for now"),
+        ("fault-seed", "fault recovery is a `simulate` mode for now"),
+        ("fault-rate", "fault recovery is a `simulate` mode for now"),
+    ];
+    for (flag, hint) in rejected {
+        ensure!(!args.has(flag), "serve does not take --{flag} ({hint})");
+    }
+    Ok(())
+}
+
+/// `--networks DIR`: every `*.json` file is one tenant network, named by
+/// its file stem, loaded in sorted order (the registry re-sorts anyway, so
+/// admission is directory-order independent). No flag → the built-in demo
+/// network as tenant "demo".
+fn load_tenant_specs(args: &Args) -> Result<Vec<s2switch::serve::TenantSpec>> {
+    use s2switch::serve::TenantSpec;
+    let Some(dir) = args.get("networks") else {
+        return Ok(vec![TenantSpec { name: "demo".into(), net: demo_network() }]);
+    };
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading --networks {dir}"))?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .collect();
+    paths.sort();
+    ensure!(!paths.is_empty(), "--networks {dir} holds no .json network files");
+    let mut specs = Vec::with_capacity(paths.len());
+    for path in paths {
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .map(str::to_string)
+            .with_context(|| format!("non-UTF-8 network file name {}", path.display()))?;
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let net = s2switch::model::config::network_from_json(&text)
+            .with_context(|| format!("parsing tenant network {}", path.display()))?;
+        specs.push(TenantSpec { name, net });
+    }
+    Ok(specs)
+}
+
+/// The long-lived inference daemon (DESIGN.md §Serving): warm-boot every
+/// tenant network from the artifact store onto one shared machine, serve
+/// micro-batched inference over the socket protocol until SIGINT/SIGTERM,
+/// then drain and print the serving summary.
+fn cmd_serve(args: &Args) -> Result<()> {
+    validate_serve_flags(args)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7272").to_string();
+    let cfg = s2switch::serve::ServeConfig {
+        batch_window_us: args.parse_or("batch-window-us", 200)?,
+        max_batch: args.parse_or("max-batch", 16)?,
+        jobs: resolve_jobs(args)?,
+    };
+
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    sys.set_jobs(cfg.jobs);
+    attach_artifact_dir(args, &mut sys)?;
+
+    let specs = load_tenant_specs(args)?;
+    let registry = s2switch::serve::TenantRegistry::boot(
+        specs,
+        &mut sys,
+        parse_machine(args)?,
+        parse_strategy(args)?,
+        parse_partition(args)?,
+    )?;
+    for t in &registry.tenants {
+        println!(
+            "tenant {:<16} {} layers [{}] on {} PEs",
+            t.name,
+            t.layers.len(),
+            t.layers.iter().map(|l| l.paradigm().to_string()).collect::<Vec<_>>().join(", "),
+            t.pes.len()
+        );
+    }
+    let report = &registry.report;
+    println!(
+        "boot: {} tenant(s) in {:.2?} — {} compiles, {} cache hits, {} artifact hits; \
+         {}/{} PEs occupied ({})",
+        report.tenants,
+        std::time::Duration::from_nanos(report.boot_nanos),
+        report.compiles,
+        report.cache_hits,
+        report.disk_hits,
+        report.placed_pes,
+        report.machine_pes,
+        if report.is_warm() { "warm" } else { "cold" }
+    );
+    if args.has("require-warm") {
+        ensure!(
+            report.is_warm(),
+            "--require-warm: boot ran {} materializing compile(s) with {} artifact hit(s); \
+             pre-warm the store with `compile`/`simulate --artifact-dir` first",
+            report.compiles,
+            report.disk_hits
+        );
+    }
+
+    s2switch::serve::install_signal_handlers();
+    let server = s2switch::serve::Server::bind(registry, &addr, cfg)?;
+    println!(
+        "serving on {} (window {}µs, max batch {}, {} engine(s)/tenant); \
+         SIGINT/SIGTERM drains and exits",
+        server.local_addr()?,
+        cfg.batch_window_us,
+        cfg.max_batch,
+        if cfg.jobs == 0 { "cpu".to_string() } else { cfg.jobs.to_string() }
+    );
+    let report = server.run()?;
+
+    let mut m = report.metrics;
+    println!(
+        "served {} request(s): {} ok, {} error ({} protocol), {} shutdown-refused, \
+         {} truncated frame(s)",
+        m.requests,
+        m.ok_responses,
+        m.error_responses,
+        m.protocol_errors,
+        m.shutdown_responses,
+        m.truncated_frames
+    );
+    if m.batches > 0 {
+        println!(
+            "batching: {} batch(es), mean size {:.2}, histogram {:?}",
+            m.batches,
+            m.mean_batch(),
+            m.batch_size_counts
+        );
+        println!("latency: {}", m.latency.summary());
+    }
+    println!("drained and stopped cleanly");
+    Ok(())
 }

@@ -1,0 +1,249 @@
+//! Dynamic micro-batching: per-tenant request accumulation onto a
+//! persistent [`SimPool`].
+//!
+//! One [`TenantWorker`] runs per tenant. It blocks on its request queue;
+//! when the first request of a batch arrives it keeps accumulating until
+//! either `max_batch` requests are in hand or `batch_window_us` has
+//! elapsed since that first arrival — then the whole batch fans out over
+//! the tenant's pool engines in one [`SimPool::run_each`] call. A window
+//! of **0** disables micro-batching (strict request-at-a-time), which is
+//! the bench's "batching off" comparison point.
+//!
+//! Determinism: each request's output is a pure function of the request
+//! itself — the engine is [`crate::sim::NetworkSim::reset`] before it and
+//! the stimulus is the request's own seeded provider — so the batch
+//! assembly (arrival order, window cuts, pool size) affects latency only,
+//! never a single response byte (DESIGN.md §Serving).
+
+use super::protocol::{encode_response_frame, Request, Response};
+use crate::bench_harness::LatencyHistogram;
+use crate::model::PopulationId;
+use crate::sim::SimPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A decoded request routed to a tenant worker, with the channel its
+/// encoded response frame goes back on (the connection's writer thread).
+pub struct Submission {
+    pub req: Request,
+    pub reply: Sender<Vec<u8>>,
+    pub enqueued: Instant,
+}
+
+/// Serving-side counters, shared across workers and readers. Batch sizes
+/// feed the histogram `BENCH_serve.json` reports; request latencies feed
+/// the shared [`LatencyHistogram`].
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: u64,
+    pub ok_responses: u64,
+    pub error_responses: u64,
+    pub shutdown_responses: u64,
+    /// Frames rejected at the protocol layer (bad magic/version/size/...).
+    pub protocol_errors: u64,
+    /// Connections that died mid-frame.
+    pub truncated_frames: u64,
+    pub batches: u64,
+    /// `batch_size_counts[s]` = batches executed with exactly `s+1` requests.
+    pub batch_size_counts: Vec<u64>,
+    /// Enqueue-to-response latency per served request.
+    pub latency: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    pub fn note_batch(&mut self, size: usize) {
+        self.batches += 1;
+        if self.batch_size_counts.len() < size {
+            self.batch_size_counts.resize(size, 0);
+        }
+        self.batch_size_counts[size - 1] += 1;
+    }
+
+    /// Mean executed batch size (0 when nothing ran).
+    pub fn mean_batch(&self) -> f64 {
+        let total: u64 = self.batch_size_counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let weighted: u64 = self
+            .batch_size_counts
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (i as u64 + 1) * n)
+            .sum();
+        weighted as f64 / total as f64
+    }
+}
+
+/// Accumulate one batch: `first` is already in hand; keep pulling from
+/// `rx` until `max_batch` requests are collected or `window` has elapsed
+/// since entry. `window == 0` returns immediately — micro-batching off.
+pub fn collect_batch(
+    rx: &Receiver<Submission>,
+    first: Submission,
+    window: Duration,
+    max_batch: usize,
+) -> Vec<Submission> {
+    let mut batch = vec![first];
+    if window.is_zero() {
+        return batch;
+    }
+    let deadline = Instant::now() + window;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(sub) => batch.push(sub),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    batch
+}
+
+/// One tenant's batching loop: queue → window accumulation → pool run →
+/// per-request responses, until shutdown (then every queued request gets
+/// a typed `Shutdown` response and the loop exits).
+pub struct TenantWorker {
+    pub name: String,
+    pub pop_sizes: Vec<usize>,
+    pub pool: SimPool,
+    pub rx: Receiver<Submission>,
+    pub window: Duration,
+    pub max_batch: usize,
+    pub stop: Arc<AtomicBool>,
+}
+
+impl TenantWorker {
+    pub fn run(mut self, metrics: &Mutex<ServeMetrics>) {
+        // Idle poll period: how quickly an idle tenant notices shutdown.
+        let poll = Duration::from_millis(20);
+        loop {
+            let first = match self.rx.recv_timeout(poll) {
+                Ok(sub) => sub,
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                // Draining: everything still queued was not in flight when
+                // shutdown began — typed Shutdown, never a dropped socket.
+                self.refuse(first, metrics);
+                while let Ok(sub) = self.rx.try_recv() {
+                    self.refuse(sub, metrics);
+                }
+                break;
+            }
+            let batch = collect_batch(&self.rx, first, self.window, self.max_batch);
+            self.execute(batch, metrics);
+        }
+    }
+
+    fn refuse(&self, sub: Submission, metrics: &Mutex<ServeMetrics>) {
+        let rsp = Response::Shutdown {
+            request_id: sub.req.request_id,
+            message: format!("server draining; tenant '{}' refused the request", self.name),
+        };
+        let _ = sub.reply.send(encode_response_frame(&rsp));
+        metrics.lock().unwrap().shutdown_responses += 1;
+    }
+
+    /// Run every request of the batch on the persistent pool (one
+    /// reset-isolated engine run per request) and answer in batch order.
+    fn execute(&mut self, batch: Vec<Submission>, metrics: &Mutex<ServeMetrics>) {
+        let sizes = &self.pop_sizes;
+        let params: Vec<(u64, u64, f64)> =
+            batch.iter().map(|s| (s.req.steps, s.req.seed, s.req.rate)).collect();
+        let counts: Vec<Vec<u64>> = self.pool.run_each(batch.len(), |sim, i| {
+            let (steps, seed, rate) = params[i];
+            let mut provider = super::stimulus(sizes.clone(), seed, rate);
+            sim.run_jobs(steps, &mut provider, 1);
+            (0..sizes.len()).map(|p| sim.recorder.spike_count(PopulationId(p)) as u64).collect()
+        });
+        let size = batch.len();
+        let mut m = metrics.lock().unwrap();
+        m.note_batch(size);
+        for (sub, spike_counts) in batch.into_iter().zip(counts) {
+            let rsp = Response::Ok { request_id: sub.req.request_id, spike_counts };
+            if sub.reply.send(encode_response_frame(&rsp)).is_ok() {
+                m.ok_responses += 1;
+            }
+            m.latency.record(sub.enqueued.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn sub(id: u64) -> Submission {
+        let (tx, _rx) = mpsc::channel();
+        // The receiver is dropped — these tests exercise batching shape
+        // only, not response delivery.
+        Submission {
+            req: Request {
+                request_id: id,
+                network: "t".to_string(),
+                steps: 1,
+                seed: id,
+                rate: 0.1,
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn zero_window_disables_batching() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(sub(2)).unwrap();
+        tx.send(sub(3)).unwrap();
+        let batch = collect_batch(&rx, sub(1), Duration::ZERO, 16);
+        assert_eq!(batch.len(), 1, "window 0 must be strict request-at-a-time");
+        assert_eq!(batch[0].req.request_id, 1);
+        // The queued requests are untouched, ready for the next batch.
+        assert_eq!(rx.try_recv().unwrap().req.request_id, 2);
+    }
+
+    #[test]
+    fn max_batch_caps_accumulation() {
+        let (tx, rx) = mpsc::channel();
+        for id in 2..10 {
+            tx.send(sub(id)).unwrap();
+        }
+        let batch = collect_batch(&rx, sub(1), Duration::from_secs(5), 4);
+        assert_eq!(batch.len(), 4, "must stop at max_batch, not the window");
+        let ids: Vec<u64> = batch.iter().map(|s| s.req.request_id).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4], "batch assembly order is arrival order");
+    }
+
+    #[test]
+    fn window_expiry_closes_a_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(sub(2)).unwrap();
+        let batch = collect_batch(&rx, sub(1), Duration::from_millis(5), 16);
+        assert_eq!(batch.len(), 2, "queued request joins, then the window expires");
+        drop(tx);
+    }
+
+    #[test]
+    fn batch_histogram_accounting() {
+        let mut m = ServeMetrics::default();
+        m.note_batch(1);
+        m.note_batch(3);
+        m.note_batch(3);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.batch_size_counts, vec![1, 0, 2]);
+        let mean = m.mean_batch();
+        assert!((mean - 7.0 / 3.0).abs() < 1e-9, "{mean}");
+    }
+}

@@ -1,0 +1,48 @@
+//! Blocking serve client: one request on the wire at a time.
+//!
+//! The protocol itself allows pipelining (responses carry the request id);
+//! the bench's open-loop load generator drives raw
+//! [`super::protocol`] frames over split sender/receiver threads instead
+//! of this convenience wrapper.
+
+use super::protocol::{
+    decode_response, encode_request_frame, read_frame, ProtocolError, Request, Response,
+    RESPONSE_MAGIC,
+};
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+
+pub struct ServeClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(ServeClient { stream, next_id: 1 })
+    }
+
+    /// Run `steps` timesteps of tenant `network` under the canonical
+    /// seeded stimulus; blocks for the (typed) response.
+    pub fn request(
+        &mut self,
+        network: &str,
+        steps: u64,
+        seed: u64,
+        rate: f64,
+    ) -> Result<Response, ProtocolError> {
+        let request_id = self.next_id;
+        self.next_id += 1;
+        let req = Request { request_id, network: network.to_string(), steps, seed, rate };
+        self.stream.write_all(&encode_request_frame(&req))?;
+        let body = read_frame(&mut self.stream, RESPONSE_MAGIC)?;
+        decode_response(&body)
+    }
+
+    /// Escape hatch for protocol tests: the raw stream.
+    pub fn into_stream(self) -> TcpStream {
+        self.stream
+    }
+}

@@ -1,0 +1,53 @@
+//! Long-lived inference daemon (`s2switch serve`) — DESIGN.md §Serving.
+//!
+//! Turns the one-shot CLI pipeline into a resident server, the ROADMAP's
+//! "serves heavy traffic as fast as the hardware allows" shape:
+//!
+//! * [`tenants`] — boot every network once, as co-tenants of one shared
+//!   machine (occupancy-mask admission), warm from the artifact store
+//!   (zero materializing compiles, asserted).
+//! * [`protocol`] — length-prefixed checksummed binary frames with typed
+//!   errors, following the `artifact::codec` conventions.
+//! * [`batcher`] — dynamic micro-batching onto persistent
+//!   [`crate::sim::SimPool`] engines (reset between requests; no
+//!   steady-state allocation).
+//! * [`server`] — the socket loop: per-connection reader/writer threads,
+//!   per-tenant batch workers, graceful drain on SIGINT/SIGTERM.
+//! * [`client`] — a blocking request/response client for tests, benches
+//!   and scripting.
+//!
+//! Determinism contract: a served response's spike counts are
+//! bit-identical to a one-shot `simulate` of the same (network, steps,
+//! seed, rate) at any client count, interleaving, batching window and
+//! jobs setting — `tests/serve.rs` and the `serve-baseline` CI job hold
+//! the line.
+
+pub mod batcher;
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod tenants;
+
+pub use batcher::ServeMetrics;
+pub use client::ServeClient;
+pub use protocol::{ErrorCode, ProtocolError, Request, Response};
+pub use server::{install_signal_handlers, ServeConfig, ServeReport, Server, ServerHandle};
+pub use tenants::{BootReport, Tenant, TenantRegistry, TenantSpec};
+
+use crate::model::PopulationId;
+use crate::rng::Rng;
+
+/// The canonical request stimulus: the same seeded Bernoulli spike
+/// provider a one-shot `simulate` builds, parameterized by `(seed, rate)`
+/// from the wire request. Serve responses are comparable bit-for-bit to
+/// local runs precisely because both sides call this one function.
+pub fn stimulus(
+    pop_sizes: Vec<usize>,
+    seed: u64,
+    rate: f64,
+) -> impl FnMut(PopulationId, u64, &mut Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    move |p: PopulationId, _t: u64, out: &mut Vec<u32>| {
+        out.extend((0..pop_sizes[p.0] as u32).filter(|_| rng.chance(rate)));
+    }
+}

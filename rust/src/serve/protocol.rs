@@ -1,0 +1,576 @@
+//! Length-prefixed binary wire protocol for the serve daemon.
+//!
+//! The framing reuses the [`crate::artifact::codec`] conventions: a fixed
+//! little-endian header carrying magic, version and payload length, an
+//! FNV-1a checksum over the body, and typed errors for every way a frame
+//! can be wrong ([`ProtocolError`] — the socket-side sibling of
+//! `ArtifactError`). Requests and responses use distinct magics so a
+//! client that connects to the wrong side of a proxy fails with
+//! [`ProtocolError::BadMagic`], not a silent mis-parse.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! magic     u32   b"S2RQ" (request) / b"S2RS" (response)
+//! version   u32   protocol revision (1)
+//! body_len  u64   payload bytes that follow the header
+//! checksum  u64   fnv1a64(body)
+//! body      [u8]  request / response payload
+//! ```
+//!
+//! Request body: `request_id u64 | name_len u64 | name utf-8 | steps u64 |
+//! seed u64 | rate f64-bits`. Response body: `request_id u64 | tag u8 |
+//! payload` where tag 0 = Ok (`n u64` + `n` spike counts, one per
+//! population in network order), tag 1 = Error (`code u8 | msg_len u64 |
+//! msg`), tag 2 = Shutdown (`msg_len u64 | msg`).
+
+use crate::artifact::codec::fnv1a64;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Request-frame magic (`b"S2RQ"`).
+pub const REQUEST_MAGIC: u32 = u32::from_le_bytes(*b"S2RQ");
+/// Response-frame magic (`b"S2RS"`).
+pub const RESPONSE_MAGIC: u32 = u32::from_le_bytes(*b"S2RS");
+/// Protocol revision; bumped on any layout change.
+pub const VERSION: u32 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_BYTES: usize = 24;
+/// Hard ceiling on a frame body — requests are tiny and responses carry
+/// one count per population, so anything bigger is hostile or corrupt.
+pub const MAX_BODY_BYTES: u64 = 1 << 20;
+/// Longest accepted tenant-network name.
+pub const MAX_NAME_BYTES: u64 = 256;
+/// Most timesteps one request may ask for (semantic bound, checked by the
+/// server so the typed error is `ErrorCode::BadRequest`, not a frame kill).
+pub const MAX_STEPS: u64 = 1_000_000;
+
+/// Everything that can go wrong between bytes-on-the-wire and a decoded
+/// frame. Mirrors `ArtifactError`: one variant per failure mode, each
+/// carrying enough context to print an actionable message.
+#[derive(Debug)]
+pub enum ProtocolError {
+    Io(std::io::Error),
+    BadMagic { found: u32, want: u32 },
+    BadVersion { found: u32, supported: u32 },
+    Oversized { len: u64, max: u64 },
+    Truncated { what: &'static str, need: u64, have: u64 },
+    ChecksumMismatch { stored: u64, computed: u64 },
+    Malformed { what: &'static str, detail: String },
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Io(e) => write!(f, "socket i/o: {e}"),
+            ProtocolError::BadMagic { found, want } => {
+                write!(f, "bad frame magic {found:#010x} (want {want:#010x})")
+            }
+            ProtocolError::BadVersion { found, supported } => {
+                write!(f, "protocol version {found} unsupported (serving v{supported})")
+            }
+            ProtocolError::Oversized { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte cap")
+            }
+            ProtocolError::Truncated { what, need, have } => {
+                write!(f, "truncated {what}: need {need} bytes, have {have}")
+            }
+            ProtocolError::ChecksumMismatch { stored, computed } => {
+                write!(f, "body checksum {computed:#018x} != stored {stored:#018x}")
+            }
+            ProtocolError::Malformed { what, detail } => {
+                write!(f, "malformed {what}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+impl From<std::io::Error> for ProtocolError {
+    fn from(e: std::io::Error) -> Self {
+        ProtocolError::Io(e)
+    }
+}
+
+/// One inference request: run `steps` timesteps of tenant `network` under
+/// the canonical seeded Bernoulli stimulus (`seed`, `rate` — the same
+/// provider a one-shot `simulate` builds, so responses are comparable
+/// bit-for-bit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub request_id: u64,
+    pub network: String,
+    pub steps: u64,
+    pub seed: u64,
+    pub rate: f64,
+}
+
+/// Typed application-level error category carried in an Error response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The named tenant is not admitted on this server.
+    UnknownNetwork,
+    /// Structurally valid frame, semantically invalid request
+    /// (zero/overlong steps, non-finite or out-of-range rate).
+    BadRequest,
+    /// The frame itself was undecodable (reported back when framing allows).
+    Protocol,
+    /// Server-side failure unrelated to the request.
+    Internal,
+}
+
+impl ErrorCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::UnknownNetwork => 1,
+            ErrorCode::BadRequest => 2,
+            ErrorCode::Protocol => 3,
+            ErrorCode::Internal => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::UnknownNetwork),
+            2 => Some(ErrorCode::BadRequest),
+            3 => Some(ErrorCode::Protocol),
+            4 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// One response frame. `Ok` carries per-population spike counts in network
+/// population order — the same numbers a one-shot `simulate` reports.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Ok { request_id: u64, spike_counts: Vec<u64> },
+    Error { request_id: u64, code: ErrorCode, message: String },
+    Shutdown { request_id: u64, message: String },
+}
+
+impl Response {
+    pub fn request_id(&self) -> u64 {
+        match self {
+            Response::Ok { request_id, .. }
+            | Response::Error { request_id, .. }
+            | Response::Shutdown { request_id, .. } => *request_id,
+        }
+    }
+}
+
+/// Parsed frame header; validation is split from parsing so a server can
+/// report *which* field was wrong before deciding to keep or drop the
+/// connection.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameHeader {
+    pub magic: u32,
+    pub version: u32,
+    pub body_len: u64,
+    pub checksum: u64,
+}
+
+impl FrameHeader {
+    /// Split a raw header; cannot fail (validation is [`FrameHeader::validate`]).
+    pub fn parse(bytes: &[u8; HEADER_BYTES]) -> FrameHeader {
+        FrameHeader {
+            magic: u32::from_le_bytes(bytes[0..4].try_into().unwrap()),
+            version: u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+            body_len: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+            checksum: u64::from_le_bytes(bytes[16..24].try_into().unwrap()),
+        }
+    }
+
+    /// Magic / version / size-cap checks, in an order that yields the most
+    /// specific typed error (wrong magic beats wrong version beats size).
+    pub fn validate(&self, want_magic: u32) -> Result<(), ProtocolError> {
+        if self.magic != want_magic {
+            return Err(ProtocolError::BadMagic { found: self.magic, want: want_magic });
+        }
+        if self.version != VERSION {
+            return Err(ProtocolError::BadVersion { found: self.version, supported: VERSION });
+        }
+        if self.body_len > MAX_BODY_BYTES {
+            return Err(ProtocolError::Oversized { len: self.body_len, max: MAX_BODY_BYTES });
+        }
+        Ok(())
+    }
+
+    /// Body-side checks once the declared payload has been read.
+    pub fn verify_body(&self, body: &[u8]) -> Result<(), ProtocolError> {
+        if body.len() as u64 != self.body_len {
+            return Err(ProtocolError::Truncated {
+                what: "frame body",
+                need: self.body_len,
+                have: body.len() as u64,
+            });
+        }
+        let computed = fnv1a64(body);
+        if computed != self.checksum {
+            return Err(ProtocolError::ChecksumMismatch { stored: self.checksum, computed });
+        }
+        Ok(())
+    }
+}
+
+/// Assemble a complete frame (header + body) for one write.
+pub fn frame(magic: u32, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + body.len());
+    out.extend_from_slice(&magic.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(body).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+pub fn encode_request_frame(req: &Request) -> Vec<u8> {
+    frame(REQUEST_MAGIC, &encode_request(req))
+}
+
+pub fn encode_response_frame(rsp: &Response) -> Vec<u8> {
+    frame(RESPONSE_MAGIC, &encode_response(rsp))
+}
+
+/// Write a complete frame to `w` (single `write_all`, so a concurrent
+/// writer thread never interleaves partial frames).
+pub fn write_frame(w: &mut impl Write, magic: u32, body: &[u8]) -> Result<(), ProtocolError> {
+    w.write_all(&frame(magic, body))?;
+    Ok(())
+}
+
+/// Blocking read of one validated frame body. Client-side convenience;
+/// the server uses the split [`FrameHeader`] API so its reads can poll a
+/// shutdown flag between chunks.
+pub fn read_frame(r: &mut impl Read, want_magic: u32) -> Result<Vec<u8>, ProtocolError> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    read_exact_typed(r, &mut hdr, "frame header")?;
+    let header = FrameHeader::parse(&hdr);
+    header.validate(want_magic)?;
+    let mut body = vec![0u8; header.body_len as usize];
+    read_exact_typed(r, &mut body, "frame body")?;
+    header.verify_body(&body)?;
+    Ok(body)
+}
+
+fn read_exact_typed(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    what: &'static str,
+) -> Result<(), ProtocolError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ProtocolError::Truncated { what, need: buf.len() as u64, have: 0 }
+        } else {
+            ProtocolError::Io(e)
+        }
+    })
+}
+
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let name = req.network.as_bytes();
+    let mut out = Vec::with_capacity(40 + name.len());
+    out.extend_from_slice(&req.request_id.to_le_bytes());
+    out.extend_from_slice(&(name.len() as u64).to_le_bytes());
+    out.extend_from_slice(name);
+    out.extend_from_slice(&req.steps.to_le_bytes());
+    out.extend_from_slice(&req.seed.to_le_bytes());
+    out.extend_from_slice(&req.rate.to_bits().to_le_bytes());
+    out
+}
+
+pub fn decode_request(body: &[u8]) -> Result<Request, ProtocolError> {
+    let mut r = Reader::new(body, "request body");
+    let request_id = r.u64()?;
+    let name_len = r.u64()?;
+    if name_len > MAX_NAME_BYTES {
+        return Err(ProtocolError::Malformed {
+            what: "request body",
+            detail: format!("network name of {name_len} bytes exceeds the {MAX_NAME_BYTES} cap"),
+        });
+    }
+    let name = r.bytes(name_len)?;
+    let network = String::from_utf8(name.to_vec()).map_err(|_| ProtocolError::Malformed {
+        what: "request body",
+        detail: "network name is not valid utf-8".to_string(),
+    })?;
+    let steps = r.u64()?;
+    let seed = r.u64()?;
+    let rate = f64::from_bits(r.u64()?);
+    r.finish()?;
+    Ok(Request { request_id, network, steps, seed, rate })
+}
+
+pub fn encode_response(rsp: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&rsp.request_id().to_le_bytes());
+    match rsp {
+        Response::Ok { spike_counts, .. } => {
+            out.push(0);
+            out.extend_from_slice(&(spike_counts.len() as u64).to_le_bytes());
+            for c in spike_counts {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        Response::Error { code, message, .. } => {
+            out.push(1);
+            out.push(code.to_u8());
+            out.extend_from_slice(&(message.len() as u64).to_le_bytes());
+            out.extend_from_slice(message.as_bytes());
+        }
+        Response::Shutdown { message, .. } => {
+            out.push(2);
+            out.extend_from_slice(&(message.len() as u64).to_le_bytes());
+            out.extend_from_slice(message.as_bytes());
+        }
+    }
+    out
+}
+
+pub fn decode_response(body: &[u8]) -> Result<Response, ProtocolError> {
+    let mut r = Reader::new(body, "response body");
+    let request_id = r.u64()?;
+    let tag = r.u8()?;
+    let rsp = match tag {
+        0 => {
+            let n = r.u64()?;
+            if n > MAX_BODY_BYTES / 8 {
+                return Err(ProtocolError::Malformed {
+                    what: "response body",
+                    detail: format!("{n} spike counts exceed the frame cap"),
+                });
+            }
+            let mut spike_counts = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                spike_counts.push(r.u64()?);
+            }
+            Response::Ok { request_id, spike_counts }
+        }
+        1 => {
+            let code = r.u8()?;
+            let code = ErrorCode::from_u8(code).ok_or_else(|| ProtocolError::Malformed {
+                what: "response body",
+                detail: format!("unknown error code {code}"),
+            })?;
+            let message = r.string()?;
+            Response::Error { request_id, code, message }
+        }
+        2 => {
+            let message = r.string()?;
+            Response::Shutdown { request_id, message }
+        }
+        t => {
+            return Err(ProtocolError::Malformed {
+                what: "response body",
+                detail: format!("unknown response tag {t}"),
+            })
+        }
+    };
+    r.finish()?;
+    Ok(rsp)
+}
+
+/// Bounds-checked little-endian reader over one frame body (the socket
+/// sibling of the artifact codec's `Dec`): every read names what it
+/// wanted, so truncation errors are self-describing.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8], what: &'static str) -> Self {
+        Reader { buf, pos: 0, what }
+    }
+
+    fn bytes(&mut self, n: u64) -> Result<&'a [u8], ProtocolError> {
+        let n = n as usize;
+        let have = self.buf.len() - self.pos;
+        if n > have {
+            return Err(ProtocolError::Truncated {
+                what: self.what,
+                need: n as u64,
+                have: have as u64,
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String, ProtocolError> {
+        let len = self.u64()?;
+        if len > MAX_BODY_BYTES {
+            return Err(ProtocolError::Malformed {
+                what: self.what,
+                detail: format!("string of {len} bytes exceeds the frame cap"),
+            });
+        }
+        let raw = self.bytes(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| ProtocolError::Malformed {
+            what: self.what,
+            detail: "string is not valid utf-8".to_string(),
+        })
+    }
+
+    /// Reject trailing garbage — a frame must be *exactly* its payload.
+    fn finish(self) -> Result<(), ProtocolError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtocolError::Malformed {
+                what: self.what,
+                detail: format!("{} trailing bytes after payload", self.buf.len() - self.pos),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request {
+            request_id: 7,
+            network: "mnist-lite".to_string(),
+            steps: 40,
+            seed: 1234,
+            rate: 0.25,
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let body = encode_request(&req());
+        assert_eq!(decode_request(&body).unwrap(), req());
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let cases = vec![
+            Response::Ok { request_id: 1, spike_counts: vec![0, 9, 312] },
+            Response::Error {
+                request_id: 2,
+                code: ErrorCode::UnknownNetwork,
+                message: "no tenant 'x'".to_string(),
+            },
+            Response::Shutdown { request_id: 3, message: "draining".to_string() },
+        ];
+        for rsp in cases {
+            let body = encode_response(&rsp);
+            assert_eq!(decode_response(&body).unwrap(), rsp, "roundtrip of {rsp:?}");
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_through_read_frame() {
+        let bytes = encode_request_frame(&req());
+        let body = read_frame(&mut bytes.as_slice(), REQUEST_MAGIC).unwrap();
+        assert_eq!(decode_request(&body).unwrap(), req());
+    }
+
+    #[test]
+    fn every_truncation_point_is_a_typed_error() {
+        let bytes = encode_request_frame(&req());
+        for cut in 0..bytes.len() {
+            let err = read_frame(&mut &bytes[..cut], REQUEST_MAGIC)
+                .expect_err("truncated frame must not decode");
+            assert!(
+                matches!(err, ProtocolError::Truncated { .. } | ProtocolError::Io(_)),
+                "cut at {cut}: got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = encode_request_frame(&req());
+        bytes[0] ^= 0xFF;
+        let err = read_frame(&mut bytes.as_slice(), REQUEST_MAGIC).unwrap_err();
+        assert!(matches!(err, ProtocolError::BadMagic { .. }), "{err}");
+        // Response magic on the request side is the same typed failure.
+        let swapped = encode_response_frame(&Response::Shutdown {
+            request_id: 0,
+            message: String::new(),
+        });
+        let err = read_frame(&mut swapped.as_slice(), REQUEST_MAGIC).unwrap_err();
+        assert!(matches!(err, ProtocolError::BadMagic { .. }), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let mut bytes = encode_request_frame(&req());
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = read_frame(&mut bytes.as_slice(), REQUEST_MAGIC).unwrap_err();
+        assert!(
+            matches!(err, ProtocolError::BadVersion { found: 99, supported: VERSION }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn oversized_declared_body_is_typed() {
+        let mut bytes = encode_request_frame(&req());
+        bytes[8..16].copy_from_slice(&(MAX_BODY_BYTES + 1).to_le_bytes());
+        let err = read_frame(&mut bytes.as_slice(), REQUEST_MAGIC).unwrap_err();
+        assert!(matches!(err, ProtocolError::Oversized { .. }), "{err}");
+    }
+
+    #[test]
+    fn corrupt_body_is_a_checksum_mismatch() {
+        let mut bytes = encode_request_frame(&req());
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        let err = read_frame(&mut bytes.as_slice(), REQUEST_MAGIC).unwrap_err();
+        assert!(matches!(err, ProtocolError::ChecksumMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed() {
+        // Overlong name length.
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&(MAX_NAME_BYTES + 1).to_le_bytes());
+        let err = decode_request(&body).unwrap_err();
+        assert!(matches!(err, ProtocolError::Malformed { .. }), "{err}");
+        // Trailing garbage after a valid request.
+        let mut ok = encode_request(&req());
+        ok.push(0xAB);
+        let err = decode_request(&ok).unwrap_err();
+        assert!(matches!(err, ProtocolError::Malformed { .. }), "{err}");
+        // Unknown response tag.
+        let mut rsp = Vec::new();
+        rsp.extend_from_slice(&1u64.to_le_bytes());
+        rsp.push(9);
+        let err = decode_response(&rsp).unwrap_err();
+        assert!(matches!(err, ProtocolError::Malformed { .. }), "{err}");
+        // Unknown error code.
+        let mut rsp = Vec::new();
+        rsp.extend_from_slice(&1u64.to_le_bytes());
+        rsp.push(1);
+        rsp.push(200);
+        rsp.extend_from_slice(&0u64.to_le_bytes());
+        let err = decode_response(&rsp).unwrap_err();
+        assert!(matches!(err, ProtocolError::Malformed { .. }), "{err}");
+    }
+
+    #[test]
+    fn header_layout_matches_artifact_codec_conventions() {
+        let bytes = encode_request_frame(&req());
+        assert_eq!(&bytes[0..4], b"S2RQ");
+        let h = FrameHeader::parse(bytes[..HEADER_BYTES].try_into().unwrap());
+        assert_eq!(h.version, VERSION);
+        assert_eq!(h.body_len as usize, bytes.len() - HEADER_BYTES);
+        assert_eq!(h.checksum, fnv1a64(&bytes[HEADER_BYTES..]));
+    }
+}

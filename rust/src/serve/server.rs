@@ -1,0 +1,420 @@
+//! The serve daemon's connection loop.
+//!
+//! Thread shape (all scoped, all joined before [`Server::run`] returns):
+//!
+//! ```text
+//! accept loop ──┬── reader (per connection) ──> tenant queue ──> TenantWorker (per tenant)
+//!               │        │                                            │
+//!               │        └── writer (per connection) <── response frames
+//! ```
+//!
+//! Readers decode frames and route submissions to tenant queues; each
+//! connection has one writer thread draining an mpsc channel of encoded
+//! response frames, so concurrent batch completions never interleave
+//! partial frames on one socket.
+//!
+//! Graceful shutdown (SIGINT/SIGTERM via [`install_signal_handlers`], or
+//! [`ServerHandle::shutdown`]): the accept loop stops taking connections
+//! and flips the shared stop flag; workers finish the batch in flight,
+//! answer everything still queued with a typed `Shutdown` response, and
+//! exit; readers answer any parsed-but-unrouted request the same way;
+//! writers drain their channels and flush. No client mid-request ever
+//! sees a reset connection.
+
+use super::batcher::{ServeMetrics, Submission, TenantWorker};
+use super::protocol::{
+    decode_request, encode_response_frame, ErrorCode, FrameHeader, ProtocolError, Response,
+    HEADER_BYTES, MAX_STEPS, REQUEST_MAGIC,
+};
+use super::tenants::{BootReport, TenantRegistry};
+use crate::sim::SimPool;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Serving knobs (`--batch-window-us`, `--max-batch`, `--jobs`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Micro-batch accumulation window in microseconds; 0 = batching off.
+    pub batch_window_us: u64,
+    /// Most requests one batch may hold.
+    pub max_batch: usize,
+    /// Pool engines per tenant (0 = one per CPU).
+    pub jobs: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { batch_window_us: 200, max_batch: 16, jobs: 0 }
+    }
+}
+
+/// What a finished server hands back: boot accounting plus serving
+/// counters (the shutdown summary and the serve bench's raw material).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub boot: BootReport,
+    pub metrics: ServeMetrics,
+}
+
+/// Cloneable remote control for a running [`Server`] (tests and the bench
+/// use it in place of process signals).
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ServerHandle {
+    /// Begin graceful shutdown: same path as SIGINT/SIGTERM.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+/// The long-lived daemon: one bound listener over one booted
+/// [`TenantRegistry`].
+pub struct Server {
+    listener: TcpListener,
+    registry: TenantRegistry,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port). The
+    /// listener is non-blocking so the accept loop can poll the stop flag.
+    pub fn bind(registry: TenantRegistry, addr: &str, cfg: ServeConfig) -> Result<Server> {
+        ensure!(cfg.max_batch >= 1, "--max-batch must be at least 1 (got {})", cfg.max_batch);
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding serve socket {addr}"))?;
+        listener.set_nonblocking(true).context("setting the serve listener non-blocking")?;
+        Ok(Server { listener, registry, cfg, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn handle(&self) -> Result<ServerHandle> {
+        Ok(ServerHandle { stop: self.stop.clone(), addr: self.local_addr()? })
+    }
+
+    /// Serve until shutdown, then drain and return the final report.
+    /// Engine pools are built here, once, and live for the whole serve —
+    /// the hot path never constructs engine state.
+    pub fn run(self) -> Result<ServeReport> {
+        let Server { listener, registry, cfg, stop } = self;
+        let window = Duration::from_micros(cfg.batch_window_us);
+        let metrics = Mutex::new(ServeMetrics::default());
+
+        // Per-tenant queues + workers, built before the thread scope so
+        // pool-construction errors surface as a clean boot failure.
+        let mut queues: BTreeMap<String, Sender<Submission>> = BTreeMap::new();
+        let mut workers = Vec::with_capacity(registry.tenants.len());
+        for tenant in &registry.tenants {
+            let pool = SimPool::new(&tenant.net, &tenant.layers, cfg.jobs)
+                .with_context(|| format!("building engine pool for tenant '{}'", tenant.name))?;
+            let (tx, rx) = mpsc::channel();
+            queues.insert(tenant.name.clone(), tx);
+            workers.push(TenantWorker {
+                name: tenant.name.clone(),
+                pop_sizes: tenant.pop_sizes(),
+                pool,
+                rx,
+                window,
+                max_batch: cfg.max_batch,
+                stop: stop.clone(),
+            });
+        }
+
+        let queues = &queues;
+        let metrics_ref = &metrics;
+        let stop_ref = &stop;
+        std::thread::scope(|scope| -> Result<()> {
+            for worker in workers {
+                scope.spawn(move || worker.run(metrics_ref));
+            }
+            loop {
+                if stop_ref.load(Ordering::SeqCst) || signals::requested() {
+                    // Signal and handle paths converge on the one flag
+                    // every worker and reader polls.
+                    stop_ref.store(true, Ordering::SeqCst);
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        scope.spawn(move || {
+                            serve_connection(stream, queues, metrics_ref, stop_ref);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        stop_ref.store(true, Ordering::SeqCst);
+                        return Err(e).context("accepting a serve connection");
+                    }
+                }
+            }
+            Ok(())
+            // Scope exit joins every reader, writer and worker: in-flight
+            // batches finish, queued requests get Shutdown, writers flush.
+        })?;
+
+        let metrics = metrics.into_inner().unwrap();
+        Ok(ServeReport { boot: registry.report.clone(), metrics })
+    }
+}
+
+/// Outcome of an interruptible exact read on a non-blocking-ish stream
+/// (read timeout as the poll period).
+enum ReadOutcome {
+    Full,
+    /// Peer closed; `read` bytes of the wanted span had arrived.
+    Eof { read: usize },
+    /// Shutdown flag flipped mid-read; `read` bytes had arrived.
+    Stopped { read: usize },
+}
+
+fn read_interruptible(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> std::io::Result<ReadOutcome> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Ok(ReadOutcome::Eof { read: got }),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(ReadOutcome::Stopped { read: got });
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+/// Per-connection reader: frame decode, typed-error replies, routing.
+/// Protocol failures that lose framing (bad magic/version/oversize) answer
+/// then close this connection only; failures with framing intact
+/// (checksum, malformed payload, unknown tenant, bad request) answer and
+/// keep serving the connection.
+fn serve_connection(
+    mut stream: TcpStream,
+    queues: &BTreeMap<String, Sender<Submission>>,
+    metrics: &Mutex<ServeMetrics>,
+    stop: &AtomicBool,
+) {
+    if stream.set_read_timeout(Some(Duration::from_millis(50))).is_err()
+        || stream.set_nodelay(true).is_err()
+    {
+        return;
+    }
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let (reply_tx, reply_rx) = mpsc::channel::<Vec<u8>>();
+    let writer = std::thread::spawn(move || writer_loop(write_half, reply_rx));
+
+    loop {
+        let mut hdr = [0u8; HEADER_BYTES];
+        match read_interruptible(&mut stream, &mut hdr, stop) {
+            Ok(ReadOutcome::Full) => {}
+            Ok(ReadOutcome::Eof { read: 0 }) | Ok(ReadOutcome::Stopped { read: 0 }) => break,
+            Ok(ReadOutcome::Eof { .. }) => {
+                metrics.lock().unwrap().truncated_frames += 1;
+                break;
+            }
+            Ok(ReadOutcome::Stopped { .. }) => {
+                send_shutdown(&reply_tx, 0, metrics);
+                break;
+            }
+            Err(_) => break,
+        }
+        let header = FrameHeader::parse(&hdr);
+        if let Err(e) = header.validate(REQUEST_MAGIC) {
+            // Framing is unrecoverable — answer with the typed error and
+            // close this connection; the server keeps serving others.
+            send_protocol_error(&reply_tx, &e, metrics);
+            break;
+        }
+        let mut body = vec![0u8; header.body_len as usize];
+        match read_interruptible(&mut stream, &mut body, stop) {
+            Ok(ReadOutcome::Full) => {}
+            Ok(ReadOutcome::Eof { .. }) => {
+                metrics.lock().unwrap().truncated_frames += 1;
+                break;
+            }
+            Ok(ReadOutcome::Stopped { .. }) => {
+                send_shutdown(&reply_tx, 0, metrics);
+                break;
+            }
+            Err(_) => break,
+        }
+        if let Err(e) = header.verify_body(&body) {
+            send_protocol_error(&reply_tx, &e, metrics);
+            continue;
+        }
+        let req = match decode_request(&body) {
+            Ok(req) => req,
+            Err(e) => {
+                send_protocol_error(&reply_tx, &e, metrics);
+                continue;
+            }
+        };
+        metrics.lock().unwrap().requests += 1;
+        if stop.load(Ordering::SeqCst) {
+            send_shutdown(&reply_tx, req.request_id, metrics);
+            break;
+        }
+        if req.steps == 0 || req.steps > MAX_STEPS {
+            send_error(
+                &reply_tx,
+                req.request_id,
+                ErrorCode::BadRequest,
+                format!("steps must be in 1..={MAX_STEPS} (got {})", req.steps),
+                metrics,
+            );
+            continue;
+        }
+        if !req.rate.is_finite() || !(0.0..=1.0).contains(&req.rate) {
+            send_error(
+                &reply_tx,
+                req.request_id,
+                ErrorCode::BadRequest,
+                format!("stimulus rate must be a finite probability in [0, 1] (got {})", req.rate),
+                metrics,
+            );
+            continue;
+        }
+        let Some(queue) = queues.get(&req.network) else {
+            let known: Vec<&str> = queues.keys().map(String::as_str).collect();
+            send_error(
+                &reply_tx,
+                req.request_id,
+                ErrorCode::UnknownNetwork,
+                format!("no tenant '{}' (serving: {})", req.network, known.join(", ")),
+                metrics,
+            );
+            continue;
+        };
+        let request_id = req.request_id;
+        let sub = Submission { req, reply: reply_tx.clone(), enqueued: std::time::Instant::now() };
+        if queue.send(sub).is_err() {
+            // Worker already drained and exited: shutdown raced the route.
+            send_shutdown(&reply_tx, request_id, metrics);
+            break;
+        }
+    }
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+/// Connection writer: serializes whole response frames onto the socket.
+/// Exits when every sender (reader + outstanding submissions) is gone —
+/// i.e. after all in-flight responses for this connection are flushed.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
+    while let Ok(frame) = rx.recv() {
+        if stream.write_all(&frame).is_err() {
+            break;
+        }
+    }
+    let _ = stream.flush();
+}
+
+fn send_protocol_error(reply: &Sender<Vec<u8>>, e: &ProtocolError, metrics: &Mutex<ServeMetrics>) {
+    let rsp = Response::Error { request_id: 0, code: ErrorCode::Protocol, message: e.to_string() };
+    let _ = reply.send(encode_response_frame(&rsp));
+    let mut m = metrics.lock().unwrap();
+    m.protocol_errors += 1;
+    m.error_responses += 1;
+}
+
+fn send_error(
+    reply: &Sender<Vec<u8>>,
+    request_id: u64,
+    code: ErrorCode,
+    message: String,
+    metrics: &Mutex<ServeMetrics>,
+) {
+    let rsp = Response::Error { request_id, code, message };
+    let _ = reply.send(encode_response_frame(&rsp));
+    metrics.lock().unwrap().error_responses += 1;
+}
+
+fn send_shutdown(reply: &Sender<Vec<u8>>, request_id: u64, metrics: &Mutex<ServeMetrics>) {
+    let rsp = Response::Shutdown {
+        request_id,
+        message: "server draining for shutdown".to_string(),
+    };
+    let _ = reply.send(encode_response_frame(&rsp));
+    metrics.lock().unwrap().shutdown_responses += 1;
+}
+
+/// Install SIGINT/SIGTERM handlers that flip a process-wide flag every
+/// [`Server::run`] accept loop polls — the CLI's graceful-shutdown entry.
+/// Tests and the bench use [`ServerHandle::shutdown`] instead.
+pub fn install_signal_handlers() {
+    signals::install();
+}
+
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    type Handler = extern "C" fn(i32);
+
+    extern "C" {
+        // POSIX `signal(2)`; returns the previous disposition (unused).
+        fn signal(signum: i32, handler: Handler) -> usize;
+    }
+
+    extern "C" fn note(_signum: i32) {
+        // Only an async-signal-safe atomic store happens here.
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+
+    pub(super) fn install() {
+        unsafe {
+            signal(SIGINT, note);
+            signal(SIGTERM, note);
+        }
+    }
+
+    pub(super) fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod signals {
+    pub(super) fn install() {}
+
+    pub(super) fn requested() -> bool {
+        false
+    }
+}

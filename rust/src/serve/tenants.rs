@@ -1,0 +1,157 @@
+//! Multi-tenant registry: boot every network onto **one shared machine**.
+//!
+//! Tenants are admitted sequentially in sorted-name order through the
+//! existing capacity-aware admission path, with an *occupancy* fault map
+//! threaded between admissions: after each tenant is placed, its PEs are
+//! marked dead for everyone after it. That reuses the whole fault-aware
+//! machinery — per-board headroom shrinking, paradigm capacity fallback,
+//! routing around unusable PEs — to get genuine co-placement: tenant
+//! placements are provably disjoint (tested in `tests/serve.rs`), and a
+//! tenant that does not fit what is left fails with the same typed
+//! capacity diagnostics a too-small machine produces.
+//!
+//! Warm boot: with an artifact directory attached to the
+//! [`SwitchingSystem`], every admission materializes from the disk tier —
+//! [`BootReport::compiles`] stays 0 and [`BootReport::disk_hits`] counts
+//! the artifact loads (asserted by `--require-warm` and CI).
+
+use crate::graph::PartitionStrategy;
+use crate::hardware::{FaultMap, MachineSpec, PeHandle, PlacementStrategy};
+use crate::model::Network;
+use crate::switching::{CompiledLayer, LayerDecision, SwitchingSystem};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+/// One network to admit, by name. Names are the wire-protocol routing key.
+pub struct TenantSpec {
+    pub name: String,
+    pub net: Network,
+}
+
+/// A booted tenant: its network, compiled layers, and the machine share it
+/// occupies.
+pub struct Tenant {
+    pub name: String,
+    pub net: Network,
+    pub layers: Vec<CompiledLayer>,
+    pub decisions: Vec<LayerDecision>,
+    /// PEs this tenant's placement occupies (disjoint across tenants).
+    pub pes: Vec<PeHandle>,
+}
+
+impl Tenant {
+    /// Population sizes in network order (the stimulus provider's shape).
+    pub fn pop_sizes(&self) -> Vec<usize> {
+        self.net.populations.iter().map(|p| p.n_neurons).collect()
+    }
+}
+
+/// Boot accounting: what admission cost and whether it was warm.
+#[derive(Clone, Debug)]
+pub struct BootReport {
+    pub tenants: usize,
+    pub boot_nanos: u64,
+    /// Materializing compiles across all admissions (0 on a warm store).
+    pub compiles: usize,
+    /// In-memory compile-cache hits.
+    pub cache_hits: usize,
+    /// Artifact-store (disk tier) hits.
+    pub disk_hits: usize,
+    /// PEs occupied across all tenants.
+    pub placed_pes: usize,
+    /// Machine capacity the tenants share.
+    pub machine_pes: usize,
+}
+
+impl BootReport {
+    /// Zero materializing compiles and at least one artifact load: the
+    /// boot was served entirely from the persistent store.
+    pub fn is_warm(&self) -> bool {
+        self.compiles == 0 && self.disk_hits > 0
+    }
+}
+
+/// The admitted tenant set plus its boot accounting.
+pub struct TenantRegistry {
+    pub tenants: Vec<Tenant>,
+    pub report: BootReport,
+}
+
+impl TenantRegistry {
+    /// Admit `specs` as co-tenants of one `mspec` machine. Single-board
+    /// machines go through `admit_network_faulted`; board arrays through
+    /// `admit_network_sharded_faulted` with `partition`. Admission order is
+    /// sorted by name, so the co-placement (and therefore every compiled
+    /// artifact and every response) is independent of caller order.
+    pub fn boot(
+        specs: Vec<TenantSpec>,
+        sys: &mut SwitchingSystem,
+        mspec: MachineSpec,
+        strategy: PlacementStrategy,
+        partition: PartitionStrategy,
+    ) -> Result<TenantRegistry> {
+        if specs.is_empty() {
+            bail!("no tenant networks to serve (give --networks a directory of .json networks)");
+        }
+        let mut names = BTreeSet::new();
+        for s in &specs {
+            if s.name.is_empty() {
+                bail!("tenant network with an empty name");
+            }
+            if !names.insert(s.name.clone()) {
+                bail!("duplicate tenant network name '{}'", s.name);
+            }
+        }
+        let mut specs = specs;
+        specs.sort_by(|a, b| a.name.cmp(&b.name));
+
+        let t0 = Instant::now();
+        let mut occupancy = FaultMap::healthy();
+        let mut tenants = Vec::with_capacity(specs.len());
+        let mut placed_pes = 0usize;
+        for spec in specs {
+            let admitted = if mspec.boards > 1 {
+                sys.admit_network_sharded_faulted(&spec.net, mspec, strategy, partition, &occupancy)
+                    .map(|s| s.admission)
+            } else {
+                sys.admit_network_faulted(&spec.net, mspec, strategy, &occupancy)
+            };
+            let admission = admitted.with_context(|| {
+                format!(
+                    "admitting tenant '{}' as co-tenant ({placed_pes} of {} PEs already occupied)",
+                    spec.name,
+                    mspec.total_pes()
+                )
+            })?;
+            let pes: Vec<PeHandle> =
+                admission.placement.graph.vertices.iter().filter_map(|v| v.pe).collect();
+            for pe in &pes {
+                occupancy.kill_pe(*pe);
+            }
+            placed_pes += admission.placement.n_pes();
+            tenants.push(Tenant {
+                name: spec.name,
+                net: spec.net,
+                layers: admission.layers,
+                decisions: admission.decisions,
+                pes,
+            });
+        }
+        let stats = sys.stats;
+        let report = BootReport {
+            tenants: tenants.len(),
+            boot_nanos: t0.elapsed().as_nanos() as u64,
+            compiles: stats.total_compiles(),
+            cache_hits: stats.cache_hits,
+            disk_hits: stats.disk_hits,
+            placed_pes,
+            machine_pes: mspec.total_pes(),
+        };
+        Ok(TenantRegistry { tenants, report })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tenant> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+}

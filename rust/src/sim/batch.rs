@@ -2,12 +2,13 @@
 //!
 //! SNN serving workloads present many independent stimulus samples against
 //! one compiled network (the SpiNNaker2 system paper's batch-style
-//! many-sample evaluation). [`BatchRunner`] fans S samples out over scoped
-//! worker threads — the same work-stealing idiom as
-//! [`crate::switching::pipeline::fan_out`] — where each worker builds its
-//! own engine state **once** from the shared compiled layers and
-//! [`NetworkSim::reset`]s between samples, so per-sample cost is pure
-//! simulation, not reconstruction.
+//! many-sample evaluation). [`SimPool`] owns a set of engines built **once**
+//! from the shared compiled layers and work-steals items over them — the
+//! same idiom as [`crate::switching::pipeline::fan_out`] — with a
+//! [`NetworkSim::reset`] before every item, so per-sample cost is pure
+//! simulation, not reconstruction. [`BatchRunner`] is the one-shot batch
+//! front-end over a fresh pool; the serve daemon holds a pool per tenant
+//! for its whole lifetime (zero steady-state engine construction).
 //!
 //! Determinism: sample `i`'s stimulus comes from `make_provider(i)` and its
 //! simulation state is fully reset beforehand, so each recorder depends only
@@ -20,6 +21,105 @@ use crate::switching::CompiledLayer;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
+
+/// A persistent pool of privately-owned [`NetworkSim`] engines that
+/// survives across batch executions: engines are built **once** and every
+/// [`SimPool::run_each`] call work-steals items over them with a
+/// [`NetworkSim::reset`] before each item — the long-lived serve daemon's
+/// hot path has zero steady-state engine construction, and [`BatchRunner`]
+/// runs on the same pool built fresh per batch.
+///
+/// Determinism: item `i` is reset-isolated, so its result depends only on
+/// what the caller's closure does for `i` — never on pool size, stealing
+/// order, or which engine previously ran which item.
+pub struct SimPool {
+    sims: Vec<NetworkSim>,
+}
+
+impl SimPool {
+    /// Build `jobs` engines from one compiled-layer set (0 = one per CPU).
+    /// Validates the network/layers pairing up front so runs are infallible.
+    pub fn new(net: &Network, layers: &[CompiledLayer], jobs: usize) -> Result<SimPool> {
+        NetworkSim::validate(net, layers.len())?;
+        let jobs = if jobs == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            jobs
+        };
+        let sims = (0..jobs.max(1))
+            .map(|_| NetworkSim::native(net, layers.to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SimPool { sims })
+    }
+
+    /// Engines in the pool (= maximum cross-item parallelism).
+    pub fn jobs(&self) -> usize {
+        self.sims.len()
+    }
+
+    /// Synaptic events processed across all engines since construction.
+    pub fn total_events(&self) -> u64 {
+        self.sims.iter().map(NetworkSim::total_events).sum()
+    }
+
+    /// MACs issued across all engines since construction.
+    pub fn total_macs(&self) -> u64 {
+        self.sims.iter().map(NetworkSim::total_macs).sum()
+    }
+
+    /// Run `run(sim, i)` for every `i < n_items`, work-stealing items over
+    /// the pool's engines; each engine is [`NetworkSim::reset`] before each
+    /// item. Results come back in item order. A panic inside `run`
+    /// resurfaces on the caller via `resume_unwind` — never a hang.
+    pub fn run_each<R, F>(&mut self, n_items: usize, run: F) -> Vec<R>
+    where
+        F: Fn(&mut NetworkSim, usize) -> R + Sync,
+        R: Send,
+    {
+        let next = AtomicUsize::new(0);
+        let worker = |sim: &mut NetworkSim| -> Vec<(usize, R)> {
+            let mut local = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                sim.reset();
+                local.push((i, run(sim, i)));
+            }
+            local
+        };
+
+        let mut slots: Vec<Option<R>> = (0..n_items).map(|_| None).collect();
+        if self.sims.len() <= 1 || n_items <= 1 {
+            for (i, r) in worker(&mut self.sims[0]) {
+                slots[i] = Some(r);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .sims
+                    .iter_mut()
+                    .map(|sim| {
+                        let worker = &worker;
+                        scope.spawn(move || worker(sim))
+                    })
+                    .collect();
+                for h in handles {
+                    match h.join() {
+                        Ok(local) => {
+                            for (i, r) in local {
+                                slots[i] = Some(r);
+                            }
+                        }
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    }
+                }
+            });
+        }
+        slots.into_iter().map(|s| s.expect("pool filled every item slot")).collect()
+    }
+}
 
 /// One batch execution's output: per-sample recorders plus throughput
 /// accounting (the quantities `BENCH_sim.json` records).
@@ -134,70 +234,19 @@ impl<'a> BatchRunner<'a> {
     {
         let jobs = self.effective_jobs(n_samples);
         let t0 = Instant::now();
-        let mut slots: Vec<Option<(Recorder, u64)>> = (0..n_samples).map(|_| None).collect();
-        let mut events = 0u64;
-        let mut macs = 0u64;
-
-        // One worker body: owns a sim, pulls sample indices, resets between
-        // samples, returns indexed recorders + its telemetry totals.
-        let worker = |next: &AtomicUsize| -> (Vec<(usize, Recorder, u64)>, u64, u64) {
-            let mut sim = NetworkSim::native(self.net, self.layers.clone())
-                .expect("validated in BatchRunner::new");
-            let mut local = Vec::new();
-            loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n_samples {
-                    break;
-                }
-                sim.reset();
-                let mut provider = make_provider(i);
-                let s0 = Instant::now();
-                sim.run_jobs(steps, &mut provider, self.intra_jobs);
-                local.push((
-                    i,
-                    std::mem::take(&mut sim.recorder),
-                    s0.elapsed().as_nanos() as u64,
-                ));
-            }
-            (local, sim.total_events(), sim.total_macs())
-        };
-
-        let next = AtomicUsize::new(0);
-        if jobs <= 1 {
-            let (local, ev, mc) = worker(&next);
-            events += ev;
-            macs += mc;
-            for (i, rec, ns) in local {
-                slots[i] = Some((rec, ns));
-            }
-        } else {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..jobs)
-                    .map(|_| {
-                        let worker = &worker;
-                        let next = &next;
-                        scope.spawn(move || worker(next))
-                    })
-                    .collect();
-                for h in handles {
-                    match h.join() {
-                        Ok((local, ev, mc)) => {
-                            events += ev;
-                            macs += mc;
-                            for (i, rec, ns) in local {
-                                slots[i] = Some((rec, ns));
-                            }
-                        }
-                        Err(payload) => std::panic::resume_unwind(payload),
-                    }
-                }
-            });
-        }
+        let mut pool = SimPool::new(self.net, &self.layers, jobs)
+            .expect("validated in BatchRunner::new");
+        let intra_jobs = self.intra_jobs;
+        let results: Vec<(Recorder, u64)> = pool.run_each(n_samples, |sim, i| {
+            let mut provider = make_provider(i);
+            let s0 = Instant::now();
+            sim.run_jobs(steps, &mut provider, intra_jobs);
+            (std::mem::take(&mut sim.recorder), s0.elapsed().as_nanos() as u64)
+        });
 
         let mut recorders = Vec::with_capacity(n_samples);
         let mut sample_nanos = Vec::with_capacity(n_samples);
-        for s in slots {
-            let (rec, ns) = s.expect("worker filled every sample slot");
+        for (rec, ns) in results {
             recorders.push(rec);
             sample_nanos.push(ns);
         }
@@ -206,8 +255,8 @@ impl<'a> BatchRunner<'a> {
             sample_nanos,
             wall_nanos: t0.elapsed().as_nanos() as u64,
             steps,
-            events,
-            macs,
+            events: pool.total_events(),
+            macs: pool.total_macs(),
             jobs,
         }
     }
@@ -371,6 +420,47 @@ mod tests {
             sim.run(30, &mut provider);
             assert_eq!(clean.recorders[i], sim.recorder, "sample {i} corrupted by the panic");
         }
+    }
+
+    #[test]
+    fn sim_pool_reuse_is_reset_clean() {
+        // A pool reused across run_each calls must behave exactly like
+        // fresh engines: reset-isolation is the serve daemon's determinism
+        // contract for persistent per-tenant pools.
+        let net = demo_net();
+        let layers = compiled(&net);
+        let mut pool = SimPool::new(&net, &layers, 2).unwrap();
+        let run = |pool: &mut SimPool| {
+            pool.run_each(5, |sim, i| {
+                let mut provider = provider_for(i);
+                sim.run_jobs(30, &mut provider, 1);
+                sim.recorder.clone()
+            })
+        };
+        let first = run(&mut pool);
+        let second = run(&mut pool);
+        assert_eq!(first, second, "pool reuse leaked state between runs");
+        for (i, rec) in first.iter().enumerate() {
+            let mut sim = NetworkSim::native(&net, layers.clone()).unwrap();
+            let mut provider = provider_for(i);
+            sim.run(30, &mut provider);
+            assert_eq!(rec, &sim.recorder, "pooled item {i} diverged from a standalone run");
+        }
+        assert!(pool.total_events() > 0 || pool.total_macs() > 0);
+    }
+
+    #[test]
+    fn sim_pool_results_are_pool_size_invariant() {
+        let net = demo_net();
+        let layers = compiled(&net);
+        let body = |sim: &mut NetworkSim, i: usize| {
+            let mut provider = provider_for(i);
+            sim.run_jobs(25, &mut provider, 1);
+            sim.recorder.clone()
+        };
+        let a = SimPool::new(&net, &layers, 1).unwrap().run_each(9, body);
+        let b = SimPool::new(&net, &layers, 8).unwrap().run_each(9, body);
+        assert_eq!(a, b, "results must not depend on pool size");
     }
 
     #[test]

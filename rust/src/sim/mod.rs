@@ -45,7 +45,7 @@ pub mod spikebits;
 pub use backend::{BackendBox, MacBackend, NativeMac};
 pub use shard::ShardedSim;
 pub use spikebits::SpikeWords;
-pub use batch::{BatchRun, BatchRunner};
+pub use batch::{BatchRun, BatchRunner, SimPool};
 pub use network::{
     EngineCheckpoint, LayerActivity, NetworkSim, PhaseProfile, Recorder, SimCheckpoint,
     SpikeProvider, VoltageTrace,

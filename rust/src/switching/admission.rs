@@ -438,10 +438,34 @@ impl SwitchingSystem {
         strategy: PlacementStrategy,
         partition_strategy: PartitionStrategy,
     ) -> Result<ShardedAdmission> {
+        self.admit_network_sharded_faulted(
+            net,
+            spec,
+            strategy,
+            partition_strategy,
+            &FaultMap::healthy(),
+        )
+    }
+
+    /// [`SwitchingSystem::admit_network_sharded`] against a board array
+    /// with known-unusable PEs: the partitioner sees each board's surviving
+    /// capacity, planning charges layers against the shrunk per-board
+    /// pools, and placement routes around every dead resource. The serve
+    /// daemon's multi-tenant boot admits tenants sequentially through here
+    /// with an *occupancy* fault map (PEs owned by earlier tenants marked
+    /// dead), so co-tenants genuinely share one machine without overlap.
+    pub fn admit_network_sharded_faulted(
+        &mut self,
+        net: &Network,
+        spec: MachineSpec,
+        strategy: PlacementStrategy,
+        partition_strategy: PartitionStrategy,
+        faults: &FaultMap,
+    ) -> Result<ShardedAdmission> {
         let jobs = network_jobs(net);
         let demand = pop_demand(&self.pipeline, net, &jobs)?;
-        let faults = FaultMap::healthy();
-        let capacity = vec![spec.pes_per_board(); spec.boards];
+        let capacity: Vec<usize> =
+            Headroom::per_board(&spec, faults).iter().map(|h| h.free_pes).collect();
         let assignment = partition(net, &demand, &capacity, partition_strategy)
             .context("partitioning populations onto boards")?;
         let decisions = plan_decisions_boards(
@@ -450,7 +474,7 @@ impl SwitchingSystem {
             net,
             &jobs,
             &spec,
-            &faults,
+            faults,
             &[],
             Some(&assignment),
         )
@@ -467,7 +491,7 @@ impl SwitchingSystem {
             &run.layers,
             spec,
             strategy,
-            faults,
+            faults.clone(),
             &assignment,
         )
         .context("placing an admitted sharded network (feasibility accepted it)")?;

@@ -1,0 +1,385 @@
+//! Integration tests for the long-lived serve daemon (DESIGN.md §Serving):
+//! warm-boot multi-tenancy, wire-protocol negative paths, bit-identity
+//! with one-shot `simulate`, and graceful shutdown.
+
+use s2switch::graph::PartitionStrategy;
+use s2switch::hardware::{MachineSpec, PeSpec, PlacementStrategy};
+use s2switch::model::connector::{Connector, SynapseDraw};
+use s2switch::model::{LifParams, Network, NetworkBuilder, PopulationId};
+use s2switch::serve::protocol::{
+    decode_response, encode_request, encode_request_frame, frame, read_frame, ProtocolError,
+    Request, Response, REQUEST_MAGIC, RESPONSE_MAGIC,
+};
+use s2switch::serve::{ErrorCode, ServeClient, ServeConfig, Server, TenantRegistry, TenantSpec};
+use s2switch::sim::NetworkSim;
+use s2switch::switching::{CompiledLayer, SwitchMode, SwitchingSystem};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::Duration;
+
+/// The probe network the serve tests host (small: the interesting part is
+/// the serving machinery, not the model).
+fn probe_net(seed: u64) -> Network {
+    let mut b = NetworkBuilder::new(seed);
+    let inp = b.spike_source("input", 120);
+    let hid = b.lif_population("hidden", 90, LifParams::default());
+    let out = b.lif_population("output", 20, LifParams::default());
+    b.project(
+        inp,
+        hid,
+        Connector::FixedProbability(0.4),
+        SynapseDraw { delay_range: 4, w_max: 100, ..Default::default() },
+        0.02,
+    );
+    b.project(
+        hid,
+        out,
+        Connector::FixedProbability(0.9),
+        SynapseDraw { delay_range: 2, w_max: 100, ..Default::default() },
+        0.03,
+    );
+    b.build()
+}
+
+fn spec(name: &str, seed: u64) -> TenantSpec {
+    TenantSpec { name: name.into(), net: probe_net(seed) }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("s2a-serve-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn boot_registry(dir: &Path, specs: Vec<TenantSpec>) -> anyhow::Result<TenantRegistry> {
+    let mut sys = SwitchingSystem::new(SwitchMode::Ideal, PeSpec::default());
+    sys.set_artifact_dir(dir).unwrap();
+    TenantRegistry::boot(
+        specs,
+        &mut sys,
+        MachineSpec::default(),
+        PlacementStrategy::ChipPacked,
+        PartitionStrategy::Traffic,
+    )
+}
+
+/// What a one-shot local run answers for `(steps, seed, rate)` — the
+/// reference every served response must match byte for byte.
+fn expected_counts(
+    net: &Network,
+    layers: &[CompiledLayer],
+    steps: u64,
+    seed: u64,
+    rate: f64,
+) -> Vec<u64> {
+    let mut sim = NetworkSim::native(net, layers.to_vec()).unwrap();
+    let sizes: Vec<usize> = net.populations.iter().map(|p| p.n_neurons).collect();
+    let mut provider = s2switch::serve::stimulus(sizes.clone(), seed, rate);
+    sim.run_jobs(steps, &mut provider, 1);
+    (0..sizes.len()).map(|p| sim.recorder.spike_count(PopulationId(p)) as u64).collect()
+}
+
+#[test]
+fn warm_boot_serve_is_bit_identical_to_one_shot_simulate() {
+    let dir = temp_dir("identity");
+
+    // Cold boot populates the artifact store and yields the reference
+    // layers for the local one-shot runs.
+    let cold = boot_registry(&dir, vec![spec("demo", 11)]).unwrap();
+    assert!(cold.report.compiles > 0, "cold boot must compile");
+    assert_eq!(cold.report.disk_hits, 0);
+    let ref_net = probe_net(11);
+    let ref_layers = cold.tenants[0].layers.clone();
+
+    // The request matrix: 4 clients x 6 requests, all distinct.
+    let n_clients = 4usize;
+    let n_requests = 6usize;
+    let params = |c: usize, i: usize| -> (u64, u64, f64) {
+        (60 + i as u64, 1000 * c as u64 + i as u64, 0.2)
+    };
+    let mut expect: BTreeMap<(usize, usize), Vec<u64>> = BTreeMap::new();
+    for c in 0..n_clients {
+        for i in 0..n_requests {
+            let (steps, seed, rate) = params(c, i);
+            expect.insert((c, i), expected_counts(&ref_net, &ref_layers, steps, seed, rate));
+        }
+    }
+
+    // Serve the same matrix twice: batching off on a single engine, and
+    // batching on over a pool — responses must be identical both times.
+    let mut by_config: Vec<BTreeMap<(usize, usize), Vec<u64>>> = Vec::new();
+    for (jobs, window_us) in [(1u64, 0u64), (3, 2000)] {
+        let registry = boot_registry(&dir, vec![spec("demo", 11)]).unwrap();
+        assert_eq!(registry.report.compiles, 0, "warm serve boot must not materialize compiles");
+        assert!(registry.report.disk_hits > 0, "the warm boot must hit the disk tier");
+        assert!(registry.report.is_warm());
+
+        let cfg = ServeConfig { batch_window_us: window_us, max_batch: 8, jobs: jobs as usize };
+        let server = Server::bind(registry, "127.0.0.1:0", cfg).unwrap();
+        let handle = server.handle().unwrap();
+        let addr = handle.addr();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let got: BTreeMap<(usize, usize), Vec<u64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut client = ServeClient::connect(addr).unwrap();
+                        (0..n_requests)
+                            .map(|i| {
+                                let (steps, seed, rate) = params(c, i);
+                                match client.request("demo", steps, seed, rate).unwrap() {
+                                    Response::Ok { spike_counts, .. } => ((c, i), spike_counts),
+                                    other => panic!("client {c} req {i}: {other:?}"),
+                                }
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+
+        handle.shutdown();
+        let report = server_thread.join().unwrap().unwrap();
+        assert_eq!(report.boot.compiles, 0);
+        assert_eq!(
+            report.metrics.ok_responses,
+            (n_clients * n_requests) as u64,
+            "every request must be answered Ok"
+        );
+        assert_eq!(got, expect, "served responses must match one-shot simulate exactly");
+        by_config.push(got);
+    }
+    assert_eq!(by_config[0], by_config[1], "batching on/off must not change responses");
+    // The probe must actually spike, or the identity assertions are hollow.
+    assert!(expect.values().any(|v| v.iter().sum::<u64>() > 0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn protocol_negative_paths_keep_the_server_serving() {
+    let dir = temp_dir("proto");
+    let registry = boot_registry(&dir, vec![spec("demo", 13)]).unwrap();
+    let ref_net = probe_net(13);
+    let ref_layers = registry.tenants[0].layers.clone();
+    let cfg = ServeConfig { batch_window_us: 0, max_batch: 4, jobs: 1 };
+    let server = Server::bind(registry, "127.0.0.1:0", cfg).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let good_request = |id: u64| -> Vec<u8> {
+        encode_request_frame(&Request {
+            request_id: id,
+            network: "demo".to_string(),
+            steps: 15,
+            seed: id,
+            rate: 0.2,
+        })
+    };
+    let error_of = |stream: &mut TcpStream| -> Response {
+        let body = read_frame(stream, RESPONSE_MAGIC).unwrap();
+        decode_response(&body).unwrap()
+    };
+
+    // Framing-lost corruptions: typed Protocol error, then that connection
+    // (and only that connection) closes. Each attack is a bare corrupted
+    // header — the server reads exactly what was sent, so the close is a
+    // clean FIN, not an unread-data RST.
+    let header_of = |id: u64| good_request(id)[..24].to_vec();
+    let mut bad_magic = header_of(1);
+    bad_magic[0] ^= 0xFF;
+    let mut bad_version = header_of(2);
+    bad_version[4..8].copy_from_slice(&9u32.to_le_bytes());
+    let mut oversized = header_of(3);
+    oversized[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    let framing_lost: Vec<(&str, Vec<u8>)> = vec![
+        ("bad magic", bad_magic),
+        ("version mismatch", bad_version),
+        ("oversized declared body", oversized),
+        ("garbage bytes", vec![0xA5; 24]),
+    ];
+    for (what, bytes) in framing_lost {
+        let mut evil = TcpStream::connect(addr).unwrap();
+        evil.write_all(&bytes).unwrap();
+        match error_of(&mut evil) {
+            Response::Error { code: ErrorCode::Protocol, message, .. } => {
+                assert!(!message.is_empty(), "{what}: error must carry a message")
+            }
+            other => panic!("{what}: expected a typed protocol error, got {other:?}"),
+        }
+        let closed = read_frame(&mut evil, RESPONSE_MAGIC);
+        assert!(
+            matches!(closed, Err(ProtocolError::Truncated { .. })),
+            "{what}: the corrupt connection must close cleanly, got {closed:?}"
+        );
+    }
+
+    // Truncated frame: a half-written header then a hangup. Nothing to
+    // answer; the server must simply survive it.
+    let mut evil = TcpStream::connect(addr).unwrap();
+    evil.write_all(&good_request(4)[..10]).unwrap();
+    drop(evil);
+
+    // Framing-intact corruption (checksum flip): typed error AND the same
+    // connection keeps serving.
+    let mut flip = TcpStream::connect(addr).unwrap();
+    let mut corrupt = good_request(5);
+    let last = corrupt.len() - 1;
+    corrupt[last] ^= 0x01;
+    flip.write_all(&corrupt).unwrap();
+    assert!(matches!(error_of(&mut flip), Response::Error { code: ErrorCode::Protocol, .. }));
+    // Malformed payload with a valid checksum: same framing-intact rule.
+    let mut trailing = encode_request(&Request {
+        request_id: 9,
+        network: "demo".to_string(),
+        steps: 15,
+        seed: 9,
+        rate: 0.2,
+    });
+    trailing.push(0xAB);
+    flip.write_all(&frame(REQUEST_MAGIC, &trailing)).unwrap();
+    assert!(matches!(error_of(&mut flip), Response::Error { code: ErrorCode::Protocol, .. }));
+    flip.write_all(&good_request(6)).unwrap();
+    match error_of(&mut flip) {
+        Response::Ok { request_id: 6, spike_counts } => {
+            assert_eq!(spike_counts, expected_counts(&ref_net, &ref_layers, 15, 6, 0.2));
+        }
+        other => panic!("post-corruption request must serve, got {other:?}"),
+    }
+
+    // Semantic rejections are application errors, not frame kills.
+    let mut client = ServeClient::connect(addr).unwrap();
+    for (what, network, steps, rate, want) in [
+        ("unknown tenant", "nope", 15u64, 0.2, ErrorCode::UnknownNetwork),
+        ("zero steps", "demo", 0, 0.2, ErrorCode::BadRequest),
+        ("out-of-range rate", "demo", 15, 2.0, ErrorCode::BadRequest),
+        ("non-finite rate", "demo", 15, f64::NAN, ErrorCode::BadRequest),
+    ] {
+        match client.request(network, steps, 1, rate).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, want, "{what}"),
+            other => panic!("{what}: expected {want:?}, got {other:?}"),
+        }
+    }
+    // ...and the healthy connection still serves correct inference.
+    match client.request("demo", 15, 77, 0.2).unwrap() {
+        Response::Ok { spike_counts, .. } => {
+            assert_eq!(spike_counts, expected_counts(&ref_net, &ref_layers, 15, 77, 0.2));
+        }
+        other => panic!("healthy request after the attack run: {other:?}"),
+    }
+
+    handle.shutdown();
+    let report = server_thread.join().unwrap().unwrap();
+    assert!(report.metrics.protocol_errors >= 5, "{:?}", report.metrics);
+    assert!(report.metrics.truncated_frames >= 1, "{:?}", report.metrics);
+    assert!(report.metrics.ok_responses >= 2, "{:?}", report.metrics);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_work_and_types_shutdown() {
+    let dir = temp_dir("drain");
+    let registry = boot_registry(&dir, vec![spec("demo", 17)]).unwrap();
+    let ref_net = probe_net(17);
+    let ref_layers = registry.tenants[0].layers.clone();
+    // A long window keeps request A in flight (batch accumulating) while
+    // shutdown lands.
+    let cfg = ServeConfig { batch_window_us: 400_000, max_batch: 8, jobs: 1 };
+    let server = Server::bind(registry, "127.0.0.1:0", cfg).unwrap();
+    let handle = server.handle().unwrap();
+    let addr = handle.addr();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // Connection 1: request A, routed and sitting in its batch window.
+    let frame_a = encode_request_frame(&Request {
+        request_id: 1,
+        network: "demo".to_string(),
+        steps: 25,
+        seed: 42,
+        rate: 0.2,
+    });
+    let mut conn_a = TcpStream::connect(addr).unwrap();
+    conn_a.write_all(&frame_a).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // Connection 2: a request caught mid-frame — header written, body
+    // withheld — so its reader is mid-request when the stop flag flips.
+    let mut conn_b = TcpStream::connect(addr).unwrap();
+    let frame_b = encode_request_frame(&Request {
+        request_id: 2,
+        network: "demo".to_string(),
+        steps: 25,
+        seed: 43,
+        rate: 0.2,
+    });
+    conn_b.write_all(&frame_b[..30]).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+
+    handle.shutdown();
+
+    // The mid-request client gets a typed Shutdown — never a reset.
+    let body = read_frame(&mut conn_b, RESPONSE_MAGIC).unwrap();
+    match decode_response(&body).unwrap() {
+        Response::Shutdown { message, .. } => {
+            assert!(!message.is_empty(), "shutdown must say why")
+        }
+        other => panic!("mid-request client must get a typed Shutdown, got {other:?}"),
+    }
+
+    // The in-flight batch drains: request A is answered Ok, correctly,
+    // after shutdown began; then the connection closes cleanly.
+    let body = read_frame(&mut conn_a, RESPONSE_MAGIC).unwrap();
+    match decode_response(&body).unwrap() {
+        Response::Ok { request_id: 1, spike_counts } => {
+            assert_eq!(spike_counts, expected_counts(&ref_net, &ref_layers, 25, 42, 0.2));
+        }
+        other => panic!("in-flight request must drain to Ok, got {other:?}"),
+    }
+    let closed = read_frame(&mut conn_a, RESPONSE_MAGIC);
+    assert!(matches!(closed, Err(ProtocolError::Truncated { .. })), "{closed:?}");
+
+    // run() returns cleanly — the CLI exits 0 from here.
+    let report = server_thread.join().unwrap().unwrap();
+    assert_eq!(report.metrics.ok_responses, 1, "{:?}", report.metrics);
+    assert!(report.metrics.shutdown_responses >= 1, "{:?}", report.metrics);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn co_tenants_occupy_disjoint_pes_and_overflow_is_typed() {
+    let dir = temp_dir("tenants");
+
+    // Two differently-shaped tenants on one machine: disjoint placements.
+    let registry = boot_registry(&dir, vec![spec("alpha", 19), spec("beta", 23)]).unwrap();
+    assert_eq!(registry.report.tenants, 2);
+    let alpha = registry.get("alpha").expect("alpha admitted");
+    let beta = registry.get("beta").expect("beta admitted");
+    assert!(registry.get("gamma").is_none());
+    assert!(!alpha.pes.is_empty() && !beta.pes.is_empty());
+    let a: std::collections::BTreeSet<_> = alpha.pes.iter().collect();
+    let b: std::collections::BTreeSet<_> = beta.pes.iter().collect();
+    assert!(a.is_disjoint(&b), "co-tenant placements must not share a PE");
+
+    // Overfill the machine: enough copies to exceed capacity must fail
+    // with the co-tenant admission context, not a panic or a mis-place.
+    // Every tenant occupies at least one PE, so machine_pes + 2 copies
+    // cannot fit no matter how hard capacity fallback shrinks them.
+    let solo = boot_registry(&dir, vec![spec("solo", 19)]).unwrap();
+    let n = solo.report.machine_pes + 2;
+    let many: Vec<TenantSpec> = (0..n).map(|i| spec(&format!("t{i:03}"), 19)).collect();
+    let err = boot_registry(&dir, many).expect_err("overfilled machine must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("admitting tenant"), "diagnostic must name the tenant: {msg}");
+
+    // Tenant-set validation is typed too.
+    let err = boot_registry(&dir, vec![]).expect_err("empty tenant set");
+    assert!(format!("{err:#}").contains("no tenant networks"));
+    let dup = vec![spec("dup", 19), spec("dup", 23)];
+    let err = boot_registry(&dir, dup).expect_err("duplicate names");
+    assert!(format!("{err:#}").contains("duplicate tenant"));
+    std::fs::remove_dir_all(&dir).ok();
+}
